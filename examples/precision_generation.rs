@@ -1,0 +1,85 @@
+//! Text generation across the precision ladder: the same model (one
+//! checkpoint) answering TinyLang queries at every SEFP width — the
+//! qualitative face of the paper's robustness claim.  Prompts with a
+//! deterministic correct continuation are used (single-digit arithmetic
+//! and KB-fact completion) so precision degradation is directly visible.
+//!
+//! Run: `make artifacts && cargo run --release --example precision_generation`
+//! (better after `otaro pretrain` has left a checkpoint)
+
+use otaro::data::tokenizer::{EOS, PAD};
+use otaro::data::{lang::Lang, Tokenizer};
+use otaro::runtime::{Engine, ParamStore, Width};
+
+fn generate(
+    engine: &mut Engine,
+    params: &ParamStore,
+    prompt: &str,
+    width: Width,
+    max_new: usize,
+) -> anyhow::Result<String> {
+    let tok = Tokenizer::new();
+    let (bsz, seq_len) = engine.batch_shape();
+    let vocab = engine.vocab_size();
+    // the pretraining stream separates sentences with EOS (never BOS), so
+    // EOS is the in-distribution "start of sentence" context
+    let mut seq = vec![EOS];
+    seq.extend(tok.encode(prompt));
+    let prompt_len = seq.len();
+    for _ in 0..max_new {
+        if seq.len() >= seq_len {
+            break;
+        }
+        let mut tokens = vec![PAD; bsz * seq_len];
+        tokens[..seq.len()].copy_from_slice(&seq);
+        let logits = engine.logits_step(params, &tokens, width)?;
+        let off = (seq.len() - 1) * vocab;
+        let next = logits[off..off + vocab]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as i32;
+        seq.push(next);
+        if next == EOS || next == b'.' as i32 {
+            break;
+        }
+    }
+    Ok(tok.decode(&seq[prompt_len..]))
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut engine = Engine::new(std::path::Path::new("artifacts"))?;
+    let mut params = engine.init_params()?;
+    for cand in ["runs/pretrained.bin", "runs/e2e/otaro_model.bin"] {
+        if std::path::Path::new(cand).exists() {
+            params.load_into(std::path::Path::new(cand))?;
+            println!("generating with checkpoint {cand}\n");
+            break;
+        }
+    }
+
+    let lang = Lang::new(0x1A06);
+    // qualitative probe: the SAME model continues TinyLang prompts at
+    // every precision — high widths stay grammatical (noun phrases with
+    // the right class suffixes), low widths visibly degrade.  With a
+    // longer pretraining budget the KB/arithmetic answers also become
+    // exact; at the default 800 steps the structure signal is the point.
+    let s = 5usize;
+    let (noun_a, class_a) = lang.noun(2);
+    let prompts: Vec<String> = vec![
+        format!("{} pide", lang.noun(s).0),
+        format!("{} {} ", Lang::determiner(class_a), noun_a),
+    ];
+
+    for prompt in &prompts {
+        println!("prompt {prompt:?}");
+        for width in [Width::FP, Width::m(8), Width::m(6), Width::m(4), Width::m(3)] {
+            let out = generate(&mut engine, &params, prompt, width, 20)?;
+            println!("  {:6} -> {}", width.label(), out.trim());
+        }
+        println!();
+    }
+    println!("generation demo OK");
+    Ok(())
+}

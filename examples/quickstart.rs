@@ -1,0 +1,55 @@
+//! Quickstart: the SEFP format + engine in ~60 lines.
+//!
+//! 1. encode a weight vector to SEFP E5M8,
+//! 2. walk the precision ladder by pure mantissa truncation,
+//! 3. load the AOT artifacts and run one eval step per bit-width.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use otaro::data::{corpus, Lang, StreamBatcher};
+use otaro::runtime::{Engine, Width};
+use otaro::sefp::{Rounding, SefpTensor, GROUP_SIZE};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. the format ---------------------------------------------------
+    let mut rng = otaro::data::Rng::new(7);
+    let weights: Vec<f32> = (0..256).map(|_| rng.normal() as f32 * 0.1).collect();
+    let master = SefpTensor::encode(&weights, 8, GROUP_SIZE, Rounding::Trunc);
+    println!("encoded {} weights at E5M8: {} groups, {} packed bytes", master.len,
+             master.n_groups(), master.ideal_bits() / 8);
+
+    // --- 2. the ladder: ONE model, every precision -----------------------
+    for m in [7u8, 6, 5, 4, 3] {
+        let t = master.truncate(m); // integer shifts only — no floats touched
+        let direct = SefpTensor::encode(&weights, m, GROUP_SIZE, Rounding::Trunc);
+        let err: f32 = t
+            .decode()
+            .iter()
+            .zip(&weights)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert_eq!(t.decode(), direct.decode(), "truncation == direct encode");
+        println!("  E5M{m}: max |Q(w)-w| = {err:.6}  (truncated from E5M8, bit-exact)");
+    }
+
+    // --- 3. the engine: eval loss across the ladder ----------------------
+    let artifacts = std::path::Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("\nartifacts/ missing — run `make artifacts` to enable the engine demo");
+        return Ok(());
+    }
+    let mut engine = Engine::new(artifacts)?;
+    let params = engine.init_params()?;
+    let lang = Lang::new(0x1A06);
+    let (b, t) = engine.batch_shape();
+    let (_, test) = corpus::tinytext_corpus(&lang, 0, 2_000, 400);
+    let mut batcher = StreamBatcher::new(test, b, t, 1);
+    let batch = batcher.next_batch();
+    println!("\neval loss per precision (init params, one batch):");
+    for w in [Width::FP, Width::m(8), Width::m(6), Width::m(4), Width::m(3)] {
+        let loss = engine.eval_step(&params, &batch, w)?;
+        println!("  {:6} loss = {loss:.4}", w.label());
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,196 @@
+"""AOT export: lower every (step-kind, bit-width) variant to HLO text.
+
+Python runs ONCE, at build time (`make artifacts`); the Rust coordinator
+loads these artifacts via the PJRT C API and Python is never on the
+request path.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (in --out-dir):
+  {train,eval,logits}_{fp,m8..m3}.hlo.txt   21 step programs
+  manifest.json                              param order/shapes, config,
+                                             artifact index
+  init_params.bin                            f32-LE initial parameters in
+                                             manifest order
+  golden_sefp.json                           cross-language golden vectors
+                                             for the Rust SEFP bit-level
+                                             implementation
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from .kernels import ref
+
+WIDTH_TAGS = [("fp", None)] + [(f"m{m}", m) for m in ref.MANTISSA_WIDTHS]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_step(cfg, kind: str, m, donate: bool = False) -> str:
+    train_step, eval_step, logits_step = model_lib.make_step_fns(cfg, m)
+    spec = model_lib.param_spec(cfg)
+    p_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in spec]
+    tok = jax.ShapeDtypeStruct((cfg.batch_size, cfg.max_seq), jnp.int32)
+    tgt = jax.ShapeDtypeStruct((cfg.batch_size, cfg.max_seq), jnp.int32)
+    if kind == "train":
+        lowered = jax.jit(train_step).lower(*p_specs, tok, tgt)
+    elif kind == "eval":
+        lowered = jax.jit(eval_step).lower(*p_specs, tok, tgt)
+    elif kind == "logits":
+        lowered = jax.jit(logits_step).lower(*p_specs, tok)
+    else:
+        raise ValueError(kind)
+    return to_hlo_text(lowered)
+
+
+def golden_vectors() -> dict:
+    """Golden SEFP vectors: the Rust bit-level implementation must match
+    these exactly (quant-dequant values per mantissa width, both roundings,
+    several scales incl. zero / tiny / large / mixed-sign groups)."""
+    rng = np.random.default_rng(1234)
+    cases = []
+    inputs = {
+        "normal": (rng.standard_normal(128) * 0.3).astype(np.float32),
+        "mixed": np.concatenate([
+            rng.standard_normal(64).astype(np.float32) * 1e-4,
+            rng.standard_normal(64).astype(np.float32) * 40.0,
+        ]),
+        "zeros": np.zeros(64, np.float32),
+        "single_big": np.r_[np.float32(1000.0), np.zeros(63, np.float32)],
+        "negatives": (-np.abs(rng.standard_normal(64)) * 2.0).astype(np.float32),
+        "tiny": (rng.standard_normal(64) * 1e-20).astype(np.float32),
+    }
+    for name, w in inputs.items():
+        for m in ref.MANTISSA_WIDTHS:
+            for rounding in ("trunc", "nearest"):
+                q = np.asarray(ref.sefp_quant_dequant(
+                    jnp.asarray(w), m, rounding=rounding))
+                cases.append({
+                    "name": name, "m": m, "rounding": rounding,
+                    "input": [float(v) for v in w],
+                    "output": [float(v) for v in q],
+                })
+    # shared exponents for the rust encoder
+    exps = []
+    for name, w in inputs.items():
+        maxabs = float(np.abs(w).max())
+        e = int(np.asarray(ref.shared_exponent(jnp.asarray(np.float32(maxabs)))))
+        exps.append({"name": name, "maxabs": maxabs, "exponent": e})
+    return {"group_size": ref.GROUP_SIZE, "cases": cases, "shared_exponents": exps}
+
+
+def write_params_bin(path: str, cfg) -> str:
+    params = model_lib.init_params(cfg, seed=0)
+    buf = bytearray()
+    for name, _shape in model_lib.param_spec(cfg):
+        buf += np.asarray(params[name], dtype="<f4").tobytes()
+    with open(path, "wb") as f:
+        f.write(bytes(buf))
+    return hashlib.sha256(bytes(buf)).hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="legacy single-file target (Makefile stamp); the "
+                         "real outputs go to --out-dir")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default=os.environ.get("OTARO_PRESET", "tiny"),
+                    choices=sorted(model_lib.PRESETS))
+    ap.add_argument("--impl", default=os.environ.get("OTARO_IMPL", "pallas"),
+                    choices=["pallas", "ref"],
+                    help="which L1 implementation lowers into the HLO")
+    ap.add_argument("--kinds", default="train,eval,logits")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(model_lib.PRESETS[args.preset],
+                              quant_impl=args.impl)
+    cfg.validate()
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    artifacts = {}
+    kinds = args.kinds.split(",")
+    for kind in kinds:
+        for tag, m in WIDTH_TAGS:
+            name = f"{kind}_{tag}.hlo.txt"
+            text = lower_step(cfg, kind, m)
+            with open(os.path.join(out_dir, name), "w") as f:
+                f.write(text)
+            artifacts[f"{kind}_{tag}"] = name
+            print(f"lowered {name}: {len(text)} chars")
+
+    params_sha = write_params_bin(os.path.join(out_dir, "init_params.bin"), cfg)
+
+    with open(os.path.join(out_dir, "golden_sefp.json"), "w") as f:
+        json.dump(golden_vectors(), f)
+
+    manifest = {
+        "preset": args.preset,
+        "quant_impl": args.impl,
+        "config": {
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "batch_size": cfg.batch_size,
+            "group_size": cfg.group_size,
+            "rounding": cfg.rounding,
+        },
+        "mantissa_widths": list(ref.MANTISSA_WIDTHS),
+        # "quantized" mirrors model._quant's rule (2-D weights only;
+        # pos_embed stays fp) so the Rust PrecisionStore applies SEFP to
+        # exactly the tensors the training graph quantized.
+        "params": [
+            {
+                "name": n,
+                "shape": list(s),
+                "quantized": len(s) >= 2 and n != "pos_embed",
+            }
+            for n, s in model_lib.param_spec(cfg)
+        ],
+        "artifacts": artifacts,
+        "init_params_sha256": params_sha,
+        "step_signature": {
+            "train": "(*params, tokens[B,T] i32, targets[B,T] i32) -> (loss f32, *grads)",
+            "eval": "(*params, tokens, targets) -> (loss,)",
+            "logits": "(*params, tokens) -> (logits[B,T,V],)",
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    if args.out:
+        # Makefile stamp: write/refresh the legacy single-artifact path
+        with open(args.out, "w") as f:
+            f.write(open(os.path.join(
+                out_dir, f"train_{WIDTH_TAGS[0][0]}.hlo.txt")).read())
+    print(f"manifest + {len(artifacts)} artifacts in {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Pure-jnp reference oracle for SEFP (Shared Exponent Floating Point).
+
+This is the correctness anchor for the whole stack: the Pallas kernels
+(sefp.py), the JAX model fake-quant (model.py) and the Rust bit-level
+implementation (rust/src/sefp/) are all validated against these functions
+(the Rust side via golden vectors emitted by aot.py).
+
+SEFP definition used throughout the repo (paper fig. 2, "EeMm"):
+
+  * weights are grouped into contiguous groups of ``group_size`` (64 in the
+    paper) along the last axis of the flattened tensor;
+  * each group stores ONE shared exponent ``E`` chosen from the largest
+    magnitude element: ``2**E <= max|w| < 2**(E+1)`` (frexp semantics);
+  * each element stores a sign and an ``m``-bit significand ``s`` so that
+    the dequantized value is ``sign * s * 2**(E - m + 1)``.
+
+The quantization step is therefore ``2**(E - m + 1)`` and the significand
+always fits in ``m`` bits because ``max|w| / step < 2**m``.
+
+Rounding: the paper's deployment claim — any lower bit-width is obtained by
+*simple mantissa truncation* of the stored model — only holds exactly for
+round-toward-zero (truncation composes: trunc_m4(trunc_m8(x)) ==
+trunc_m4(x)).  Round-to-nearest suffers double rounding.  We default to
+truncation ("trunc"), and expose "nearest" as an ablation (the paper's
+error analysis in eq. 11 uses rounding brackets).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# The paper's precision ladder: E5Mm for m in 8..3 (table 1).
+MANTISSA_WIDTHS = (8, 7, 6, 5, 4, 3)
+GROUP_SIZE = 64
+# E5 exponent field: bias 15, range [-14, 16] after the shared-exponent
+# alignment; with f32 masters the exponent rarely leaves this range for
+# trained weights, but we clamp to stay faithful to a 5-bit field.
+EXP_MIN = -14
+EXP_MAX = 16
+
+
+def exact_exp2(e: jnp.ndarray) -> jnp.ndarray:
+    """Bit-exact 2**e for integer e in the normal-f32 range.
+
+    ``jnp.exp2`` on CPU XLA is NOT exact for integer arguments (e.g.
+    exp2(-20) != 2**-20 by one ulp), which would make quantization steps
+    irrational and break both the truncation-ladder exactness and the
+    cross-language golden vectors.  Constructing the float from its
+    exponent bits is exact by definition.
+    """
+    e = e.astype(jnp.int32)
+    return jax.lax.bitcast_convert_type(
+        jax.lax.shift_left(e + 127, jnp.int32(23)), jnp.float32
+    )
+
+
+def shared_exponent(maxabs: jnp.ndarray) -> jnp.ndarray:
+    """Per-group shared exponent E with 2**E <= maxabs < 2**(E+1).
+
+    Uses frexp (bit-exact, no log2 rounding worries): maxabs = f * 2**exp
+    with f in [0.5, 1), hence E = exp - 1.  Zero groups get E = EXP_MIN.
+    """
+    _, exp = jnp.frexp(maxabs)
+    e = exp.astype(jnp.int32) - 1
+    e = jnp.where(maxabs > 0, e, EXP_MIN)
+    return jnp.clip(e, EXP_MIN, EXP_MAX)
+
+
+def _quantize_groups(g: jnp.ndarray, m: int, rounding: str) -> jnp.ndarray:
+    """Quantize-dequantize a (n_groups, group_size) array at mantissa width m."""
+    maxabs = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    e = shared_exponent(maxabs)
+    step = exact_exp2(e - (m - 1)).astype(g.dtype)
+    q = g / step
+    if rounding == "trunc":
+        q = jnp.trunc(q)
+    elif rounding == "nearest":
+        q = jnp.round(q)
+    else:
+        raise ValueError(f"unknown rounding mode {rounding!r}")
+    # m-bit significand + sign
+    lim = float(2**m - 1)
+    q = jnp.clip(q, -lim, lim)
+    return q * step
+
+
+def sefp_quant_dequant(
+    w: jnp.ndarray,
+    m: int,
+    group_size: int = GROUP_SIZE,
+    rounding: str = "trunc",
+) -> jnp.ndarray:
+    """SEFP fake-quantization Q(w, m): quantize to E5Mm, dequantize to float.
+
+    Groups run along the last axis of the flattened tensor; ragged tails are
+    zero-padded (zeros never win the group max, so they are inert).
+    """
+    if m < 1:
+        raise ValueError("mantissa width must be >= 1")
+    flat = w.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % group_size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    g = flat.reshape(-1, group_size)
+    out = _quantize_groups(g, m, rounding).reshape(-1)
+    if pad:
+        out = out[:n]
+    return out.reshape(w.shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def sefp_ste(w, m, group_size=GROUP_SIZE, rounding="trunc"):
+    """Straight-Through-Estimator wrapper (paper eq. 1-3): fwd = Q(w, m),
+    bwd = identity."""
+    return sefp_quant_dequant(w, m, group_size, rounding)
+
+
+def _sefp_ste_fwd(w, m, group_size, rounding):
+    return sefp_quant_dequant(w, m, group_size, rounding), None
+
+
+def _sefp_ste_bwd(m, group_size, rounding, _res, ct):
+    return (ct,)
+
+
+sefp_ste.defvjp(_sefp_ste_fwd, _sefp_ste_bwd)
+
+
+def sefp_matmul_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    m: int,
+    group_size: int = GROUP_SIZE,
+    rounding: str = "trunc",
+) -> jnp.ndarray:
+    """Reference for the fused dequant-matmul kernel: x @ Q(w, m).
+
+    Groups run along the *input* (first) axis of w — aligned with the
+    reduction dimension so the shared exponent is amortized across the
+    inner loop (matches the packed Rust inference kernel's layout).
+    """
+    wq = sefp_quant_dequant(w.T, m, group_size, rounding).T
+    return x @ wq
+
+
+def sefp_error_stats(w: jnp.ndarray, m: int, group_size: int = GROUP_SIZE):
+    """Max/mean absolute quantization error; max error is bounded by the
+    step 2**(E - m + 1) per group (truncation) — used by property tests."""
+    q = sefp_quant_dequant(w, m, group_size)
+    err = jnp.abs(q - w)
+    return jnp.max(err), jnp.mean(err)

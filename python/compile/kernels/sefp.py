@@ -1,0 +1,180 @@
+"""L1 Pallas kernels for SEFP quantization.
+
+Two kernels:
+
+  * ``sefp_quant_dequant_pallas`` — the format hot-spot: per-group shared
+    exponent extraction (bit-level, MXU/VPU-friendly: bitcast + shift, no
+    transcendentals), mantissa align + truncate, dequantize.
+  * ``sefp_matmul_pallas``        — fused dequant-matmul: weight blocks are
+    quantized in VMEM and immediately fed to ``jnp.dot`` (MXU), so the
+    packed HBM->VMEM stream never materializes an f32 weight copy in HBM.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets
+edge NPUs; on TPU the group axis (64) aligns with the VREG lane dimension
+and the fused kernel expresses the HBM<->VMEM schedule via BlockSpec with
+the reduction (group) axis innermost.  On this image Pallas MUST run with
+``interpret=True`` (real TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot execute); numerics are identical.
+
+Both kernels are exercised inside the exported HLO via model.py and are
+validated against ref.py by python/tests/test_kernel.py (hypothesis sweeps).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import exact_exp2, EXP_MAX, EXP_MIN, GROUP_SIZE
+
+# Block sizes chosen for TPU realism: (8, 128) VREG tiling, 64-lane groups.
+# On CPU interpret mode these only affect loop structure, not numerics.
+QDQ_BLOCK_GROUPS = 256  # groups per program: 256*64*4B = 64 KiB VMEM
+MM_BLOCK_M = 128
+MM_BLOCK_N = 128
+MM_BLOCK_K = 512  # multiple of GROUP_SIZE: groups never straddle blocks
+
+
+def _shared_exp(maxabs: jnp.ndarray) -> jnp.ndarray:
+    """Shared exponent via f32 bit manipulation (frexp-equivalent for
+    normal values; subnormal group maxima clamp to EXP_MIN like ref.py)."""
+    bits = jax.lax.bitcast_convert_type(maxabs, jnp.int32)
+    biased = jax.lax.shift_right_logical(bits, 23) & 0xFF
+    e = biased - 127
+    e = jnp.where(maxabs > 0, e, EXP_MIN)
+    return jnp.clip(e, EXP_MIN, EXP_MAX)
+
+
+def _qdq_block(g: jnp.ndarray, m: int, rounding: str, group_axis: int = -1):
+    """Quantize-dequantize a block with groups along ``group_axis``."""
+    maxabs = jnp.max(jnp.abs(g), axis=group_axis, keepdims=True)
+    e = _shared_exp(maxabs)
+    # exact power of two (jnp.exp2 is off by ulps on CPU — see ref.py)
+    step = exact_exp2(e - (m - 1)).astype(g.dtype)
+    q = g / step
+    q = jnp.trunc(q) if rounding == "trunc" else jnp.round(q)
+    lim = float(2**m - 1)
+    return jnp.clip(q, -lim, lim) * step
+
+
+def _qdq_kernel(g_ref, o_ref, *, m: int, rounding: str):
+    o_ref[...] = _qdq_block(g_ref[...], m, rounding)
+
+
+def sefp_quant_dequant_pallas(
+    w: jnp.ndarray,
+    m: int,
+    group_size: int = GROUP_SIZE,
+    rounding: str = "trunc",
+) -> jnp.ndarray:
+    """Pallas SEFP fake-quantization, numerically identical to
+    ref.sefp_quant_dequant."""
+    flat = w.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % group_size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    n_groups = flat.shape[0] // group_size
+    blk = min(QDQ_BLOCK_GROUPS, n_groups)
+    # pad group count so the grid divides evenly (zero groups are inert)
+    gpad = (-n_groups) % blk
+    if gpad:
+        flat = jnp.pad(flat, (0, gpad * group_size))
+        n_groups += gpad
+    g = flat.reshape(n_groups, group_size)
+
+    out = pl.pallas_call(
+        functools.partial(_qdq_kernel, m=m, rounding=rounding),
+        out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
+        grid=(n_groups // blk,),
+        in_specs=[pl.BlockSpec((blk, group_size), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((blk, group_size), lambda i: (i, 0)),
+        interpret=True,
+    )(g)
+    return out.reshape(-1)[:n].reshape(w.shape)
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, m: int, rounding: str,
+               group_size: int, k_steps: int):
+    """One (bm, bn) output block, accumulating over the K grid axis.
+
+    The weight block (bk, bn) is quantized in VMEM with groups along K
+    (axis 0), then fed straight to the MXU dot — the fused epilogue the
+    paper's shared-exponent format enables (one shift per group instead of
+    a per-element scale load).
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    wblk = w_ref[...]
+    bk, bn = wblk.shape
+    gw = wblk.reshape(bk // group_size, group_size, bn)
+    wq = _qdq_block(gw, m, rounding, group_axis=1).reshape(bk, bn)
+    o_ref[...] += jnp.dot(x_ref[...], wq, preferred_element_type=jnp.float32)
+
+
+def sefp_matmul_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    m: int,
+    group_size: int = GROUP_SIZE,
+    rounding: str = "trunc",
+) -> jnp.ndarray:
+    """Fused dequant-matmul: ``x @ Q(w, m)`` with groups along the input
+    (reduction) axis of ``w``.  Matches ref.sefp_matmul_ref exactly when
+    K % group_size == 0 (asserted: model dims are multiples of 64)."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    assert K % group_size == 0, "reduction dim must be group-aligned"
+
+    bm = min(MM_BLOCK_M, M)
+    bn = min(MM_BLOCK_N, N)
+    bk = min(MM_BLOCK_K, K)
+    assert bk % group_size == 0
+
+    # pad to block multiples (zero padding is inert for matmul and for the
+    # group max since padded K-groups are entire zero groups)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    xp = jnp.pad(x, ((0, pm), (0, pk))) if (pm or pk) else x
+    wp = jnp.pad(w, ((0, pk), (0, pn))) if (pk or pn) else w
+    Mp, Kp = xp.shape
+    Np = wp.shape[1]
+    k_steps = Kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, m=m, rounding=rounding,
+                          group_size=group_size, k_steps=k_steps),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        grid=(Mp // bm, Np // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        interpret=True,
+    )(xp, wp)
+    return out[:M, :N].astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def sefp_ste_pallas(w, m, group_size=GROUP_SIZE, rounding="trunc"):
+    """STE wrapper over the Pallas kernel: fwd = Q(w, m), bwd = identity.
+    This is what model.py calls, so the L1 kernel lowers into the exported
+    training HLO."""
+    return sefp_quant_dequant_pallas(w, m, group_size, rounding)
+
+
+def _ste_fwd(w, m, group_size, rounding):
+    return sefp_quant_dequant_pallas(w, m, group_size, rounding), None
+
+
+def _ste_bwd(m, group_size, rounding, _res, ct):
+    return (ct,)
+
+
+sefp_ste_pallas.defvjp(_ste_fwd, _ste_bwd)

@@ -1,0 +1,227 @@
+"""L2: the JAX transformer used for OTARo fine-tuning, calling the L1
+SEFP kernels.
+
+A GPT-style decoder (learned positions, RMSNorm, causal MHA, SwiGLU MLP,
+weight-tied LM head).  Every 2-D weight matrix is fake-quantized to SEFP
+E5Mm through the STE wrapper (paper eq. 1-3) before use; 1-D parameters
+(norm gains, biases-free design) stay in full precision, matching the
+paper's weight-only quantization.
+
+The same forward is lowered at every mantissa width m in {8..3} plus an
+unquantized "fp" variant (the FP16-fine-tuning baseline; f32 on this CPU
+image, see DESIGN.md §Substitutions).  Gradients are returned to the Rust
+coordinator, which owns the optimizer (plain SGD) so that LAA's delayed
+updates (Algorithm 1) live at L3.
+
+All model dimensions are multiples of 64 so SEFP groups never straddle
+rows and the fused matmul kernel's reduction axis is group-aligned.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import GROUP_SIZE, sefp_ste
+from .kernels.sefp import sefp_matmul_pallas, sefp_ste_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab_size: int = 320       # byte tokenizer (256) + specials, 64-aligned
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 384
+    max_seq: int = 64
+    batch_size: int = 8
+    group_size: int = GROUP_SIZE
+    rounding: str = "trunc"
+    # kernel selection: "pallas" lowers the L1 kernel into the HLO
+    # (canonical artifacts); "ref" is the pure-jnp fast path used to
+    # cross-check and for quick CI.
+    quant_impl: str = "pallas"
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def validate(self):
+        assert self.d_model % self.n_heads == 0
+        for d in (self.vocab_size, self.d_model, self.d_ff):
+            assert d % 64 == 0, f"dims must be 64-aligned, got {d}"
+
+
+PRESETS = {
+    # name: (vocab, d_model, heads, layers, d_ff, seq, batch)
+    "tiny":  ModelConfig(320, 128, 4, 2, 384, 64, 8),
+    "small": ModelConfig(320, 256, 4, 4, 704, 128, 8),
+    "base":  ModelConfig(320, 448, 7, 6, 1216, 128, 8),
+    # ~100M-param config for the e2e scale demonstration (slow on CPU)
+    "large": ModelConfig(512, 1024, 16, 8, 2752, 256, 4),
+}
+
+
+def param_spec(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — the single source of truth for the
+    manifest and the Rust param store.  Order is load-bearing: it defines
+    the positional signature of every exported HLO."""
+    spec: list[tuple[str, tuple[int, ...]]] = [
+        ("tok_embed", (cfg.vocab_size, cfg.d_model)),
+        ("pos_embed", (cfg.max_seq, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "ln1", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2", (cfg.d_model,)),
+            (p + "w_gate", (cfg.d_model, cfg.d_ff)),
+            (p + "w_up", (cfg.d_model, cfg.d_ff)),
+            (p + "w_down", (cfg.d_ff, cfg.d_model)),
+        ]
+    spec.append(("ln_f", (cfg.d_model,)))
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, jnp.ndarray]:
+    """Deterministic scaled-normal init (the Rust side re-derives the same
+    params from the checkpoint files, not from this init)."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            std = 0.02 if "embed" in name else fan_in ** -0.5
+            params[name] = (jax.random.normal(sub, shape) * std).astype(jnp.float32)
+    return params
+
+
+def _quant(cfg: ModelConfig, w: jnp.ndarray, m: Optional[int]) -> jnp.ndarray:
+    """SEFP-STE fake-quantize a weight matrix (no-op for the fp variant)."""
+    if m is None or w.ndim < 2:
+        return w
+    fn = sefp_ste_pallas if cfg.quant_impl == "pallas" else sefp_ste
+    return fn(w, m, cfg.group_size, cfg.rounding)
+
+
+def rms_norm(x: jnp.ndarray, gain: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict[str, jnp.ndarray],
+    tokens: jnp.ndarray,       # (B, T) int32
+    m: Optional[int],
+    fused_head: bool = False,
+) -> jnp.ndarray:
+    """Causal LM forward at SEFP bit-width m (None = fp). Returns logits
+    (B, T, V).
+
+    ``fused_head=True`` computes the LM head through the L1 fused
+    dequant-matmul Pallas kernel (inference-only path: the fused kernel
+    has no STE vjp).  Numerically identical to the qdq path because SEFP
+    quantization is idempotent: the kernel re-quantizes the already
+    quantized embedding, Q(Q(w)) == Q(w).
+    """
+    B, T = tokens.shape
+    q = lambda w: _quant(cfg, w, m)
+
+    tok_e = q(params["tok_embed"])
+    x = tok_e[tokens] + params["pos_embed"][None, :T, :]
+
+    mask = jnp.tril(jnp.ones((T, T), jnp.bool_))
+    neg = jnp.finfo(jnp.float32).min
+
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = rms_norm(x, params[p + "ln1"])
+        qh = (h @ q(params[p + "wq"])).reshape(B, T, cfg.n_heads, cfg.d_head)
+        kh = (h @ q(params[p + "wk"])).reshape(B, T, cfg.n_heads, cfg.d_head)
+        vh = (h @ q(params[p + "wv"])).reshape(B, T, cfg.n_heads, cfg.d_head)
+        att = jnp.einsum("bqhd,bkhd->bhqk", qh, kh) * (cfg.d_head ** -0.5)
+        att = jnp.where(mask[None, None], att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", att, vh).reshape(B, T, cfg.d_model)
+        x = x + out @ q(params[p + "wo"])
+
+        h = rms_norm(x, params[p + "ln2"])
+        gate = jax.nn.silu(h @ q(params[p + "w_gate"]))
+        up = h @ q(params[p + "w_up"])
+        x = x + (gate * up) @ q(params[p + "w_down"])
+
+    x = rms_norm(x, params["ln_f"])
+    # weight-tied head reuses the (quantized) token embedding
+    if fused_head and m is not None:
+        flat = x.reshape(B * T, cfg.d_model)
+        # raw tok_embed: the fused kernel quantizes its weight operand
+        # internally (groups along the reduction axis)
+        logits = sefp_matmul_pallas(
+            flat, params["tok_embed"].T, m, cfg.group_size, cfg.rounding
+        )
+        return logits.reshape(B, T, cfg.vocab_size)
+    return x @ tok_e.T
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params: dict[str, jnp.ndarray],
+    tokens: jnp.ndarray,   # (B, T) inputs
+    targets: jnp.ndarray,  # (B, T) next tokens; -1 = padding (masked out)
+    m: Optional[int],
+) -> jnp.ndarray:
+    """Mean next-token cross-entropy over non-padding positions."""
+    logits = forward(cfg, params, tokens, m)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    valid = targets >= 0
+    tgt = jnp.where(valid, targets, 0)
+    ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    n = jnp.maximum(jnp.sum(valid), 1)
+    return -jnp.sum(jnp.where(valid, ll, 0.0)) / n
+
+
+def make_step_fns(cfg: ModelConfig, m: Optional[int]):
+    """Build the three step functions exported per bit-width.
+
+    Positional signature (matches manifest order):
+      train_step(*params, tokens, targets) -> (loss, *grads)
+      eval_step(*params, tokens, targets)  -> (loss,)
+      logits_step(*params, tokens)         -> (logits,)
+    """
+    names = [n for n, _ in param_spec(cfg)]
+
+    def pack(args):
+        return dict(zip(names, args))
+
+    def train_step(*args):
+        params = pack(args[:-2])
+        tokens, targets = args[-2], args[-1]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, tokens, targets, m)
+        )(params)
+        return (loss,) + tuple(grads[n] for n in names)
+
+    def eval_step(*args):
+        params = pack(args[:-2])
+        tokens, targets = args[-2], args[-1]
+        return (loss_fn(cfg, params, tokens, targets, m),)
+
+    def logits_step(*args):
+        params = pack(args[:-1])
+        tokens = args[-1]
+        # inference path: LM head through the fused dequant-matmul kernel
+        return (forward(cfg, params, tokens, m, fused_head=True),)
+
+    return train_step, eval_step, logits_step

@@ -1,0 +1,77 @@
+"""AOT export tests: manifest integrity, golden vectors, HLO text
+re-parsability (the exact property the Rust loader depends on)."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model as ml
+from compile.kernels import ref
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _have_artifacts():
+    return os.path.exists(os.path.join(ART, "manifest.json"))
+
+
+def test_golden_vectors_self_consistent():
+    g = aot.golden_vectors()
+    assert g["group_size"] == 64
+    assert len(g["cases"]) == 6 * 6 * 2
+    for case in g["cases"]:
+        w = jnp.asarray(np.array(case["input"], np.float32))
+        q = np.asarray(ref.sefp_quant_dequant(
+            w, case["m"], rounding=case["rounding"]))
+        np.testing.assert_array_equal(q, np.array(case["output"], np.float32))
+
+
+def test_lower_step_produces_parsable_hlo():
+    """HLO text emitted by the lowering path must be re-parsable — this is
+    the same parse the xla crate's HloModuleProto::from_text_file does."""
+    cfg = ml.PRESETS["tiny"]
+    text = aot.lower_step(cfg, "eval", 4)
+    assert "ENTRY" in text
+    # count parameters of the ENTRY computation only (nested pallas
+    # while-loop computations declare their own)
+    entry = text[text.index("ENTRY"):]
+    brace = entry.index("{")
+    depth = 0
+    for i, ch in enumerate(entry):
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+            if depth == 0:
+                entry = entry[: i + 1]
+                break
+    n_params = len(ml.param_spec(cfg)) + 2  # + tokens + targets
+    assert entry.count("parameter(") == n_params
+
+
+@pytest.mark.skipif(not _have_artifacts(), reason="run `make artifacts` first")
+def test_manifest_matches_model():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    cfg = ml.PRESETS[man["preset"]]
+    spec = ml.param_spec(cfg)
+    assert len(man["params"]) == len(spec)
+    for entry, (name, shape) in zip(man["params"], spec):
+        assert entry["name"] == name
+        assert tuple(entry["shape"]) == shape
+    assert man["mantissa_widths"] == list(ref.MANTISSA_WIDTHS)
+    for key, fname in man["artifacts"].items():
+        assert os.path.exists(os.path.join(ART, fname)), key
+
+
+@pytest.mark.skipif(not _have_artifacts(), reason="run `make artifacts` first")
+def test_init_params_bin_size():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    n = sum(int(np.prod(p["shape"])) for p in man["params"])
+    size = os.path.getsize(os.path.join(ART, "init_params.bin"))
+    assert size == 4 * n

@@ -1,0 +1,251 @@
+"""Kernel-vs-ref correctness: the CORE numeric signal for the stack.
+
+Hypothesis sweeps shapes/dtypes/mantissa widths over both Pallas kernels
+against the pure-jnp oracle, plus directed tests for every SEFP invariant
+the Rust side and the paper rely on (ladder truncation, error bounds,
+idempotence, sign symmetry, zero/denormal handling).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, sefp
+
+jax.config.update("jax_platform_name", "cpu")
+
+WIDTHS = list(ref.MANTISSA_WIDTHS)
+
+
+def rnd(key, shape, scale=1.0, dtype=jnp.float32):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# quant-dequant kernel vs ref
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 700),
+    m=st.sampled_from(WIDTHS),
+    scale=st.sampled_from([1e-3, 0.1, 1.0, 30.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_qdq_pallas_matches_ref(n, m, scale, seed):
+    w = rnd(seed, (n,), scale)
+    a = np.asarray(ref.sefp_quant_dequant(w, m))
+    b = np.asarray(sefp.sefp_quant_dequant_pallas(w, m))
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    shape=st.sampled_from([(8, 64), (3, 5, 7), (130,), (64, 64), (1,)]),
+    m=st.sampled_from(WIDTHS),
+    rounding=st.sampled_from(["trunc", "nearest"]),
+    seed=st.integers(0, 2**16),
+)
+def test_qdq_shapes_roundings(shape, m, rounding, seed):
+    w = rnd(seed, shape)
+    a = np.asarray(ref.sefp_quant_dequant(w, m, rounding=rounding))
+    b = np.asarray(sefp.sefp_quant_dequant_pallas(w, m, rounding=rounding))
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == shape
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from(WIDTHS),
+    group_size=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_qdq_group_sizes(m, group_size, seed):
+    w = rnd(seed, (512,))
+    a = np.asarray(ref.sefp_quant_dequant(w, m, group_size=group_size))
+    b = np.asarray(sefp.sefp_quant_dequant_pallas(w, m, group_size=group_size))
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# SEFP format invariants (mirrored by rust proptest)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.sampled_from(WIDTHS), seed=st.integers(0, 2**16))
+def test_error_bound(m, seed):
+    """|Q(w) - w| < step = 2^(E - m + 1) per group (truncation)."""
+    w = rnd(seed, (256,))
+    q = np.asarray(ref.sefp_quant_dequant(w, m))
+    g = np.asarray(w).reshape(-1, 64)
+    qe = q.reshape(-1, 64)
+    maxabs = np.abs(g).max(axis=1)
+    e = np.floor(np.log2(np.maximum(maxabs, 1e-30)))
+    step = np.exp2(e - (m - 1))
+    assert (np.abs(qe - g) <= step[:, None] + 1e-12).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    hi=st.sampled_from([8, 7, 6, 5]),
+    lo=st.sampled_from([5, 4, 3]),
+    seed=st.integers(0, 2**16),
+)
+def test_truncation_ladder(hi, lo, seed):
+    """Paper's deployment claim: Q(Q(w, hi), lo) == Q(w, lo) — converting a
+    high-precision SEFP model to a lower one by mantissa truncation equals
+    encoding at the low precision directly (exact for round-toward-zero)."""
+    if lo >= hi:
+        return
+    w = rnd(seed, (640,), 0.5)
+    direct = np.asarray(ref.sefp_quant_dequant(w, lo))
+    chained = np.asarray(ref.sefp_quant_dequant(ref.sefp_quant_dequant(w, hi), lo))
+    np.testing.assert_array_equal(direct, chained)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.sampled_from(WIDTHS), seed=st.integers(0, 2**16))
+def test_idempotent(m, seed):
+    w = rnd(seed, (256,))
+    q1 = ref.sefp_quant_dequant(w, m)
+    q2 = ref.sefp_quant_dequant(q1, m)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.sampled_from(WIDTHS), seed=st.integers(0, 2**16))
+def test_sign_symmetry(m, seed):
+    w = rnd(seed, (256,))
+    a = np.asarray(ref.sefp_quant_dequant(w, m))
+    b = np.asarray(ref.sefp_quant_dequant(-w, m))
+    np.testing.assert_array_equal(a, -b)
+
+
+def test_zero_group():
+    w = jnp.zeros((128,))
+    q = np.asarray(ref.sefp_quant_dequant(w, 4))
+    assert (q == 0).all()
+
+
+def test_monotone_precision():
+    """Higher m never increases mean quantization error."""
+    w = rnd(7, (4096,), 0.3)
+    errs = [float(jnp.mean(jnp.abs(ref.sefp_quant_dequant(w, m) - w)))
+            for m in sorted(WIDTHS)]
+    # errs indexed by ascending m: error must be non-increasing in m
+    assert all(errs[i] >= errs[i + 1] for i in range(len(errs) - 1))
+
+
+def test_max_element_representable():
+    """The group max element survives truncation with relative error < 2^-(m-1)."""
+    w = rnd(9, (640,))
+    for m in WIDTHS:
+        q = np.asarray(ref.sefp_quant_dequant(w, m)).reshape(-1, 64)
+        g = np.asarray(w).reshape(-1, 64)
+        idx = np.abs(g).argmax(axis=1)
+        rows = np.arange(g.shape[0])
+        rel = np.abs(q[rows, idx] - g[rows, idx]) / np.abs(g[rows, idx])
+        assert (rel < 2.0 ** (-(m - 1))).all()
+
+
+# ---------------------------------------------------------------------------
+# fused dequant-matmul kernel vs ref
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mkn=st.sampled_from([(4, 64, 16), (16, 128, 96), (1, 256, 32), (33, 192, 65)]),
+    m=st.sampled_from(WIDTHS),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_pallas_matches_ref(mkn, m, seed):
+    M, K, N = mkn
+    x = rnd(seed, (M, K))
+    w = rnd(seed + 1, (K, N), 0.2)
+    a = np.asarray(ref.sefp_matmul_ref(x, w, m))
+    b = np.asarray(sefp.sefp_matmul_pallas(x, w, m))
+    # dot-product reassociation differs between the fused kernel and the
+    # two-op reference; bitwise equality is checked on the qdq path instead
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_blocked_path():
+    """Exercise the multi-block grid (M, N, K all > one block)."""
+    x = rnd(11, (160, 640))
+    w = rnd(12, (640, 200), 0.2)
+    a = np.asarray(ref.sefp_matmul_ref(x, w, 4))
+    b = np.asarray(sefp.sefp_matmul_pallas(x, w, 4))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# STE gradients (paper eq. 1-3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", WIDTHS)
+def test_ste_identity_gradient(m):
+    w = rnd(3, (256,))
+    g = jax.grad(lambda w: jnp.sum(sefp.sefp_ste_pallas(w, m) ** 2))(w)
+    expect = 2 * np.asarray(sefp.sefp_quant_dequant_pallas(w, m))
+    np.testing.assert_allclose(np.asarray(g), expect, rtol=1e-6)
+
+
+def test_ste_ref_and_pallas_agree():
+    w = rnd(4, (300,))
+    for m in WIDTHS:
+        a = jax.grad(lambda w: jnp.sum(jnp.sin(ref.sefp_ste(w, m))))(w)
+        b = jax.grad(lambda w: jnp.sum(jnp.sin(sefp.sefp_ste_pallas(w, m))))(w)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# exact power-of-two construction (jnp.exp2 is inexact on CPU!)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(e=st.integers(-126, 100))
+def test_exact_exp2(e):
+    got = float(ref.exact_exp2(jnp.int32(e)))
+    assert got == 2.0 ** e, f"e={e}: {got}"
+
+
+def test_jnp_exp2_is_why_we_need_exact():
+    """Documents the bug exact_exp2 works around: if this ever starts
+    passing, the workaround can be revisited."""
+    inexact = any(
+        float(jnp.exp2(jnp.float32(e))) != 2.0 ** e for e in range(-30, 15)
+    )
+    assert inexact, "jnp.exp2 became exact — consider simplifying"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    hi=st.sampled_from([8, 7, 6]),
+    lo=st.sampled_from([5, 4, 3]),
+    seed=st.integers(0, 2**16),
+)
+def test_truncation_ladder_pallas(hi, lo, seed):
+    """Ladder exactness through the Pallas kernel too."""
+    w = rnd(seed, (320,), 0.5)
+    direct = np.asarray(sefp.sefp_quant_dequant_pallas(w, lo))
+    chained = np.asarray(
+        sefp.sefp_quant_dequant_pallas(sefp.sefp_quant_dequant_pallas(w, hi), lo)
+    )
+    np.testing.assert_array_equal(direct, chained)
+
+
+def test_quantized_values_are_step_multiples():
+    """Every quantized value must be an integer multiple of the group
+    step — fails if any float op in the chain is inexact."""
+    w = rnd(21, (256,), 0.7)
+    for m in WIDTHS:
+        q = np.asarray(ref.sefp_quant_dequant(w, m)).reshape(-1, 64)
+        g = np.asarray(w).reshape(-1, 64)
+        for gi in range(g.shape[0]):
+            maxabs = np.abs(g[gi]).max()
+            e = int(np.asarray(ref.shared_exponent(jnp.float32(maxabs))))
+            step = 2.0 ** (e - (m - 1))
+            ratio = q[gi] / step
+            np.testing.assert_array_equal(ratio, np.round(ratio))

@@ -1,0 +1,165 @@
+"""L2 model tests: shapes, losses, STE gradient flow, quantized-vs-fp
+behaviour, step-function signatures that the Rust engine relies on."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as ml
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = dataclasses.replace(ml.PRESETS["tiny"], quant_impl="ref")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return ml.init_params(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    k = jax.random.PRNGKey(42)
+    tokens = jax.random.randint(k, (CFG.batch_size, CFG.max_seq), 0, 256)
+    targets = jnp.roll(tokens, -1, axis=1)
+    return tokens, targets
+
+
+def test_param_spec_order_stable():
+    spec = ml.param_spec(CFG)
+    names = [n for n, _ in spec]
+    assert names[0] == "tok_embed" and names[1] == "pos_embed"
+    assert names[-1] == "ln_f"
+    assert len(names) == 2 + 9 * CFG.n_layers + 1
+    # every dim 64-aligned for 2D weights
+    for _, shape in spec:
+        if len(shape) == 2:
+            assert shape[0] % 64 == 0 or shape[0] == CFG.max_seq
+
+
+def test_forward_shapes(params, batch):
+    tokens, _ = batch
+    logits = ml.forward(CFG, params, tokens, None)
+    assert logits.shape == (CFG.batch_size, CFG.max_seq, CFG.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("m", [None, 8, 4, 3])
+def test_loss_finite(params, batch, m):
+    loss = ml.loss_fn(CFG, params, *batch, m)
+    assert np.isfinite(float(loss))
+    # random init, ~uniform prediction: loss near ln(vocab)
+    assert 2.0 < float(loss) < 12.0
+
+
+def test_quantization_perturbs_loss_monotonically(params, batch):
+    """At init, lower precision should perturb the fp loss more (not a
+    strict theorem, but holds at random init with smooth loss)."""
+    fp = float(ml.loss_fn(CFG, params, *batch, None))
+    deltas = [abs(float(ml.loss_fn(CFG, params, *batch, m)) - fp)
+              for m in (8, 3)]
+    assert deltas[0] < deltas[1] + 1e-3
+
+
+def test_padding_targets_masked(params, batch):
+    tokens, targets = batch
+    t2 = targets.at[:, CFG.max_seq // 2:].set(-1)
+    loss = ml.loss_fn(CFG, params, tokens, t2, None)
+    assert np.isfinite(float(loss))
+
+
+def test_all_pad_guard(params, batch):
+    tokens, _ = batch
+    loss = ml.loss_fn(CFG, params, tokens, jnp.full_like(tokens, -1), None)
+    assert float(loss) == 0.0
+
+
+def test_train_step_signature(params, batch):
+    tokens, targets = batch
+    train, evalf, logits = ml.make_step_fns(CFG, 4)
+    names = [n for n, _ in ml.param_spec(CFG)]
+    args = [params[n] for n in names]
+    out = train(*args, tokens, targets)
+    assert len(out) == 1 + len(names)
+    for g, n in zip(out[1:], names):
+        assert g.shape == params[n].shape, n
+    (l,) = evalf(*args, tokens, targets)
+    assert np.isclose(float(l), float(out[0]), rtol=1e-5)
+    (lg,) = logits(*args, tokens)
+    assert lg.shape == (CFG.batch_size, CFG.max_seq, CFG.vocab_size)
+
+
+def test_sgd_reduces_loss(params, batch):
+    """A few STE-SGD steps at m=4 must reduce the m=4 loss — the learning
+    mechanism OTARo relies on."""
+    tokens, targets = batch
+    names = [n for n, _ in ml.param_spec(CFG)]
+    train, _, _ = ml.make_step_fns(CFG, 4)
+    train = jax.jit(train)
+    p = {n: params[n] for n in names}
+    losses = []
+    for _ in range(8):
+        out = train(*[p[n] for n in names], tokens, targets)
+        losses.append(float(out[0]))
+        for n, g in zip(names, out[1:]):
+            p[n] = p[n] - 0.05 * g
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_grad_nonzero_everywhere(params, batch):
+    tokens, targets = batch
+    names = [n for n, _ in ml.param_spec(CFG)]
+    train, _, _ = ml.make_step_fns(CFG, 3)
+    out = train(*[params[n] for n in names], tokens, targets)
+    for n, g in zip(names, out[1:]):
+        assert np.isfinite(np.asarray(g)).all(), n
+        if "pos_embed" not in n and "tok_embed" not in n:
+            assert float(jnp.max(jnp.abs(g))) > 0, n
+
+
+def test_pallas_and_ref_models_agree(batch):
+    tokens, targets = batch
+    p = ml.init_params(CFG, seed=0)
+    names = [n for n, _ in ml.param_spec(CFG)]
+    lr = ml.loss_fn(dataclasses.replace(CFG, quant_impl="ref"), p, tokens, targets, 4)
+    lp = ml.loss_fn(dataclasses.replace(CFG, quant_impl="pallas"), p, tokens, targets, 4)
+    np.testing.assert_allclose(float(lr), float(lp), rtol=1e-6)
+
+
+def test_init_deterministic():
+    a = ml.init_params(CFG, seed=0)
+    b = ml.init_params(CFG, seed=0)
+    for n in a:
+        np.testing.assert_array_equal(np.asarray(a[n]), np.asarray(b[n]))
+
+
+def test_presets_validate():
+    for name, cfg in ml.PRESETS.items():
+        cfg.validate()
+
+
+def test_fused_head_matches_qdq_head(batch):
+    """logits_step's fused dequant-matmul LM head must be bit-identical to
+    the qdq-quantized tied head (SEFP idempotence)."""
+    import jax
+    cfg = dataclasses.replace(ml.PRESETS["tiny"], quant_impl="pallas")
+    p = ml.init_params(cfg, seed=0)
+    tokens, _ = batch
+    for m in (8, 3):
+        a = ml.forward(cfg, p, tokens, m, fused_head=False)
+        b = ml.forward(cfg, p, tokens, m, fused_head=True)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_head_fp_passthrough(batch):
+    """fused_head with m=None must fall back to the plain tied head."""
+    cfg = dataclasses.replace(ml.PRESETS["tiny"], quant_impl="pallas")
+    p = ml.init_params(cfg, seed=0)
+    tokens, _ = batch
+    a = ml.forward(cfg, p, tokens, None, fused_head=True)
+    b = ml.forward(cfg, p, tokens, None, fused_head=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,76 @@
+//! Coordinator overhead — BPS scoring/selection and LAA accumulation must
+//! be negligible next to a train step (target <1%, DESIGN.md §Perf) —
+//! plus the serving-side precision-switch primitive.
+
+use otaro::benchutil::{black_box, group, Bench};
+use otaro::coordinator::{Bps, Laa, LaaAction, UniformSampler};
+use otaro::sefp::{PackedSefp, Rounding, SefpTensor, GROUP_SIZE};
+use otaro::serve::DynamicBatcher;
+
+fn main() {
+    let mut b = Bench::new();
+    let widths = [8u8, 7, 6, 5, 4, 3];
+
+    group("BPS");
+    {
+        let mut bps = Bps::new(&widths, 5.0, 0.9);
+        b.run("bps_select_update", || {
+            let w = bps.select();
+            bps.update(w, black_box(2.5));
+            w
+        });
+    }
+    {
+        let mut u = UniformSampler::new(&widths, 3);
+        b.run("uniform_select", || u.select());
+    }
+
+    group("LAA accumulate (~476k params)");
+    let grads: Vec<Vec<f32>> = vec![vec![0.01f32; 476_000 / 4]; 4];
+    {
+        let mut laa = Laa::new(usize::MAX >> 1, 4); // never flush
+        b.run_elems("laa_observe_m3", 476_000, || {
+            match laa.observe(3, black_box(grads.clone())) {
+                LaaAction::Deferred { filled } => filled,
+                _ => unreachable!(),
+            }
+        });
+    }
+    b.run_elems("grads_clone_baseline", 476_000, || black_box(grads.clone()));
+
+    group("serve dynamic batcher");
+    b.run("push64_pop_all", || {
+        let mut db = DynamicBatcher::new(8, 1024);
+        for i in 0..64u64 {
+            let req = otaro::serve::Request {
+                id: i,
+                class: otaro::serve::TaskClass::Other,
+                prompt: vec![65, 66],
+                force_m: None,
+            };
+            db.push(req, (3 + (i % 6)) as u8).unwrap();
+        }
+        let mut n = 0;
+        while let Some((_, batch)) = db.pop_batch() {
+            n += batch.len();
+        }
+        n
+    });
+
+    group("precision switch on 1M-element tensor");
+    let mut rng = otaro::data::Rng::new(5);
+    let w: Vec<f32> = (0..1 << 20).map(|_| rng.normal() as f32 * 0.1).collect();
+    let t8 = SefpTensor::encode(&w, 8, GROUP_SIZE, Rounding::Trunc);
+    let p8 = PackedSefp::from_tensor(&t8);
+    b.run_elems("tensor_truncate_to_m4", 1 << 20, || black_box(&t8).truncate(4));
+    b.run_elems("packed_truncate_to_m4", 1 << 20, || black_box(&p8).truncate(4));
+    b.run_elems("truncate_plus_decode", 1 << 20, || black_box(&t8).truncate(4).decode());
+    b.run_elems("full_reencode_baseline", 1 << 20, || {
+        SefpTensor::encode(black_box(&w), 4, GROUP_SIZE, Rounding::Trunc)
+    });
+
+    println!(
+        "\nswitch-vs-reencode speedup: {:.1}x",
+        b.ratio("full_reencode_baseline", "tensor_truncate_to_m4").unwrap_or(f64::NAN)
+    );
+}

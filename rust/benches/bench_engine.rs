@@ -1,0 +1,51 @@
+//! Engine step latency per bit-width (train/eval/logits) — the L3 hot
+//! path over AOT-compiled HLO.  Requires `make artifacts`.
+
+use otaro::benchutil::{group, Bench};
+use otaro::data::{corpus, Lang, StreamBatcher};
+use otaro::runtime::{Engine, Width};
+
+fn main() {
+    let artifacts = std::path::Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("skipping engine benches: run `make artifacts` first");
+        return;
+    }
+    let mut engine = Engine::new(artifacts).expect("engine");
+    let params = engine.init_params().expect("params");
+    let lang = Lang::new(0x1A06);
+    let (bsz, t) = engine.batch_shape();
+    let stream = corpus::pretrain_corpus(&lang, 0, 2_000);
+    let mut batcher = StreamBatcher::new(stream, bsz, t, 3);
+    let batch = batcher.next_batch();
+
+    let mut b = Bench::new();
+    b.budget_ms = 2_000.0;
+    b.max_iters = 60;
+
+    group("engine train_step");
+    for w in [Width::FP, Width::m(8), Width::m(4), Width::m(3)] {
+        b.run(&format!("train_{}", w.tag()), || {
+            engine.train_step(&params, &batch, w).unwrap()
+        });
+    }
+
+    group("engine eval_step");
+    for w in [Width::FP, Width::m(4)] {
+        b.run(&format!("eval_{}", w.tag()), || {
+            engine.eval_step(&params, &batch, w).unwrap()
+        });
+    }
+
+    group("engine logits_step");
+    for w in [Width::m(8), Width::m(3)] {
+        b.run(&format!("logits_{}", w.tag()), || {
+            engine.logits_step(&params, &batch.tokens, w).unwrap()
+        });
+    }
+
+    println!(
+        "\nquantized train-step overhead vs fp: {:.2}x",
+        b.ratio("train_m4", "train_fp").unwrap_or(f64::NAN)
+    );
+}

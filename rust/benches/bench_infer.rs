@@ -1,0 +1,57 @@
+//! Table-2 micro benches: packed-SEFP matvec vs f32 dense matvec, plus
+//! the full decode-step comparison at several widths.
+
+use otaro::benchutil::{black_box, group, Bench};
+use otaro::data::Rng;
+use otaro::infer::{DecoderSim, DecoderWeights, DenseLinear, QuantLinear, SimConfig};
+
+fn dense(in_dim: usize, out_dim: usize) -> DenseLinear {
+    let mut rng = Rng::new(7);
+    DenseLinear::new(
+        in_dim,
+        out_dim,
+        (0..in_dim * out_dim).map(|_| rng.normal() as f32 * 0.05).collect(),
+    )
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    group("matvec 1024x1024");
+    let d = dense(1024, 1024);
+    let mut rng = Rng::new(8);
+    let x: Vec<f32> = (0..1024).map(|_| rng.normal() as f32).collect();
+    let mut y = vec![0.0f32; 1024];
+    let n = (1024 * 1024) as u64;
+    b.run_elems("f32_dense", n, || d.matvec(black_box(&x), black_box(&mut y)));
+    for m in [8u8, 4, 3] {
+        let q = QuantLinear::from_dense(&d, m, 64);
+        b.run_elems(&format!("sefp_m{m}"), n, || q.matvec(black_box(&x), black_box(&mut y)));
+    }
+
+    group("decode_step llama8b/16 sim");
+    let cfg = SimConfig::llama8b_scaled(16);
+    let mut dense_sim = DecoderSim::new(cfg, DecoderWeights::Dense, 1);
+    let mut sefp_sim = DecoderSim::new(cfg, DecoderWeights::Sefp(4), 1);
+    // prefill so attention reads a realistic cache
+    let _ = dense_sim.decode_throughput_prefilled(1, cfg.context, 1);
+    let _ = sefp_sim.decode_throughput_prefilled(1, cfg.context, 1);
+    {
+        let mut xs = vec![0.1f32; cfg.d_model];
+        b.run("decode_fp", || dense_sim.decode_step(black_box(&mut xs)));
+    }
+    {
+        let mut xs = vec![0.1f32; cfg.d_model];
+        b.run("decode_sefp_m4", || sefp_sim.decode_step(black_box(&mut xs)));
+    }
+    println!(
+        "\ndecode speedup SEFP-E5M4 vs fp: {:.2}x (paper table 2: 2.45x vs FP16 on-device)",
+        b.ratio("decode_fp", "decode_sefp_m4").unwrap_or(f64::NAN)
+    );
+    println!(
+        "memory: fp16-equiv {:.1} MiB vs sefp-m4 {:.1} MiB ({:.0}% reduction)",
+        dense_sim.memory_bytes() as f64 / 1048576.0,
+        sefp_sim.memory_bytes() as f64 / 1048576.0,
+        100.0 * (1.0 - sefp_sim.memory_bytes() as f64 / dense_sim.memory_bytes() as f64)
+    );
+}

@@ -1,0 +1,58 @@
+//! SEFP format hot paths — encode, decode, truncate (the precision-switch
+//! operation), packed pack/unpack, and the group-size ablation from
+//! DESIGN.md §6.  Runs under `cargo bench` via the in-repo harness.
+
+use otaro::benchutil::{black_box, group, Bench};
+use otaro::data::Rng;
+use otaro::sefp::{PackedSefp, Rounding, SefpTensor, GROUP_SIZE};
+
+fn weights(n: usize) -> Vec<f32> {
+    let mut rng = Rng::new(42);
+    (0..n).map(|_| rng.normal() as f32 * 0.1).collect()
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let w = weights(1 << 16);
+    let n = w.len() as u64;
+
+    group("sefp_encode (65536 elems)");
+    for m in [8u8, 4, 3] {
+        b.run_elems(&format!("encode_m{m}"), n, || {
+            SefpTensor::encode(black_box(&w), m, GROUP_SIZE, Rounding::Trunc)
+        });
+    }
+    b.run_elems("encode_m4_nearest", n, || {
+        SefpTensor::encode(black_box(&w), 4, GROUP_SIZE, Rounding::Nearest)
+    });
+
+    group("sefp_encode group-size ablation (m=4)");
+    for gs in [32usize, 64, 128] {
+        b.run_elems(&format!("encode_g{gs}"), n, || {
+            SefpTensor::encode(black_box(&w), 4, gs, Rounding::Trunc)
+        });
+    }
+
+    group("sefp_truncate (the precision switch)");
+    let t8 = SefpTensor::encode(&w, 8, GROUP_SIZE, Rounding::Trunc);
+    for m in [7u8, 4, 3] {
+        b.run_elems(&format!("truncate_m8_to_m{m}"), n, || black_box(&t8).truncate(m));
+    }
+
+    group("sefp_decode");
+    let t4 = SefpTensor::encode(&w, 4, GROUP_SIZE, Rounding::Trunc);
+    b.run_elems("decode_m4", n, || black_box(&t4).decode());
+    b.run_elems("decode_m8", n, || black_box(&t8).decode());
+
+    group("sefp_packed (bitstream)");
+    let p4 = PackedSefp::from_tensor(&t4);
+    let p8 = PackedSefp::from_tensor(&t8);
+    b.run_elems("pack_m4", n, || PackedSefp::from_tensor(black_box(&t4)));
+    b.run_elems("unpack_m4", n, || black_box(&p4).to_tensor());
+    b.run_elems("truncate_packed_m8_to_m4", n, || black_box(&p8).truncate(4));
+
+    println!(
+        "\nencode->truncate speedup at m=4: {:.1}x (switch vs re-encode)",
+        b.ratio("encode_m4", "truncate_m8_to_m4").unwrap_or(f64::NAN)
+    );
+}

@@ -1,0 +1,78 @@
+//! ε(ω) sawtooth sampler (paper eq. 13, appendix A fig. 9).
+//!
+//! ε(ω) = (ω·2^m − [ω·2^m]) / 2^m — period AND amplitude 1/2^m, so lower
+//! mantissa widths oscillate harder: the mechanism behind the gradient
+//! noise LAA suppresses.
+
+use crate::sefp::{epsilon_sawtooth, Rounding};
+
+/// Sample ε(ω) on a uniform grid over [lo, hi]; returns (ω, ε) pairs.
+pub fn epsilon_curve(m: u8, lo: f32, hi: f32, n: usize, rounding: Rounding) -> Vec<(f32, f32)> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| {
+            let w = lo + (hi - lo) * i as f32 / (n - 1) as f32;
+            (w, epsilon_sawtooth(w, m, rounding))
+        })
+        .collect()
+}
+
+/// Peak-to-peak amplitude of a sampled curve.
+pub fn amplitude(curve: &[(f32, f32)]) -> f32 {
+    let max = curve.iter().map(|&(_, e)| e).fold(f32::NEG_INFINITY, f32::max);
+    let min = curve.iter().map(|&(_, e)| e).fold(f32::INFINITY, f32::min);
+    max - min
+}
+
+/// Crude ASCII rendering for terminal output of fig. 9.
+pub fn ascii_plot(curve: &[(f32, f32)], rows: usize, cols: usize) -> String {
+    let (min_e, max_e) = curve.iter().fold((f32::INFINITY, f32::NEG_INFINITY), |(lo, hi), &(_, e)| {
+        (lo.min(e), hi.max(e))
+    });
+    let span = (max_e - min_e).max(1e-12);
+    let mut grid = vec![vec![b' '; cols]; rows];
+    for (i, &(_, e)) in curve.iter().enumerate() {
+        let c = i * cols / curve.len();
+        let r = ((max_e - e) / span * (rows - 1) as f32).round() as usize;
+        grid[r.min(rows - 1)][c.min(cols - 1)] = b'*';
+    }
+    grid.into_iter()
+        .map(|row| String::from_utf8(row).unwrap())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn amplitude_scales_with_width() {
+        // amplitude(m) ≈ 1/2^m under rounding (±half step) and truncation
+        let a3 = amplitude(&epsilon_curve(3, 0.0, 1.0, 4001, Rounding::Trunc));
+        let a5 = amplitude(&epsilon_curve(5, 0.0, 1.0, 4001, Rounding::Trunc));
+        let a8 = amplitude(&epsilon_curve(8, 0.0, 1.0, 4001, Rounding::Trunc));
+        assert!(a3 > a5 && a5 > a8, "{a3} {a5} {a8}");
+        assert!((a3 - 1.0 / 8.0).abs() < 0.02, "{a3}");
+    }
+
+    #[test]
+    fn periodicity() {
+        // ε repeats with period 1/2^m
+        let m = 4;
+        let period = 1.0 / 16.0;
+        for k in 0..10 {
+            let w = 0.013 + k as f32 * period;
+            let e0 = crate::sefp::epsilon_sawtooth(0.013, m, Rounding::Trunc);
+            let ek = crate::sefp::epsilon_sawtooth(w, m, Rounding::Trunc);
+            assert!((e0 - ek).abs() < 1e-5, "k={k}");
+        }
+    }
+
+    #[test]
+    fn ascii_plot_shape() {
+        let p = ascii_plot(&epsilon_curve(3, 0.0, 0.5, 200, Rounding::Trunc), 8, 60);
+        assert_eq!(p.lines().count(), 8);
+        assert!(p.contains('*'));
+    }
+}

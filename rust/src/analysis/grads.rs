@@ -1,0 +1,96 @@
+//! Gradient geometry across the precision ladder (paper figs. 4 & 5).
+//!
+//! The empirical backbone of BPS: gradients at different bit-widths are
+//! similar overall, and each width aligns better with *higher* widths
+//! than with lower ones — so a path that drifts toward high precision
+//! keeps its updates useful for every width.
+
+use crate::coordinator::BatchSource;
+use crate::runtime::{Engine, ParamStore, Width};
+
+/// Cosine similarity of two flat vectors.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += x as f64 * x as f64;
+        nb += y as f64 * y as f64;
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// Gradients for one batch at several widths, restricted to one named
+/// parameter (e.g. "layer1.wq" — fig. 4 uses q/k/v/down projectors).
+/// Returns the row-major cosine matrix over `widths`.
+pub fn cosine_matrix(
+    engine: &mut Engine,
+    params: &ParamStore,
+    batch: &crate::data::Batch,
+    widths: &[Width],
+    param_name: &str,
+) -> anyhow::Result<Vec<Vec<f64>>> {
+    let idx = params
+        .index_of(param_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown param {param_name}"))?;
+    let mut grads = Vec::with_capacity(widths.len());
+    for &w in widths {
+        let out = engine.train_step(params, batch, w)?;
+        grads.push(out.grads[idx].clone());
+    }
+    let n = widths.len();
+    let mut mat = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        for j in 0..n {
+            mat[i][j] = cosine(&grads[i], &grads[j]);
+        }
+    }
+    Ok(mat)
+}
+
+/// Per-batch gradient-norm errors ||∇_sefp|| − ||∇_fp|| for each width
+/// over `n_batches` (fig. 5 traces).  Restricted to `param_name` like the
+/// paper (layer-15 down projector there).
+pub fn norm_error_traces<B: BatchSource>(
+    engine: &mut Engine,
+    params: &ParamStore,
+    batches: &mut B,
+    widths: &[Width],
+    param_name: &str,
+    n_batches: usize,
+) -> anyhow::Result<Vec<Vec<f64>>> {
+    let idx = params
+        .index_of(param_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown param {param_name}"))?;
+    let mut traces = vec![Vec::with_capacity(n_batches); widths.len()];
+    for _ in 0..n_batches {
+        let batch = batches.next_batch();
+        let fp = engine.train_step(params, &batch, Width::FP)?;
+        let fp_norm = l2(&fp.grads[idx]);
+        for (wi, &w) in widths.iter().enumerate() {
+            let out = engine.train_step(params, &batch, w)?;
+            traces[wi].push(l2(&out.grads[idx]) - fp_norm);
+        }
+    }
+    Ok(traces)
+}
+
+fn l2(v: &[f32]) -> f64 {
+    v.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!((cosine(&[1.0, 0.0], &[0.0, 1.0])).abs() < 1e-12);
+        assert!((cosine(&[1.0, 1.0], &[-1.0, -1.0]) + 1.0).abs() < 1e-12);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Least-squares decomposition ∇_sefp = X·∇_fp + Y (paper appendix B,
+//! fig. 6).
+//!
+//! The appendix writes X as a d×d mapping estimated from N batches, but
+//! with N ≪ d that system is wildly underdetermined; the fitted object
+//! the figures actually need is the per-coordinate linear gain.  We
+//! therefore fit a DIAGONAL X by least squares per coordinate j over the
+//! batch window:
+//!
+//! ```text
+//! X_j = Σ_i g_fp[i,j]·g_sefp[i,j] / Σ_i g_fp[i,j]²
+//! Y_[i,j] = g_sefp[i,j] − X_j·g_fp[i,j]
+//! ```
+//!
+//! which removes the cross-batch linear scaling exactly as the appendix
+//! intends ("eliminates the linear scaling effect caused by gradient
+//! magnitude variation across batches") while staying well-posed.  The
+//! validated property is eq. 15: E[Y] ≈ 0.
+
+#[derive(Debug, Clone)]
+pub struct LsmFit {
+    /// diagonal gains X_j (one per tracked coordinate)
+    pub x: Vec<f64>,
+    /// residuals Y[i][j]: batch-major
+    pub y: Vec<Vec<f64>>,
+    /// per-coordinate residual means (fig. 6's E[Y] check)
+    pub y_mean: Vec<f64>,
+    /// per-coordinate residual std
+    pub y_std: Vec<f64>,
+}
+
+/// Fit over `g_fp[i][j]` / `g_sefp[i][j]` (i = batch, j = coordinate).
+pub fn lsm_fit(g_fp: &[Vec<f64>], g_sefp: &[Vec<f64>]) -> LsmFit {
+    assert_eq!(g_fp.len(), g_sefp.len());
+    assert!(!g_fp.is_empty());
+    let n = g_fp.len();
+    let d = g_fp[0].len();
+    let mut x = vec![0.0f64; d];
+    for j in 0..d {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..n {
+            num += g_fp[i][j] * g_sefp[i][j];
+            den += g_fp[i][j] * g_fp[i][j];
+        }
+        x[j] = if den > 0.0 { num / den } else { 0.0 };
+    }
+    let mut y = vec![vec![0.0f64; d]; n];
+    for i in 0..n {
+        for j in 0..d {
+            y[i][j] = g_sefp[i][j] - x[j] * g_fp[i][j];
+        }
+    }
+    let mut y_mean = vec![0.0f64; d];
+    let mut y_std = vec![0.0f64; d];
+    for j in 0..d {
+        let mean: f64 = y.iter().map(|r| r[j]).sum::<f64>() / n as f64;
+        let var: f64 = y.iter().map(|r| (r[j] - mean).powi(2)).sum::<f64>() / n as f64;
+        y_mean[j] = mean;
+        y_std[j] = var.sqrt();
+    }
+    LsmFit { x, y, y_mean, y_std }
+}
+
+impl LsmFit {
+    /// Scale-relative mean residual: |E[Y_j]| / std(Y_j), averaged over
+    /// coordinates — should be ≪ 1 if E[Y] ≈ 0 (paper eq. 15).
+    pub fn relative_mean_residual(&self) -> f64 {
+        let mut acc = 0.0;
+        let mut k = 0usize;
+        for (m, s) in self.y_mean.iter().zip(&self.y_std) {
+            if *s > 0.0 {
+                acc += m.abs() / s;
+                k += 1;
+            }
+        }
+        if k == 0 {
+            0.0
+        } else {
+            acc / k as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn recovers_diagonal_gain() {
+        // g_sefp = 2*g_fp + zero-mean noise -> X ≈ 2, E[Y] ≈ 0
+        let mut rng = Rng::new(1);
+        let n = 400;
+        let d = 8;
+        let mut g_fp = Vec::new();
+        let mut g_sefp = Vec::new();
+        for _ in 0..n {
+            let f: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let s: Vec<f64> = f.iter().map(|&v| 2.0 * v + 0.1 * rng.normal()).collect();
+            g_fp.push(f);
+            g_sefp.push(s);
+        }
+        let fit = lsm_fit(&g_fp, &g_sefp);
+        for &xj in &fit.x {
+            assert!((xj - 2.0).abs() < 0.1, "x={xj}");
+        }
+        assert!(fit.relative_mean_residual() < 0.15);
+    }
+
+    #[test]
+    fn residual_strips_linear_part() {
+        // pure linear relation -> Y exactly zero
+        let g_fp = vec![vec![1.0, 2.0], vec![2.0, -1.0], vec![-1.0, 0.5]];
+        let g_sefp: Vec<Vec<f64>> =
+            g_fp.iter().map(|r| r.iter().map(|v| 3.0 * v).collect()).collect();
+        let fit = lsm_fit(&g_fp, &g_sefp);
+        for row in &fit.y {
+            for v in row {
+                assert!(v.abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_fp_gradient_handled() {
+        let g_fp = vec![vec![0.0], vec![0.0]];
+        let g_sefp = vec![vec![1.0], vec![-1.0]];
+        let fit = lsm_fit(&g_fp, &g_sefp);
+        assert_eq!(fit.x[0], 0.0);
+        assert!(fit.y_mean[0].abs() < 1e-12);
+    }
+}

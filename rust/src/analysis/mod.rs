@@ -1,0 +1,15 @@
+//! Gradient & format analysis — regenerates the paper's diagnostic
+//! figures:
+//!
+//! * fig. 4 — cosine similarities between gradients at different widths
+//! * fig. 5 — gradient-norm errors ||∇_sefp|| − ||∇_fp|| over batches
+//! * fig. 6 — LSM residual Y of ∇_sefp = X·∇_fp + Y (appendix B)
+//! * fig. 9 — the ε(ω) sawtooth (appendix A)
+
+pub mod epsilon;
+pub mod grads;
+pub mod lsm;
+
+pub use epsilon::epsilon_curve;
+pub use grads::{cosine, cosine_matrix, norm_error_traces};
+pub use lsm::{lsm_fit, LsmFit};

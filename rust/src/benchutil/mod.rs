@@ -1,0 +1,156 @@
+//! Mini benchmark harness (the offline vendor set has no criterion).
+//!
+//! `cargo bench` targets are `harness = false` binaries built on this
+//! module: warmup, N timed iterations, median/mean/min reporting, and
+//! element-throughput lines — enough to drive the §Perf iteration loop
+//! and regenerate the perf rows in EXPERIMENTS.md.
+
+use std::hint::black_box as bb;
+use std::time::Instant;
+
+pub use std::hint::black_box;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    /// elements per iteration (0 = unset)
+    pub elements: u64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        let t = fmt_ns(self.median_ns);
+        if self.elements > 0 {
+            let eps = self.elements as f64 / (self.median_ns * 1e-9);
+            println!(
+                "{:<44} {:>12}/iter  (mean {}, min {}, {} iters, {:.1} Melem/s)",
+                self.name,
+                t,
+                fmt_ns(self.mean_ns),
+                fmt_ns(self.min_ns),
+                self.iters,
+                eps / 1e6
+            );
+        } else {
+            println!(
+                "{:<44} {:>12}/iter  (mean {}, min {}, {} iters)",
+                self.name,
+                t,
+                fmt_ns(self.mean_ns),
+                fmt_ns(self.min_ns),
+                self.iters
+            );
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner: targets ~`budget_ms` of total measurement.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub budget_ms: f64,
+    pub max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, budget_ms: 900.0, max_iters: 10_000, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f`, auto-scaling iteration count to the budget.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.run_n(name, 0, &mut f)
+    }
+
+    /// Like `run` but annotates element throughput.
+    pub fn run_elems<T>(&mut self, name: &str, elements: u64, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.run_n(name, elements, &mut f)
+    }
+
+    fn run_n<T>(&mut self, name: &str, elements: u64, f: &mut dyn FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            bb(f());
+        }
+        // estimate per-iter cost
+        let t0 = Instant::now();
+        bb(f());
+        let est_ns = t0.elapsed().as_nanos().max(1) as f64;
+        let iters = ((self.budget_ms * 1e6 / est_ns) as usize).clamp(5, self.max_iters);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            bb(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let median = samples[samples.len() / 2];
+        let min = samples[0];
+        let res = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            median_ns: median,
+            min_ns: min,
+            elements,
+        };
+        res.report();
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Ratio of two named results (a/b, by median) — speedup lines.
+    pub fn ratio(&self, a: &str, b: &str) -> Option<f64> {
+        let fa = self.results.iter().find(|r| r.name == a)?;
+        let fb = self.results.iter().find(|r| r.name == b)?;
+        Some(fa.median_ns / fb.median_ns)
+    }
+}
+
+/// Group header helper for bench binaries.
+pub fn group(title: &str) {
+    println!("\n== {title} ==");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let mut b = Bench { warmup_iters: 1, budget_ms: 5.0, max_iters: 50, results: vec![] };
+        b.run("noop", || 1 + 1);
+        b.run_elems("vec", 100, || (0..100).sum::<usize>());
+        assert_eq!(b.results().len(), 2);
+        assert!(b.results()[0].median_ns >= 0.0);
+        assert!(b.ratio("vec", "noop").is_some());
+        assert!(b.ratio("missing", "noop").is_none());
+    }
+}

@@ -1,0 +1,375 @@
+//! Config system: JSON-backed configs with presets and CLI overrides
+//! (serialization via the in-repo `json` substrate — the offline vendor
+//! set has no serde).
+//!
+//! The model architecture config is *read from the artifact manifest*
+//! (single source of truth is `python/compile/model.py::param_spec`); the
+//! configs here govern everything the Rust side owns: training schedule,
+//! BPS/LAA hyper-parameters, serving policy, experiment sweeps.
+
+use std::path::{Path, PathBuf};
+
+use crate::json::{arr, n, obj, s, Value};
+use crate::sefp::Rounding;
+
+/// Fine-tuning method (paper table 1 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// No fine-tuning at all ("Before Fine-Tuning").
+    None,
+    /// Full-precision fine-tuning ("FP16 Fine-Tuning" in the paper; f32
+    /// masters on this CPU image).
+    Fp,
+    /// Per-bit-width STE fine-tuning ("Fixed Precision Fine-Tuning") —
+    /// one run per bit-width, multiplying total tuning time.
+    Fixed,
+    /// Uniformly random bit-width sampling (fig. 3 baseline).
+    Uniform,
+    /// BPS without LAA (ablation, fig. 8).
+    BpsOnly,
+    /// Full OTARo: BPS + LAA (Algorithm 1).
+    Otaro,
+}
+
+impl std::str::FromStr for Method {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "none" => Ok(Method::None),
+            "fp" => Ok(Method::Fp),
+            "fixed" => Ok(Method::Fixed),
+            "uniform" => Ok(Method::Uniform),
+            "bps_only" => Ok(Method::BpsOnly),
+            "otaro" => Ok(Method::Otaro),
+            other => Err(format!("unknown method {other:?}")),
+        }
+    }
+}
+
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Method::None => "none",
+            Method::Fp => "fp",
+            Method::Fixed => "fixed",
+            Method::Uniform => "uniform",
+            Method::BpsOnly => "bps_only",
+            Method::Otaro => "otaro",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Training/fine-tuning configuration (paper §Implementation Details).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub method: Method,
+    /// SGD learning rate (paper: 1e-5 for LLM-scale; our small models
+    /// converge with a larger default, overridable per experiment).
+    pub lr: f32,
+    pub steps: usize,
+    /// Bit-widths in play (paper: {8,7,6,5,4,3}).
+    pub widths: Vec<u8>,
+    /// BPS exploration coefficient λ (paper: 5).
+    pub lambda: f64,
+    /// LAA delay step N (paper: 10).
+    pub delay_n: usize,
+    /// Bit-widths counted as "ultra-low" for LAA (the paper leaves this
+    /// open; Ablation A in EXPERIMENTS.md shows the bottom rung only
+    /// (m <= 3) is best — deferring m=4 too throttles its learning).
+    pub ultra_low_max_m: u8,
+    /// For Method::Fixed — which bit-width this run is fixed to.
+    pub fixed_m: Option<u8>,
+    pub seed: u64,
+    pub rounding: Rounding,
+    /// Evaluate every k steps (0 = only at the end).
+    pub eval_every: usize,
+    /// Loss EMA horizon used for the BPS score's L_b term.
+    pub loss_ema: f64,
+    /// LAA delayed update uses the MEAN of the accumulated gradients
+    /// (true, default) or the paper's raw sum (eq. 18).  The raw sum is
+    /// only stable at LLM-scale learning rates (the paper's η=1e-5); at
+    /// this repo's η it multiplies the effective step by N and diverges —
+    /// see EXPERIMENTS.md §Deviations.
+    pub laa_average: bool,
+    /// LAA ablation: apply the partial accumulator whenever the path
+    /// leaves the ultra-low zone instead of letting it persist
+    /// (DESIGN.md §6).
+    pub laa_flush_on_switch: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            method: Method::Otaro,
+            lr: 1e-2,
+            steps: 300,
+            widths: vec![8, 7, 6, 5, 4, 3],
+            lambda: 5.0,
+            delay_n: 10,
+            ultra_low_max_m: 3,
+            fixed_m: None,
+            seed: 0,
+            rounding: Rounding::Trunc,
+            eval_every: 0,
+            loss_ema: 0.9,
+            laa_average: true,
+            laa_flush_on_switch: false,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("method", s(self.method.to_string())),
+            ("lr", n(self.lr as f64)),
+            ("steps", n(self.steps as f64)),
+            ("widths", arr(self.widths.iter().map(|&w| n(w as f64)).collect())),
+            ("lambda", n(self.lambda)),
+            ("delay_n", n(self.delay_n as f64)),
+            ("ultra_low_max_m", n(self.ultra_low_max_m as f64)),
+            (
+                "fixed_m",
+                self.fixed_m.map(|m| n(m as f64)).unwrap_or(Value::Null),
+            ),
+            ("seed", n(self.seed as f64)),
+            (
+                "rounding",
+                s(match self.rounding {
+                    Rounding::Trunc => "trunc",
+                    Rounding::Nearest => "nearest",
+                }),
+            ),
+            ("eval_every", n(self.eval_every as f64)),
+            ("loss_ema", n(self.loss_ema)),
+            ("laa_average", Value::Bool(self.laa_average)),
+            ("laa_flush_on_switch", Value::Bool(self.laa_flush_on_switch)),
+        ])
+    }
+
+    /// Parse from JSON; absent fields keep defaults.
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let mut c = TrainConfig::default();
+        if let Some(m) = v.get("method").and_then(Value::as_str) {
+            c.method = m.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+        }
+        if let Some(x) = v.get("lr").and_then(Value::as_f64) {
+            c.lr = x as f32;
+        }
+        if let Some(x) = v.get("steps").and_then(Value::as_usize) {
+            c.steps = x;
+        }
+        if let Some(ws) = v.get("widths").and_then(Value::as_arr) {
+            c.widths = ws.iter().filter_map(|w| w.as_f64()).map(|w| w as u8).collect();
+        }
+        if let Some(x) = v.get("lambda").and_then(Value::as_f64) {
+            c.lambda = x;
+        }
+        if let Some(x) = v.get("delay_n").and_then(Value::as_usize) {
+            c.delay_n = x;
+        }
+        if let Some(x) = v.get("ultra_low_max_m").and_then(Value::as_usize) {
+            c.ultra_low_max_m = x as u8;
+        }
+        match v.get("fixed_m") {
+            Some(Value::Num(x)) => c.fixed_m = Some(*x as u8),
+            Some(Value::Null) | None => {}
+            Some(other) => anyhow::bail!("fixed_m not a number: {other:?}"),
+        }
+        if let Some(x) = v.get("seed").and_then(Value::as_f64) {
+            c.seed = x as u64;
+        }
+        if let Some(r) = v.get("rounding").and_then(Value::as_str) {
+            c.rounding = r.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+        }
+        if let Some(x) = v.get("eval_every").and_then(Value::as_usize) {
+            c.eval_every = x;
+        }
+        if let Some(x) = v.get("loss_ema").and_then(Value::as_f64) {
+            c.loss_ema = x;
+        }
+        if let Some(x) = v.get("laa_average").and_then(Value::as_bool) {
+            c.laa_average = x;
+        }
+        if let Some(x) = v.get("laa_flush_on_switch").and_then(Value::as_bool) {
+            c.laa_flush_on_switch = x;
+        }
+        Ok(c)
+    }
+}
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// max requests batched into one engine call
+    pub max_batch: usize,
+    /// queue capacity before backpressure
+    pub queue_cap: usize,
+    /// default precision when the router has no signal
+    pub default_m: u8,
+    /// precision used for generation-class requests
+    pub generation_m: u8,
+    /// precision used for understanding-class requests
+    pub understanding_m: u8,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 8,
+            queue_cap: 256,
+            default_m: 6,
+            generation_m: 8,
+            understanding_m: 4,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("max_batch", n(self.max_batch as f64)),
+            ("queue_cap", n(self.queue_cap as f64)),
+            ("default_m", n(self.default_m as f64)),
+            ("generation_m", n(self.generation_m as f64)),
+            ("understanding_m", n(self.understanding_m as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Self {
+        let mut c = ServeConfig::default();
+        if let Some(x) = v.get("max_batch").and_then(Value::as_usize) {
+            c.max_batch = x;
+        }
+        if let Some(x) = v.get("queue_cap").and_then(Value::as_usize) {
+            c.queue_cap = x;
+        }
+        if let Some(x) = v.get("default_m").and_then(Value::as_usize) {
+            c.default_m = x as u8;
+        }
+        if let Some(x) = v.get("generation_m").and_then(Value::as_usize) {
+            c.generation_m = x as u8;
+        }
+        if let Some(x) = v.get("understanding_m").and_then(Value::as_usize) {
+            c.understanding_m = x as u8;
+        }
+        c
+    }
+}
+
+/// Top-level experiment config, loadable from JSON.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub train: TrainConfig,
+    pub serve: ServeConfig,
+    pub artifacts: PathBuf,
+    pub runs: PathBuf,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: String::new(),
+            train: TrainConfig::default(),
+            serve: ServeConfig::default(),
+            artifacts: PathBuf::from("artifacts"),
+            runs: PathBuf::from("runs"),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&crate::json::parse(&text)?)
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let mut c = ExperimentConfig::default();
+        if let Some(name) = v.get("name").and_then(Value::as_str) {
+            c.name = name.to_string();
+        }
+        if let Some(t) = v.get("train") {
+            c.train = TrainConfig::from_json(t)?;
+        }
+        if let Some(sv) = v.get("serve") {
+            c.serve = ServeConfig::from_json(sv);
+        }
+        if let Some(p) = v.get("artifacts").and_then(Value::as_str) {
+            c.artifacts = PathBuf::from(p);
+        }
+        if let Some(p) = v.get("runs").and_then(Value::as_str) {
+            c.runs = PathBuf::from(p);
+        }
+        Ok(c)
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("name", s(self.name.clone())),
+            ("train", self.train.to_json()),
+            ("serve", self.serve.to_json()),
+            ("artifacts", s(self.artifacts.display().to_string())),
+            ("runs", s(self.runs.display().to_string())),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Run directory for this experiment (created on demand).
+    pub fn run_dir(&self) -> anyhow::Result<PathBuf> {
+        let dir = self.runs.join(&self.name);
+        std::fs::create_dir_all(&dir)?;
+        Ok(dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = TrainConfig::default();
+        assert_eq!(c.widths, vec![8, 7, 6, 5, 4, 3]);
+        assert_eq!(c.lambda, 5.0);
+        assert_eq!(c.delay_n, 10);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ExperimentConfig::default();
+        c.name = "t".into();
+        c.train.method = Method::Fixed;
+        c.train.fixed_m = Some(4);
+        c.train.lambda = 3.5;
+        let text = c.to_json().to_string();
+        let d = ExperimentConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(d.train.method, Method::Fixed);
+        assert_eq!(d.train.fixed_m, Some(4));
+        assert_eq!(d.train.lambda, 3.5);
+        assert_eq!(d.name, "t");
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let v = crate::json::parse(r#"{"name":"x","train":{"lr":0.5}}"#).unwrap();
+        let d = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(d.train.lr, 0.5);
+        assert_eq!(d.train.delay_n, 10);
+    }
+
+    #[test]
+    fn method_parse() {
+        assert_eq!("otaro".parse::<Method>().unwrap(), Method::Otaro);
+        assert!("bogus".parse::<Method>().is_err());
+    }
+}

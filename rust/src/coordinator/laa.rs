@@ -1,0 +1,194 @@
+//! LAA — Low-Precision Asynchronous Accumulation (paper eq. 10-18,
+//! Algorithm 1 lines 6-17).
+//!
+//! Low bit-widths make the SEFP quantization error a large-amplitude
+//! sawtooth in the weights (eq. 13), which injects a near-zero-mean
+//! perturbation `Y` into the gradients (`∇_sefp = X·∇_fp + Y`, fig. 6).
+//! LAA suppresses it by accumulating gradients over `N` batches while the
+//! path sits at ultra-low widths and applying ONE delayed update — the
+//! perturbation cancels at rate 1/√N (eq. 17) while the signal adds
+//! coherently.
+//!
+//! Design decision (ablatable, DESIGN.md §6): the accumulator *persists*
+//! across interleaved high-width steps — high widths update immediately
+//! and the partial low-width sum keeps waiting for its N-th contribution.
+//! `flush_on_switch = true` instead applies the partial sum whenever the
+//! path leaves the ultra-low zone.
+
+use crate::runtime::grad_accumulate;
+
+/// What the trainer should do with the gradients of the current batch.
+#[derive(Debug, PartialEq)]
+pub enum LaaAction {
+    /// Apply this gradient now (standard update, Algorithm 1 line 18).
+    /// The grads are handed back to the caller unchanged.
+    Apply(Vec<Vec<f32>>),
+    /// Absorbed into the accumulator; do not update weights this batch.
+    Deferred { filled: usize },
+    /// The accumulator just completed: apply the returned summed gradient
+    /// (`count` = number of accumulated batches, for mean-normalization).
+    Flush { grads: Vec<Vec<f32>>, count: usize },
+}
+
+#[derive(Debug)]
+pub struct Laa {
+    /// delay step N (paper: 10)
+    pub delay_n: usize,
+    /// widths with m <= this are "ultra-low" and get accumulated
+    pub ultra_low_max_m: u8,
+    /// ablation switch, see module docs
+    pub flush_on_switch: bool,
+    acc: Option<Vec<Vec<f32>>>,
+    filled: usize,
+    /// statistics
+    pub deferred_total: u64,
+    pub flushes: u64,
+}
+
+impl Laa {
+    pub fn new(delay_n: usize, ultra_low_max_m: u8) -> Self {
+        assert!(delay_n >= 1);
+        Laa {
+            delay_n,
+            ultra_low_max_m,
+            flush_on_switch: false,
+            acc: None,
+            filled: 0,
+            deferred_total: 0,
+            flushes: 0,
+        }
+    }
+
+    pub fn is_ultra_low(&self, m: u8) -> bool {
+        m <= self.ultra_low_max_m
+    }
+
+    /// Feed the gradients produced at bit-width `m`; decides apply/defer.
+    pub fn observe(&mut self, m: u8, grads: Vec<Vec<f32>>) -> LaaAction {
+        if !self.is_ultra_low(m) {
+            if self.flush_on_switch && self.acc.is_some() {
+                // ablation path: the partial sum is merged into this
+                // apply, so no gradient contribution is lost
+                let count = self.filled + 1;
+                let mut pending = self.take_acc();
+                grad_accumulate(&mut pending, &grads);
+                self.flushes += 1;
+                return LaaAction::Flush { grads: pending, count };
+            }
+            return LaaAction::Apply(grads);
+        }
+        // ultra-low: accumulate (Algorithm 1 lines 7-11)
+        match &mut self.acc {
+            None => {
+                self.acc = Some(grads);
+                self.filled = 1;
+            }
+            Some(acc) => {
+                grad_accumulate(acc, &grads);
+                self.filled += 1;
+            }
+        }
+        self.deferred_total += 1;
+        if self.filled >= self.delay_n {
+            // delayed update (lines 13-16)
+            self.flushes += 1;
+            let count = self.filled;
+            LaaAction::Flush { grads: self.take_acc(), count }
+        } else {
+            LaaAction::Deferred { filled: self.filled }
+        }
+    }
+
+    /// Pending partial sum, if any (flushed by the trainer at run end so
+    /// no gradient contribution is dropped).  Returns (grads, count).
+    pub fn drain(&mut self) -> Option<(Vec<Vec<f32>>, usize)> {
+        if self.acc.is_some() {
+            self.flushes += 1;
+            let count = self.filled;
+            Some((self.take_acc(), count))
+        } else {
+            None
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.filled * (self.acc.is_some() as usize)
+    }
+
+    fn take_acc(&mut self) -> Vec<Vec<f32>> {
+        self.filled = 0;
+        self.acc.take().expect("accumulator present")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g(v: f32) -> Vec<Vec<f32>> {
+        vec![vec![v, v]]
+    }
+
+    #[test]
+    fn high_width_applies_immediately() {
+        let mut laa = Laa::new(10, 4);
+        assert_eq!(laa.observe(8, g(1.0)), LaaAction::Apply(g(1.0)));
+        assert_eq!(laa.pending(), 0);
+    }
+
+    #[test]
+    fn ultra_low_defers_until_n() {
+        let mut laa = Laa::new(3, 4);
+        assert!(matches!(laa.observe(3, g(1.0)), LaaAction::Deferred { filled: 1 }));
+        assert!(matches!(laa.observe(4, g(2.0)), LaaAction::Deferred { filled: 2 }));
+        match laa.observe(3, g(3.0)) {
+            LaaAction::Flush { grads, count } => {
+                assert_eq!(grads, vec![vec![6.0, 6.0]]);
+                assert_eq!(count, 3);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(laa.pending(), 0);
+        assert_eq!(laa.flushes, 1);
+    }
+
+    #[test]
+    fn accumulator_persists_across_high_steps() {
+        let mut laa = Laa::new(2, 4);
+        assert!(matches!(laa.observe(3, g(1.0)), LaaAction::Deferred { .. }));
+        // high width in between: immediate apply, accumulator untouched
+        assert_eq!(laa.observe(8, g(9.0)), LaaAction::Apply(g(9.0)));
+        assert_eq!(laa.pending(), 1);
+        match laa.observe(4, g(1.0)) {
+            LaaAction::Flush { grads, count } => {
+                assert_eq!(grads, vec![vec![2.0, 2.0]]);
+                assert_eq!(count, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn flush_on_switch_merges_partial() {
+        let mut laa = Laa::new(5, 4);
+        laa.flush_on_switch = true;
+        assert!(matches!(laa.observe(3, g(1.0)), LaaAction::Deferred { .. }));
+        match laa.observe(8, g(10.0)) {
+            LaaAction::Flush { grads, count } => {
+                assert_eq!(grads, vec![vec![11.0, 11.0]]);
+                assert_eq!(count, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(laa.pending(), 0);
+    }
+
+    #[test]
+    fn drain_returns_partial() {
+        let mut laa = Laa::new(10, 4);
+        let _ = laa.observe(3, g(1.0));
+        let _ = laa.observe(3, g(2.0));
+        assert_eq!(laa.drain().unwrap(), (vec![vec![3.0, 3.0]], 2));
+        assert!(laa.drain().is_none());
+    }
+}

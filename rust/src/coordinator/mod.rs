@@ -1,0 +1,17 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! * [`bps`]     — Exploitation-Exploration Bit-Width Path Search (eq. 5-9)
+//! * [`laa`]     — Low-Precision Asynchronous Accumulation (eq. 10-18)
+//! * [`trainer`] — Algorithm 1 plus all evaluation baselines
+//!
+//! The coordinator runs entirely in Rust against AOT-compiled HLO; the
+//! bit-width schedule, the delayed-update bookkeeping and the SGD
+//! optimizer all live here (L2's train step only produces loss+grads).
+
+pub mod bps;
+pub mod laa;
+pub mod trainer;
+
+pub use bps::{Bps, UniformSampler};
+pub use laa::{Laa, LaaAction};
+pub use trainer::{eval_loss, BatchSource, TrainReport, Trainer};

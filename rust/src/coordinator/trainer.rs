@@ -1,0 +1,203 @@
+//! The OTARo trainer — Algorithm 1, plus every baseline in the paper's
+//! evaluation (table 1 rows and fig. 3/8 ablation arms).
+//!
+//! The trainer owns the loop; the engine owns the compute.  One `run()`
+//! executes `cfg.steps` batches: select a bit-width (method-dependent),
+//! run the AOT train step at that width, route the gradients through LAA
+//! (full OTARo only), and apply SGD updates to the f32 master weights.
+
+use crate::config::{Method, TrainConfig};
+use crate::data::Batch;
+use crate::metrics::{MetricsSink, Timer};
+use crate::runtime::{grad_l2_norm, Engine, ParamStore, StepKind, Width};
+
+use super::bps::{Bps, UniformSampler};
+use super::laa::{Laa, LaaAction};
+
+/// Anything that can feed batches to the trainer.
+pub trait BatchSource {
+    fn next_batch(&mut self) -> Batch;
+}
+
+impl BatchSource for crate::data::StreamBatcher {
+    fn next_batch(&mut self) -> Batch {
+        crate::data::StreamBatcher::next_batch(self)
+    }
+}
+
+impl BatchSource for crate::data::PairBatcher {
+    fn next_batch(&mut self) -> Batch {
+        crate::data::PairBatcher::next_batch(self)
+    }
+}
+
+/// Per-run outcome.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    /// (step, selected mantissa width; 0 = fp)
+    pub path: Vec<u8>,
+    pub width_histogram: Vec<(u8, u64)>,
+    pub laa_flushes: u64,
+    pub laa_deferred: u64,
+    pub wall_secs: f64,
+    pub final_loss_ema: f64,
+}
+
+pub struct Trainer<'a, B: BatchSource> {
+    pub engine: &'a mut Engine,
+    pub params: &'a mut ParamStore,
+    pub batches: &'a mut B,
+    pub cfg: TrainConfig,
+}
+
+impl<'a, B: BatchSource> Trainer<'a, B> {
+    pub fn new(
+        engine: &'a mut Engine,
+        params: &'a mut ParamStore,
+        batches: &'a mut B,
+        cfg: TrainConfig,
+    ) -> Self {
+        Trainer { engine, params, batches, cfg }
+    }
+
+    fn width_for_step(
+        &self,
+        bps: &mut Option<Bps>,
+        uniform: &mut Option<UniformSampler>,
+    ) -> Width {
+        match self.cfg.method {
+            Method::None => unreachable!("Method::None runs zero steps"),
+            Method::Fp => Width::FP,
+            Method::Fixed => Width::m(
+                self.cfg
+                    .fixed_m
+                    .expect("Method::Fixed requires fixed_m"),
+            ),
+            Method::Uniform => Width::m(uniform.as_mut().unwrap().select()),
+            Method::BpsOnly | Method::Otaro => Width::m(bps.as_mut().unwrap().select()),
+        }
+    }
+
+    /// Run the fine-tuning loop (Algorithm 1).  `sink` receives one JSONL
+    /// record per step.
+    pub fn run(&mut self, sink: &mut MetricsSink) -> anyhow::Result<TrainReport> {
+        let timer = Timer::start();
+        let method = self.cfg.method;
+        if method == Method::None {
+            return Ok(TrainReport {
+                losses: vec![],
+                path: vec![],
+                width_histogram: vec![],
+                laa_flushes: 0,
+                laa_deferred: 0,
+                wall_secs: 0.0,
+                final_loss_ema: f64::NAN,
+            });
+        }
+
+        let mut bps = matches!(method, Method::BpsOnly | Method::Otaro)
+            .then(|| Bps::new(&self.cfg.widths, self.cfg.lambda, self.cfg.loss_ema));
+        let mut uniform = (method == Method::Uniform)
+            .then(|| UniformSampler::new(&self.cfg.widths, self.cfg.seed ^ UNIFORM_TAG));
+        let mut laa = (method == Method::Otaro).then(|| {
+            let mut l = Laa::new(self.cfg.delay_n, self.cfg.ultra_low_max_m);
+            l.flush_on_switch = self.cfg.laa_flush_on_switch;
+            l
+        });
+
+        let mut losses = Vec::with_capacity(self.cfg.steps);
+        let mut path = Vec::with_capacity(self.cfg.steps);
+        let mut ema = f64::NAN;
+
+        for step in 0..self.cfg.steps {
+            let width = self.width_for_step(&mut bps, &mut uniform);
+            let batch = self.batches.next_batch();
+            let out = self.engine.train_step(self.params, &batch, width)?;
+            let loss = out.loss;
+            losses.push(loss);
+            path.push(width.0.unwrap_or(0));
+            if let Some(b) = &mut bps {
+                if let Some(m) = width.0 {
+                    b.update(m, loss as f64);
+                }
+            }
+            ema = if ema.is_nan() { loss as f64 } else { 0.95 * ema + 0.05 * loss as f64 };
+
+            let gnorm = grad_l2_norm(&out.grads);
+            let laa_event = match &mut laa {
+                Some(l) => match l.observe(width.0.unwrap_or(u8::MAX), out.grads) {
+                    LaaAction::Apply(g) => {
+                        self.params.sgd_update(&g, self.cfg.lr);
+                        "apply"
+                    }
+                    LaaAction::Deferred { .. } => "defer",
+                    LaaAction::Flush { grads, count } => {
+                        let lr = if self.cfg.laa_average {
+                            self.cfg.lr / count.max(1) as f32
+                        } else {
+                            self.cfg.lr // paper eq. 18 raw sum
+                        };
+                        self.params.sgd_update(&grads, lr);
+                        "flush"
+                    }
+                },
+                None => {
+                    self.params.sgd_update(&out.grads, self.cfg.lr);
+                    "apply"
+                }
+            };
+            sink.log(&crate::json::obj(vec![
+                ("step", crate::json::n(step as f64)),
+                ("method", crate::json::s(method.to_string())),
+                ("width", crate::json::s(width.tag())),
+                ("loss", crate::json::n(loss as f64)),
+                ("grad_norm", crate::json::n(gnorm)),
+                ("laa", crate::json::s(laa_event)),
+            ]));
+        }
+        // flush any pending LAA partial sum so its gradients are not lost
+        if let Some(l) = &mut laa {
+            if let Some((acc, count)) = l.drain() {
+                let lr = if self.cfg.laa_average {
+                    self.cfg.lr / count.max(1) as f32
+                } else {
+                    self.cfg.lr
+                };
+                self.params.sgd_update(&acc, lr);
+            }
+        }
+        sink.flush();
+
+        Ok(TrainReport {
+            losses,
+            path,
+            width_histogram: bps.map(|b| b.histogram()).unwrap_or_default(),
+            laa_flushes: laa.as_ref().map(|l| l.flushes).unwrap_or(0),
+            laa_deferred: laa.as_ref().map(|l| l.deferred_total).unwrap_or(0),
+            wall_secs: timer.secs(),
+            final_loss_ema: ema,
+        })
+    }
+}
+
+const UNIFORM_TAG: u64 = 0x0451;
+
+/// Evaluate mean loss at `width` over `n_batches` freshly drawn batches.
+pub fn eval_loss<B: BatchSource>(
+    engine: &mut Engine,
+    params: &ParamStore,
+    batches: &mut B,
+    width: Width,
+    n_batches: usize,
+) -> anyhow::Result<f64> {
+    let mut total = 0.0f64;
+    for _ in 0..n_batches {
+        let b = batches.next_batch();
+        total += engine.eval_step(params, &b, width)? as f64;
+    }
+    Ok(total / n_batches as f64)
+}
+
+// keep StepKind referenced so the import is obviously intentional
+const _: StepKind = StepKind::Train;

@@ -1,0 +1,181 @@
+//! Batching: turn token streams / instruction pairs into the fixed
+//! (B, T) i32 tensors the AOT-compiled step programs expect.
+//!
+//! Targets are inputs shifted by one; positions with no next token (or
+//! padding) carry `IGNORE` (-1) and are masked out of the loss by
+//! `model.loss_fn`.
+
+use super::rng::Rng;
+use super::tokenizer::{IGNORE, PAD};
+
+/// One (B, T) batch in row-major layout, ready for `Literal` upload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub batch_size: usize,
+    pub seq_len: usize,
+}
+
+impl Batch {
+    pub fn n_valid_targets(&self) -> usize {
+        self.targets.iter().filter(|&&t| t >= 0).count()
+    }
+}
+
+/// Sliding-window LM batcher over one flat stream (pretraining /
+/// TinyText fine-tuning).  Windows are sampled at random offsets (epoch
+/// semantics are handled by the trainer's step budget).
+pub struct StreamBatcher {
+    stream: Vec<i32>,
+    pub batch_size: usize,
+    pub seq_len: usize,
+    rng: Rng,
+}
+
+impl StreamBatcher {
+    pub fn new(stream: Vec<i32>, batch_size: usize, seq_len: usize, seed: u64) -> Self {
+        assert!(stream.len() > seq_len + 1, "stream too short for seq_len");
+        StreamBatcher { stream, batch_size, seq_len, rng: Rng::new(seed) }
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let mut tokens = Vec::with_capacity(self.batch_size * self.seq_len);
+        let mut targets = Vec::with_capacity(self.batch_size * self.seq_len);
+        let max_start = self.stream.len() - self.seq_len - 1;
+        for _ in 0..self.batch_size {
+            let s = self.rng.below(max_start + 1);
+            tokens.extend_from_slice(&self.stream[s..s + self.seq_len]);
+            targets.extend_from_slice(&self.stream[s + 1..s + self.seq_len + 1]);
+        }
+        Batch { tokens, targets, batch_size: self.batch_size, seq_len: self.seq_len }
+    }
+
+    /// Deterministic full coverage of the stream in order — used by the
+    /// perplexity evaluator so PPL is batch-order independent.
+    pub fn sequential_batches(&self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let stride = self.seq_len;
+        let mut starts = Vec::new();
+        let mut s = 0;
+        while s + self.seq_len + 1 <= self.stream.len() {
+            starts.push(s);
+            s += stride;
+        }
+        for chunk in starts.chunks(self.batch_size) {
+            let mut tokens = Vec::with_capacity(self.batch_size * self.seq_len);
+            let mut targets = Vec::with_capacity(self.batch_size * self.seq_len);
+            for &st in chunk {
+                tokens.extend_from_slice(&self.stream[st..st + self.seq_len]);
+                targets.extend_from_slice(&self.stream[st + 1..st + self.seq_len + 1]);
+            }
+            // pad the ragged final batch with PAD/IGNORE rows
+            for _ in chunk.len()..self.batch_size {
+                tokens.extend(std::iter::repeat(PAD).take(self.seq_len));
+                targets.extend(std::iter::repeat(IGNORE).take(self.seq_len));
+            }
+            out.push(Batch {
+                tokens,
+                targets,
+                batch_size: self.batch_size,
+                seq_len: self.seq_len,
+            });
+        }
+        out
+    }
+}
+
+/// Batcher over instruction pairs (variable-length documents): packs one
+/// document per row, truncating or padding to `seq_len`.
+pub struct PairBatcher {
+    pairs: Vec<Vec<i32>>,
+    pub batch_size: usize,
+    pub seq_len: usize,
+    rng: Rng,
+}
+
+impl PairBatcher {
+    pub fn new(pairs: Vec<Vec<i32>>, batch_size: usize, seq_len: usize, seed: u64) -> Self {
+        assert!(!pairs.is_empty());
+        PairBatcher { pairs, batch_size, seq_len, rng: Rng::new(seed) }
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let mut tokens = Vec::with_capacity(self.batch_size * self.seq_len);
+        let mut targets = Vec::with_capacity(self.batch_size * self.seq_len);
+        for _ in 0..self.batch_size {
+            let doc = &self.pairs[self.rng.below(self.pairs.len())];
+            let n = doc.len().min(self.seq_len + 1);
+            // row = doc[..n-1], target = doc[1..n], rest padded
+            for i in 0..self.seq_len {
+                if i + 1 < n {
+                    tokens.push(doc[i]);
+                    targets.push(doc[i + 1]);
+                } else {
+                    tokens.push(PAD);
+                    targets.push(IGNORE);
+                }
+            }
+        }
+        Batch { tokens, targets, batch_size: self.batch_size, seq_len: self.seq_len }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(n: usize) -> Vec<i32> {
+        (0..n as i32).map(|i| i % 250).collect()
+    }
+
+    #[test]
+    fn stream_batch_shapes() {
+        let mut b = StreamBatcher::new(stream(1000), 4, 32, 0);
+        let batch = b.next_batch();
+        assert_eq!(batch.tokens.len(), 4 * 32);
+        assert_eq!(batch.targets.len(), 4 * 32);
+        // target is input shifted by one
+        assert_eq!(batch.targets[0], batch.tokens[1]);
+    }
+
+    #[test]
+    fn sequential_covers_stream_once() {
+        let b = StreamBatcher::new(stream(1000), 4, 32, 0);
+        let batches = b.sequential_batches();
+        let valid: usize = batches.iter().map(|b| b.n_valid_targets()).sum();
+        // floor((1000-1)/32) windows * 32 targets each
+        assert_eq!(valid, ((1000 - 1 - 32) / 32 + 1) * 32);
+    }
+
+    #[test]
+    fn pair_batch_masks_padding() {
+        let pairs = vec![vec![256, 65, 66, 259, 67, 257], vec![256, 65, 257]];
+        let mut b = PairBatcher::new(pairs, 2, 16, 1);
+        let batch = b.next_batch();
+        assert_eq!(batch.tokens.len(), 32);
+        assert!(batch.n_valid_targets() < 32);
+        // all padding rows align
+        for (t, g) in batch.tokens.iter().zip(&batch.targets) {
+            if *t == PAD {
+                assert_eq!(*g, IGNORE);
+            }
+        }
+    }
+
+    #[test]
+    fn long_doc_truncated() {
+        let pairs = vec![(0..100).collect::<Vec<i32>>()];
+        let mut b = PairBatcher::new(pairs, 1, 8, 2);
+        let batch = b.next_batch();
+        assert_eq!(batch.tokens, (0..8).collect::<Vec<i32>>());
+        assert_eq!(batch.targets, (1..9).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = StreamBatcher::new(stream(500), 2, 16, 9);
+        let mut b = StreamBatcher::new(stream(500), 2, 16, 9);
+        assert_eq!(a.next_batch(), b.next_batch());
+    }
+}

@@ -1,0 +1,117 @@
+//! Corpus generators: the three datasets of the paper's evaluation,
+//! rebuilt over TinyLang (DESIGN.md §Substitutions).
+//!
+//!   * `pretrain_corpus`  — what the base model is trained on in-repo
+//!     (mix of grammatical text, KB facts, arithmetic): stands in for the
+//!     LLM pretraining the paper inherits from LLaMA/Qwen checkpoints.
+//!   * `tinytext_corpus`  — WikiText2 analogue, train/test split, used by
+//!     the task-specific fine-tuning experiments (fig. 7 / table 8).
+//!   * `instruct_corpus`  — Alpaca analogue: prompt/answer pairs drawn
+//!     from the same task families the MC suites quiz, but from a
+//!     disjoint RNG stream (zero-shot experiments, table 1).
+
+use super::lang::Lang;
+use super::rng::Rng;
+use super::tasks::{Suite, ALL_SUITES};
+use super::tokenizer::Tokenizer;
+
+const PRETRAIN_TAG: u64 = 0x11;
+const TINYTEXT_TRAIN_TAG: u64 = 0x22;
+const TINYTEXT_TEST_TAG: u64 = 0x33;
+const INSTRUCT_TAG: u64 = 0x44;
+
+/// One flat token stream (documents joined by EOS).
+pub fn pretrain_corpus(lang: &Lang, seed: u64, n_sentences: usize) -> Vec<i32> {
+    let mut rng = Rng::new(seed ^ PRETRAIN_TAG);
+    let tok = Tokenizer::new();
+    let mut out = Vec::new();
+    for i in 0..n_sentences {
+        let s = match i % 4 {
+            0 | 1 => lang.sentence(&mut rng),
+            2 => {
+                // KB facts are cycled so every fact is seen
+                lang.fact_sentence(rng.below(lang.n_nouns()))
+            }
+            _ => lang.arith_sentence(&mut rng),
+        };
+        out.extend(tok.encode(&s));
+        out.push(super::tokenizer::EOS);
+    }
+    out
+}
+
+/// WikiText2-analogue: pure TinyLang prose, split into train and test.
+pub fn tinytext_corpus(lang: &Lang, seed: u64, n_train: usize, n_test: usize) -> (Vec<i32>, Vec<i32>) {
+    let tok = Tokenizer::new();
+    let gen = |tag: u64, n: usize| {
+        let mut rng = Rng::new(seed ^ tag);
+        let mut out = Vec::new();
+        for _ in 0..n {
+            out.extend(tok.encode(&lang.sentence(&mut rng)));
+            out.push(super::tokenizer::EOS);
+        }
+        out
+    };
+    (gen(TINYTEXT_TRAIN_TAG, n_train), gen(TINYTEXT_TEST_TAG, n_test))
+}
+
+/// Alpaca-analogue instruction pairs, already tokenized with
+/// BOS/SEP/EOS structure.  Items come from the same eight suites the
+/// evaluation uses, but from the INSTRUCT_TAG stream — disjoint from
+/// `Suite::eval_set`'s EVAL stream.
+pub fn instruct_corpus(lang: &Lang, seed: u64, n_pairs: usize) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed ^ INSTRUCT_TAG);
+    let tok = Tokenizer::new();
+    let mut out = Vec::with_capacity(n_pairs);
+    for i in 0..n_pairs {
+        let suite: Suite = ALL_SUITES[i % ALL_SUITES.len()];
+        let item = suite.item(lang, &mut rng);
+        out.push(tok.encode_pair(&item.prompt, &item.choices[item.answer]));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lang() -> Lang {
+        Lang::new(42)
+    }
+
+    #[test]
+    fn pretrain_deterministic_and_nonempty() {
+        let l = lang();
+        let a = pretrain_corpus(&l, 1, 100);
+        let b = pretrain_corpus(&l, 1, 100);
+        assert_eq!(a, b);
+        assert!(a.len() > 1000);
+        assert!(a.iter().all(|&t| (0..320).contains(&t)));
+    }
+
+    #[test]
+    fn tinytext_split_disjoint_streams() {
+        let l = lang();
+        let (tr, te) = tinytext_corpus(&l, 1, 50, 50);
+        assert_ne!(tr, te);
+        assert!(!tr.is_empty() && !te.is_empty());
+    }
+
+    #[test]
+    fn instruct_pairs_have_structure() {
+        let l = lang();
+        let pairs = instruct_corpus(&l, 1, 16);
+        assert_eq!(pairs.len(), 16);
+        for p in &pairs {
+            assert_eq!(p[0], super::super::tokenizer::BOS);
+            assert_eq!(*p.last().unwrap(), super::super::tokenizer::EOS);
+            assert!(p.contains(&super::super::tokenizer::SEP));
+        }
+    }
+
+    #[test]
+    fn different_seed_different_corpus() {
+        let l = lang();
+        assert_ne!(pretrain_corpus(&l, 1, 50), pretrain_corpus(&l, 2, 50));
+    }
+}

@@ -1,0 +1,201 @@
+//! The synthetic language substrate ("TinyLang").
+//!
+//! DESIGN.md §Substitutions: we have no LLaMA weights or Alpaca/WikiText2
+//! data (repro band 0), so every corpus and benchmark is generated from a
+//! small formal language with *learnable regularities*:
+//!
+//!   * two noun classes with suffix marking: class-A nouns end in "ka",
+//!     class-B nouns end in "to";
+//!   * verbs agree with the subject class: "-as" (A) vs "-os" (B);
+//!   * determiners agree too: "le" (A) vs "ru" (B);
+//!   * a fixed relation KB ("X pide Y") and single-digit arithmetic.
+//!
+//! A byte-level transformer pretrained on TinyLang text demonstrably
+//! learns these rules, which gives the eight multiple-choice suites
+//! (tasks.rs) enough headroom above chance for the paper's
+//! accuracy-vs-bitwidth comparisons to be meaningful.
+
+use super::rng::Rng;
+
+pub const N_NOUNS_PER_CLASS: usize = 24;
+pub const N_VERBS: usize = 16;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Class {
+    A,
+    B,
+}
+
+#[derive(Debug, Clone)]
+pub struct Lang {
+    pub nouns_a: Vec<String>,
+    pub nouns_b: Vec<String>,
+    pub verb_stems: Vec<String>,
+    /// KB: (subject noun index into all_nouns, object noun index)
+    pub kb: Vec<(usize, usize)>,
+}
+
+const ONSETS: &[&str] = &["m", "p", "v", "s", "n", "d", "b", "g", "f", "l"];
+const VOWELS: &[&str] = &["a", "e", "i", "o", "u"];
+
+fn make_stem(rng: &mut Rng, syllables: usize) -> String {
+    let mut s = String::new();
+    for _ in 0..syllables {
+        s.push_str(rng.choose::<&str>(ONSETS));
+        s.push_str(rng.choose::<&str>(VOWELS));
+    }
+    s
+}
+
+impl Lang {
+    /// Construct the (deterministic) language for a seed.  All corpora and
+    /// all task suites share one Lang so the rules are consistent between
+    /// pretraining, fine-tuning and evaluation.
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x7A9C_11E5);
+        let mut uniq = std::collections::HashSet::new();
+        let mut take = |rng: &mut Rng, suffix: &str| loop {
+            let stem = make_stem(rng, 2);
+            let w = format!("{stem}{suffix}");
+            if uniq.insert(w.clone()) {
+                return w;
+            }
+        };
+        let nouns_a: Vec<String> = (0..N_NOUNS_PER_CLASS).map(|_| take(&mut rng, "ka")).collect();
+        let nouns_b: Vec<String> = (0..N_NOUNS_PER_CLASS).map(|_| take(&mut rng, "to")).collect();
+        let verb_stems: Vec<String> = (0..N_VERBS).map(|_| take(&mut rng, "")).collect();
+        // KB: every noun relates to exactly one object (function, so yes/no
+        // questions have unambiguous answers)
+        let total = 2 * N_NOUNS_PER_CLASS;
+        let kb = (0..total)
+            .map(|s| {
+                let mut o = rng.below(total);
+                if o == s {
+                    o = (o + 1) % total;
+                }
+                (s, o)
+            })
+            .collect();
+        Lang { nouns_a, nouns_b, verb_stems, kb }
+    }
+
+    pub fn noun(&self, idx: usize) -> (&str, Class) {
+        if idx < N_NOUNS_PER_CLASS {
+            (&self.nouns_a[idx], Class::A)
+        } else {
+            (&self.nouns_b[idx - N_NOUNS_PER_CLASS], Class::B)
+        }
+    }
+
+    pub fn n_nouns(&self) -> usize {
+        2 * N_NOUNS_PER_CLASS
+    }
+
+    pub fn determiner(class: Class) -> &'static str {
+        match class {
+            Class::A => "le",
+            Class::B => "ru",
+        }
+    }
+
+    pub fn verb(&self, idx: usize, subject_class: Class) -> String {
+        let suffix = match subject_class {
+            Class::A => "as",
+            Class::B => "os",
+        };
+        format!("{}{}", self.verb_stems[idx], suffix)
+    }
+
+    /// Wrong-agreement verb (the contrastive distractor).
+    pub fn verb_wrong(&self, idx: usize, subject_class: Class) -> String {
+        let flipped = match subject_class {
+            Class::A => Class::B,
+            Class::B => Class::A,
+        };
+        self.verb(idx, flipped)
+    }
+
+    /// A grammatical sentence: "det subj verb det obj ."
+    pub fn sentence(&self, rng: &mut Rng) -> String {
+        let s = rng.below(self.n_nouns());
+        let o = rng.below(self.n_nouns());
+        let v = rng.below(N_VERBS);
+        let (sw, sc) = self.noun(s);
+        let (ow, oc) = self.noun(o);
+        format!(
+            "{} {} {} {} {} .",
+            Lang::determiner(sc),
+            sw,
+            self.verb(v, sc),
+            Lang::determiner(oc),
+            ow
+        )
+    }
+
+    /// A KB fact sentence: "subj pide obj ." — the relation the BoolQ- and
+    /// OBQA-style suites quiz.
+    pub fn fact_sentence(&self, s: usize) -> String {
+        let (sw, _) = self.noun(s);
+        let (ow, _) = self.noun(self.kb[s].1);
+        format!("{sw} pide {ow} .")
+    }
+
+    /// Arithmetic line "a + b = c ." with a,b single digits.
+    pub fn arith_sentence(&self, rng: &mut Rng) -> String {
+        let a = rng.below(9) + 1;
+        let b = rng.below(9) + 1;
+        format!("{a} + {b} = {} .", a + b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = Lang::new(1);
+        let b = Lang::new(1);
+        assert_eq!(a.nouns_a, b.nouns_a);
+        assert_eq!(a.kb, b.kb);
+    }
+
+    #[test]
+    fn class_suffixes() {
+        let l = Lang::new(2);
+        assert!(l.nouns_a.iter().all(|w| w.ends_with("ka")));
+        assert!(l.nouns_b.iter().all(|w| w.ends_with("to")));
+    }
+
+    #[test]
+    fn verb_agreement() {
+        let l = Lang::new(3);
+        assert!(l.verb(0, Class::A).ends_with("as"));
+        assert!(l.verb(0, Class::B).ends_with("os"));
+        assert_ne!(l.verb(1, Class::A), l.verb_wrong(1, Class::A));
+    }
+
+    #[test]
+    fn kb_is_function_without_self_loops() {
+        let l = Lang::new(4);
+        assert_eq!(l.kb.len(), l.n_nouns());
+        assert!(l.kb.iter().all(|&(s, o)| s != o && o < l.n_nouns()));
+    }
+
+    #[test]
+    fn sentence_grammatical() {
+        let l = Lang::new(5);
+        let mut rng = Rng::new(9);
+        for _ in 0..20 {
+            let s = l.sentence(&mut rng);
+            let toks: Vec<&str> = s.split_whitespace().collect();
+            assert_eq!(toks.len(), 6);
+            let subj_class = if toks[1].ends_with("ka") { Class::A } else { Class::B };
+            assert_eq!(toks[0], Lang::determiner(subj_class));
+            match subj_class {
+                Class::A => assert!(toks[2].ends_with("as")),
+                Class::B => assert!(toks[2].ends_with("os")),
+            }
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Data substrate: deterministic RNG, byte tokenizer, the TinyLang
+//! synthetic language, corpus generators (pretrain / TinyText / instruct)
+//! and batchers.  Everything is seed-reproducible; see DESIGN.md
+//! §Substitutions for how these stand in for the paper's datasets.
+
+pub mod batcher;
+pub mod corpus;
+pub mod lang;
+pub mod rng;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use batcher::{Batch, PairBatcher, StreamBatcher};
+pub use lang::Lang;
+pub use rng::Rng;
+pub use tasks::{McItem, Suite, ALL_SUITES};
+pub use tokenizer::Tokenizer;

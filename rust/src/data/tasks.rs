@@ -1,0 +1,314 @@
+//! The eight synthetic multiple-choice suites — structural analogues of
+//! the paper's zero-shot benchmarks (table 1): ARC-Easy, ARC-Challenge,
+//! BoolQ, HellaSwag, MathQA, OpenBookQA, PIQA, WinoGrande.
+//!
+//! Each suite quizzes one TinyLang regularity; items are scored exactly
+//! like lm-eval-harness scores the real suites: length-normalized
+//! log-likelihood over the answer continuation (eval/mc.rs).
+//!
+//! Train/eval splits are disjoint by construction (item RNG streams are
+//! forked from different tags), so instruction fine-tuning never sees the
+//! evaluation items.
+
+use super::lang::{Class, Lang};
+use super::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct McItem {
+    pub prompt: String,
+    pub choices: Vec<String>,
+    pub answer: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Suite {
+    /// ARC-Easy analogue: pick the verb with correct subject agreement.
+    AgreeEasy,
+    /// ARC-Challenge analogue: agreement across an intervening phrase.
+    AgreeHard,
+    /// BoolQ analogue: yes/no over the relation KB.
+    YesNo,
+    /// HellaSwag analogue: most plausible sentence continuation.
+    Continue,
+    /// MathQA analogue: single-digit addition, 5 options.
+    Arith,
+    /// OpenBookQA analogue: KB completion, 4 options.
+    Fact,
+    /// PIQA analogue: canonical word order vs scrambled, 2 options.
+    Order,
+    /// WinoGrande analogue: fill the blank with the class-agreeing noun.
+    Fill,
+}
+
+pub const ALL_SUITES: [Suite; 8] = [
+    Suite::AgreeEasy,
+    Suite::AgreeHard,
+    Suite::YesNo,
+    Suite::Continue,
+    Suite::Arith,
+    Suite::Fact,
+    Suite::Order,
+    Suite::Fill,
+];
+
+impl Suite {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Suite::AgreeEasy => "agree-e",
+            Suite::AgreeHard => "agree-c",
+            Suite::YesNo => "yesno",
+            Suite::Continue => "continue",
+            Suite::Arith => "arith",
+            Suite::Fact => "fact",
+            Suite::Order => "order",
+            Suite::Fill => "fill",
+        }
+    }
+
+    /// Generate one item.
+    pub fn item(&self, lang: &Lang, rng: &mut Rng) -> McItem {
+        match self {
+            Suite::AgreeEasy => agree_item(lang, rng, false),
+            Suite::AgreeHard => agree_item(lang, rng, true),
+            Suite::YesNo => yesno_item(lang, rng),
+            Suite::Continue => continue_item(lang, rng),
+            Suite::Arith => arith_item(rng),
+            Suite::Fact => fact_item(lang, rng),
+            Suite::Order => order_item(lang, rng),
+            Suite::Fill => fill_item(lang, rng),
+        }
+    }
+
+    /// A deterministic evaluation set (disjoint from training items, which
+    /// fork with a different tag in corpus.rs).
+    pub fn eval_set(&self, lang: &Lang, n: usize, seed: u64) -> Vec<McItem> {
+        let mut rng = Rng::new(seed ^ EVAL_TAG);
+        (0..n).map(|_| self.item(lang, &mut rng)).collect()
+    }
+}
+
+const EVAL_TAG: u64 = 0xE7A1_0001;
+
+fn shuffle_with_answer(rng: &mut Rng, correct: String, mut wrong: Vec<String>) -> (Vec<String>, usize) {
+    let mut choices = vec![correct.clone()];
+    choices.append(&mut wrong);
+    rng.shuffle(&mut choices);
+    let answer = choices.iter().position(|c| *c == correct).unwrap();
+    (choices, answer)
+}
+
+fn agree_item(lang: &Lang, rng: &mut Rng, hard: bool) -> McItem {
+    let s = rng.below(lang.n_nouns());
+    let (sw, sc) = lang.noun(s);
+    let v = rng.below(super::lang::N_VERBS);
+    let det = Lang::determiner(sc);
+    let prompt = if hard {
+        // intervening object phrase of the OPPOSITE class between subject
+        // and verb — the model must track the true subject
+        let o = match sc {
+            Class::A => super::lang::N_NOUNS_PER_CLASS + rng.below(super::lang::N_NOUNS_PER_CLASS),
+            Class::B => rng.below(super::lang::N_NOUNS_PER_CLASS),
+        };
+        let (ow, oc) = lang.noun(o);
+        format!("{det} {sw} {} {ow} :", Lang::determiner(oc))
+    } else {
+        format!("{det} {sw} :")
+    };
+    let correct = lang.verb(v, sc);
+    let mut wrong = vec![lang.verb_wrong(v, sc)];
+    // two more distractors from other verbs (both suffixes)
+    let v2 = (v + 1 + rng.below(super::lang::N_VERBS - 1)) % super::lang::N_VERBS;
+    wrong.push(lang.verb_wrong(v2, sc));
+    wrong.push(lang.verb(v2, sc));
+    let (choices, answer) = shuffle_with_answer(rng, correct, wrong);
+    McItem { prompt, choices, answer }
+}
+
+fn yesno_item(lang: &Lang, rng: &mut Rng) -> McItem {
+    let s = rng.below(lang.n_nouns());
+    let truth = rng.below(2) == 0;
+    let o = if truth {
+        lang.kb[s].1
+    } else {
+        // a wrong object
+        let mut o = rng.below(lang.n_nouns());
+        while o == lang.kb[s].1 {
+            o = rng.below(lang.n_nouns());
+        }
+        o
+    };
+    let (sw, _) = lang.noun(s);
+    let (ow, _) = lang.noun(o);
+    let prompt = format!("{sw} pide {ow} ?");
+    let correct = if truth { "yes" } else { "no" }.to_string();
+    let wrong = vec![if truth { "no" } else { "yes" }.to_string()];
+    // fixed order (yes/no) like BoolQ scoring, but keep answer index honest
+    let choices = vec!["yes".to_string(), "no".to_string()];
+    let answer = choices.iter().position(|c| *c == correct).unwrap();
+    let _ = wrong;
+    McItem { prompt, choices, answer }
+}
+
+fn continue_item(lang: &Lang, rng: &mut Rng) -> McItem {
+    let s = rng.below(lang.n_nouns());
+    let (sw, sc) = lang.noun(s);
+    let v = rng.below(super::lang::N_VERBS);
+    let o = rng.below(lang.n_nouns());
+    let (ow, oc) = lang.noun(o);
+    let prompt = format!("{} {} {}", Lang::determiner(sc), sw, lang.verb(v, sc));
+    let correct = format!("{} {} .", Lang::determiner(oc), ow);
+    // distractors: bad determiner, bare verb, digit noise
+    let wrong = vec![
+        format!("{} {} .", Lang::determiner(flip(oc)), ow),
+        format!("{} {} .", lang.verb(rng.below(super::lang::N_VERBS), sc), ow),
+        format!("{} {} .", rng.below(10), rng.below(10)),
+    ];
+    let (choices, answer) = shuffle_with_answer(rng, correct, wrong);
+    McItem { prompt, choices, answer }
+}
+
+fn flip(c: Class) -> Class {
+    match c {
+        Class::A => Class::B,
+        Class::B => Class::A,
+    }
+}
+
+fn arith_item(rng: &mut Rng) -> McItem {
+    let a = rng.below(9) + 1;
+    let b = rng.below(9) + 1;
+    let prompt = format!("{a} + {b} =");
+    let correct = (a + b).to_string();
+    let mut wrong = Vec::new();
+    let mut d = 1;
+    while wrong.len() < 4 {
+        let cand = a + b + d;
+        if cand <= 18 {
+            wrong.push(cand.to_string());
+        }
+        let low = (a + b).saturating_sub(d);
+        if wrong.len() < 4 && low >= 2 && low != a + b {
+            wrong.push(low.to_string());
+        }
+        d += 1;
+    }
+    let (choices, answer) = shuffle_with_answer(rng, correct, wrong);
+    McItem { prompt, choices, answer }
+}
+
+fn fact_item(lang: &Lang, rng: &mut Rng) -> McItem {
+    let s = rng.below(lang.n_nouns());
+    let (sw, _) = lang.noun(s);
+    let correct_o = lang.kb[s].1;
+    let prompt = format!("{sw} pide");
+    let correct = lang.noun(correct_o).0.to_string();
+    let mut wrong = Vec::new();
+    while wrong.len() < 3 {
+        let o = rng.below(lang.n_nouns());
+        let w = lang.noun(o).0.to_string();
+        if o != correct_o && !wrong.contains(&w) {
+            wrong.push(w);
+        }
+    }
+    let (choices, answer) = shuffle_with_answer(rng, correct, wrong);
+    McItem { prompt, choices, answer }
+}
+
+fn order_item(lang: &Lang, rng: &mut Rng) -> McItem {
+    let s = lang.sentence(rng);
+    let correct = s.clone();
+    let mut words: Vec<&str> = s.split_whitespace().collect();
+    // scramble until different
+    let mut scr = words.clone();
+    loop {
+        rng.shuffle(&mut scr);
+        if scr != words {
+            break;
+        }
+    }
+    let wrong = vec![scr.join(" ")];
+    words.clear();
+    let (choices, answer) = shuffle_with_answer(rng, correct, wrong);
+    McItem { prompt: "ok :".to_string(), choices, answer }
+}
+
+fn fill_item(lang: &Lang, rng: &mut Rng) -> McItem {
+    // "det _ verb ." — the noun must agree with both det and verb
+    let class = if rng.below(2) == 0 { Class::A } else { Class::B };
+    let v = rng.below(super::lang::N_VERBS);
+    let prompt = format!("{} _ {} . _ =", Lang::determiner(class), lang.verb(v, class));
+    let pick = |rng: &mut Rng, c: Class| -> String {
+        let i = rng.below(super::lang::N_NOUNS_PER_CLASS);
+        match c {
+            Class::A => lang.nouns_a[i].clone(),
+            Class::B => lang.nouns_b[i].clone(),
+        }
+    };
+    let correct = pick(rng, class);
+    let wrong = vec![pick(rng, flip(class))];
+    let (choices, answer) = shuffle_with_answer(rng, correct, wrong);
+    McItem { prompt, choices, answer }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lang() -> Lang {
+        Lang::new(42)
+    }
+
+    #[test]
+    fn all_suites_generate() {
+        let l = lang();
+        let mut rng = Rng::new(1);
+        for suite in ALL_SUITES {
+            for _ in 0..20 {
+                let it = suite.item(&l, &mut rng);
+                assert!(it.answer < it.choices.len(), "{:?}", suite);
+                assert!(!it.prompt.is_empty());
+                assert!(it.choices.len() >= 2);
+                // answer string must be unique among choices
+                let a = &it.choices[it.answer];
+                assert_eq!(it.choices.iter().filter(|c| *c == a).count(), 1, "{:?} {:?}", suite, it);
+            }
+        }
+    }
+
+    #[test]
+    fn eval_set_deterministic() {
+        let l = lang();
+        let a = Suite::Arith.eval_set(&l, 10, 7);
+        let b = Suite::Arith.eval_set(&l, 10, 7);
+        assert_eq!(a.len(), 10);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+
+    #[test]
+    fn arith_correct() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let it = arith_item(&mut rng);
+            let parts: Vec<&str> = it.prompt.split_whitespace().collect();
+            let a: usize = parts[0].parse().unwrap();
+            let b: usize = parts[2].parse().unwrap();
+            assert_eq!(it.choices[it.answer], (a + b).to_string());
+        }
+    }
+
+    #[test]
+    fn yesno_truthful() {
+        let l = lang();
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let it = yesno_item(&l, &mut rng);
+            let words: Vec<&str> = it.prompt.trim_end_matches(" ?").split(" pide ").collect();
+            let s_idx = (0..l.n_nouns()).find(|&i| l.noun(i).0 == words[0]).unwrap();
+            let is_true = l.noun(l.kb[s_idx].1).0 == words[1];
+            assert_eq!(it.choices[it.answer] == "yes", is_true);
+        }
+    }
+}

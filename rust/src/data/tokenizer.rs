@@ -1,0 +1,90 @@
+//! Byte-level tokenizer with special tokens.
+//!
+//! Vocabulary layout (total 320, 64-aligned for SEFP groups):
+//!   0..=255   raw bytes
+//!   256       BOS
+//!   257       EOS
+//!   258       PAD (never predicted; targets at PAD are masked with -1)
+//!   259       SEP (prompt/answer separator for instruction data)
+//!   260..=319 reserved
+
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+pub const PAD: i32 = 258;
+pub const SEP: i32 = 259;
+pub const VOCAB_SIZE: usize = 320;
+
+/// Target id used to mask padding positions in the loss (mirrors
+/// `model.loss_fn`'s `targets >= 0` check).
+pub const IGNORE: i32 = -1;
+
+#[derive(Debug, Clone, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        Tokenizer
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    pub fn encode_with_bos(&self, text: &str) -> Vec<i32> {
+        let mut v = Vec::with_capacity(text.len() + 1);
+        v.push(BOS);
+        v.extend(text.bytes().map(|b| b as i32));
+        v
+    }
+
+    /// Prompt SEP answer EOS — the instruction-tuning shape.
+    pub fn encode_pair(&self, prompt: &str, answer: &str) -> Vec<i32> {
+        let mut v = Vec::with_capacity(prompt.len() + answer.len() + 3);
+        v.push(BOS);
+        v.extend(prompt.bytes().map(|b| b as i32));
+        v.push(SEP);
+        v.extend(answer.bytes().map(|b| b as i32));
+        v.push(EOS);
+        v
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::new();
+        let s = "hello otaro";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn pair_structure() {
+        let t = Tokenizer::new();
+        let v = t.encode_pair("q", "a");
+        assert_eq!(v, vec![BOS, b'q' as i32, SEP, b'a' as i32, EOS]);
+    }
+
+    #[test]
+    fn decode_skips_specials() {
+        let t = Tokenizer::new();
+        assert_eq!(t.decode(&[BOS, b'x' as i32, SEP, EOS, PAD]), "x");
+    }
+
+    #[test]
+    fn vocab_is_64_aligned() {
+        assert_eq!(VOCAB_SIZE % 64, 0);
+        assert!(SEP < VOCAB_SIZE as i32);
+    }
+}

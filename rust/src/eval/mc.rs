@@ -1,0 +1,185 @@
+//! Multiple-choice scoring — the zero-shot evaluation protocol of the
+//! paper's tables 1, 3-7 (lm-eval-harness style): each choice is scored
+//! by the length-normalized log-likelihood of its tokens given the
+//! prompt; the argmax choice is the model's answer.
+
+use crate::data::tokenizer::{BOS, EOS, PAD, SEP};
+use crate::data::{McItem, Tokenizer};
+use crate::runtime::{Engine, ParamStore, Width};
+
+/// One scoring row: fixed-length token vector + the span of positions
+/// whose next-token predictions belong to the choice.
+struct Row {
+    tokens: Vec<i32>,
+    /// (position p, target token) — logits at p predict target
+    span: Vec<(usize, i32)>,
+}
+
+fn build_row(prompt_toks: &[i32], choice_toks: &[i32], seq_len: usize) -> Row {
+    // full sequence: BOS prompt SEP choice EOS
+    let mut seq = Vec::with_capacity(prompt_toks.len() + choice_toks.len() + 3);
+    seq.push(BOS);
+    seq.extend_from_slice(prompt_toks);
+    seq.push(SEP);
+    seq.extend_from_slice(choice_toks);
+    seq.push(EOS);
+    // if too long, trim the prompt head (keep BOS); the span is recomputed
+    // from the SEP position afterwards so trimming is safe
+    if seq.len() > seq_len + 1 {
+        let excess = seq.len() - (seq_len + 1);
+        seq.splice(1..1 + excess, std::iter::empty());
+    }
+    let sep_pos = seq.iter().rposition(|&t| t == SEP).expect("SEP present");
+    let mut span = Vec::new();
+    for p in sep_pos..seq.len() - 1 {
+        span.push((p, seq[p + 1]));
+    }
+    let mut tokens = seq[..seq.len() - 1].to_vec();
+    tokens.resize(seq_len, PAD);
+    Row { tokens, span }
+}
+
+/// Batched evaluator: accumulates rows and runs the engine's logits step
+/// once per full batch.
+pub struct McEvaluator<'a> {
+    engine: &'a mut Engine,
+    params: &'a ParamStore,
+    width: Width,
+    rows: Vec<Row>,
+    lls: Vec<f64>,
+    batch_size: usize,
+    seq_len: usize,
+    vocab: usize,
+}
+
+impl<'a> McEvaluator<'a> {
+    pub fn new(engine: &'a mut Engine, params: &'a ParamStore, width: Width) -> Self {
+        let (b, t) = engine.batch_shape();
+        let vocab = engine.vocab_size();
+        McEvaluator {
+            engine,
+            params,
+            width,
+            rows: Vec::new(),
+            lls: Vec::new(),
+            batch_size: b,
+            seq_len: t,
+            vocab,
+        }
+    }
+
+    fn push_row(&mut self, row: Row) -> anyhow::Result<()> {
+        self.rows.push(row);
+        if self.rows.len() == self.batch_size {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    fn flush(&mut self) -> anyhow::Result<()> {
+        if self.rows.is_empty() {
+            return Ok(());
+        }
+        let mut tokens = Vec::with_capacity(self.batch_size * self.seq_len);
+        for r in &self.rows {
+            tokens.extend_from_slice(&r.tokens);
+        }
+        // pad to full batch with PAD rows
+        let real_rows = self.rows.len();
+        for _ in real_rows..self.batch_size {
+            tokens.extend(std::iter::repeat(PAD).take(self.seq_len));
+        }
+        let logits = self.engine.logits_step(self.params, &tokens, self.width)?;
+        let v = self.vocab;
+        for (ri, row) in self.rows.iter().enumerate() {
+            let mut ll = 0.0f64;
+            for &(p, target) in &row.span {
+                let off = (ri * self.seq_len + p) * v;
+                let slice = &logits[off..off + v];
+                ll += log_softmax_at(slice, target as usize);
+            }
+            self.lls.push(ll / row.span.len().max(1) as f64);
+        }
+        self.rows.clear();
+        Ok(())
+    }
+
+    fn finish(mut self) -> anyhow::Result<Vec<f64>> {
+        self.flush()?;
+        Ok(self.lls)
+    }
+}
+
+fn log_softmax_at(logits: &[f32], idx: usize) -> f64 {
+    let max = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+    let lse: f64 = logits.iter().map(|&l| ((l as f64) - max).exp()).sum::<f64>().ln() + max;
+    logits[idx] as f64 - lse
+}
+
+/// Accuracy of `items` at `width`.  Returns (accuracy, n_correct).
+pub fn score_items(
+    engine: &mut Engine,
+    params: &ParamStore,
+    width: Width,
+    items: &[McItem],
+) -> anyhow::Result<(f64, usize)> {
+    let tok = Tokenizer::new();
+    let (_, seq_len) = engine.batch_shape();
+    let mut ev = McEvaluator::new(engine, params, width);
+    let mut arity = Vec::with_capacity(items.len());
+    for item in items {
+        let p = tok.encode(&item.prompt);
+        arity.push(item.choices.len());
+        for c in &item.choices {
+            ev.push_row(build_row(&p, &tok.encode(c), seq_len))?;
+        }
+    }
+    let lls = ev.finish()?;
+    let mut correct = 0usize;
+    let mut off = 0usize;
+    for (item, &k) in items.iter().zip(&arity) {
+        let slice = &lls[off..off + k];
+        off += k;
+        let best = slice
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if best == item.answer {
+            correct += 1;
+        }
+    }
+    Ok((correct as f64 / items.len().max(1) as f64, correct))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let logits = vec![1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|i| log_softmax_at(&logits, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_has_choice_span() {
+        let r = build_row(&[65, 66], &[67, 68], 16);
+        // seq: BOS 65 66 SEP 67 68 EOS -> span from SEP predicts 67,68,EOS
+        assert_eq!(r.tokens.len(), 16);
+        assert_eq!(r.span.len(), 3);
+        assert_eq!(r.span[0].1, 67);
+        assert_eq!(r.span[2].1, EOS);
+    }
+
+    #[test]
+    fn long_prompt_trimmed_keeps_choice() {
+        let prompt: Vec<i32> = (0..100).map(|i| 65 + (i % 26)).collect();
+        let r = build_row(&prompt, &[90], 32);
+        assert_eq!(r.tokens.len(), 32);
+        assert_eq!(r.span.last().unwrap().1, EOS);
+        assert_eq!(r.span[0].1, 90);
+    }
+}

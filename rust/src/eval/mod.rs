@@ -1,0 +1,11 @@
+//! Evaluation harness: perplexity (fig. 7 / table 8) and multiple-choice
+//! accuracy via length-normalized log-likelihood (tables 1, 3-7), plus
+//! the per-bitwidth sweep runners and table formatting.
+
+pub mod mc;
+pub mod ppl;
+pub mod tables;
+
+pub use mc::{score_items, McEvaluator};
+pub use ppl::perplexity;
+pub use tables::TableBuilder;

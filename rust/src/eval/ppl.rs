@@ -1,0 +1,46 @@
+//! Perplexity evaluation (paper's task-specific metric, fig. 7 / table 8).
+//!
+//! PPL = exp(Σ token NLL / Σ valid tokens) over a deterministic
+//! sequential sweep of the test stream.  The engine's eval step returns
+//! the *mean* NLL per batch over valid targets, so we re-weight by each
+//! batch's valid-target count to get the exact corpus-level mean.
+
+use crate::data::StreamBatcher;
+use crate::runtime::{Engine, ParamStore, Width};
+
+pub fn perplexity(
+    engine: &mut Engine,
+    params: &ParamStore,
+    test_stream: &[i32],
+    width: Width,
+) -> anyhow::Result<f64> {
+    let (b, t) = engine.batch_shape();
+    let batcher = StreamBatcher::new(test_stream.to_vec(), b, t, 0);
+    let mut nll_sum = 0.0f64;
+    let mut n_tokens = 0usize;
+    for batch in batcher.sequential_batches() {
+        let valid = batch.n_valid_targets();
+        if valid == 0 {
+            continue;
+        }
+        let mean_nll = engine.eval_step(params, &batch, width)? as f64;
+        nll_sum += mean_nll * valid as f64;
+        n_tokens += valid;
+    }
+    anyhow::ensure!(n_tokens > 0, "empty test stream");
+    Ok((nll_sum / n_tokens as f64).exp())
+}
+
+/// PPL sweep across the precision ladder (one table-8 row).
+pub fn ppl_sweep(
+    engine: &mut Engine,
+    params: &ParamStore,
+    test_stream: &[i32],
+    widths: &[Width],
+) -> anyhow::Result<Vec<(Width, f64)>> {
+    let mut out = Vec::with_capacity(widths.len());
+    for &w in widths {
+        out.push((w, perplexity(engine, params, test_stream, w)?));
+    }
+    Ok(out)
+}

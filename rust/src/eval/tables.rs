@@ -1,0 +1,79 @@
+//! Table formatting: renders the paper-style method × bit-width tables
+//! (markdown) that the bench harness prints and EXPERIMENTS.md records.
+
+use std::fmt::Write as _;
+
+/// Simple row-major table builder with a fixed header.
+#[derive(Debug, Clone)]
+pub struct TableBuilder {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TableBuilder {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        TableBuilder {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn row_f(&mut self, label: &str, values: &[f64], fmt: fn(f64) -> String) -> &mut Self {
+        let mut cells = vec![label.to_string()];
+        cells.extend(values.iter().map(|&v| fmt(v)));
+        self.row(cells)
+    }
+
+    pub fn markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "### {}\n", self.title);
+        let _ = writeln!(s, "| {} |", self.header.join(" | "));
+        let _ = writeln!(s, "|{}|", vec!["---"; self.header.len()].join("|"));
+        for r in &self.rows {
+            let _ = writeln!(s, "| {} |", r.join(" | "));
+        }
+        s
+    }
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{:.2}%", 100.0 * v)
+}
+
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_markdown() {
+        let mut t = TableBuilder::new("Test", &["Method", "E5M8", "E5M3"]);
+        t.row_f("ours", &[0.59, 0.57], pct);
+        let md = t.markdown();
+        assert!(md.contains("| Method | E5M8 | E5M3 |"));
+        assert!(md.contains("59.00%"));
+        assert!(md.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = TableBuilder::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

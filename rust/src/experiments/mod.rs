@@ -1,0 +1,280 @@
+//! Experiment drivers: lifecycle commands and the bench harness that
+//! regenerates every table/figure of the paper (DESIGN.md §4).
+
+pub mod benches;
+
+use std::path::PathBuf;
+
+use crate::config::{Method, TrainConfig};
+use crate::coordinator::Trainer;
+use crate::data::{corpus, Lang, PairBatcher, StreamBatcher};
+use crate::eval::mc::score_items;
+use crate::eval::ppl::perplexity;
+use crate::eval::tables::{f2, pct, TableBuilder};
+use crate::metrics::MetricsSink;
+use crate::runtime::{Engine, ParamStore, Width};
+use crate::serve::{
+    DynamicBatcher, PrecisionStore, Request, Router, Server, TaskClass,
+};
+
+/// Shared CLI context.
+pub struct Ctx {
+    pub artifacts: PathBuf,
+    pub runs: PathBuf,
+    pub seed: u64,
+}
+
+impl Ctx {
+    pub fn engine(&self) -> anyhow::Result<Engine> {
+        Engine::new(&self.artifacts)
+    }
+
+    pub fn lang(&self) -> Lang {
+        Lang::new(self.seed ^ 0x1A06)
+    }
+
+    pub fn pretrained_path(&self) -> PathBuf {
+        self.runs.join("pretrained.bin")
+    }
+
+    pub fn sink(&self, name: &str) -> MetricsSink {
+        MetricsSink::to_file(&self.runs.join(format!("{name}.jsonl")))
+            .unwrap_or_else(|_| MetricsSink::null())
+    }
+
+    /// Load params: explicit checkpoint > pretrained.bin > init.
+    pub fn params(&self, engine: &Engine, checkpoint: Option<PathBuf>) -> anyhow::Result<ParamStore> {
+        let mut params = engine.init_params()?;
+        let path = checkpoint.unwrap_or_else(|| self.pretrained_path());
+        if path.exists() {
+            params.load_into(&path)?;
+            eprintln!("loaded checkpoint {}", path.display());
+        } else {
+            eprintln!("no checkpoint at {} — using init params", path.display());
+        }
+        Ok(params)
+    }
+}
+
+/// The paper's ladder as engine widths.
+pub fn ladder() -> Vec<Width> {
+    vec![8, 7, 6, 5, 4, 3].into_iter().map(Width::m).collect()
+}
+
+pub fn info(ctx: &Ctx) -> anyhow::Result<()> {
+    let engine = ctx.engine()?;
+    let m = &engine.manifest;
+    println!("preset:       {}", m.preset);
+    println!("quant impl:   {}", m.quant_impl);
+    println!(
+        "model:        d={} h={} L={} ff={} V={} T={} B={}",
+        m.config.d_model,
+        m.config.n_heads,
+        m.config.n_layers,
+        m.config.d_ff,
+        m.config.vocab_size,
+        m.config.max_seq,
+        m.config.batch_size
+    );
+    println!("params:       {} tensors, {} total", m.params.len(), m.total_params());
+    println!("widths:       {:?}", m.mantissa_widths);
+    println!("artifacts:    {}", m.artifacts.len());
+    Ok(())
+}
+
+pub fn pretrain(ctx: &Ctx, steps: usize, lr: f32, out: Option<PathBuf>) -> anyhow::Result<()> {
+    let mut engine = ctx.engine()?;
+    let mut params = engine.init_params()?;
+    let lang = ctx.lang();
+    let (b, t) = engine.batch_shape();
+    let stream = corpus::pretrain_corpus(&lang, ctx.seed, 12_000);
+    let mut batches = StreamBatcher::new(stream, b, t, ctx.seed ^ 0x9);
+    let cfg = TrainConfig {
+        method: Method::Fp,
+        lr,
+        steps,
+        ..TrainConfig::default()
+    };
+    let mut sink = ctx.sink("pretrain");
+    let report = Trainer::new(&mut engine, &mut params, &mut batches, cfg).run(&mut sink)?;
+    let out = out.unwrap_or_else(|| ctx.pretrained_path());
+    params.save(&out)?;
+    println!(
+        "pretrained {} steps: loss {:.3} -> {:.3} (ema {:.3}), saved {}",
+        steps,
+        report.losses.first().copied().unwrap_or(f32::NAN),
+        report.losses.last().copied().unwrap_or(f32::NAN),
+        report.final_loss_ema,
+        out.display()
+    );
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn finetune(
+    ctx: &Ctx,
+    method: &str,
+    steps: usize,
+    lr: f32,
+    fixed_m: Option<u8>,
+    dataset: &str,
+    checkpoint: Option<PathBuf>,
+    out: Option<PathBuf>,
+) -> anyhow::Result<()> {
+    let mut engine = ctx.engine()?;
+    let mut params = ctx.params(&engine, checkpoint)?;
+    let lang = ctx.lang();
+    let (b, t) = engine.batch_shape();
+    let cfg = TrainConfig {
+        method: method.parse().map_err(|e: String| anyhow::anyhow!(e))?,
+        lr,
+        steps,
+        fixed_m,
+        seed: ctx.seed,
+        ..TrainConfig::default()
+    };
+    let mut sink = ctx.sink(&format!("finetune_{method}"));
+    let report = match dataset {
+        "tinytext" => {
+            let (train, _) = corpus::tinytext_corpus(&lang, ctx.seed, 8_000, 1_000);
+            let mut batches = StreamBatcher::new(train, b, t, ctx.seed ^ 0x5);
+            Trainer::new(&mut engine, &mut params, &mut batches, cfg).run(&mut sink)?
+        }
+        "instruct" => {
+            let pairs = corpus::instruct_corpus(&lang, ctx.seed, 4_000);
+            let mut batches = PairBatcher::new(pairs, b, t, ctx.seed ^ 0x6);
+            Trainer::new(&mut engine, &mut params, &mut batches, cfg).run(&mut sink)?
+        }
+        other => anyhow::bail!("unknown dataset {other:?} (tinytext|instruct)"),
+    };
+    let out = out.unwrap_or_else(|| ctx.runs.join(format!("finetuned_{method}.bin")));
+    params.save(&out)?;
+    println!(
+        "finetuned [{method}] {} steps, final ema loss {:.3}, path hist {:?}, laa flush/defer {}/{}; saved {}",
+        steps,
+        report.final_loss_ema,
+        report.width_histogram,
+        report.laa_flushes,
+        report.laa_deferred,
+        out.display()
+    );
+    Ok(())
+}
+
+pub fn eval_checkpoint(ctx: &Ctx, checkpoint: Option<PathBuf>, mc_items: usize) -> anyhow::Result<()> {
+    let mut engine = ctx.engine()?;
+    let params = ctx.params(&engine, checkpoint)?;
+    let lang = ctx.lang();
+    let (_, test) = corpus::tinytext_corpus(&lang, ctx.seed, 8_000, 1_000);
+
+    let mut t = TableBuilder::new("PPL by precision", &["metric", "E5M8", "E5M7", "E5M6", "E5M5", "E5M4", "E5M3", "FP"]);
+    let mut vals = Vec::new();
+    for w in ladder() {
+        vals.push(perplexity(&mut engine, &params, &test, w)?);
+    }
+    vals.push(perplexity(&mut engine, &params, &test, Width::FP)?);
+    t.row_f("ppl", &vals, f2);
+    println!("{}", t.markdown());
+
+    let mut t = TableBuilder::new(
+        "Zero-shot accuracy by precision",
+        &["suite", "E5M8", "E5M7", "E5M6", "E5M5", "E5M4", "E5M3"],
+    );
+    let mut avgs = vec![0.0; 6];
+    for suite in crate::data::ALL_SUITES {
+        let items = suite.eval_set(&lang, mc_items, ctx.seed);
+        let mut row = Vec::new();
+        for (i, w) in ladder().into_iter().enumerate() {
+            let (acc, _) = score_items(&mut engine, &params, w, &items)?;
+            avgs[i] += acc / 8.0;
+            row.push(acc);
+        }
+        t.row_f(suite.name(), &row, pct);
+    }
+    t.row_f("AVG", &avgs, pct);
+    println!("{}", t.markdown());
+    Ok(())
+}
+
+pub fn serve_demo(ctx: &Ctx, n_requests: usize, checkpoint: Option<PathBuf>) -> anyhow::Result<()> {
+    let mut engine = ctx.engine()?;
+    let params = ctx.params(&engine, checkpoint)?;
+    let store = PrecisionStore::from_params(&params);
+    println!(
+        "single-master SEFP store: {} KiB (per-precision zoo would be {} KiB)",
+        store.master_bytes() / 1024,
+        store.zoo_bytes(&[8, 7, 6, 5, 4, 3]) / 1024
+    );
+    let router = Router::new(crate::config::ServeConfig::default());
+    let batcher = DynamicBatcher::new(engine.batch_shape().0, 256);
+    let mut server = Server::new(&mut engine, store, router, batcher);
+
+    let lang = ctx.lang();
+    let tok = crate::data::Tokenizer::new();
+    let mut rng = crate::data::Rng::new(ctx.seed ^ 0x53);
+    let mut submitted = 0;
+    for i in 0..n_requests {
+        let class = match i % 3 {
+            0 => TaskClass::Generation,
+            1 => TaskClass::Understanding,
+            _ => TaskClass::Other,
+        };
+        let prompt = tok.encode_with_bos(&lang.sentence(&mut rng));
+        if server.submit(Request { id: i as u64, class, prompt, force_m: None }) {
+            submitted += 1;
+        }
+    }
+    let responses = server.process_all()?;
+    let stats = server.stats();
+    println!(
+        "served {}/{} requests in {} batches; throughput {:.1} req/s",
+        responses.len(),
+        submitted,
+        stats.batches,
+        stats.throughput_rps()
+    );
+    println!(
+        "compute ms: mean {:.1} (min {:.1} max {:.1}); widths {:?}",
+        stats.compute_ms.mean(),
+        stats.compute_ms.min,
+        stats.compute_ms.max,
+        stats.per_width
+    );
+    let mut sink = ctx.sink("serve_demo");
+    for r in &responses {
+        sink.log(&crate::json::obj(vec![
+            ("id", crate::json::n(r.id as f64)),
+            ("m", crate::json::n(r.width_m as f64)),
+            ("next", crate::json::n(r.next_token as f64)),
+            ("queue_ms", crate::json::n(r.queue_ms)),
+            ("compute_ms", crate::json::n(r.compute_ms)),
+        ]));
+    }
+    Ok(())
+}
+
+pub fn bench(ctx: &Ctx, target: &str, quick: bool) -> anyhow::Result<()> {
+    match target {
+        "table1" => benches::table1(ctx, quick),
+        "table2" => benches::table2(ctx, quick),
+        "table8" | "fig7" => benches::table8(ctx, quick),
+        "fig3" => benches::fig3(ctx, quick),
+        "fig4" => benches::fig4(ctx),
+        "fig5" => benches::fig5(ctx, quick),
+        "fig6" => benches::fig6(ctx, quick),
+        "fig8" => benches::fig8(ctx, quick),
+        "fig9" => benches::fig9(ctx),
+        "ablations" => benches::ablations(ctx, quick),
+        "all" => {
+            for t in [
+                "fig9", "fig4", "fig5", "fig6", "table2", "fig3", "table8", "fig8",
+                "table1", "ablations",
+            ] {
+                println!("\n===== bench {t} =====");
+                bench(ctx, t, quick)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown bench target {other:?}"),
+    }
+}

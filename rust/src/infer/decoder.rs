@@ -1,0 +1,306 @@
+//! Transformer-decode simulator for the table-2 benchmark.
+//!
+//! Replays autoregressive decoding faithfully: each decode step runs the
+//! seven projection matvecs of every layer (q, k, v, o, gate, up, down),
+//! REAL single-head attention over a growing KV cache (f32 for the FP
+//! baseline, SEFP-quantized for the quantized runs — the paper's table-2
+//! memory number includes the cache), and the LM head.
+
+use crate::data::Rng;
+
+use super::kv_cache::KvCache;
+use super::{DenseLinear, QuantLinear};
+
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+    /// context length for KV-cache accounting (paper: 2000 tokens)
+    pub context: usize,
+}
+
+impl SimConfig {
+    /// LLaMA3-8B-shaped config (the paper's table-2 subject), scaled by
+    /// `scale` so CPU runs finish (ratios are scale-invariant).
+    pub fn llama8b_scaled(scale: usize) -> Self {
+        SimConfig {
+            d_model: 4096 / scale,
+            d_ff: 14336 / scale,
+            n_layers: 32 / scale.min(8),
+            vocab: 128_256 / scale,
+            context: 2000,
+        }
+    }
+
+    pub fn n_weights(&self) -> usize {
+        let per_layer = 4 * self.d_model * self.d_model + 3 * self.d_model * self.d_ff;
+        self.n_layers * per_layer + self.d_model * self.vocab
+    }
+
+    /// KV cache bytes for `context` tokens at `bytes_per_elem`.
+    pub fn kv_cache_bytes(&self, bytes_per_elem: usize) -> usize {
+        2 * self.n_layers * self.context * self.d_model * bytes_per_elem
+    }
+}
+
+/// One layer's projection weights.
+pub enum LayerWeights {
+    Dense { proj: Vec<DenseLinear> },
+    Quant { proj: Vec<QuantLinear> },
+}
+
+pub enum DecoderWeights {
+    Dense,
+    /// SEFP at mantissa width m
+    Sefp(u8),
+}
+
+/// The simulator itself.
+pub struct DecoderSim {
+    pub cfg: SimConfig,
+    layers: Vec<LayerWeights>,
+    head: LayerWeights,
+    caches: Vec<KvCache>,
+    quant_m: Option<u8>,
+}
+
+fn rand_dense(rng: &mut Rng, in_dim: usize, out_dim: usize) -> DenseLinear {
+    let w: Vec<f32> = (0..in_dim * out_dim).map(|_| rng.normal() as f32 * 0.05).collect();
+    DenseLinear::new(in_dim, out_dim, w)
+}
+
+impl DecoderSim {
+    pub fn new(cfg: SimConfig, weights: DecoderWeights, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let dims = |cfg: &SimConfig| -> Vec<(usize, usize)> {
+            vec![
+                (cfg.d_model, cfg.d_model), // q
+                (cfg.d_model, cfg.d_model), // k
+                (cfg.d_model, cfg.d_model), // v
+                (cfg.d_model, cfg.d_model), // o
+                (cfg.d_model, cfg.d_ff),    // gate
+                (cfg.d_model, cfg.d_ff),    // up
+                (cfg.d_ff, cfg.d_model),    // down
+            ]
+        };
+        let build_layer = |rng: &mut Rng| -> LayerWeights {
+            let dense: Vec<DenseLinear> =
+                dims(&cfg).into_iter().map(|(i, o)| rand_dense(rng, i, o)).collect();
+            match weights {
+                DecoderWeights::Dense => LayerWeights::Dense { proj: dense },
+                DecoderWeights::Sefp(m) => LayerWeights::Quant {
+                    proj: dense.iter().map(|d| QuantLinear::from_dense(d, m, 64)).collect(),
+                },
+            }
+        };
+        let layers = (0..cfg.n_layers).map(|_| build_layer(&mut rng)).collect();
+        let head_dense = rand_dense(&mut rng, cfg.d_model, cfg.vocab);
+        let head = match weights {
+            DecoderWeights::Dense => LayerWeights::Dense { proj: vec![head_dense] },
+            DecoderWeights::Sefp(m) => LayerWeights::Quant {
+                proj: vec![QuantLinear::from_dense(&head_dense, m, 64)],
+            },
+        };
+        let quant_m = match weights {
+            DecoderWeights::Dense => None,
+            DecoderWeights::Sefp(m) => Some(m),
+        };
+        let caches = (0..cfg.n_layers)
+            .map(|_| match quant_m {
+                None => KvCache::f32(cfg.d_model),
+                Some(m) => KvCache::sefp(cfg.d_model, m.min(7), 64),
+            })
+            .collect();
+        DecoderSim { cfg, layers, head, caches, quant_m }
+    }
+
+    /// Reset the KV caches (new sequence).
+    pub fn reset(&mut self) {
+        let cfg = self.cfg;
+        for c in &mut self.caches {
+            *c = match self.quant_m {
+                None => KvCache::f32(cfg.d_model),
+                Some(m) => KvCache::sefp(cfg.d_model, m.min(7), 64),
+            };
+        }
+    }
+
+    /// One decode step: q/k/v projections, attention over the KV cache,
+    /// o-projection, SwiGLU-shaped MLP, LM head.  Returns a checksum so
+    /// the work cannot be optimized away.
+    pub fn decode_step(&mut self, x: &mut Vec<f32>) -> f32 {
+        let d = self.cfg.d_model;
+        let f = self.cfg.d_ff;
+        let mut q = vec![0.0f32; d];
+        let mut k = vec![0.0f32; d];
+        let mut v = vec![0.0f32; d];
+        let mut att = vec![0.0f32; d];
+        let mut buf_d = vec![0.0f32; d];
+        let mut buf_f = vec![0.0f32; f];
+        let mut checksum = 0.0f32;
+        for (li, layer) in self.layers.iter().enumerate() {
+            let mv = |i: usize, xin: &[f32], out: &mut [f32]| match layer {
+                LayerWeights::Dense { proj } => proj[i].matvec(xin, out),
+                LayerWeights::Quant { proj } => proj[i].matvec(xin, out),
+            };
+            // attention
+            mv(0, x, &mut q);
+            mv(1, x, &mut k);
+            mv(2, x, &mut v);
+            let cache = &mut self.caches[li];
+            cache.append(&k, &v);
+            cache.attend(&q, &mut att);
+            mv(3, &att, &mut buf_d);
+            checksum += buf_d[0];
+            for (xv, bv) in x.iter_mut().zip(&buf_d) {
+                *xv += 0.1 * bv.tanh();
+            }
+            // MLP (gate * up -> down)
+            mv(4, x, &mut buf_f);
+            let mut up = vec![0.0f32; f];
+            mv(5, x, &mut up);
+            for (g, u) in buf_f.iter_mut().zip(&up) {
+                *g = (*g / (1.0 + (-*g).exp())) * u; // silu(g) * u
+            }
+            mv(6, &buf_f, &mut buf_d);
+            checksum += buf_d[0];
+            for (xv, bv) in x.iter_mut().zip(&buf_d) {
+                *xv = 0.9 * *xv + 0.1 * bv.tanh();
+            }
+        }
+        let mut logits0 = vec![0.0f32; self.head_out()];
+        match &self.head {
+            LayerWeights::Dense { proj } => proj[0].matvec(x, &mut logits0),
+            LayerWeights::Quant { proj } => proj[0].matvec(x, &mut logits0),
+        }
+        checksum + logits0[0]
+    }
+
+    fn head_out(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    /// Decode `n_tokens` tokens after pre-filling `prefill` cache entries
+    /// (the paper assumes a 2000-token input); returns (tokens/sec,
+    /// checksum).
+    pub fn decode_throughput(&mut self, n_tokens: usize, seed: u64) -> (f64, f32) {
+        self.decode_throughput_prefilled(n_tokens, 0, seed)
+    }
+
+    pub fn decode_throughput_prefilled(
+        &mut self,
+        n_tokens: usize,
+        prefill: usize,
+        seed: u64,
+    ) -> (f64, f32) {
+        self.reset();
+        let mut rng = Rng::new(seed);
+        let mut x: Vec<f32> = (0..self.cfg.d_model).map(|_| rng.normal() as f32 * 0.1).collect();
+        if prefill > 0 {
+            // fill caches without timing (prefill cost is a separate
+            // phase in the paper's table 2)
+            let d = self.cfg.d_model;
+            for _ in 0..prefill {
+                let k: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.3).collect();
+                let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.3).collect();
+                for c in &mut self.caches {
+                    c.append(&k, &v);
+                }
+            }
+        }
+        let start = std::time::Instant::now();
+        let mut checksum = 0.0f32;
+        for _ in 0..n_tokens {
+            checksum += self.decode_step(&mut x);
+        }
+        let secs = start.elapsed().as_secs_f64();
+        (n_tokens as f64 / secs, checksum)
+    }
+
+    /// Measured KV-cache bytes currently held.
+    pub fn cache_bytes(&self) -> usize {
+        self.caches.iter().map(|c| c.bytes()).sum()
+    }
+
+    /// Weight memory in bytes for the current format.
+    pub fn weight_bytes(&self) -> usize {
+        let layer_bytes = |lw: &LayerWeights| -> usize {
+            match lw {
+                LayerWeights::Dense { proj } => proj.iter().map(|p| p.bytes_f16()).sum(),
+                LayerWeights::Quant { proj } => proj.iter().map(|p| p.packed_bytes()).sum(),
+            }
+        };
+        self.layers.iter().map(layer_bytes).sum::<usize>() + layer_bytes(&self.head)
+    }
+
+    /// Total memory report (weights + KV cache), paper table-2 style.
+    /// FP16 baseline KV cache is fp16; SEFP runs quantize the KV cache to
+    /// the same width (the paper includes KV-cache savings in its 69%).
+    pub fn memory_bytes(&self) -> usize {
+        let kv_elem = match &self.layers[0] {
+            LayerWeights::Dense { .. } => 2,
+            LayerWeights::Quant { proj } => (1 + proj[0].m as usize + 7) / 8,
+        };
+        self.weight_bytes() + self.cfg.kv_cache_bytes(kv_elem.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SimConfig {
+        SimConfig { d_model: 128, d_ff: 256, n_layers: 2, vocab: 320, context: 100 }
+    }
+
+    #[test]
+    fn decode_runs_and_is_finite() {
+        let mut sim = DecoderSim::new(small(), DecoderWeights::Sefp(4), 1);
+        let mut x = vec![0.1f32; 128];
+        for _ in 0..5 {
+            let c = sim.decode_step(&mut x);
+            assert!(c.is_finite());
+        }
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert_eq!(sim.caches[0].len(), 5);
+        assert!(sim.cache_bytes() > 0);
+    }
+
+    #[test]
+    fn reset_clears_caches() {
+        let mut sim = DecoderSim::new(small(), DecoderWeights::Dense, 1);
+        let mut x = vec![0.1f32; 128];
+        let _ = sim.decode_step(&mut x);
+        assert_eq!(sim.caches[0].len(), 1);
+        sim.reset();
+        assert_eq!(sim.caches[0].len(), 0);
+    }
+
+    #[test]
+    fn quant_uses_less_memory() {
+        let d = DecoderSim::new(small(), DecoderWeights::Dense, 1);
+        let q = DecoderSim::new(small(), DecoderWeights::Sefp(4), 1);
+        assert!(q.weight_bytes() * 2 < d.weight_bytes());
+        assert!(q.memory_bytes() < d.memory_bytes());
+    }
+
+    #[test]
+    fn memory_reduction_near_paper_band() {
+        // E5M4 vs FP16 weights: expect ~68-69% reduction
+        let d = DecoderSim::new(small(), DecoderWeights::Dense, 1);
+        let q = DecoderSim::new(small(), DecoderWeights::Sefp(4), 1);
+        let red = 1.0 - q.memory_bytes() as f64 / d.memory_bytes() as f64;
+        assert!((0.6..0.75).contains(&red), "reduction={red}");
+    }
+
+    #[test]
+    fn n_weights_counts() {
+        let c = small();
+        assert_eq!(
+            c.n_weights(),
+            2 * (4 * 128 * 128 + 3 * 128 * 256) + 128 * 320
+        );
+    }
+}

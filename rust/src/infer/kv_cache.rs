@@ -1,0 +1,274 @@
+//! KV cache with optional SEFP quantization — the second half of the
+//! paper's table-2 memory claim ("storage spaces for weights AND KV
+//! cache").
+//!
+//! Decode-time attention reads the whole cache every token, so cache
+//! bytes are decode bandwidth exactly like weight bytes.  SEFP applies
+//! naturally: each appended K/V row is grouped along the head dimension
+//! and stored as significands + shared exponents; attention dequantizes
+//! on the fly with one step-multiply per group.
+
+use crate::sefp::{quantize_value, shared_exponent, step_for, Rounding};
+
+/// One layer's cache for one sequence (single-batch decode).
+pub enum KvCache {
+    F32 { k: Vec<f32>, v: Vec<f32>, d: usize },
+    Sefp(SefpKv),
+}
+
+pub struct SefpKv {
+    pub m: u8,
+    pub group_size: usize,
+    pub d: usize,
+    k_sigs: Vec<i8>,
+    v_sigs: Vec<i8>,
+    k_steps: Vec<f32>,
+    v_steps: Vec<f32>,
+    pub len: usize,
+}
+
+impl KvCache {
+    pub fn f32(d: usize) -> Self {
+        KvCache::F32 { k: Vec::new(), v: Vec::new(), d }
+    }
+
+    pub fn sefp(d: usize, m: u8, group_size: usize) -> Self {
+        assert!(m <= 7, "i8 storage");
+        assert_eq!(d % group_size, 0, "head dim must be group-aligned");
+        KvCache::Sefp(SefpKv {
+            m,
+            group_size,
+            d,
+            k_sigs: Vec::new(),
+            v_sigs: Vec::new(),
+            k_steps: Vec::new(),
+            v_steps: Vec::new(),
+            len: 0,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            KvCache::F32 { k, d, .. } => k.len() / d,
+            KvCache::Sefp(c) => c.len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append one position's K and V vectors (length d each).
+    pub fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        match self {
+            KvCache::F32 { k, v, d } => {
+                debug_assert_eq!(k_row.len(), *d);
+                k.extend_from_slice(k_row);
+                v.extend_from_slice(v_row);
+            }
+            KvCache::Sefp(c) => {
+                c.push(k_row, v_row);
+            }
+        }
+    }
+
+    /// Attention for one query vector: softmax(q·K/√d)·V.
+    pub fn attend(&self, q: &[f32], out: &mut [f32]) {
+        let t = self.len();
+        if t == 0 {
+            out.fill(0.0);
+            return;
+        }
+        match self {
+            KvCache::F32 { k, v, d } => {
+                let scale = (*d as f32).sqrt().recip();
+                let mut scores = Vec::with_capacity(t);
+                for ti in 0..t {
+                    let row = &k[ti * d..(ti + 1) * d];
+                    scores.push(super::dot_f32(q, row) * scale);
+                }
+                softmax(&mut scores);
+                out.fill(0.0);
+                for (ti, &s) in scores.iter().enumerate() {
+                    let row = &v[ti * d..(ti + 1) * d];
+                    for (o, &x) in out.iter_mut().zip(row) {
+                        *o += s * x;
+                    }
+                }
+            }
+            KvCache::Sefp(c) => c.attend(q, out),
+        }
+    }
+
+    /// Cache memory in bytes (packed accounting for SEFP).
+    pub fn bytes(&self) -> usize {
+        match self {
+            KvCache::F32 { k, v, .. } => (k.len() + v.len()) * 4,
+            KvCache::Sefp(c) => {
+                let n = c.k_sigs.len() + c.v_sigs.len();
+                let groups = c.k_steps.len() + c.v_steps.len();
+                // packed: (1+m) bits per element + 5 bits per group
+                (n * (1 + c.m as usize) + groups * 5).div_ceil(8)
+            }
+        }
+    }
+
+    /// FP16-equivalent bytes of the same cache contents.
+    pub fn fp16_bytes(&self) -> usize {
+        self.len() * 2 * 2 * self.d()
+    }
+
+    fn d(&self) -> usize {
+        match self {
+            KvCache::F32 { d, .. } => *d,
+            KvCache::Sefp(c) => c.d,
+        }
+    }
+}
+
+impl SefpKv {
+    fn push(&mut self, k_row: &[f32], v_row: &[f32]) {
+        debug_assert_eq!(k_row.len(), self.d);
+        for (row, sigs, steps) in [
+            (k_row, &mut self.k_sigs, &mut self.k_steps),
+            (v_row, &mut self.v_sigs, &mut self.v_steps),
+        ] {
+            for g in row.chunks(self.group_size) {
+                let maxabs = g.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                let e = shared_exponent(maxabs);
+                let step = step_for(e, self.m);
+                steps.push(step);
+                for &x in g {
+                    sigs.push(quantize_value(x, step, self.m, Rounding::Trunc) as i8);
+                }
+            }
+        }
+        self.len += 1;
+    }
+
+    fn attend(&self, q: &[f32], out: &mut [f32]) {
+        let gs = self.group_size;
+        let gpr = self.d / gs; // groups per row
+        let scale = (self.d as f32).sqrt().recip();
+        let mut scores = Vec::with_capacity(self.len);
+        for ti in 0..self.len {
+            let mut acc = 0.0f32;
+            for g in 0..gpr {
+                let off = (ti * gpr + g) * gs;
+                let sig = &self.k_sigs[off..off + gs];
+                let xs = &q[g * gs..(g + 1) * gs];
+                acc += super::dot_i8(xs, sig) * self.k_steps[ti * gpr + g];
+            }
+            scores.push(acc * scale);
+        }
+        softmax(&mut scores);
+        out.fill(0.0);
+        for (ti, &s) in scores.iter().enumerate() {
+            for g in 0..gpr {
+                let off = (ti * gpr + g) * gs;
+                let step = s * self.v_steps[ti * gpr + g];
+                let sig = &self.v_sigs[off..off + gs];
+                let o = &mut out[g * gs..(g + 1) * gs];
+                for (ov, &sv) in o.iter_mut().zip(sig) {
+                    *ov += step * sv as f32;
+                }
+            }
+        }
+    }
+}
+
+fn softmax(xs: &mut [f32]) {
+    let max = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = sum.recip();
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    fn rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (0..d).map(|_| rng.normal() as f32 * 0.3).collect()).collect()
+    }
+
+    #[test]
+    fn f32_attend_is_convex_combination() {
+        let d = 64;
+        let mut cache = KvCache::f32(d);
+        let ks = rows(5, d, 1);
+        let vs = rows(5, d, 2);
+        for (k, v) in ks.iter().zip(&vs) {
+            cache.append(k, v);
+        }
+        let q = vec![0.0f32; d]; // uniform scores -> mean of V rows
+        let mut out = vec![0.0f32; d];
+        cache.attend(&q, &mut out);
+        for j in 0..d {
+            let mean: f32 = vs.iter().map(|v| v[j]).sum::<f32>() / 5.0;
+            assert!((out[j] - mean).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sefp_attend_close_to_f32() {
+        let d = 64;
+        let mut cf = KvCache::f32(d);
+        let mut cq = KvCache::sefp(d, 6, 64);
+        let ks = rows(8, d, 3);
+        let vs = rows(8, d, 4);
+        for (k, v) in ks.iter().zip(&vs) {
+            cf.append(k, v);
+            cq.append(k, v);
+        }
+        let q: Vec<f32> = rows(1, d, 5).remove(0);
+        let mut of = vec![0.0f32; d];
+        let mut oq = vec![0.0f32; d];
+        cf.attend(&q, &mut of);
+        cq.attend(&q, &mut oq);
+        let err: f32 = of.iter().zip(&oq).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+        assert!(err < 0.05, "max err {err}");
+        // and error grows when m shrinks
+        let mut c3 = KvCache::sefp(d, 3, 64);
+        for (k, v) in ks.iter().zip(&vs) {
+            c3.append(k, v);
+        }
+        let mut o3 = vec![0.0f32; d];
+        c3.attend(&q, &mut o3);
+        let err3: f32 = of.iter().zip(&o3).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+        assert!(err3 > err * 0.9, "m3 {err3} vs m6 {err}");
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let d = 128;
+        let mut cf = KvCache::f32(d);
+        let mut cq = KvCache::sefp(d, 4, 64);
+        for (k, v) in rows(10, d, 6).iter().zip(rows(10, d, 7).iter()) {
+            cf.append(k, v);
+            cq.append(k, v);
+        }
+        assert_eq!(cf.bytes(), 10 * 2 * d * 4);
+        assert_eq!(cf.fp16_bytes(), 10 * 2 * d * 2);
+        // E5M4: 5 bits/elem + 5 bits per 64-group ≈ 5.08 bits
+        let expect_bits = 10 * 2 * (d * 5 + (d / 64) * 5);
+        assert_eq!(cq.bytes(), expect_bits / 8);
+        assert!(cq.bytes() * 3 < cq.fp16_bytes());
+    }
+
+    #[test]
+    fn empty_cache_attend_zeroes() {
+        let cache = KvCache::sefp(64, 4, 64);
+        let mut out = vec![1.0f32; 64];
+        cache.attend(&vec![0.5; 64], &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,374 @@
+//! Minimal JSON substrate (parse + serialize), built in-repo because the
+//! offline vendor set has no serde_json.  Covers everything this project
+//! needs: the artifact manifest, configs, golden vectors, and JSONL
+//! metrics.  Strict enough for round-trips; not a general-purpose
+//! validator.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn idx(&self, i: usize) -> Option<&Value> {
+        match self {
+            Value::Arr(v) => v.get(i),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|n| n as i64)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Required-field accessors with contextual errors.
+    pub fn req(&self, key: &str) -> anyhow::Result<&Value> {
+        self.get(key).ok_or_else(|| anyhow::anyhow!("missing field {key:?}"))
+    }
+
+    pub fn req_str(&self, key: &str) -> anyhow::Result<String> {
+        Ok(self
+            .req(key)?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("field {key:?} not a string"))?
+            .to_string())
+    }
+
+    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.req(key)?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("field {key:?} not a number"))
+    }
+}
+
+/// Convenience builder for object literals.
+pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn s(v: impl Into<String>) -> Value {
+    Value::Str(v.into())
+}
+
+pub fn n(v: impl Into<f64>) -> Value {
+    Value::Num(v.into())
+}
+
+pub fn arr(v: Vec<Value>) -> Value {
+    Value::Arr(v)
+}
+
+// ---------------------------------------------------------------------------
+// serialize
+// ---------------------------------------------------------------------------
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Null => f.write_str("null"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    write!(f, "{}", *x as i64)
+                } else {
+                    write!(f, "{x}")
+                }
+            }
+            Value::Str(s) => write_escaped(f, s),
+            Value::Arr(v) => {
+                f.write_str("[")?;
+                for (i, e) in v.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{e}")?;
+                }
+                f.write_str("]")
+            }
+            Value::Obj(m) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    f.write_str(":")?;
+                    write!(f, "{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
+}
+
+// ---------------------------------------------------------------------------
+// parse
+// ---------------------------------------------------------------------------
+
+pub fn parse(text: &str) -> anyhow::Result<Value> {
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    anyhow::ensure!(pos == bytes.len(), "trailing garbage at byte {pos}");
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> anyhow::Result<Value> {
+    skip_ws(b, pos);
+    anyhow::ensure!(*pos < b.len(), "unexpected end of input");
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Value::Str(parse_string(b, pos)?)),
+        b't' => lit(b, pos, "true", Value::Bool(true)),
+        b'f' => lit(b, pos, "false", Value::Bool(false)),
+        b'n' => lit(b, pos, "null", Value::Null),
+        _ => parse_num(b, pos),
+    }
+}
+
+fn lit(b: &[u8], pos: &mut usize, word: &str, v: Value) -> anyhow::Result<Value> {
+    anyhow::ensure!(
+        b[*pos..].starts_with(word.as_bytes()),
+        "bad literal at byte {pos}",
+        pos = *pos
+    );
+    *pos += word.len();
+    Ok(v)
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> anyhow::Result<Value> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos])?;
+    Ok(Value::Num(s.parse::<f64>().map_err(|e| anyhow::anyhow!("bad number {s:?}: {e}"))?))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> anyhow::Result<String> {
+    anyhow::ensure!(
+        *pos < b.len() && b[*pos] == b'"',
+        "expected string at byte {pos}",
+        pos = *pos
+    );
+    *pos += 1;
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                anyhow::ensure!(*pos < b.len(), "bad escape");
+                match b[*pos] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        anyhow::ensure!(*pos + 4 < b.len(), "bad \\u escape");
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
+                        let code = u32::from_str_radix(hex, 16)?;
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    c => anyhow::bail!("unknown escape \\{}", c as char),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // consume one UTF-8 scalar
+                let rest = std::str::from_utf8(&b[*pos..])
+                    .map_err(|_| anyhow::anyhow!("invalid utf8 in string"))?;
+                let c = rest.chars().next().unwrap();
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+    anyhow::bail!("unterminated string")
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> anyhow::Result<Value> {
+    *pos += 1; // [
+    let mut v = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Value::Arr(v));
+    }
+    loop {
+        v.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        anyhow::ensure!(*pos < b.len(), "unterminated array");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b']' => {
+                *pos += 1;
+                return Ok(Value::Arr(v));
+            }
+            c => anyhow::bail!("expected , or ] got {}", c as char),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> anyhow::Result<Value> {
+    *pos += 1; // {
+    let mut m = BTreeMap::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Value::Obj(m));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        anyhow::ensure!(*pos < b.len() && b[*pos] == b':', "expected :");
+        *pos += 1;
+        let val = parse_value(b, pos)?;
+        m.insert(key, val);
+        skip_ws(b, pos);
+        anyhow::ensure!(*pos < b.len(), "unterminated object");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b'}' => {
+                *pos += 1;
+                return Ok(Value::Obj(m));
+            }
+            c => anyhow::bail!("expected , or }} got {}", c as char),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(parse("42").unwrap(), Value::Num(42.0));
+        assert_eq!(parse("-1.5e2").unwrap(), Value::Num(-150.0));
+        assert_eq!(parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse(r#""hi\n""#).unwrap(), Value::Str("hi\n".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": "x"}], "c": false}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().idx(2).unwrap().req_str("b").unwrap(), "x");
+        assert_eq!(v.get("c").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let v = obj(vec![
+            ("name", s("otaro")),
+            ("widths", arr(vec![n(8.0), n(3.0)])),
+            ("nested", obj(vec![("ok", Value::Bool(true))])),
+            ("esc", s("a\"b\\c\nd")),
+        ]);
+        let text = v.to_string();
+        assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("12 34").is_err());
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let v = parse(r#""héllo é""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "héllo é");
+    }
+}

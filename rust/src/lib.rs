@@ -1,0 +1,29 @@
+//! OTARo — Once Tuning for All Precisions toward Robust On-Device LLMs.
+//!
+//! A full-stack reproduction of the AAAI 2026 paper: the SEFP numeric
+//! format, the BPS/LAA fine-tuning coordinator (Algorithm 1), a
+//! multi-precision serving runtime, and the paper's complete evaluation
+//! harness — three layers:
+//!
+//!   * **L1** Pallas kernels (`python/compile/kernels/`) — SEFP
+//!     quantize-dequantize + fused dequant-matmul, lowered into the HLO.
+//!   * **L2** JAX model (`python/compile/model.py`) — transformer fwd/bwd
+//!     with STE fake-quant at every bit-width, AOT-exported to HLO text.
+//!   * **L3** this crate — loads the artifacts via PJRT and owns
+//!     everything at runtime: BPS bit-width scheduling, LAA delayed
+//!     updates, SGD, data, eval, serving, analysis. Python is never on
+//!     the request path.
+
+pub mod analysis;
+pub mod benchutil;
+pub mod config;
+pub mod experiments;
+pub mod json;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod infer;
+pub mod metrics;
+pub mod runtime;
+pub mod sefp;
+pub mod serve;

@@ -1,0 +1,147 @@
+//! `otaro` — CLI launcher for the OTARo reproduction.
+//!
+//! Lifecycle commands (pretrain/finetune/eval/serve-demo) plus `bench`
+//! subcommands that regenerate every table and figure of the paper
+//! (DESIGN.md §4 experiment index).  Argument parsing is hand-rolled —
+//! the offline vendor set carries no clap.
+
+use std::path::PathBuf;
+
+use otaro::experiments;
+
+const USAGE: &str = "\
+otaro — OTARo: Once Tuning for All Precisions (AAAI 2026) reproduction
+
+USAGE: otaro [--artifacts DIR] [--runs DIR] [--seed N] <COMMAND> [ARGS]
+
+COMMANDS:
+  info                                  print manifest / artifact info
+  pretrain   [--steps N] [--lr X] [--out FILE]
+  finetune   [--method M] [--steps N] [--lr X] [--fixed-m K]
+             [--dataset tinytext|instruct] [--checkpoint FILE] [--out FILE]
+             (methods: none fp fixed uniform bps_only otaro)
+  eval       [--checkpoint FILE] [--mc-items N]
+  serve-demo [--requests N] [--checkpoint FILE]
+  bench      <table1|table2|table8|fig3|fig4|fig5|fig6|fig8|fig9|all> [--quick]
+";
+
+/// Tiny argument cursor: flags may appear in any order after the command.
+struct Args {
+    argv: Vec<String>,
+}
+
+impl Args {
+    fn flag(&mut self, name: &str) -> bool {
+        if let Some(i) = self.argv.iter().position(|a| a == name) {
+            self.argv.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn opt(&mut self, name: &str) -> Option<String> {
+        let i = self.argv.iter().position(|a| a == name)?;
+        if i + 1 >= self.argv.len() {
+            eprintln!("missing value for {name}");
+            std::process::exit(2);
+        }
+        let v = self.argv.remove(i + 1);
+        self.argv.remove(i);
+        Some(v)
+    }
+
+    fn opt_parse<T: std::str::FromStr>(&mut self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|e| {
+                eprintln!("bad value for {name}: {e}");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    fn positional(&mut self) -> Option<String> {
+        let i = self.argv.iter().position(|a| !a.starts_with('-'))?;
+        Some(self.argv.remove(i))
+    }
+
+    fn finish(self) {
+        if !self.argv.is_empty() {
+            eprintln!("unrecognized arguments: {:?}\n\n{USAGE}", self.argv);
+            std::process::exit(2);
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args { argv: std::env::args().skip(1).collect() };
+    if args.flag("--help") || args.flag("-h") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let ctx = experiments::Ctx {
+        artifacts: PathBuf::from(args.opt("--artifacts").unwrap_or_else(|| "artifacts".into())),
+        runs: PathBuf::from(args.opt("--runs").unwrap_or_else(|| "runs".into())),
+        seed: args.opt_parse("--seed", 0u64),
+    };
+    let cmd = match args.positional() {
+        Some(c) => c,
+        None => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    match cmd.as_str() {
+        "info" => {
+            args.finish();
+            experiments::info(&ctx)
+        }
+        "pretrain" => {
+            let steps = args.opt_parse("--steps", 600usize);
+            let lr = args.opt_parse("--lr", 3e-2f32);
+            let out = args.opt("--out").map(PathBuf::from);
+            args.finish();
+            experiments::pretrain(&ctx, steps, lr, out)
+        }
+        "finetune" => {
+            let method = args.opt("--method").unwrap_or_else(|| "otaro".into());
+            let steps = args.opt_parse("--steps", 300usize);
+            let lr = args.opt_parse("--lr", 1e-2f32);
+            let fixed_m = args.opt("--fixed-m").map(|v| v.parse().expect("--fixed-m"));
+            let dataset = args.opt("--dataset").unwrap_or_else(|| "tinytext".into());
+            let checkpoint = args.opt("--checkpoint").map(PathBuf::from);
+            let out = args.opt("--out").map(PathBuf::from);
+            args.finish();
+            experiments::finetune(&ctx, &method, steps, lr, fixed_m, &dataset, checkpoint, out)
+        }
+        "eval" => {
+            let checkpoint = args.opt("--checkpoint").map(PathBuf::from);
+            let mc_items = args.opt_parse("--mc-items", 40usize);
+            args.finish();
+            experiments::eval_checkpoint(&ctx, checkpoint, mc_items)
+        }
+        "serve-demo" => {
+            let requests = args.opt_parse("--requests", 64usize);
+            let checkpoint = args.opt("--checkpoint").map(PathBuf::from);
+            args.finish();
+            experiments::serve_demo(&ctx, requests, checkpoint)
+        }
+        "bench" => {
+            let quick = args.flag("--quick");
+            let target = args.positional().unwrap_or_else(|| {
+                eprintln!("bench requires a target\n\n{USAGE}");
+                std::process::exit(2);
+            });
+            args.finish();
+            experiments::bench(&ctx, &target, quick)
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

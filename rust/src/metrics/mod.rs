@@ -1,0 +1,133 @@
+//! Metrics substrate: JSONL event sink, timers, summary statistics.
+//!
+//! Every experiment binary writes its raw per-step records through
+//! [`MetricsSink`] so runs are replayable and EXPERIMENTS.md numbers are
+//! regenerable from the run directory.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::time::Instant;
+
+/// Append-only JSONL sink. `None` path = in-memory only (tests).
+pub struct MetricsSink {
+    writer: Option<BufWriter<File>>,
+    pub events: usize,
+}
+
+impl MetricsSink {
+    pub fn to_file(path: &Path) -> anyhow::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(MetricsSink { writer: Some(BufWriter::new(File::create(path)?)), events: 0 })
+    }
+
+    pub fn null() -> Self {
+        MetricsSink { writer: None, events: 0 }
+    }
+
+    pub fn log(&mut self, value: &crate::json::Value) {
+        self.events += 1;
+        if let Some(w) = &mut self.writer {
+            // metrics loss is not worth crashing a training run over
+            let _ = w.write_all(value.to_string().as_bytes());
+            let _ = w.write_all(b"\n");
+        }
+    }
+
+    pub fn flush(&mut self) {
+        if let Some(w) = &mut self.writer {
+            let _ = w.flush();
+        }
+    }
+}
+
+/// Wall-clock timer for step timing.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Online mean/std/min/max accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population standard deviation (matches the paper's table 8 STD).
+    pub fn std(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        (self.m2 / self.n as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_stats() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn null_sink_counts() {
+        let mut s = MetricsSink::null();
+        s.log(&crate::json::obj(vec![("a", crate::json::n(1.0))]));
+        assert_eq!(s.events, 1);
+    }
+
+    #[test]
+    fn file_sink_writes_jsonl() {
+        let dir = std::env::temp_dir().join("otaro_metrics_test");
+        let path = dir.join("m.jsonl");
+        let mut s = MetricsSink::to_file(&path).unwrap();
+        s.log(&crate::json::obj(vec![("step", crate::json::n(1.0)), ("loss", crate::json::n(2.5))]));
+        s.log(&crate::json::obj(vec![("step", crate::json::n(2.0)), ("loss", crate::json::n(2.4))]));
+        s.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,199 @@
+//! The PJRT engine: loads AOT-compiled HLO artifacts and runs them.
+//!
+//! One `Engine` owns the PJRT CPU client and a lazy compile cache keyed by
+//! (step kind, bit-width).  The hot path is `train_step` / `eval_step` /
+//! `logits_step`: upload params + batch as literals, execute, pull the
+//! result tuple back.  Python never runs here — the HLO text was produced
+//! once by `python/compile/aot.py` (see /opt/xla-example/README.md for the
+//! HLO-text-interchange rationale).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::manifest::{Manifest, Width};
+use super::params::ParamStore;
+use crate::data::Batch;
+
+/// Step program kinds exported by aot.py.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StepKind {
+    Train,
+    Eval,
+    Logits,
+}
+
+impl StepKind {
+    fn name(&self) -> &'static str {
+        match self {
+            StepKind::Train => "train",
+            StepKind::Eval => "eval",
+            StepKind::Logits => "logits",
+        }
+    }
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    artifacts_dir: PathBuf,
+    executables: HashMap<(StepKind, Width), xla::PjRtLoadedExecutable>,
+    /// cumulative executions per program (metrics)
+    pub exec_counts: HashMap<(StepKind, Width), u64>,
+}
+
+/// Result of one training step: scalar loss + gradients in manifest order.
+pub struct TrainOut {
+    pub loss: f32,
+    pub grads: Vec<Vec<f32>>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            executables: HashMap::new(),
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    /// Fresh `ParamStore` from the exported initial parameters.
+    pub fn init_params(&self) -> anyhow::Result<ParamStore> {
+        ParamStore::from_manifest_bin(&self.manifest, &self.artifacts_dir.join("init_params.bin"))
+    }
+
+    /// Compile (or fetch from cache) the program for (kind, width).
+    pub fn prepare(&mut self, kind: StepKind, width: Width) -> anyhow::Result<()> {
+        if self.executables.contains_key(&(kind, width)) {
+            return Ok(());
+        }
+        let fname = self.manifest.artifact(kind.name(), &width.tag())?.to_string();
+        let path = self.artifacts_dir.join(&fname);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {fname}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow::anyhow!("compile {fname}: {e}"))?;
+        self.executables.insert((kind, width), exe);
+        Ok(())
+    }
+
+    /// Preload every program for the given widths (startup cost, keeps the
+    /// training loop jitter-free).
+    pub fn preload(&mut self, kinds: &[StepKind], widths: &[Width]) -> anyhow::Result<()> {
+        for &k in kinds {
+            for &w in widths {
+                self.prepare(k, w)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn param_literals(&self, params: &ParamStore) -> anyhow::Result<Vec<xla::Literal>> {
+        let mut lits = Vec::with_capacity(params.tensors.len() + 2);
+        for (t, shape) in params.tensors.iter().zip(&params.shapes) {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            lits.push(
+                xla::Literal::vec1(t)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("reshape param: {e}"))?,
+            );
+        }
+        Ok(lits)
+    }
+
+    fn batch_literal(&self, data: &[i32]) -> anyhow::Result<xla::Literal> {
+        let cfg = &self.manifest.config;
+        anyhow::ensure!(
+            data.len() == cfg.batch_size * cfg.max_seq,
+            "batch is {} tokens, engine compiled for {}x{}",
+            data.len(),
+            cfg.batch_size,
+            cfg.max_seq
+        );
+        xla::Literal::vec1(data)
+            .reshape(&[cfg.batch_size as i64, cfg.max_seq as i64])
+            .map_err(|e| anyhow::anyhow!("reshape batch: {e}"))
+    }
+
+    fn run(
+        &mut self,
+        kind: StepKind,
+        width: Width,
+        inputs: &[xla::Literal],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        self.prepare(kind, width)?;
+        let exe = &self.executables[&(kind, width)];
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {kind:?}/{width}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+        *self.exec_counts.entry((kind, width)).or_insert(0) += 1;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e}"))
+    }
+
+    /// Forward+backward at `width`: returns loss and gradients.
+    pub fn train_step(
+        &mut self,
+        params: &ParamStore,
+        batch: &Batch,
+        width: Width,
+    ) -> anyhow::Result<TrainOut> {
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(self.batch_literal(&batch.tokens)?);
+        inputs.push(self.batch_literal(&batch.targets)?);
+        let out = self.run(StepKind::Train, width, &inputs)?;
+        anyhow::ensure!(out.len() == 1 + params.tensors.len(), "train tuple arity");
+        let loss = out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("loss: {e}"))?[0];
+        let mut grads = Vec::with_capacity(params.tensors.len());
+        for lit in &out[1..] {
+            grads.push(lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("grad: {e}"))?);
+        }
+        Ok(TrainOut { loss, grads })
+    }
+
+    /// Loss only (no gradients) at `width`.
+    pub fn eval_step(
+        &mut self,
+        params: &ParamStore,
+        batch: &Batch,
+        width: Width,
+    ) -> anyhow::Result<f32> {
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(self.batch_literal(&batch.tokens)?);
+        inputs.push(self.batch_literal(&batch.targets)?);
+        let out = self.run(StepKind::Eval, width, &inputs)?;
+        Ok(out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("loss: {e}"))?[0])
+    }
+
+    /// Full logits (B*T*V flat) at `width`.
+    pub fn logits_step(
+        &mut self,
+        params: &ParamStore,
+        tokens: &[i32],
+        width: Width,
+    ) -> anyhow::Result<Vec<f32>> {
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(self.batch_literal(tokens)?);
+        let out = self.run(StepKind::Logits, width, &inputs)?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("logits: {e}"))
+    }
+
+    pub fn batch_shape(&self) -> (usize, usize) {
+        (self.manifest.config.batch_size, self.manifest.config.max_seq)
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.manifest.config.vocab_size
+    }
+
+    pub fn compiled_programs(&self) -> usize {
+        self.executables.len()
+    }
+}

@@ -1,0 +1,204 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` and
+//! the Rust engine.  Parsed from `artifacts/manifest.json` via the
+//! in-repo JSON substrate.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub batch_size: usize,
+    pub group_size: usize,
+    pub rounding: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// whether the training graph SEFP-quantizes this tensor (mirrors
+    /// model._quant: 2-D weights only, pos_embed excluded)
+    pub quantized: bool,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub quant_impl: String,
+    pub config: ModelConfig,
+    pub mantissa_widths: Vec<u8>,
+    pub params: Vec<ParamEntry>,
+    pub artifacts: HashMap<String, String>,
+    pub init_params_sha256: String,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path:?} (run `make artifacts`): {e}"))?;
+        Self::from_json(&crate::json::parse(&text)?)
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let cfg = v.req("config")?;
+        let config = ModelConfig {
+            vocab_size: cfg.req_usize("vocab_size")?,
+            d_model: cfg.req_usize("d_model")?,
+            n_heads: cfg.req_usize("n_heads")?,
+            n_layers: cfg.req_usize("n_layers")?,
+            d_ff: cfg.req_usize("d_ff")?,
+            max_seq: cfg.req_usize("max_seq")?,
+            batch_size: cfg.req_usize("batch_size")?,
+            group_size: cfg.req_usize("group_size")?,
+            rounding: cfg.req_str("rounding")?,
+        };
+        let mantissa_widths = v
+            .req("mantissa_widths")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("mantissa_widths not an array"))?
+            .iter()
+            .filter_map(|w| w.as_f64())
+            .map(|w| w as u8)
+            .collect();
+        let mut params = Vec::new();
+        for p in v
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("params not an array"))?
+        {
+            let name = p.req_str("name")?;
+            let shape: Vec<usize> = p
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+                .iter()
+                .filter_map(|d| d.as_usize())
+                .collect();
+            // older manifests lack the flag; fall back to the model rule
+            let quantized = p
+                .get("quantized")
+                .and_then(Value::as_bool)
+                .unwrap_or(shape.len() >= 2 && name != "pos_embed");
+            params.push(ParamEntry { name, shape, quantized });
+        }
+        let mut artifacts = HashMap::new();
+        for (k, val) in v
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("artifacts not an object"))?
+        {
+            artifacts.insert(
+                k.clone(),
+                val.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("artifact path not a string"))?
+                    .to_string(),
+            );
+        }
+        Ok(Manifest {
+            preset: v.req_str("preset")?,
+            quant_impl: v.req_str("quant_impl")?,
+            config,
+            mantissa_widths,
+            params,
+            artifacts,
+            init_params_sha256: v.req_str("init_params_sha256")?,
+        })
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Artifact file name for a step kind and width tag ("fp", "m8".."m3").
+    pub fn artifact(&self, kind: &str, tag: &str) -> anyhow::Result<&str> {
+        self.artifacts
+            .get(&format!("{kind}_{tag}"))
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("no artifact for {kind}_{tag}"))
+    }
+}
+
+/// Width selector for step programs: `None` = unquantized fp variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Width(pub Option<u8>);
+
+impl Width {
+    pub const FP: Width = Width(None);
+
+    pub fn m(m: u8) -> Width {
+        Width(Some(m))
+    }
+
+    pub fn tag(&self) -> String {
+        match self.0 {
+            None => "fp".to_string(),
+            Some(m) => format!("m{m}"),
+        }
+    }
+
+    /// Paper-style label (E5M4 / FP16-equivalent).
+    pub fn label(&self) -> String {
+        match self.0 {
+            None => "FP".to_string(),
+            Some(m) => format!("E5M{m}"),
+        }
+    }
+}
+
+impl std::fmt::Display for Width {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn width_tags() {
+        assert_eq!(Width::FP.tag(), "fp");
+        assert_eq!(Width::m(4).tag(), "m4");
+        assert_eq!(Width::m(4).label(), "E5M4");
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let json = r#"{
+            "preset": "tiny", "quant_impl": "pallas",
+            "config": {"vocab_size": 320, "d_model": 128, "n_heads": 4,
+                       "n_layers": 2, "d_ff": 384, "max_seq": 64,
+                       "batch_size": 8, "group_size": 64, "rounding": "trunc"},
+            "mantissa_widths": [8,7,6,5,4,3],
+            "params": [{"name": "tok_embed", "shape": [320, 128]}],
+            "artifacts": {"train_m4": "train_m4.hlo.txt"},
+            "init_params_sha256": "x"
+        }"#;
+        let m = Manifest::from_json(&crate::json::parse(json).unwrap()).unwrap();
+        assert_eq!(m.total_params(), 320 * 128);
+        assert_eq!(m.artifact("train", "m4").unwrap(), "train_m4.hlo.txt");
+        assert!(m.artifact("train", "m9").is_err());
+        assert_eq!(m.config.d_model, 128);
+    }
+
+    #[test]
+    fn manifest_missing_field_errors() {
+        let m = Manifest::from_json(&crate::json::parse(r#"{"preset": "x"}"#).unwrap());
+        assert!(m.is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Runtime layer: PJRT client wrapper (engine), artifact manifest, and
+//! the parameter store.  This is the bridge between the AOT-compiled L1/L2
+//! stack (`artifacts/*.hlo.txt`) and the L3 coordinator.
+
+pub mod engine;
+pub mod manifest;
+pub mod params;
+
+pub use engine::{Engine, StepKind, TrainOut};
+pub use manifest::{Manifest, Width};
+pub use params::{grad_accumulate, grad_l2_norm, ParamStore};

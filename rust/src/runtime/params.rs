@@ -1,0 +1,182 @@
+//! Parameter store: the f32 master weights the coordinator updates.
+//!
+//! Plain host-side vectors in manifest order.  Checkpoints are raw f32-LE
+//! in manifest order plus a JSON sidecar (same format as
+//! `artifacts/init_params.bin`, so the initial checkpoint is loadable
+//! directly).
+
+use std::io::Read;
+use std::path::Path;
+
+use super::manifest::Manifest;
+
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    /// tensor data in manifest order
+    pub tensors: Vec<Vec<f32>>,
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    /// which tensors the training graph SEFP-quantizes (from the manifest)
+    pub quantized: Vec<bool>,
+}
+
+impl ParamStore {
+    pub fn from_manifest_bin(manifest: &Manifest, bin_path: &Path) -> anyhow::Result<Self> {
+        let mut file = std::fs::File::open(bin_path)
+            .map_err(|e| anyhow::anyhow!("cannot open {bin_path:?}: {e}"))?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+        let expect = manifest.total_params() * 4;
+        anyhow::ensure!(
+            bytes.len() == expect,
+            "param file {bin_path:?} is {} bytes, manifest expects {expect}",
+            bytes.len()
+        );
+        let mut tensors = Vec::with_capacity(manifest.params.len());
+        let mut off = 0usize;
+        for p in &manifest.params {
+            let n = p.numel();
+            let mut t = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[off + i * 4..off + i * 4 + 4];
+                t.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n * 4;
+            tensors.push(t);
+        }
+        Ok(ParamStore {
+            tensors,
+            names: manifest.params.iter().map(|p| p.name.clone()).collect(),
+            shapes: manifest.params.iter().map(|p| p.shape.clone()).collect(),
+            quantized: manifest.params.iter().map(|p| p.quantized).collect(),
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut bytes = Vec::new();
+        for t in &self.tensors {
+            for v in t {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        std::fs::write(path, &bytes)?;
+        Ok(())
+    }
+
+    pub fn load_into(&mut self, path: &Path) -> anyhow::Result<()> {
+        let bytes = std::fs::read(path)?;
+        let expect: usize = self.tensors.iter().map(|t| t.len() * 4).sum();
+        anyhow::ensure!(bytes.len() == expect, "checkpoint size mismatch");
+        let mut off = 0;
+        for t in &mut self.tensors {
+            for v in t.iter_mut() {
+                let b = &bytes[off..off + 4];
+                *v = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+                off += 4;
+            }
+        }
+        Ok(())
+    }
+
+    /// SGD update: `w -= lr * g` (the paper's optimizer, §Implementation
+    /// Details).  Gradients come in manifest order from the train step.
+    pub fn sgd_update(&mut self, grads: &[Vec<f32>], lr: f32) {
+        debug_assert_eq!(grads.len(), self.tensors.len());
+        for (t, g) in self.tensors.iter_mut().zip(grads) {
+            debug_assert_eq!(t.len(), g.len());
+            for (w, gv) in t.iter_mut().zip(g) {
+                *w -= lr * gv;
+            }
+        }
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    /// Global L2 norm (training diagnostics).
+    pub fn l2_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.iter())
+            .map(|&v| (v as f64) * (v as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// Gradient utility: flat L2 norm over a grad set.
+pub fn grad_l2_norm(grads: &[Vec<f32>]) -> f64 {
+    grads
+        .iter()
+        .flat_map(|g| g.iter())
+        .map(|&v| (v as f64) * (v as f64))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Accumulate `src` into `dst` (LAA's running sum).
+pub fn grad_accumulate(dst: &mut [Vec<f32>], src: &[Vec<f32>]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        for (dv, sv) in d.iter_mut().zip(s) {
+            *dv += sv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ParamStore {
+        ParamStore {
+            tensors: vec![vec![1.0, 2.0], vec![3.0]],
+            names: vec!["a".into(), "b".into()],
+            shapes: vec![vec![2], vec![1]],
+            quantized: vec![false, false],
+        }
+    }
+
+    #[test]
+    fn sgd_updates() {
+        let mut s = store();
+        s.sgd_update(&[vec![1.0, 1.0], vec![2.0]], 0.5);
+        assert_eq!(s.tensors[0], vec![0.5, 1.5]);
+        assert_eq!(s.tensors[1], vec![2.0]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("otaro_params_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bin");
+        let s = store();
+        s.save(&path).unwrap();
+        let mut s2 = store();
+        s2.tensors[0][0] = 99.0;
+        s2.load_into(&path).unwrap();
+        assert_eq!(s2.tensors, s.tensors);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn grad_helpers() {
+        let mut a = vec![vec![1.0f32, 2.0]];
+        grad_accumulate(&mut a, &[vec![0.5, 0.5]]);
+        assert_eq!(a[0], vec![1.5, 2.5]);
+        assert!((grad_l2_norm(&[vec![3.0, 4.0]]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn norm() {
+        assert!((store().l2_norm() - (14.0f64).sqrt()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,225 @@
+//! SEFP — Shared Exponent Floating Point (paper §Related Work, fig. 1-2).
+//!
+//! The bit-level format at the heart of OTARo: weights are grouped (64 per
+//! group in the paper), each group stores ONE shared 5-bit exponent chosen
+//! from its largest-magnitude element, and each element stores a sign and
+//! an `m`-bit significand.  Dequantized value: `sign * s * 2^(E - m + 1)`.
+//!
+//! The definition here is bit-for-bit identical to the Python oracle
+//! (`python/compile/kernels/ref.py`); `tests/golden_sefp.rs` checks the
+//! cross-language golden vectors emitted by `aot.py`.
+//!
+//! Central deployment property (paper fig. 1): with round-toward-zero, a
+//! lower bit-width is obtained from a higher one by *truncating mantissa
+//! bits in place* — `truncate(encode(w, m_hi), m_lo) == encode(w, m_lo)`
+//! exactly — so ONE stored model serves every precision with no scaling
+//! factors and no requantization pass.
+
+pub mod packed;
+pub mod tensor;
+
+pub use packed::PackedSefp;
+pub use tensor::SefpTensor;
+
+/// The paper's precision ladder (table 1): E5Mm, m ∈ {8..3}.
+pub const MANTISSA_WIDTHS: [u8; 6] = [8, 7, 6, 5, 4, 3];
+/// Paper's group size (§Implementation Details).
+pub const GROUP_SIZE: usize = 64;
+/// E5 shared-exponent field range (bias 15): [-14, 16].
+pub const EXP_MIN: i32 = -14;
+pub const EXP_MAX: i32 = 16;
+
+/// Rounding mode for the mantissa shift (paper fig. 2 step 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rounding {
+    /// Round toward zero ("forced truncation") — the repo default; the
+    /// only mode under which the truncation ladder is exact.
+    Trunc,
+    /// Round half-to-even (matches `jnp.round`) — ablation mode.
+    Nearest,
+}
+
+impl Default for Rounding {
+    fn default() -> Self {
+        Rounding::Trunc
+    }
+}
+
+impl std::str::FromStr for Rounding {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "trunc" => Ok(Rounding::Trunc),
+            "nearest" => Ok(Rounding::Nearest),
+            other => Err(format!("unknown rounding mode {other:?}")),
+        }
+    }
+}
+
+/// Shared exponent `E` with `2^E <= maxabs < 2^(E+1)` (frexp semantics),
+/// clamped to the E5 field; zero groups get `EXP_MIN`.
+///
+/// Bit-exact with `ref.shared_exponent` / the Pallas `_shared_exp`:
+/// normal values read the biased exponent field directly; subnormals
+/// resolve the leading mantissa bit (they clamp to `EXP_MIN` anyway, but
+/// we compute them honestly).
+#[inline]
+pub fn shared_exponent(maxabs: f32) -> i32 {
+    if !(maxabs > 0.0) {
+        return EXP_MIN;
+    }
+    let bits = maxabs.to_bits();
+    let biased = ((bits >> 23) & 0xff) as i32;
+    let e = if biased == 0 {
+        // subnormal: value = mant * 2^-149
+        let mant = bits & 0x7f_ffff;
+        (31 - mant.leading_zeros() as i32) - 149
+    } else {
+        biased - 127
+    };
+    e.clamp(EXP_MIN, EXP_MAX)
+}
+
+/// Quantization step for a group: `2^(E - m + 1)`.
+#[inline]
+pub fn step_for(e: i32, m: u8) -> f32 {
+    (e - (m as i32) + 1).exp2_f32()
+}
+
+/// Integer-exponent exp2 helper (exact for the SEFP range).
+trait Exp2I {
+    fn exp2_f32(self) -> f32;
+}
+impl Exp2I for i32 {
+    #[inline]
+    fn exp2_f32(self) -> f32 {
+        f32::from_bits((((self + 127) as u32) & 0xff) << 23)
+    }
+}
+
+/// Quantize one value at step `step`; returns the signed significand
+/// clamped to `±(2^m - 1)`.
+#[inline]
+pub fn quantize_value(w: f32, step: f32, m: u8, rounding: Rounding) -> i32 {
+    let q = w / step;
+    let q = match rounding {
+        Rounding::Trunc => q.trunc(),
+        Rounding::Nearest => q.round_ties_even(),
+    };
+    let lim = ((1i32 << m) - 1) as f32;
+    q.clamp(-lim, lim) as i32
+}
+
+/// Quantize-dequantize a whole slice (fake-quant used by analysis code and
+/// the pure-rust inference baseline checks).  Groups run along the flat
+/// order; a ragged tail forms a final short group (identical numerics to
+/// the zero-padded Python path, since padding zeros never win the max).
+pub fn quant_dequant(w: &[f32], m: u8, group_size: usize, rounding: Rounding) -> Vec<f32> {
+    let mut out = Vec::with_capacity(w.len());
+    for g in w.chunks(group_size) {
+        let maxabs = g.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let e = shared_exponent(maxabs);
+        let step = step_for(e, m);
+        for &x in g {
+            out.push(quantize_value(x, step, m, rounding) as f32 * step);
+        }
+    }
+    out
+}
+
+/// Mean/max absolute quantization error of `Q(w, m)` vs `w`.
+pub fn error_stats(w: &[f32], m: u8, group_size: usize) -> (f32, f32) {
+    let q = quant_dequant(w, m, group_size, Rounding::Trunc);
+    let mut max = 0.0f32;
+    let mut sum = 0.0f64;
+    for (a, b) in w.iter().zip(&q) {
+        let e = (a - b).abs();
+        max = max.max(e);
+        sum += e as f64;
+    }
+    (max, (sum / w.len().max(1) as f64) as f32)
+}
+
+/// ε(ω) sawtooth (paper eq. 13, fig. 9): the pointwise quantization error
+/// of fixed-point rounding at mantissa width `m`, `ε(ω) = (ω·2^m − [ω·2^m])/2^m`.
+/// Exposed here because it is a property of the format, used by
+/// `analysis::epsilon` to regenerate fig. 9.
+#[inline]
+pub fn epsilon_sawtooth(w: f32, m: u8, rounding: Rounding) -> f32 {
+    let scale = (m as i32).exp2_f32();
+    let q = match rounding {
+        Rounding::Trunc => (w * scale).trunc(),
+        Rounding::Nearest => (w * scale).round_ties_even(),
+    };
+    (w * scale - q) / scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_exponent_powers_of_two() {
+        assert_eq!(shared_exponent(1.0), 0);
+        assert_eq!(shared_exponent(2.0), 1);
+        assert_eq!(shared_exponent(0.5), -1);
+        assert_eq!(shared_exponent(1.5), 0);
+        assert_eq!(shared_exponent(0.99), -1);
+    }
+
+    #[test]
+    fn shared_exponent_edges() {
+        assert_eq!(shared_exponent(0.0), EXP_MIN);
+        assert_eq!(shared_exponent(-0.0), EXP_MIN);
+        assert_eq!(shared_exponent(1e30), EXP_MAX);
+        assert_eq!(shared_exponent(1e-30), EXP_MIN);
+        assert_eq!(shared_exponent(f32::MIN_POSITIVE / 2.0), EXP_MIN); // subnormal
+    }
+
+    #[test]
+    fn exp2_exact() {
+        for e in -126..=127 {
+            assert_eq!(e.exp2_f32(), (e as f32).exp2(), "e={e}");
+        }
+    }
+
+    #[test]
+    fn quantize_max_element_fits() {
+        // group max must quantize without clipping: maxabs/step < 2^m
+        for m in MANTISSA_WIDTHS {
+            for &v in &[1.0f32, 1.999, 0.7, 123.456] {
+                let e = shared_exponent(v);
+                let step = step_for(e, m);
+                let q = quantize_value(v, step, m, Rounding::Trunc);
+                assert!(q.unsigned_abs() < (1 << m) + 1, "m={m} v={v} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_dequant_error_bound() {
+        let w: Vec<f32> = (0..256).map(|i| ((i * 37 % 101) as f32 - 50.0) / 17.0).collect();
+        for m in MANTISSA_WIDTHS {
+            let q = quant_dequant(&w, m, GROUP_SIZE, Rounding::Trunc);
+            for (g, qg) in w.chunks(GROUP_SIZE).zip(q.chunks(GROUP_SIZE)) {
+                let maxabs = g.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                let step = step_for(shared_exponent(maxabs), m);
+                for (a, b) in g.iter().zip(qg) {
+                    assert!((a - b).abs() <= step, "m={m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn epsilon_is_sawtooth() {
+        // period and amplitude 1/2^m (paper appendix A)
+        let m = 3;
+        let amp = 1.0 / 8.0;
+        for i in 0..1000 {
+            let w = (i as f32) * 0.001;
+            let e = epsilon_sawtooth(w, m, Rounding::Trunc);
+            assert!((0.0..amp).contains(&e) || e.abs() < 1e-6, "w={w} e={e}");
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! `SefpTensor` — the working (unpacked) SEFP representation.
+//!
+//! Sign-magnitude significands are stored one-per-`u16` with a per-group
+//! `i8` shared exponent.  This is the fast in-memory form used by the
+//! serving stack and the pure-rust inference kernel; `PackedSefp` is the
+//! bit-exact on-"disk"/on-device form used for the memory accounting of
+//! table 2.
+
+use super::{quantize_value, shared_exponent, step_for, Rounding, EXP_MIN};
+
+/// One quantized tensor: per-group shared exponents + per-element signed
+/// significands.  `sig[i]` is the signed significand (|sig| < 2^m).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SefpTensor {
+    pub m: u8,
+    pub group_size: usize,
+    /// logical element count (the final group may be short)
+    pub len: usize,
+    /// per-group shared exponent E
+    pub exponents: Vec<i8>,
+    /// signed significand per element, |sig| <= 2^m - 1
+    pub significands: Vec<i16>,
+}
+
+impl SefpTensor {
+    /// Encode an f32 slice at mantissa width `m` (paper fig. 2: shared
+    /// exponent selection, mantissa alignment, truncation).
+    pub fn encode(w: &[f32], m: u8, group_size: usize, rounding: Rounding) -> Self {
+        assert!((1..=14).contains(&m), "mantissa width out of range: {m}");
+        let n_groups = w.len().div_ceil(group_size);
+        let mut exponents = Vec::with_capacity(n_groups);
+        let mut significands = Vec::with_capacity(w.len());
+        for g in w.chunks(group_size) {
+            let maxabs = g.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            let e = if maxabs > 0.0 { shared_exponent(maxabs) } else { EXP_MIN };
+            let step = step_for(e, m);
+            exponents.push(e as i8);
+            for &x in g {
+                significands.push(quantize_value(x, step, m, rounding) as i16);
+            }
+        }
+        SefpTensor { m, group_size, len: w.len(), exponents, significands }
+    }
+
+    /// Dequantize to f32 (`sign * s * 2^(E - m + 1)`).
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len);
+        for (gi, g) in self.significands.chunks(self.group_size).enumerate() {
+            let step = step_for(self.exponents[gi] as i32, self.m);
+            for &s in g {
+                out.push(s as f32 * step);
+            }
+        }
+        out
+    }
+
+    /// THE precision-switch operation (paper fig. 1, red arrows): drop
+    /// `self.m - m_new` low mantissa bits in place.  O(n) integer shifts,
+    /// no float math, no re-inspection of the weights; exact equal to
+    /// re-encoding the original weights at `m_new` under `Rounding::Trunc`.
+    pub fn truncate(&self, m_new: u8) -> Self {
+        assert!(m_new <= self.m, "can only truncate to a lower width");
+        let shift = self.m - m_new;
+        let significands = self
+            .significands
+            .iter()
+            // sign-magnitude shift == round-toward-zero on the value
+            .map(|&s| if s >= 0 { s >> shift } else { -((-s) >> shift) })
+            .collect();
+        SefpTensor {
+            m: m_new,
+            group_size: self.group_size,
+            len: self.len,
+            exponents: self.exponents.clone(),
+            significands,
+        }
+    }
+
+    /// Working-representation memory in bytes (u16 significands + i8
+    /// exponents).  See `PackedSefp::packed_bytes` for the wire format.
+    pub fn working_bytes(&self) -> usize {
+        self.significands.len() * 2 + self.exponents.len()
+    }
+
+    /// Ideal packed size in bits: (1 + m) per element + 5 per group.
+    pub fn ideal_bits(&self) -> usize {
+        self.len * (1 + self.m as usize) + self.exponents.len() * 5
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.exponents.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sefp::{quant_dequant, GROUP_SIZE, MANTISSA_WIDTHS};
+
+    fn test_weights(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s as i32) as f32) / (i32::MAX as f32)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn encode_decode_matches_quant_dequant() {
+        let w = test_weights(300, 7);
+        for m in MANTISSA_WIDTHS {
+            for r in [Rounding::Trunc, Rounding::Nearest] {
+                let t = SefpTensor::encode(&w, m, GROUP_SIZE, r);
+                assert_eq!(t.decode(), quant_dequant(&w, m, GROUP_SIZE, r));
+            }
+        }
+    }
+
+    #[test]
+    fn truncate_equals_direct_encode() {
+        let w = test_weights(640, 3);
+        let hi = SefpTensor::encode(&w, 8, GROUP_SIZE, Rounding::Trunc);
+        for m in [7, 6, 5, 4, 3] {
+            let direct = SefpTensor::encode(&w, m, GROUP_SIZE, Rounding::Trunc);
+            let chained = hi.truncate(m);
+            assert_eq!(direct.significands, chained.significands, "m={m}");
+            assert_eq!(direct.exponents, chained.exponents);
+            assert_eq!(direct.decode(), chained.decode());
+        }
+    }
+
+    #[test]
+    fn truncate_chain_associative() {
+        // M8 -> M6 -> M3 == M8 -> M3
+        let w = test_weights(256, 11);
+        let hi = SefpTensor::encode(&w, 8, GROUP_SIZE, Rounding::Trunc);
+        assert_eq!(hi.truncate(6).truncate(3), hi.truncate(3));
+    }
+
+    #[test]
+    fn ragged_tail_group() {
+        let w = test_weights(100, 5); // 64 + 36
+        let t = SefpTensor::encode(&w, 4, GROUP_SIZE, Rounding::Trunc);
+        assert_eq!(t.n_groups(), 2);
+        assert_eq!(t.decode().len(), 100);
+    }
+
+    #[test]
+    fn significand_bounds() {
+        let w = test_weights(512, 9);
+        for m in MANTISSA_WIDTHS {
+            let t = SefpTensor::encode(&w, m, GROUP_SIZE, Rounding::Trunc);
+            let lim = (1i16 << m) - 1;
+            assert!(t.significands.iter().all(|&s| s.abs() <= lim));
+        }
+    }
+
+    #[test]
+    fn ideal_bits_accounting() {
+        let t = SefpTensor::encode(&test_weights(128, 1), 4, 64, Rounding::Trunc);
+        assert_eq!(t.ideal_bits(), 128 * 5 + 2 * 5);
+    }
+}

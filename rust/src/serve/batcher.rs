@@ -1,0 +1,121 @@
+//! Dynamic batcher: requests queue per precision and are dispatched as
+//! full engine batches (the engine's (B, T) shape is fixed at AOT time,
+//! so batching = filling rows; underfull batches are padded).
+//!
+//! Backpressure: the queue refuses new work beyond `queue_cap` — callers
+//! see `Err` and retry/shed, which keeps worst-case memory bounded.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+use super::Request;
+
+pub struct QueuedRequest {
+    pub req: Request,
+    pub width_m: u8,
+    pub enqueued_at: Instant,
+}
+
+pub struct DynamicBatcher {
+    pub max_batch: usize,
+    pub queue_cap: usize,
+    queues: HashMap<u8, VecDeque<QueuedRequest>>,
+    len: usize,
+}
+
+impl DynamicBatcher {
+    pub fn new(max_batch: usize, queue_cap: usize) -> Self {
+        DynamicBatcher { max_batch, queue_cap, queues: HashMap::new(), len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Enqueue; `Err` = backpressure (queue full).
+    pub fn push(&mut self, req: Request, width_m: u8) -> Result<(), Request> {
+        if self.len >= self.queue_cap {
+            return Err(req);
+        }
+        self.queues
+            .entry(width_m)
+            .or_default()
+            .push_back(QueuedRequest { req, width_m, enqueued_at: Instant::now() });
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Pop the next batch to dispatch: the precision with the LONGEST
+    /// queue goes first (maximizes batch fill), up to `max_batch` rows,
+    /// FIFO within a precision.
+    pub fn pop_batch(&mut self) -> Option<(u8, Vec<QueuedRequest>)> {
+        let (&width, _) = self
+            .queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .max_by_key(|(_, q)| q.len())?;
+        let q = self.queues.get_mut(&width).unwrap();
+        let take = q.len().min(self.max_batch);
+        let batch: Vec<QueuedRequest> = q.drain(..take).collect();
+        self.len -= batch.len();
+        Some((width, batch))
+    }
+
+    /// Queue depth per precision (metrics).
+    pub fn depths(&self) -> Vec<(u8, usize)> {
+        let mut v: Vec<(u8, usize)> =
+            self.queues.iter().map(|(&w, q)| (w, q.len())).collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::TaskClass;
+
+    fn req(id: u64) -> Request {
+        Request { id, class: TaskClass::Other, prompt: vec![65], force_m: None }
+    }
+
+    #[test]
+    fn batches_same_precision_fifo() {
+        let mut b = DynamicBatcher::new(4, 100);
+        for i in 0..6 {
+            b.push(req(i), 4).unwrap();
+        }
+        let (w, batch) = b.pop_batch().unwrap();
+        assert_eq!(w, 4);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].req.id, 0);
+        let (_, rest) = b.pop_batch().unwrap();
+        assert_eq!(rest.len(), 2);
+        assert!(b.pop_batch().is_none());
+    }
+
+    #[test]
+    fn longest_queue_first() {
+        let mut b = DynamicBatcher::new(8, 100);
+        b.push(req(0), 8).unwrap();
+        for i in 1..4 {
+            b.push(req(i), 4).unwrap();
+        }
+        let (w, _) = b.pop_batch().unwrap();
+        assert_eq!(w, 4);
+    }
+
+    #[test]
+    fn backpressure() {
+        let mut b = DynamicBatcher::new(4, 2);
+        b.push(req(0), 4).unwrap();
+        b.push(req(1), 4).unwrap();
+        assert!(b.push(req(2), 4).is_err());
+        let _ = b.pop_batch();
+        b.push(req(3), 4).unwrap();
+    }
+}

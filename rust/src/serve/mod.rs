@@ -1,0 +1,42 @@
+//! Multi-precision serving — the deployment story OTARo enables (paper
+//! fig. 1 and table 2): ONE stored model, per-request precision switching
+//! by mantissa truncation, no model zoo and no requantization pass.
+//!
+//! * [`store`]   — `PrecisionStore`: master weights kept ONCE in SEFP
+//!   E5M8; any lower precision is derived by `truncate()` and cached.
+//! * [`router`]  — task-class → precision policy (generation vs
+//!   understanding, paper intro).
+//! * [`batcher`] — dynamic batcher: queued requests are grouped by
+//!   precision and dispatched as full engine batches.
+//! * [`server`]  — ties the three together over the PJRT engine and
+//!   collects latency/throughput stats.
+
+pub mod batcher;
+pub mod router;
+pub mod server;
+pub mod store;
+
+pub use batcher::DynamicBatcher;
+pub use router::{Router, TaskClass};
+pub use server::{Server, ServeStats};
+pub use store::PrecisionStore;
+
+/// A serving request: classify-or-continue over a token prompt.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub class: TaskClass,
+    pub prompt: Vec<i32>,
+    /// explicit precision override (None = router decides)
+    pub force_m: Option<u8>,
+}
+
+/// The response: next-token argmax plus timing.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub width_m: u8,
+    pub next_token: i32,
+    pub queue_ms: f64,
+    pub compute_ms: f64,
+}

@@ -1,0 +1,61 @@
+//! Precision router: maps request classes to bit-widths.
+//!
+//! The paper's motivation (intro): generation tasks trade latency for
+//! precision, understanding tasks want immediate answers at lower
+//! precision; prefill/decode can also run at different widths.  The
+//! router encodes that policy and is the single place deployment tuning
+//! happens.
+
+use crate::config::ServeConfig;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskClass {
+    /// free-form continuation (quality-sensitive -> high precision)
+    Generation,
+    /// classification / scoring (latency-sensitive -> low precision)
+    Understanding,
+    /// anything else
+    Other,
+}
+
+#[derive(Debug, Clone)]
+pub struct Router {
+    cfg: ServeConfig,
+}
+
+impl Router {
+    pub fn new(cfg: ServeConfig) -> Self {
+        Router { cfg }
+    }
+
+    /// Decide the mantissa width for a request.
+    pub fn route(&self, class: TaskClass, force_m: Option<u8>) -> u8 {
+        if let Some(m) = force_m {
+            return m;
+        }
+        match class {
+            TaskClass::Generation => self.cfg.generation_m,
+            TaskClass::Understanding => self.cfg.understanding_m,
+            TaskClass::Other => self.cfg.default_m,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_by_class() {
+        let r = Router::new(ServeConfig::default());
+        assert_eq!(r.route(TaskClass::Generation, None), 8);
+        assert_eq!(r.route(TaskClass::Understanding, None), 4);
+        assert_eq!(r.route(TaskClass::Other, None), 6);
+    }
+
+    #[test]
+    fn force_overrides() {
+        let r = Router::new(ServeConfig::default());
+        assert_eq!(r.route(TaskClass::Generation, Some(3)), 3);
+    }
+}

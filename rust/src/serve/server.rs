@@ -1,0 +1,144 @@
+//! The serving front-end: router + precision store + dynamic batcher over
+//! the PJRT engine.  Synchronous core (deterministic, unit-testable); the
+//! `multi_precision_serving` example wraps it in threads for a concurrent
+//! client demo.
+
+use std::time::Instant;
+
+use crate::data::tokenizer::PAD;
+use crate::metrics::Summary;
+use crate::runtime::{Engine, Width};
+
+use super::{DynamicBatcher, PrecisionStore, Request, Response, Router};
+
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    pub served: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub queue_ms: Summary,
+    pub compute_ms: Summary,
+    pub per_width: Vec<(u8, u64)>,
+    pub wall_secs: f64,
+}
+
+impl ServeStats {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.served as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+pub struct Server<'a> {
+    pub engine: &'a mut Engine,
+    pub store: PrecisionStore,
+    pub router: Router,
+    pub batcher: DynamicBatcher,
+    stats: ServeStats,
+    started: Instant,
+}
+
+impl<'a> Server<'a> {
+    pub fn new(
+        engine: &'a mut Engine,
+        store: PrecisionStore,
+        router: Router,
+        batcher: DynamicBatcher,
+    ) -> Self {
+        Server {
+            engine,
+            store,
+            router,
+            batcher,
+            stats: ServeStats::default(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Enqueue a request (routing decides the precision).  `false` =
+    /// rejected by backpressure.
+    pub fn submit(&mut self, req: Request) -> bool {
+        let m = self.router.route(req.class, req.force_m);
+        match self.batcher.push(req, m) {
+            Ok(()) => true,
+            Err(_) => {
+                self.stats.rejected += 1;
+                false
+            }
+        }
+    }
+
+    /// Drain the queue completely, dispatching batches until empty.
+    pub fn process_all(&mut self) -> anyhow::Result<Vec<Response>> {
+        let mut out = Vec::new();
+        while let Some((m, batch)) = self.batcher.pop_batch() {
+            out.extend(self.dispatch(m, batch)?);
+        }
+        self.stats.wall_secs = self.started.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    fn dispatch(
+        &mut self,
+        m: u8,
+        batch: Vec<super::batcher::QueuedRequest>,
+    ) -> anyhow::Result<Vec<Response>> {
+        let (bsz, seq_len) = self.engine.batch_shape();
+        let vocab = self.engine.vocab_size();
+        anyhow::ensure!(batch.len() <= bsz, "batch exceeds engine rows");
+        let t0 = Instant::now();
+        // single-master precision switch — this is the OTARo deployment
+        // property in action: no reload, just (cached) truncation
+        let params = self.store.params_at(m).clone();
+        // build the token matrix; remember each row's last valid position
+        let mut tokens = vec![PAD; bsz * seq_len];
+        let mut last_pos = Vec::with_capacity(batch.len());
+        for (ri, q) in batch.iter().enumerate() {
+            let p = &q.req.prompt;
+            let n = p.len().min(seq_len);
+            tokens[ri * seq_len..ri * seq_len + n].copy_from_slice(&p[p.len() - n..]);
+            last_pos.push(n.saturating_sub(1));
+        }
+        let logits = self
+            .engine
+            .logits_step(&params, &tokens, Width::m(m))?;
+        let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        self.stats.batches += 1;
+        let mut out = Vec::with_capacity(batch.len());
+        for (ri, q) in batch.into_iter().enumerate() {
+            let off = (ri * seq_len + last_pos[ri]) * vocab;
+            let row = &logits[off..off + vocab];
+            let next = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as i32;
+            let queue_ms = q.enqueued_at.elapsed().as_secs_f64() * 1e3 - compute_ms;
+            self.stats.served += 1;
+            self.stats.queue_ms.push(queue_ms.max(0.0));
+            self.stats.compute_ms.push(compute_ms);
+            if let Some(e) = self.stats.per_width.iter_mut().find(|e| e.0 == m) {
+                e.1 += 1;
+            } else {
+                self.stats.per_width.push((m, 1));
+            }
+            out.push(Response {
+                id: q.req.id,
+                width_m: m,
+                next_token: next,
+                queue_ms: queue_ms.max(0.0),
+                compute_ms,
+            });
+        }
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+}

@@ -1,0 +1,175 @@
+//! `PrecisionStore` — single-master multi-precision weights.
+//!
+//! The fine-tuned f32 master is encoded ONCE into SEFP E5M8 (the top of
+//! the ladder).  Every other precision is derived by `SefpTensor::truncate`
+//! — pure integer shifts, no access to the original floats — exactly the
+//! on-device switch conventional quantization cannot do (paper fig. 1).
+//! Dequantized `ParamStore`s per precision are cached so repeated switches
+//! are free; `switch_cost_ms` exposes the cold-switch latency for the
+//! serving benchmarks.
+
+use std::collections::HashMap;
+
+use crate::runtime::ParamStore;
+use crate::sefp::{Rounding, SefpTensor, GROUP_SIZE};
+
+pub struct PrecisionStore {
+    /// E5M8 master, one entry per parameter tensor
+    master: Vec<SefpTensor>,
+    names: Vec<String>,
+    shapes: Vec<Vec<usize>>,
+    quantized: Vec<bool>,
+    /// non-quantized tensors (1-D norm gains) pass through unchanged
+    passthrough: Vec<Option<Vec<f32>>>,
+    cache: HashMap<u8, ParamStore>,
+    pub switch_log: Vec<(u8, f64)>,
+}
+
+impl PrecisionStore {
+    /// Encode the fine-tuned master.  The manifest's `quantized` flags say
+    /// exactly which tensors the training graph fake-quantized (2-D
+    /// weights; pos_embed and norm gains stay f32) — the store mirrors
+    /// that, so the serving-side switch reproduces training numerics.
+    pub fn from_params(params: &ParamStore) -> Self {
+        let mut master = Vec::with_capacity(params.tensors.len());
+        let mut passthrough = Vec::with_capacity(params.tensors.len());
+        for (i, t) in params.tensors.iter().enumerate() {
+            if params.quantized[i] {
+                master.push(SefpTensor::encode(t, 8, GROUP_SIZE, Rounding::Trunc));
+                passthrough.push(None);
+            } else {
+                // placeholder tensor keeps indices aligned
+                master.push(SefpTensor::encode(&[], 8, GROUP_SIZE, Rounding::Trunc));
+                passthrough.push(Some(t.clone()));
+            }
+        }
+        PrecisionStore {
+            master,
+            names: params.names.clone(),
+            shapes: params.shapes.clone(),
+            quantized: params.quantized.clone(),
+            passthrough,
+            cache: HashMap::new(),
+            switch_log: Vec::new(),
+        }
+    }
+
+    /// Storage bytes of the single master copy (ideal packed bits).
+    pub fn master_bytes(&self) -> usize {
+        let quant: usize = self.master.iter().map(|t| t.ideal_bits()).sum::<usize>() / 8;
+        let pass: usize = self
+            .passthrough
+            .iter()
+            .flatten()
+            .map(|t| t.len() * 4)
+            .sum();
+        quant + pass
+    }
+
+    /// Bytes a per-precision model zoo would need for the same ladder —
+    /// the storage overhead OTARo eliminates.
+    pub fn zoo_bytes(&self, widths: &[u8]) -> usize {
+        widths
+            .iter()
+            .map(|&m| {
+                self.master
+                    .iter()
+                    .map(|t| t.len * (1 + m as usize) / 8 + t.n_groups() * 5 / 8)
+                    .sum::<usize>()
+            })
+            .sum()
+    }
+
+    /// Get (deriving + caching if needed) the engine-ready params at
+    /// mantissa width `m`.
+    pub fn params_at(&mut self, m: u8) -> &ParamStore {
+        if !self.cache.contains_key(&m) {
+            let start = std::time::Instant::now();
+            let mut tensors = Vec::with_capacity(self.master.len());
+            for (i, t) in self.master.iter().enumerate() {
+                if let Some(p) = &self.passthrough[i] {
+                    tensors.push(p.clone());
+                } else {
+                    let tm = if m == t.m { t.clone() } else { t.truncate(m) };
+                    tensors.push(tm.decode());
+                }
+            }
+            let ps = ParamStore {
+                tensors,
+                names: self.names.clone(),
+                shapes: self.shapes.clone(),
+                quantized: self.quantized.clone(),
+            };
+            self.switch_log.push((m, start.elapsed().as_secs_f64() * 1e3));
+            self.cache.insert(m, ps);
+        }
+        &self.cache[&m]
+    }
+
+    /// Cold-switch cost: derive `m` from scratch (cache bypassed).
+    pub fn switch_cost_ms(&self, m: u8) -> f64 {
+        let start = std::time::Instant::now();
+        let mut total = 0usize;
+        for (i, t) in self.master.iter().enumerate() {
+            if self.passthrough[i].is_none() {
+                let d = t.truncate(m).decode();
+                total += d.len();
+            }
+        }
+        let ms = start.elapsed().as_secs_f64() * 1e3;
+        assert!(total > 0 || self.master.is_empty());
+        ms
+    }
+
+    pub fn cached_widths(&self) -> Vec<u8> {
+        let mut v: Vec<u8> = self.cache.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> ParamStore {
+        let mut rng = crate::data::Rng::new(1);
+        ParamStore {
+            tensors: vec![
+                (0..256).map(|_| rng.normal() as f32 * 0.1).collect(),
+                vec![1.0; 16],
+            ],
+            names: vec!["w".into(), "ln".into()],
+            shapes: vec![vec![16, 16], vec![16]],
+            quantized: vec![true, false],
+        }
+    }
+
+    #[test]
+    fn switch_derives_truncated_weights() {
+        let p = params();
+        let mut store = PrecisionStore::from_params(&p);
+        let p4 = store.params_at(4).clone();
+        // 2-D tensor quantized at m=4 == direct encode (ladder exactness)
+        let direct = SefpTensor::encode(&p.tensors[0], 4, GROUP_SIZE, Rounding::Trunc).decode();
+        assert_eq!(p4.tensors[0], direct);
+        // 1-D passthrough untouched
+        assert_eq!(p4.tensors[1], p.tensors[1]);
+    }
+
+    #[test]
+    fn cache_hits_after_first_switch() {
+        let mut store = PrecisionStore::from_params(&params());
+        let _ = store.params_at(5);
+        let _ = store.params_at(5);
+        assert_eq!(store.switch_log.len(), 1);
+        assert_eq!(store.cached_widths(), vec![5]);
+    }
+
+    #[test]
+    fn master_smaller_than_zoo() {
+        let store = PrecisionStore::from_params(&params());
+        let widths = [8, 7, 6, 5, 4, 3];
+        assert!(store.master_bytes() < store.zoo_bytes(&widths));
+    }
+}

@@ -1,0 +1,208 @@
+//! Integration tests over the real PJRT engine + AOT artifacts: step
+//! signatures, STE gradient semantics, trainer loops for every method,
+//! the serving stack, and the analysis paths.  All tests skip gracefully
+//! when `make artifacts` has not been run.
+
+use std::path::Path;
+
+use otaro::config::{Method, TrainConfig};
+use otaro::coordinator::{eval_loss, Trainer};
+use otaro::data::{corpus, Lang, StreamBatcher};
+use otaro::eval::mc::score_items;
+use otaro::eval::ppl::perplexity;
+use otaro::metrics::MetricsSink;
+use otaro::runtime::{Engine, Width};
+use otaro::serve::{DynamicBatcher, PrecisionStore, Request, Router, Server, TaskClass};
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    if p.exists() {
+        Some(Box::leak(
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").into_boxed_path(),
+        ))
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn setup(engine: &Engine) -> (Lang, StreamBatcher) {
+    let lang = Lang::new(0x1A06);
+    let (b, t) = engine.batch_shape();
+    let stream = corpus::pretrain_corpus(&lang, 0, 2_000);
+    (lang, StreamBatcher::new(stream, b, t, 1))
+}
+
+#[test]
+fn train_step_shapes_and_losses() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(dir).unwrap();
+    let params = engine.init_params().unwrap();
+    let (_, mut batcher) = setup(&engine);
+    let batch = batcher.next_batch();
+    for w in [Width::FP, Width::m(8), Width::m(3)] {
+        let out = engine.train_step(&params, &batch, w).unwrap();
+        assert!(out.loss.is_finite() && out.loss > 0.0, "{w}");
+        assert_eq!(out.grads.len(), params.tensors.len());
+        for (g, t) in out.grads.iter().zip(&params.tensors) {
+            assert_eq!(g.len(), t.len());
+        }
+        // eval at the same width must agree with the train-step loss
+        let ev = engine.eval_step(&params, &batch, w).unwrap();
+        assert!((ev - out.loss).abs() < 1e-4, "{w}: {ev} vs {}", out.loss);
+    }
+}
+
+#[test]
+fn quantized_loss_deviates_more_at_lower_width() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(dir).unwrap();
+    let params = engine.init_params().unwrap();
+    let (_, mut batcher) = setup(&engine);
+    let batch = batcher.next_batch();
+    let fp = engine.eval_step(&params, &batch, Width::FP).unwrap();
+    let d8 = (engine.eval_step(&params, &batch, Width::m(8)).unwrap() - fp).abs();
+    let d3 = (engine.eval_step(&params, &batch, Width::m(3)).unwrap() - fp).abs();
+    assert!(d8 <= d3 + 1e-4, "m8 dev {d8} vs m3 dev {d3}");
+}
+
+#[test]
+fn rust_sefp_weights_reproduce_engine_quantized_loss() {
+    // THE cross-layer consistency check: quantizing the weights with the
+    // RUST SEFP implementation and evaluating them with the FP program
+    // must equal evaluating the raw weights with the QUANTIZED program —
+    // i.e. the serving-side switch is exactly the training-time quant.
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(dir).unwrap();
+    let params = engine.init_params().unwrap();
+    let (_, mut batcher) = setup(&engine);
+    let batch = batcher.next_batch();
+    for m in [8u8, 4, 3] {
+        let engine_q = engine.eval_step(&params, &batch, Width::m(m)).unwrap();
+        let mut store = PrecisionStore::from_params(&params);
+        let qparams = store.params_at(m).clone();
+        let rust_q = engine.eval_step(&qparams, &batch, Width::FP).unwrap();
+        assert!(
+            (engine_q - rust_q).abs() < 2e-5,
+            "m={m}: engine {engine_q} vs rust-switched {rust_q}"
+        );
+    }
+}
+
+#[test]
+fn trainer_every_method_reduces_loss() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(dir).unwrap();
+    let (_, mut batcher) = setup(&engine);
+    for method in [Method::Fp, Method::Fixed, Method::Uniform, Method::BpsOnly, Method::Otaro] {
+        let mut params = engine.init_params().unwrap();
+        let cfg = TrainConfig {
+            method,
+            lr: 3e-2,
+            steps: 12,
+            delay_n: 3,
+            fixed_m: (method == Method::Fixed).then_some(4),
+            ..TrainConfig::default()
+        };
+        let mut sink = MetricsSink::null();
+        let report =
+            Trainer::new(&mut engine, &mut params, &mut batcher, cfg).run(&mut sink).unwrap();
+        assert_eq!(report.losses.len(), 12);
+        let first = report.losses[0];
+        let last = *report.losses.last().unwrap();
+        assert!(last < first, "{method}: {first} -> {last}");
+        if method == Method::Otaro {
+            assert!(report.laa_deferred > 0, "LAA must engage at low widths");
+        }
+        if matches!(method, Method::BpsOnly | Method::Otaro) {
+            let visited: u64 = report.width_histogram.iter().map(|&(_, c)| c).sum();
+            assert_eq!(visited, 12);
+        }
+    }
+}
+
+#[test]
+fn eval_loss_helper_runs() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(dir).unwrap();
+    let params = engine.init_params().unwrap();
+    let (_, mut batcher) = setup(&engine);
+    let l = eval_loss(&mut engine, &params, &mut batcher, Width::m(5), 2).unwrap();
+    assert!(l.is_finite() && l > 0.0);
+}
+
+#[test]
+fn perplexity_is_exp_of_loss_scale() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(dir).unwrap();
+    let params = engine.init_params().unwrap();
+    let lang = Lang::new(0x1A06);
+    let (_, test) = corpus::tinytext_corpus(&lang, 0, 2_000, 300);
+    let ppl = perplexity(&mut engine, &params, &test, Width::FP).unwrap();
+    // random-init byte model: ppl around vocab-ish scale, definitely finite
+    assert!(ppl > 1.0 && ppl < 1e6, "ppl={ppl}");
+}
+
+#[test]
+fn mc_scoring_runs_and_is_bounded() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(dir).unwrap();
+    let params = engine.init_params().unwrap();
+    let lang = Lang::new(0x1A06);
+    let items = otaro::data::Suite::Arith.eval_set(&lang, 10, 0);
+    let (acc, correct) = score_items(&mut engine, &params, Width::m(6), &items).unwrap();
+    assert!(correct <= 10);
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn serving_stack_end_to_end() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(dir).unwrap();
+    let params = engine.init_params().unwrap();
+    let store = PrecisionStore::from_params(&params);
+    let router = Router::new(otaro::config::ServeConfig::default());
+    let batcher = DynamicBatcher::new(engine.batch_shape().0, 64);
+    let mut server = Server::new(&mut engine, store, router, batcher);
+    let tok = otaro::data::Tokenizer::new();
+    for i in 0..10u64 {
+        let class = if i % 2 == 0 { TaskClass::Generation } else { TaskClass::Understanding };
+        assert!(server.submit(Request {
+            id: i,
+            class,
+            prompt: tok.encode_with_bos("le mika"),
+            force_m: None,
+        }));
+    }
+    let responses = server.process_all().unwrap();
+    assert_eq!(responses.len(), 10);
+    for r in &responses {
+        assert!(r.next_token >= 0 && (r.next_token as usize) < server.engine.vocab_size());
+        assert!(r.compute_ms > 0.0);
+    }
+    // both router classes must have produced both precisions
+    let stats = server.stats();
+    assert!(stats.per_width.len() >= 2, "{:?}", stats.per_width);
+    assert_eq!(stats.served, 10);
+}
+
+#[test]
+fn analysis_cosine_matrix_structure() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(dir).unwrap();
+    let params = engine.init_params().unwrap();
+    let (_, mut batcher) = setup(&engine);
+    let batch = batcher.next_batch();
+    let widths = [Width::m(8), Width::m(5), Width::m(3)];
+    let mat = otaro::analysis::cosine_matrix(&mut engine, &params, &batch, &widths, "layer0.wq")
+        .unwrap();
+    for i in 0..3 {
+        assert!((mat[i][i] - 1.0).abs() < 1e-6, "diagonal");
+        for j in 0..3 {
+            assert!(mat[i][j] <= 1.0 + 1e-9 && mat[i][j] >= -1.0 - 1e-9);
+            assert!((mat[i][j] - mat[j][i]).abs() < 1e-9, "symmetry");
+        }
+    }
+    // gradients at any width correlate strongly with adjacent widths here
+    assert!(mat[0][1] > 0.5, "m8 vs m5 cosine {}", mat[0][1]);
+}

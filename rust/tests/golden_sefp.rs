@@ -1,0 +1,65 @@
+//! Cross-language golden-vector check: the Rust bit-level SEFP must match
+//! the JAX/Pallas oracle EXACTLY (values emitted by `aot.py` into
+//! `artifacts/golden_sefp.json`).  This is the contract that makes the
+//! serving-side precision switch equivalent to what the training graph
+//! quantized.
+
+use std::path::Path;
+
+use otaro::json;
+use otaro::sefp::{quant_dequant, shared_exponent, Rounding, SefpTensor};
+
+fn golden() -> Option<json::Value> {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden_sefp.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(json::parse(&text).expect("golden json parses"))
+}
+
+fn floats(v: &json::Value) -> Vec<f32> {
+    v.as_arr()
+        .expect("array")
+        .iter()
+        .map(|x| x.as_f64().expect("number") as f32)
+        .collect()
+}
+
+#[test]
+fn golden_quant_dequant_exact() {
+    let Some(g) = golden() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let group_size = g.req_usize("group_size").unwrap();
+    let cases = g.get("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 70, "expected the full golden matrix");
+    for case in cases {
+        let name = case.req_str("name").unwrap();
+        let m = case.req_usize("m").unwrap() as u8;
+        let rounding: Rounding = case.req_str("rounding").unwrap().parse().unwrap();
+        let input = floats(case.get("input").unwrap());
+        let expect = floats(case.get("output").unwrap());
+        let got = quant_dequant(&input, m, group_size, rounding);
+        assert_eq!(got, expect, "case {name} m={m} {rounding:?}");
+        // and through the tensor representation
+        let t = SefpTensor::encode(&input, m, group_size, rounding);
+        assert_eq!(t.decode(), expect, "tensor case {name} m={m} {rounding:?}");
+    }
+}
+
+#[test]
+fn golden_shared_exponents_exact() {
+    let Some(g) = golden() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    for e in g.get("shared_exponents").unwrap().as_arr().unwrap() {
+        let maxabs = e.get("maxabs").unwrap().as_f64().unwrap() as f32;
+        let expect = e.get("exponent").unwrap().as_i64().unwrap() as i32;
+        assert_eq!(
+            shared_exponent(maxabs),
+            expect,
+            "maxabs={maxabs} ({})",
+            e.req_str("name").unwrap()
+        );
+    }
+}

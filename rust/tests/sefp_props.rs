@@ -1,0 +1,186 @@
+//! Property-based tests over SEFP + coordinator invariants.
+//!
+//! The offline vendor set has no proptest crate, so these are randomized
+//! property sweeps over the in-repo SplitMix64 RNG: many cases per
+//! property, deterministic seeds, failure messages carrying the seed.
+
+use otaro::coordinator::{Bps, Laa, LaaAction};
+use otaro::data::Rng;
+use otaro::sefp::{
+    quant_dequant, shared_exponent, step_for, PackedSefp, Rounding, SefpTensor, GROUP_SIZE,
+    MANTISSA_WIDTHS,
+};
+
+const CASES: u64 = 200;
+
+fn rand_weights(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+#[test]
+fn prop_truncation_ladder_exact() {
+    // ∀ w, hi > lo: truncate(encode(w, hi), lo) == encode(w, lo)
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.below(500);
+        let scale = [1e-4f32, 0.1, 1.0, 100.0][rng.below(4)];
+        let w = rand_weights(&mut rng, n, scale);
+        let hi = [8u8, 7, 6, 5][rng.below(4)];
+        let lo = 3 + rng.below((hi - 3) as usize) as u8;
+        let chained = SefpTensor::encode(&w, hi, GROUP_SIZE, Rounding::Trunc).truncate(lo);
+        let direct = SefpTensor::encode(&w, lo, GROUP_SIZE, Rounding::Trunc);
+        assert_eq!(chained, direct, "seed={seed} n={n} hi={hi} lo={lo}");
+    }
+}
+
+#[test]
+fn prop_error_bounded_by_step() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xE0);
+        let n = 1 + rng.below(300);
+        let w = rand_weights(&mut rng, n, 0.5);
+        let m = MANTISSA_WIDTHS[rng.below(6)];
+        let q = quant_dequant(&w, m, GROUP_SIZE, Rounding::Trunc);
+        for (g, qg) in w.chunks(GROUP_SIZE).zip(q.chunks(GROUP_SIZE)) {
+            let maxabs = g.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            let step = step_for(shared_exponent(maxabs), m);
+            for (a, b) in g.iter().zip(qg) {
+                assert!((a - b).abs() <= step, "seed={seed} m={m}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_idempotent_and_sign_symmetric() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xF1);
+        let n = 1 + rng.below(200);
+        let w = rand_weights(&mut rng, n, 2.0);
+        let m = MANTISSA_WIDTHS[rng.below(6)];
+        let q = quant_dequant(&w, m, GROUP_SIZE, Rounding::Trunc);
+        assert_eq!(q, quant_dequant(&q, m, GROUP_SIZE, Rounding::Trunc), "idempotent seed={seed}");
+        let neg: Vec<f32> = w.iter().map(|&x| -x).collect();
+        let qn = quant_dequant(&neg, m, GROUP_SIZE, Rounding::Trunc);
+        for (a, b) in q.iter().zip(&qn) {
+            assert_eq!(*a, -*b, "sign symmetry seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_packed_roundtrip_bit_exact() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xA3);
+        let n = 1 + rng.below(400);
+        let w = rand_weights(&mut rng, n, 0.3);
+        let m = MANTISSA_WIDTHS[rng.below(6)];
+        let t = SefpTensor::encode(&w, m, GROUP_SIZE, Rounding::Trunc);
+        let p = PackedSefp::from_tensor(&t);
+        assert_eq!(p.to_tensor(), t, "seed={seed} m={m} n={n}");
+        // packed truncate commutes with tensor truncate
+        if m > 3 {
+            let lo = 3 + rng.below((m - 3) as usize) as u8;
+            assert_eq!(p.truncate(lo).to_tensor(), t.truncate(lo), "seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_monotone_error_in_width() {
+    for seed in 0..60 {
+        let mut rng = Rng::new(seed ^ 0xB4);
+        let w = rand_weights(&mut rng, 640, 1.0);
+        let mut last = f64::INFINITY;
+        for m in [3u8, 4, 5, 6, 7, 8] {
+            let q = quant_dequant(&w, m, GROUP_SIZE, Rounding::Trunc);
+            let err: f64 = w.iter().zip(&q).map(|(a, b)| ((a - b).abs()) as f64).sum();
+            assert!(err <= last + 1e-9, "seed={seed} m={m}: {err} > {last}");
+            last = err;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// coordinator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_bps_selection_counts_consistent() {
+    // Σ t_b == t, every width eventually visited, all scores finite after
+    // warmup — for random loss landscapes and λ values.
+    for seed in 0..60 {
+        let mut rng = Rng::new(seed ^ 0xC5);
+        let widths = [8u8, 7, 6, 5, 4, 3];
+        let lambda = 0.5 + rng.f64() * 9.5;
+        let mut bps = Bps::new(&widths, lambda, 0.9);
+        let base: Vec<f64> = widths.iter().map(|_| 1.0 + rng.f64() * 3.0).collect();
+        let steps = 100 + rng.below(300);
+        for _ in 0..steps {
+            let b = bps.select();
+            let wi = widths.iter().position(|&w| w == b).unwrap();
+            bps.update(b, base[wi] + 0.1 * rng.normal());
+        }
+        let total: u64 = widths.iter().map(|&w| bps.count(w)).sum();
+        assert_eq!(total, steps as u64, "seed={seed}");
+        for &w in &widths {
+            assert!(bps.count(w) >= 1, "seed={seed} width {w} never visited");
+            assert!(bps.score(w).is_finite(), "seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_laa_conserves_gradient_mass() {
+    // No gradient is ever dropped: Σ applied == Σ observed once drained,
+    // for any random width sequence and delay N.
+    for seed in 0..60 {
+        let mut rng = Rng::new(seed ^ 0xD6);
+        let n = 1 + rng.below(12);
+        let mut laa = Laa::new(n, 4);
+        let mut observed_sum = 0.0f64;
+        let mut applied_sum = 0.0f64;
+        for _ in 0..rng.below(200) + 20 {
+            let m = [8u8, 6, 4, 3][rng.below(4)];
+            let v = rng.normal() as f32;
+            observed_sum += v as f64;
+            match laa.observe(m, vec![vec![v]]) {
+                LaaAction::Apply(g) => applied_sum += g[0][0] as f64,
+                LaaAction::Flush { grads, .. } => applied_sum += grads[0][0] as f64,
+                LaaAction::Deferred { .. } => {}
+            }
+        }
+        if let Some((g, _count)) = laa.drain() {
+            applied_sum += g[0][0] as f64;
+        }
+        assert!(
+            (observed_sum - applied_sum).abs() < 1e-4,
+            "seed={seed}: observed {observed_sum} vs applied {applied_sum}"
+        );
+    }
+}
+
+#[test]
+fn prop_laa_flushes_at_exactly_n() {
+    for seed in 0..40 {
+        let mut rng = Rng::new(seed ^ 0xE7);
+        let n = 2 + rng.below(10);
+        let mut laa = Laa::new(n, 4);
+        let mut deferred_run = 0usize;
+        for i in 0..(n * 3) {
+            match laa.observe(3, vec![vec![1.0]]) {
+                LaaAction::Deferred { filled } => {
+                    deferred_run += 1;
+                    assert_eq!(filled, deferred_run, "seed={seed} i={i}");
+                }
+                LaaAction::Flush { grads, count } => {
+                    assert_eq!(deferred_run + 1, n, "seed={seed}: flush at wrong fill");
+                    assert_eq!(grads[0][0], n as f32);
+                    assert_eq!(count, n, "seed={seed}");
+                    deferred_run = 0;
+                }
+                LaaAction::Apply(_) => panic!("m=3 must never Apply directly"),
+            }
+        }
+    }
+}
