@@ -11,13 +11,15 @@ use std::sync::mpsc;
 use otaro::config::ServeConfig;
 use otaro::data::{Lang, Rng, Tokenizer};
 use otaro::runtime::Engine;
-use otaro::serve::{DynamicBatcher, PrecisionStore, Request, Router, Server, TaskClass};
+use otaro::serve::{
+    DynamicBatcher, PrecisionStore, Request, Router, SchedPolicy, Server, TaskClass,
+};
 
 fn main() -> anyhow::Result<()> {
     let n_clients = 6usize;
     let reqs_per_client = 16usize;
 
-    let mut engine = Engine::new(std::path::Path::new("artifacts"))?;
+    let engine = Engine::new(std::path::Path::new("artifacts"))?;
     // prefer the fine-tuned model if the e2e example has produced one
     let mut params = engine.init_params()?;
     for cand in ["runs/e2e/otaro_model.bin", "runs/pretrained.bin"] {
@@ -52,12 +54,15 @@ fn main() -> anyhow::Result<()> {
                     1 => TaskClass::Understanding,
                     _ => TaskClass::Other,
                 };
-                let req = Request {
-                    id: (c * 1000 + i) as u64,
+                // generation-class requests decode several tokens, the
+                // rest are next-token — mixed multi-token traffic
+                let max_new = if matches!(class, TaskClass::Generation) { 4 } else { 1 };
+                let req = Request::new(
+                    (c * 1000 + i) as u64,
                     class,
-                    prompt: tok.encode_with_bos(&lang.sentence(&mut rng)),
-                    force_m: None,
-                };
+                    tok.encode_with_bos(&lang.sentence(&mut rng)),
+                )
+                .with_max_new_tokens(max_new);
                 if tx.send(req).is_err() {
                     break;
                 }
@@ -67,10 +72,12 @@ fn main() -> anyhow::Result<()> {
     }
     drop(tx);
 
-    // serving loop: drain the channel into the dynamic batcher, dispatch
-    let router = Router::new(ServeConfig::default());
-    let batcher = DynamicBatcher::new(engine.batch_shape().0, 256);
-    let mut server = Server::new(&mut engine, store, router, batcher);
+    // serving loop: drain the channel into the scheduler, dispatch
+    let serve_cfg = ServeConfig::default();
+    let router = Router::new(serve_cfg.clone());
+    let batcher = DynamicBatcher::new(engine.batch_size(), 256)
+        .with_policy(SchedPolicy::from_config(&serve_cfg));
+    let mut server = Server::new(engine.into_handle(), store, router, batcher);
     let mut responses = Vec::new();
     while let Ok(req) = rx.recv() {
         if !server.submit(req) {
@@ -88,10 +95,14 @@ fn main() -> anyhow::Result<()> {
 
     let stats = server.stats().clone();
     println!(
-        "\nserved {} responses in {} batches, {:.1} req/s",
+        "\nserved {} responses ({} tokens over {} decode steps) in {} scheduled runs, \
+         {:.1} req/s / {:.1} tok/s",
         stats.served,
+        stats.tokens_generated,
+        stats.decode_steps,
         stats.batches,
-        stats.throughput_rps()
+        stats.throughput_rps(),
+        stats.throughput_tps()
     );
     println!(
         "per-precision request counts (router policy: gen->E5M8, und->E5M4, other->E5M6): {:?}",

@@ -42,12 +42,7 @@ fn main() {
     b.run("push64_pop_all", || {
         let mut db = DynamicBatcher::new(8, 1024);
         for i in 0..64u64 {
-            let req = otaro::serve::Request {
-                id: i,
-                class: otaro::serve::TaskClass::Other,
-                prompt: vec![65, 66],
-                force_m: None,
-            };
+            let req = otaro::serve::Request::new(i, otaro::serve::TaskClass::Other, vec![65, 66]);
             db.push(req, (3 + (i % 6)) as u8).unwrap();
         }
         let mut n = 0;

@@ -1,0 +1,116 @@
+//! Serving-layer benchmarks: scheduler overhead and sustained
+//! mixed-precision continuous-batching throughput over the
+//! deterministic [`SimBackend`] (no AOT artifacts needed — this
+//! measures the serve layer itself, not the engine forward).
+//!
+//! Run: `cargo bench --bench bench_serve`
+
+use std::time::Instant;
+
+use otaro::benchutil::{black_box, group, rate, Bench};
+use otaro::config::ServeConfig;
+use otaro::data::Rng;
+use otaro::runtime::ParamStore;
+use otaro::serve::{
+    DynamicBatcher, PrecisionStore, Request, Router, SchedPolicy, Server, SimBackend, TaskClass,
+};
+
+fn store() -> PrecisionStore {
+    let mut rng = Rng::new(11);
+    let params = ParamStore {
+        tensors: vec![(0..4096).map(|_| rng.normal() as f32 * 0.1).collect(), vec![1.0; 64]],
+        names: vec!["w".into(), "ln".into()],
+        shapes: vec![vec![64, 64], vec![64]],
+        quantized: vec![true, false],
+    };
+    PrecisionStore::from_params(&params)
+}
+
+fn mixed_request(rng: &mut Rng, id: u64) -> Request {
+    // 70% understanding-style next-token at low widths, 30% generation
+    let (m, max_new) = match rng.below(10) {
+        0..=3 => (4, 1),
+        4..=6 => (6, 1),
+        7 | 8 => (8, 4),
+        _ => (3, 8),
+    };
+    let prompt: Vec<i32> = (0..rng.below(24) + 4).map(|_| rng.below(320) as i32).collect();
+    Request::new(id, TaskClass::Other, prompt).with_force_m(m).with_max_new_tokens(max_new)
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let serve_cfg = ServeConfig::default();
+
+    group("scheduler: push + pop_batch, 4-width mix");
+    b.run_elems("sched_push64_pop_all", 64, || {
+        let mut db = DynamicBatcher::new(8, 1024).with_policy(SchedPolicy::from_config(&serve_cfg));
+        let mut rng = Rng::new(3);
+        for i in 0..64u64 {
+            let req = Request::new(i, TaskClass::Other, vec![65, 66]);
+            db.push(req, [3u8, 4, 6, 8][rng.below(4)]).unwrap();
+        }
+        let mut n = 0;
+        while let Some((_, batch)) = db.pop_batch() {
+            n += batch.len();
+        }
+        n
+    });
+
+    group("generation engine: one full drain, mixed precisions");
+    let drain = |n_requests: u64| -> (f64, u64, u64) {
+        let backend = SimBackend::new(8, 32, 320);
+        let batcher = DynamicBatcher::new(8, usize::MAX)
+            .with_policy(SchedPolicy::from_config(&serve_cfg));
+        let mut server =
+            Server::new(backend, store(), Router::new(serve_cfg.clone()), batcher);
+        let mut rng = Rng::new(17);
+        for i in 0..n_requests {
+            assert!(server.submit(mixed_request(&mut rng, i)));
+        }
+        let t0 = Instant::now();
+        let responses = server.process_all().unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        assert_eq!(responses.len() as u64, n_requests);
+        let stats = server.stats();
+        (secs, stats.tokens_generated, stats.decode_steps)
+    };
+    b.run("serve_drain_256_mixed", || black_box(drain(256)));
+
+    group("sustained mixed-precision traffic (requests/sec)");
+    // arrival loop: submit in bursts, drain between bursts — the
+    // number this bench exists for is the sustained req/s line below
+    let backend = SimBackend::new(8, 32, 320);
+    let batcher =
+        DynamicBatcher::new(8, 4096).with_policy(SchedPolicy::from_config(&serve_cfg));
+    let mut server = Server::new(backend, store(), Router::new(serve_cfg.clone()), batcher);
+    let mut rng = Rng::new(23);
+    let bursts = 200u64;
+    let per_burst = 16u64;
+    let t0 = Instant::now();
+    let mut served = 0u64;
+    for burst in 0..bursts {
+        for i in 0..per_burst {
+            let _ = server.submit(mixed_request(&mut rng, burst * per_burst + i));
+        }
+        served += server.process_all().unwrap().len() as u64;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let stats = server.stats().clone();
+    rate("sustained_mixed_requests", served, secs);
+    rate("sustained_mixed_tokens", stats.tokens_generated, secs);
+    rate("decode_steps", stats.decode_steps, secs);
+    println!(
+        "scheduled runs: {}; mean queue {:.2} ms; mean compute {:.3} ms; widths {:?}",
+        stats.batches,
+        stats.queue_ms.mean(),
+        stats.compute_ms.mean(),
+        stats.per_width
+    );
+    println!(
+        "server-side throughput accounting: {:.1} req/s / {:.1} tok/s over {:.3}s of work",
+        stats.throughput_rps(),
+        stats.throughput_tps(),
+        stats.wall_secs
+    );
+}

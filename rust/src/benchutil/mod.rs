@@ -139,6 +139,13 @@ pub fn group(title: &str) {
     println!("\n== {title} ==");
 }
 
+/// Sustained-throughput line for serving benches: `count` events over
+/// `secs` of wall clock.
+pub fn rate(name: &str, count: u64, secs: f64) {
+    let per_sec = if secs > 0.0 { count as f64 / secs } else { 0.0 };
+    println!("{name:<44} {per_sec:>12.1}/s  ({count} in {secs:.3} s)");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -212,6 +212,14 @@ pub struct ServeConfig {
     pub generation_m: u8,
     /// precision used for understanding-class requests
     pub understanding_m: u8,
+    /// scheduler anti-starvation bound: a precision queue whose head has
+    /// waited this long is scheduled next regardless of score (in-flight
+    /// decodes finish first — see `serve::SchedPolicy`)
+    pub max_wait_ms: u64,
+    /// scheduler score contribution per second of head-of-queue wait
+    /// (fill ratio is in [0, 1], so 1.0 means one second of waiting
+    /// outweighs a full batch elsewhere)
+    pub age_weight: f64,
 }
 
 impl Default for ServeConfig {
@@ -222,6 +230,8 @@ impl Default for ServeConfig {
             default_m: 6,
             generation_m: 8,
             understanding_m: 4,
+            max_wait_ms: 500,
+            age_weight: 1.0,
         }
     }
 }
@@ -234,6 +244,8 @@ impl ServeConfig {
             ("default_m", n(self.default_m as f64)),
             ("generation_m", n(self.generation_m as f64)),
             ("understanding_m", n(self.understanding_m as f64)),
+            ("max_wait_ms", n(self.max_wait_ms as f64)),
+            ("age_weight", n(self.age_weight)),
         ])
     }
 
@@ -253,6 +265,12 @@ impl ServeConfig {
         }
         if let Some(x) = v.get("understanding_m").and_then(Value::as_usize) {
             c.understanding_m = x as u8;
+        }
+        if let Some(x) = v.get("max_wait_ms").and_then(Value::as_usize) {
+            c.max_wait_ms = x as u64;
+        }
+        if let Some(x) = v.get("age_weight").and_then(Value::as_f64) {
+            c.age_weight = x;
         }
         c
     }

@@ -14,7 +14,7 @@ use crate::eval::tables::{f2, pct, TableBuilder};
 use crate::metrics::MetricsSink;
 use crate::runtime::{Engine, ParamStore, Width};
 use crate::serve::{
-    DynamicBatcher, PrecisionStore, Request, Router, Server, TaskClass,
+    DynamicBatcher, PrecisionStore, Request, Router, SchedPolicy, Server, TaskClass,
 };
 
 /// Shared CLI context.
@@ -197,7 +197,7 @@ pub fn eval_checkpoint(ctx: &Ctx, checkpoint: Option<PathBuf>, mc_items: usize) 
 }
 
 pub fn serve_demo(ctx: &Ctx, n_requests: usize, checkpoint: Option<PathBuf>) -> anyhow::Result<()> {
-    let mut engine = ctx.engine()?;
+    let engine = ctx.engine()?;
     let params = ctx.params(&engine, checkpoint)?;
     let store = PrecisionStore::from_params(&params);
     println!(
@@ -205,9 +205,11 @@ pub fn serve_demo(ctx: &Ctx, n_requests: usize, checkpoint: Option<PathBuf>) -> 
         store.master_bytes() / 1024,
         store.zoo_bytes(&[8, 7, 6, 5, 4, 3]) / 1024
     );
-    let router = Router::new(crate::config::ServeConfig::default());
-    let batcher = DynamicBatcher::new(engine.batch_shape().0, 256);
-    let mut server = Server::new(&mut engine, store, router, batcher);
+    let serve_cfg = crate::config::ServeConfig::default();
+    let router = Router::new(serve_cfg.clone());
+    let batcher = DynamicBatcher::new(engine.batch_size(), 256)
+        .with_policy(SchedPolicy::from_config(&serve_cfg));
+    let mut server = Server::new(engine.into_handle(), store, router, batcher);
 
     let lang = ctx.lang();
     let tok = crate::data::Tokenizer::new();
@@ -220,18 +222,26 @@ pub fn serve_demo(ctx: &Ctx, n_requests: usize, checkpoint: Option<PathBuf>) -> 
             _ => TaskClass::Other,
         };
         let prompt = tok.encode_with_bos(&lang.sentence(&mut rng));
-        if server.submit(Request { id: i as u64, class, prompt, force_m: None }) {
+        // generation requests decode a few tokens, the rest are
+        // next-token — exercises the continuous-batching refill
+        let max_new = if matches!(class, TaskClass::Generation) { 4 } else { 1 };
+        let req = Request::new(i as u64, class, prompt).with_max_new_tokens(max_new);
+        if server.submit(req) {
             submitted += 1;
         }
     }
     let responses = server.process_all()?;
     let stats = server.stats();
     println!(
-        "served {}/{} requests in {} batches; throughput {:.1} req/s",
+        "served {}/{} requests ({} tokens, {} decode steps) in {} scheduled runs; \
+         {:.1} req/s / {:.1} tok/s",
         responses.len(),
         submitted,
+        stats.tokens_generated,
+        stats.decode_steps,
         stats.batches,
-        stats.throughput_rps()
+        stats.throughput_rps(),
+        stats.throughput_tps()
     );
     println!(
         "compute ms: mean {:.1} (min {:.1} max {:.1}); widths {:?}",
@@ -246,6 +256,7 @@ pub fn serve_demo(ctx: &Ctx, n_requests: usize, checkpoint: Option<PathBuf>) -> 
             ("id", crate::json::n(r.id as f64)),
             ("m", crate::json::n(r.width_m as f64)),
             ("next", crate::json::n(r.next_token as f64)),
+            ("n_tokens", crate::json::n(r.tokens.len() as f64)),
             ("queue_ms", crate::json::n(r.queue_ms)),
             ("compute_ms", crate::json::n(r.compute_ms)),
         ]));

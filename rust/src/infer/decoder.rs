@@ -131,6 +131,17 @@ impl DecoderSim {
     /// o-projection, SwiGLU-shaped MLP, LM head.  Returns a checksum so
     /// the work cannot be optimized away.
     pub fn decode_step(&mut self, x: &mut Vec<f32>) -> f32 {
+        self.decode_step_logits(x).0
+    }
+
+    /// One decode step that also yields the greedy next token from the
+    /// LM-head logits — serving-style generation over the simulator.
+    pub fn decode_step_token(&mut self, x: &mut Vec<f32>) -> (f32, i32) {
+        let (checksum, logits) = self.decode_step_logits(x);
+        (checksum, super::sampling::argmax(&logits) as i32)
+    }
+
+    fn decode_step_logits(&mut self, x: &mut Vec<f32>) -> (f32, Vec<f32>) {
         let d = self.cfg.d_model;
         let f = self.cfg.d_ff;
         let mut q = vec![0.0f32; d];
@@ -175,7 +186,7 @@ impl DecoderSim {
             LayerWeights::Dense { proj } => proj[0].matvec(x, &mut logits0),
             LayerWeights::Quant { proj } => proj[0].matvec(x, &mut logits0),
         }
-        checksum + logits0[0]
+        (checksum + logits0[0], logits0)
     }
 
     fn head_out(&self) -> usize {
@@ -266,6 +277,22 @@ mod tests {
         assert!(x.iter().all(|v| v.is_finite()));
         assert_eq!(sim.caches[0].len(), 5);
         assert!(sim.cache_bytes() > 0);
+    }
+
+    #[test]
+    fn decode_step_token_is_greedy_and_in_vocab() {
+        let mut a = DecoderSim::new(small(), DecoderWeights::Sefp(4), 1);
+        let mut b = DecoderSim::new(small(), DecoderWeights::Sefp(4), 1);
+        let mut xa = vec![0.1f32; 128];
+        let mut xb = vec![0.1f32; 128];
+        for _ in 0..3 {
+            let (ca, ta) = a.decode_step_token(&mut xa);
+            let (cb, tb) = b.decode_step_token(&mut xb);
+            assert!(ca.is_finite());
+            assert_eq!(ca, cb, "same weights+input, same checksum");
+            assert_eq!(ta, tb, "greedy decode is deterministic");
+            assert!((0..320).contains(&ta));
+        }
     }
 
     #[test]

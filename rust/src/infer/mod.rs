@@ -17,6 +17,7 @@
 
 pub mod decoder;
 pub mod kv_cache;
+pub mod sampling;
 
 pub use decoder::{DecoderSim, DecoderWeights, SimConfig};
 pub use kv_cache::KvCache;

@@ -185,8 +185,17 @@ impl Engine {
         out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("logits: {e}"))
     }
 
+    /// Wrap the engine for the serving layer's owned-backend API.
+    pub fn into_handle(self) -> crate::serve::EngineHandle {
+        crate::serve::EngineHandle::new(self)
+    }
+
     pub fn batch_shape(&self) -> (usize, usize) {
         (self.manifest.config.batch_size, self.manifest.config.max_seq)
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.manifest.config.batch_size
     }
 
     pub fn vocab_size(&self) -> usize {

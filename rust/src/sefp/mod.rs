@@ -191,7 +191,8 @@ mod tests {
                 let e = shared_exponent(v);
                 let step = step_for(e, m);
                 let q = quantize_value(v, step, m, Rounding::Trunc);
-                assert!(q.unsigned_abs() < (1 << m) + 1, "m={m} v={v} q={q}");
+                // quantize_value clamps to ±(2^m − 1), so strictly < 2^m
+                assert!(q.unsigned_abs() < (1 << m), "m={m} v={v} q={q}");
             }
         }
     }

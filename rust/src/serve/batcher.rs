@@ -1,12 +1,32 @@
-//! Dynamic batcher: requests queue per precision and are dispatched as
-//! full engine batches (the engine's (B, T) shape is fixed at AOT time,
-//! so batching = filling rows; underfull batches are padded).
+//! Dynamic batcher + deadline/age-aware scheduler.
+//!
+//! Requests queue per precision and are dispatched as full engine
+//! batches (the engine's (B, T) shape is fixed at AOT time, so batching
+//! = filling rows; underfull batches are padded).
+//!
+//! Scheduling policy (see [`SchedPolicy`]):
+//!
+//! * every non-empty queue is scored
+//!   `score = fill_ratio + age_weight * oldest_wait_secs`, where
+//!   `fill_ratio = min(len, max_batch) / max_batch` — so deep queues win
+//!   when everything is fresh (batch-fill efficiency) and waiting
+//!   queues win as their head request ages;
+//! * **anti-starvation bound**: any queue whose head has waited at
+//!   least `max_wait` is scheduled next regardless of score (oldest
+//!   head first), so a minority precision cannot be starved by
+//!   sustained traffic on another width.  The bound governs
+//!   *scheduling*: generations already in flight finish their decode
+//!   first, so the worst-case wait is `max_wait` plus the current
+//!   run's wind-down (refill stops as soon as the bound trips);
+//! * all ties break on the LOWEST width.  Queues live in a `BTreeMap`
+//!   and comparisons are strict, so the schedule is bit-for-bit
+//!   deterministic — no `HashMap` iteration-order dependence.
 //!
 //! Backpressure: the queue refuses new work beyond `queue_cap` — callers
 //! see `Err` and retry/shed, which keeps worst-case memory bounded.
 
-use std::collections::{HashMap, VecDeque};
-use std::time::Instant;
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
 
 use super::Request;
 
@@ -16,16 +36,57 @@ pub struct QueuedRequest {
     pub enqueued_at: Instant,
 }
 
+/// Scheduler knobs; see the module docs for the scoring formula.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedPolicy {
+    /// Score contribution per second of head-of-queue wait.  The fill
+    /// ratio is in [0, 1], so at the default 1.0 one second of waiting
+    /// outweighs a full batch elsewhere.
+    pub age_weight: f64,
+    /// Anti-starvation bound: a queue whose head has waited this long
+    /// is scheduled next regardless of score.  In-flight decodes are
+    /// not preempted, so the worst-case wait adds the current run's
+    /// wind-down on top.
+    pub max_wait: Duration,
+}
+
+impl Default for SchedPolicy {
+    fn default() -> Self {
+        SchedPolicy { age_weight: 1.0, max_wait: Duration::from_millis(500) }
+    }
+}
+
+impl SchedPolicy {
+    pub fn from_config(cfg: &crate::config::ServeConfig) -> Self {
+        SchedPolicy {
+            age_weight: cfg.age_weight,
+            max_wait: Duration::from_millis(cfg.max_wait_ms),
+        }
+    }
+}
+
 pub struct DynamicBatcher {
     pub max_batch: usize,
     pub queue_cap: usize,
-    queues: HashMap<u8, VecDeque<QueuedRequest>>,
+    pub policy: SchedPolicy,
+    queues: BTreeMap<u8, VecDeque<QueuedRequest>>,
     len: usize,
 }
 
 impl DynamicBatcher {
     pub fn new(max_batch: usize, queue_cap: usize) -> Self {
-        DynamicBatcher { max_batch, queue_cap, queues: HashMap::new(), len: 0 }
+        DynamicBatcher {
+            max_batch,
+            queue_cap,
+            policy: SchedPolicy::default(),
+            queues: BTreeMap::new(),
+            len: 0,
+        }
+    }
+
+    pub fn with_policy(mut self, policy: SchedPolicy) -> Self {
+        self.policy = policy;
+        self
     }
 
     pub fn len(&self) -> usize {
@@ -38,31 +99,87 @@ impl DynamicBatcher {
 
     /// Enqueue; `Err` = backpressure (queue full).
     pub fn push(&mut self, req: Request, width_m: u8) -> Result<(), Request> {
+        self.push_at(req, width_m, Instant::now())
+    }
+
+    /// Enqueue with an explicit arrival time.  `push` delegates here;
+    /// tests and trace replay use it to construct exact queue states
+    /// without sleeping.
+    pub fn push_at(
+        &mut self,
+        req: Request,
+        width_m: u8,
+        enqueued_at: Instant,
+    ) -> Result<(), Request> {
         if self.len >= self.queue_cap {
             return Err(req);
         }
         self.queues
             .entry(width_m)
             .or_default()
-            .push_back(QueuedRequest { req, width_m, enqueued_at: Instant::now() });
+            .push_back(QueuedRequest { req, width_m, enqueued_at });
         self.len += 1;
         Ok(())
     }
 
-    /// Pop the next batch to dispatch: the precision with the LONGEST
-    /// queue goes first (maximizes batch fill), up to `max_batch` rows,
-    /// FIFO within a precision.
+    /// Pop the next batch to dispatch under the scheduling policy, up to
+    /// `max_batch` rows, FIFO within a precision.
     pub fn pop_batch(&mut self) -> Option<(u8, Vec<QueuedRequest>)> {
-        let (&width, _) = self
-            .queues
-            .iter()
-            .filter(|(_, q)| !q.is_empty())
-            .max_by_key(|(_, q)| q.len())?;
-        let q = self.queues.get_mut(&width).unwrap();
-        let take = q.len().min(self.max_batch);
+        self.pop_batch_at(Instant::now())
+    }
+
+    /// `pop_batch` with an explicit clock — the deterministic core.
+    pub fn pop_batch_at(&mut self, now: Instant) -> Option<(u8, Vec<QueuedRequest>)> {
+        let width = self.schedule(now)?;
+        let batch = self.pop_for_width(width, self.max_batch);
+        Some((width, batch))
+    }
+
+    /// Decide which width runs next.  Forced (over-`max_wait`) queues
+    /// take absolute priority, oldest head first; otherwise the highest
+    /// score wins.  Strict comparisons over the width-ordered map make
+    /// every tie resolve to the lowest width.
+    fn schedule(&self, now: Instant) -> Option<u8> {
+        if let Some(w) = self.starving_width(now) {
+            return Some(w);
+        }
+        let mut best: Option<(f64, u8)> = None;
+        for (&w, q) in &self.queues {
+            let Some(head) = q.front() else { continue };
+            let fill = q.len().min(self.max_batch) as f64 / self.max_batch.max(1) as f64;
+            let wait = now.saturating_duration_since(head.enqueued_at).as_secs_f64();
+            let score = fill + self.policy.age_weight * wait;
+            if best.map_or(true, |(s, _)| score > s) {
+                best = Some((score, w));
+            }
+        }
+        best.map(|(_, w)| w)
+    }
+
+    /// The width whose head request has exceeded the anti-starvation
+    /// bound, if any (oldest head first, ties to the lowest width).
+    /// The server's continuous-batching refill consults this to stop
+    /// extending the current width's run when another width is overdue.
+    pub fn starving_width(&self, now: Instant) -> Option<u8> {
+        let mut worst: Option<(Duration, u8)> = None;
+        for (&w, q) in &self.queues {
+            let Some(head) = q.front() else { continue };
+            let wait = now.saturating_duration_since(head.enqueued_at);
+            if wait >= self.policy.max_wait && worst.map_or(true, |(d, _)| wait > d) {
+                worst = Some((wait, w));
+            }
+        }
+        worst.map(|(_, w)| w)
+    }
+
+    /// Pop up to `k` requests of one width, FIFO — the continuous
+    /// batching refill path.
+    pub fn pop_for_width(&mut self, width_m: u8, k: usize) -> Vec<QueuedRequest> {
+        let Some(q) = self.queues.get_mut(&width_m) else { return Vec::new() };
+        let take = q.len().min(k);
         let batch: Vec<QueuedRequest> = q.drain(..take).collect();
         self.len -= batch.len();
-        Some((width, batch))
+        batch
     }
 
     /// Queue depth per precision (metrics).
@@ -80,7 +197,7 @@ mod tests {
     use crate::serve::TaskClass;
 
     fn req(id: u64) -> Request {
-        Request { id, class: TaskClass::Other, prompt: vec![65], force_m: None }
+        Request::new(id, TaskClass::Other, vec![65])
     }
 
     #[test]
@@ -117,5 +234,83 @@ mod tests {
         assert!(b.push(req(2), 4).is_err());
         let _ = b.pop_batch();
         b.push(req(3), 4).unwrap();
+    }
+
+    #[test]
+    fn equal_depth_ties_break_on_lowest_width() {
+        // same arrival instant and depth for every queue -> scores are
+        // exactly equal -> ascending width order, deterministically.
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(4, 100);
+        for (i, w) in [8u8, 5, 3, 4].into_iter().enumerate() {
+            b.push_at(req(i as u64), w, t0).unwrap();
+        }
+        let now = t0 + Duration::from_millis(5);
+        let mut order = Vec::new();
+        while let Some((w, _)) = b.pop_batch_at(now) {
+            order.push(w);
+        }
+        assert_eq!(order, vec![3, 4, 5, 8]);
+    }
+
+    #[test]
+    fn schedule_is_deterministic_across_runs() {
+        // identical queue states must produce identical schedules,
+        // bit for bit — the seed batcher's HashMap broke this.
+        let t0 = Instant::now();
+        let build = || {
+            let mut b = DynamicBatcher::new(2, 100);
+            for i in 0..4u64 {
+                b.push_at(req(i), 4, t0 + Duration::from_millis(i)).unwrap();
+            }
+            for i in 4..6u64 {
+                b.push_at(req(i), 3, t0 + Duration::from_millis(i)).unwrap();
+            }
+            b.push_at(req(6), 8, t0).unwrap();
+            b
+        };
+        let drain = |mut b: DynamicBatcher| {
+            let now = t0 + Duration::from_millis(50);
+            let mut order = Vec::new();
+            while let Some((w, batch)) = b.pop_batch_at(now) {
+                for q in &batch {
+                    order.push((w, q.req.id));
+                }
+            }
+            order
+        };
+        assert_eq!(drain(build()), drain(build()));
+    }
+
+    #[test]
+    fn starving_queue_is_forced_to_front() {
+        // one lone m=3 request past max_wait beats a full m=4 queue.
+        let now = Instant::now();
+        let old = now.checked_sub(Duration::from_millis(600)).unwrap();
+        let fresh = now.checked_sub(Duration::from_millis(1)).unwrap();
+        let mut b = DynamicBatcher::new(8, 100);
+        b.push_at(req(0), 3, old).unwrap();
+        for i in 1..9 {
+            b.push_at(req(i), 4, fresh).unwrap();
+        }
+        assert_eq!(b.starving_width(now), Some(3));
+        let (w, batch) = b.pop_batch_at(now).unwrap();
+        assert_eq!(w, 3);
+        assert_eq!(batch[0].req.id, 0);
+        // once the starving request is out the deep queue runs again
+        let (w, _) = b.pop_batch_at(now).unwrap();
+        assert_eq!(w, 4);
+    }
+
+    #[test]
+    fn pop_for_width_is_fifo_and_bounded() {
+        let mut b = DynamicBatcher::new(8, 100);
+        for i in 0..5 {
+            b.push(req(i), 6).unwrap();
+        }
+        let got = b.pop_for_width(6, 3);
+        assert_eq!(got.iter().map(|q| q.req.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(b.len(), 2);
+        assert!(b.pop_for_width(7, 3).is_empty());
     }
 }

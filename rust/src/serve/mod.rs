@@ -6,22 +6,41 @@
 //!   E5M8; any lower precision is derived by `truncate()` and cached.
 //! * [`router`]  — task-class → precision policy (generation vs
 //!   understanding, paper intro).
-//! * [`batcher`] — dynamic batcher: queued requests are grouped by
-//!   precision and dispatched as full engine batches.
-//! * [`server`]  — ties the three together over the PJRT engine and
-//!   collects latency/throughput stats.
+//! * [`batcher`] — dynamic batcher + deadline/age-aware scheduler.
+//!   Each non-empty precision queue is scored
+//!   `fill_ratio + age_weight * oldest_wait_secs`; any queue whose head
+//!   has waited `max_wait` is scheduled next regardless of score (the
+//!   anti-starvation bound — in-flight decodes still finish first), and
+//!   every tie breaks on the lowest width over `BTreeMap` iteration —
+//!   the schedule is bit-for-bit deterministic.
+//! * [`backend`] — [`LogitsBackend`]: the one-step logits interface the
+//!   server generates through.  [`EngineHandle`] adapts the owned PJRT
+//!   engine; [`SimBackend`] is a deterministic in-process stand-in for
+//!   scheduler tests and serving benchmarks.
+//! * [`server`]  — continuous-batching generation engine.  A scheduled
+//!   batch is decoded for up to `max_new_tokens` tokens via repeated
+//!   `logits_step` calls (greedy or temperature sampling); rows freed by
+//!   finished requests are refilled FIFO from the same precision queue
+//!   between decode iterations, unless another precision has crossed the
+//!   anti-starvation bound — then the run ends and the scheduler picks
+//!   the overdue width.  Latency/throughput stats are collected from the
+//!   first moment of real work (idle time before traffic does not
+//!   deflate throughput).
 
+pub mod backend;
 pub mod batcher;
 pub mod router;
 pub mod server;
 pub mod store;
 
-pub use batcher::DynamicBatcher;
+pub use backend::{EngineHandle, LogitsBackend, SimBackend};
+pub use batcher::{DynamicBatcher, SchedPolicy};
 pub use router::{Router, TaskClass};
 pub use server::{Server, ServeStats};
 pub use store::PrecisionStore;
 
-/// A serving request: classify-or-continue over a token prompt.
+/// A serving request: generate up to `max_new_tokens` tokens from a
+/// token prompt (1 = classic next-token serving).
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -29,14 +48,43 @@ pub struct Request {
     pub prompt: Vec<i32>,
     /// explicit precision override (None = router decides)
     pub force_m: Option<u8>,
+    /// decode budget; generation stops early at EOS
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy argmax; > 0 = softmax temperature sampling
+    pub temperature: f32,
 }
 
-/// The response: next-token argmax plus timing.
+impl Request {
+    /// A single-token (next-token) request — the common case.
+    pub fn new(id: u64, class: TaskClass, prompt: Vec<i32>) -> Self {
+        Request { id, class, prompt, force_m: None, max_new_tokens: 1, temperature: 0.0 }
+    }
+
+    pub fn with_force_m(mut self, m: u8) -> Self {
+        self.force_m = Some(m);
+        self
+    }
+
+    pub fn with_max_new_tokens(mut self, n: usize) -> Self {
+        self.max_new_tokens = n.max(1);
+        self
+    }
+
+    pub fn with_temperature(mut self, t: f32) -> Self {
+        self.temperature = t;
+        self
+    }
+}
+
+/// The response: the generated tokens plus timing.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
     pub width_m: u8,
+    /// first generated token (kept for next-token callers)
     pub next_token: i32,
+    /// the full generation, `next_token` included
+    pub tokens: Vec<i32>,
     pub queue_ms: f64,
     pub compute_ms: f64,
 }

@@ -1,24 +1,49 @@
-//! The serving front-end: router + precision store + dynamic batcher over
-//! the PJRT engine.  Synchronous core (deterministic, unit-testable); the
-//! `multi_precision_serving` example wraps it in threads for a concurrent
-//! client demo.
+//! The serving front-end: router + precision store + scheduler over an
+//! owned logits backend, with a continuous-batching generation loop.
+//! Synchronous core (deterministic, unit-testable); the
+//! `multi_precision_serving` example wraps it in threads for a
+//! concurrent client demo.
+//!
+//! Request path: `submit` routes a request to a precision queue;
+//! `process_all` repeatedly asks the scheduler for the next precision
+//! batch and hands it to the generation loop.  The loop decodes every
+//! admitted row for up to `max_new_tokens` tokens (greedy or temperature
+//! sampling, EOS stops early), one `logits_step` per decode iteration
+//! over the engine's fixed (B, T) matrix; rows freed by finished
+//! requests are refilled FIFO from the same precision queue between
+//! iterations — continuous batching — unless another precision has
+//! crossed the scheduler's anti-starvation bound, in which case the run
+//! winds down so the overdue width is served next.
 
 use std::time::Instant;
 
-use crate::data::tokenizer::PAD;
+use crate::data::tokenizer::{EOS, PAD};
+use crate::data::Rng;
+use crate::infer::sampling;
 use crate::metrics::Summary;
-use crate::runtime::{Engine, Width};
+use crate::runtime::Width;
 
+use super::backend::{EngineHandle, LogitsBackend};
+use super::batcher::QueuedRequest;
 use super::{DynamicBatcher, PrecisionStore, Request, Response, Router};
 
 #[derive(Debug, Default, Clone)]
 pub struct ServeStats {
     pub served: u64,
     pub rejected: u64,
+    /// requests refused by validation (empty prompt)
+    pub invalid: u64,
+    /// scheduled precision runs (pop_batch dispatches)
     pub batches: u64,
+    /// engine forward calls (decode iterations across all runs)
+    pub decode_steps: u64,
+    pub tokens_generated: u64,
     pub queue_ms: Summary,
     pub compute_ms: Summary,
     pub per_width: Vec<(u8, u64)>,
+    /// wall time from the FIRST dispatched work to the end of the last
+    /// `process_all` — idle time before traffic arrives is not counted,
+    /// so `throughput_rps` reflects serving, not server uptime.
     pub wall_secs: f64,
 }
 
@@ -30,37 +55,93 @@ impl ServeStats {
             0.0
         }
     }
+
+    pub fn throughput_tps(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.tokens_generated as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
 }
 
-pub struct Server<'a> {
-    pub engine: &'a mut Engine,
+/// One in-flight batch row of the generation loop.
+struct ActiveRow {
+    id: u64,
+    /// prompt + generated tokens; the last `seq_len` form the window
+    context: Vec<i32>,
+    generated: Vec<i32>,
+    max_new_tokens: usize,
+    temperature: f32,
+    queue_ms: f64,
+    compute_ms: f64,
+}
+
+impl ActiveRow {
+    fn admit(q: QueuedRequest) -> Self {
+        let queue_ms = q.enqueued_at.elapsed().as_secs_f64() * 1e3;
+        let req = q.req;
+        ActiveRow {
+            id: req.id,
+            context: req.prompt,
+            generated: Vec::new(),
+            max_new_tokens: req.max_new_tokens.max(1),
+            temperature: req.temperature,
+            queue_ms,
+            compute_ms: 0.0,
+        }
+    }
+}
+
+pub struct Server<B: LogitsBackend = EngineHandle> {
+    backend: B,
     pub store: PrecisionStore,
     pub router: Router,
     pub batcher: DynamicBatcher,
     stats: ServeStats,
-    started: Instant,
+    /// set when the first batch is dispatched (NOT at construction —
+    /// the seed measured from `Server::new` and deflated throughput
+    /// whenever the server idled before traffic arrived)
+    first_work: Option<Instant>,
+    rng: Rng,
 }
 
-impl<'a> Server<'a> {
-    pub fn new(
-        engine: &'a mut Engine,
-        store: PrecisionStore,
-        router: Router,
-        batcher: DynamicBatcher,
-    ) -> Self {
+impl<B: LogitsBackend> Server<B> {
+    pub fn new(backend: B, store: PrecisionStore, router: Router, batcher: DynamicBatcher) -> Self {
         Server {
-            engine,
+            backend,
             store,
             router,
             batcher,
             stats: ServeStats::default(),
-            started: Instant::now(),
+            first_work: None,
+            rng: Rng::new(0x5EED),
         }
     }
 
+    /// Reseed the sampling RNG (temperature > 0 paths).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.rng = Rng::new(seed);
+        self
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
+    }
+
     /// Enqueue a request (routing decides the precision).  `false` =
-    /// rejected by backpressure.
+    /// rejected: empty prompts are invalid (there is no position to
+    /// read logits from — the seed argmaxed an all-PAD row and returned
+    /// garbage), and a full queue sheds by backpressure.
     pub fn submit(&mut self, req: Request) -> bool {
+        if req.prompt.is_empty() {
+            self.stats.invalid += 1;
+            return false;
+        }
         let m = self.router.route(req.class, req.force_m);
         match self.batcher.push(req, m) {
             Ok(()) => true,
@@ -71,71 +152,128 @@ impl<'a> Server<'a> {
         }
     }
 
-    /// Drain the queue completely, dispatching batches until empty.
+    /// Drain the queue completely: schedule precision runs until empty,
+    /// generating every admitted request to completion.
     pub fn process_all(&mut self) -> anyhow::Result<Vec<Response>> {
         let mut out = Vec::new();
+        let mut dispatched = false;
         while let Some((m, batch)) = self.batcher.pop_batch() {
-            out.extend(self.dispatch(m, batch)?);
+            dispatched = true;
+            if self.first_work.is_none() {
+                self.first_work = Some(Instant::now());
+            }
+            out.extend(self.run_generation(m, batch)?);
         }
-        self.stats.wall_secs = self.started.elapsed().as_secs_f64();
+        // only stamp the wall clock when this call did work — a no-op
+        // poll on an idle server must not stretch wall_secs and deflate
+        // throughput (the same bug class as measuring from `new`)
+        if dispatched {
+            if let Some(t) = self.first_work {
+                self.stats.wall_secs = t.elapsed().as_secs_f64();
+            }
+        }
         Ok(out)
     }
 
-    fn dispatch(
+    /// The continuous-batching generation loop for one precision run.
+    fn run_generation(
         &mut self,
         m: u8,
-        batch: Vec<super::batcher::QueuedRequest>,
+        batch: Vec<QueuedRequest>,
     ) -> anyhow::Result<Vec<Response>> {
-        let (bsz, seq_len) = self.engine.batch_shape();
-        let vocab = self.engine.vocab_size();
+        let (bsz, seq_len) = self.backend.batch_shape();
+        let vocab = self.backend.vocab_size();
         anyhow::ensure!(batch.len() <= bsz, "batch exceeds engine rows");
-        let t0 = Instant::now();
-        // single-master precision switch — this is the OTARo deployment
-        // property in action: no reload, just (cached) truncation
+        // single-master precision switch — the OTARo deployment property
+        // in action: no reload, just (cached) truncation
         let params = self.store.params_at(m).clone();
-        // build the token matrix; remember each row's last valid position
-        let mut tokens = vec![PAD; bsz * seq_len];
-        let mut last_pos = Vec::with_capacity(batch.len());
-        for (ri, q) in batch.iter().enumerate() {
-            let p = &q.req.prompt;
-            let n = p.len().min(seq_len);
-            tokens[ri * seq_len..ri * seq_len + n].copy_from_slice(&p[p.len() - n..]);
-            last_pos.push(n.saturating_sub(1));
-        }
-        let logits = self
-            .engine
-            .logits_step(&params, &tokens, Width::m(m))?;
-        let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
-
         self.stats.batches += 1;
-        let mut out = Vec::with_capacity(batch.len());
-        for (ri, q) in batch.into_iter().enumerate() {
-            let off = (ri * seq_len + last_pos[ri]) * vocab;
-            let row = &logits[off..off + vocab];
-            let next = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0 as i32;
-            let queue_ms = q.enqueued_at.elapsed().as_secs_f64() * 1e3 - compute_ms;
-            self.stats.served += 1;
-            self.stats.queue_ms.push(queue_ms.max(0.0));
-            self.stats.compute_ms.push(compute_ms);
-            if let Some(e) = self.stats.per_width.iter_mut().find(|e| e.0 == m) {
-                e.1 += 1;
-            } else {
-                self.stats.per_width.push((m, 1));
+
+        let mut rows: Vec<Option<ActiveRow>> = Vec::with_capacity(bsz);
+        for q in batch {
+            rows.push(Some(ActiveRow::admit(q)));
+        }
+        rows.resize_with(bsz, || None);
+
+        let mut out = Vec::new();
+        let mut tokens = vec![PAD; bsz * seq_len];
+        while rows.iter().any(Option::is_some) {
+            // build the token matrix from each row's context window
+            for t in tokens.iter_mut() {
+                *t = PAD;
             }
-            out.push(Response {
-                id: q.req.id,
-                width_m: m,
-                next_token: next,
-                queue_ms: queue_ms.max(0.0),
-                compute_ms,
-            });
+            let mut last_pos = vec![0usize; bsz];
+            for (ri, row) in rows.iter().enumerate() {
+                let Some(r) = row else { continue };
+                let n = r.context.len().min(seq_len);
+                tokens[ri * seq_len..ri * seq_len + n]
+                    .copy_from_slice(&r.context[r.context.len() - n..]);
+                last_pos[ri] = n.saturating_sub(1);
+            }
+
+            let t0 = Instant::now();
+            let logits = self.backend.logits_step(&params, &tokens, Width::m(m))?;
+            let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+            self.stats.decode_steps += 1;
+
+            // sample one token per active row; finalize finished rows
+            for ri in 0..bsz {
+                let mut finished = false;
+                if let Some(r) = rows[ri].as_mut() {
+                    let off = (ri * seq_len + last_pos[ri]) * vocab;
+                    let next = sampling::sample(
+                        &logits[off..off + vocab],
+                        r.temperature,
+                        &mut self.rng,
+                    ) as i32;
+                    r.context.push(next);
+                    r.generated.push(next);
+                    r.compute_ms += step_ms;
+                    self.stats.tokens_generated += 1;
+                    finished = r.generated.len() >= r.max_new_tokens || next == EOS;
+                }
+                if finished {
+                    let r = rows[ri].take().expect("row just borrowed");
+                    self.finalize(m, r, &mut out);
+                }
+            }
+
+            // continuous batching: refill freed rows FIFO from the same
+            // precision queue — unless another width is overdue, then
+            // let this run wind down so the scheduler can serve it.
+            let now = Instant::now();
+            let yield_to_other =
+                self.batcher.starving_width(now).map_or(false, |w| w != m);
+            if !yield_to_other {
+                for ri in 0..bsz {
+                    if rows[ri].is_none() {
+                        if let Some(q) = self.batcher.pop_for_width(m, 1).pop() {
+                            rows[ri] = Some(ActiveRow::admit(q));
+                        }
+                    }
+                }
+            }
         }
         Ok(out)
+    }
+
+    fn finalize(&mut self, m: u8, row: ActiveRow, out: &mut Vec<Response>) {
+        self.stats.served += 1;
+        self.stats.queue_ms.push(row.queue_ms.max(0.0));
+        self.stats.compute_ms.push(row.compute_ms);
+        if let Some(e) = self.stats.per_width.iter_mut().find(|e| e.0 == m) {
+            e.1 += 1;
+        } else {
+            self.stats.per_width.push((m, 1));
+        }
+        out.push(Response {
+            id: row.id,
+            width_m: m,
+            next_token: row.generated.first().copied().unwrap_or(PAD),
+            tokens: row.generated,
+            queue_ms: row.queue_ms.max(0.0),
+            compute_ms: row.compute_ms,
+        });
     }
 
     pub fn stats(&self) -> &ServeStats {

@@ -67,14 +67,18 @@ impl PrecisionStore {
     }
 
     /// Bytes a per-precision model zoo would need for the same ladder —
-    /// the storage overhead OTARo eliminates.
+    /// the storage overhead OTARo eliminates.  Each tensor's significand
+    /// and exponent bits are summed and rounded up to bytes ONCE,
+    /// matching per-tensor `packed_bytes()` accounting — the seed's
+    /// separate integer divisions floored away fractional significand
+    /// and exponent bytes twice per tensor.
     pub fn zoo_bytes(&self, widths: &[u8]) -> usize {
         widths
             .iter()
             .map(|&m| {
                 self.master
                     .iter()
-                    .map(|t| t.len * (1 + m as usize) / 8 + t.n_groups() * 5 / 8)
+                    .map(|t| (t.len * (1 + m as usize) + t.n_groups() * 5).div_ceil(8))
                     .sum::<usize>()
             })
             .sum()

@@ -158,32 +158,38 @@ fn mc_scoring_runs_and_is_bounded() {
 #[test]
 fn serving_stack_end_to_end() {
     let Some(dir) = artifacts() else { return };
-    let mut engine = Engine::new(dir).unwrap();
+    let engine = Engine::new(dir).unwrap();
     let params = engine.init_params().unwrap();
+    let vocab = engine.vocab_size();
     let store = PrecisionStore::from_params(&params);
     let router = Router::new(otaro::config::ServeConfig::default());
-    let batcher = DynamicBatcher::new(engine.batch_shape().0, 64);
-    let mut server = Server::new(&mut engine, store, router, batcher);
+    let batcher = DynamicBatcher::new(engine.batch_size(), 64);
+    let mut server = Server::new(engine.into_handle(), store, router, batcher);
     let tok = otaro::data::Tokenizer::new();
     for i in 0..10u64 {
         let class = if i % 2 == 0 { TaskClass::Generation } else { TaskClass::Understanding };
-        assert!(server.submit(Request {
-            id: i,
-            class,
-            prompt: tok.encode_with_bos("le mika"),
-            force_m: None,
-        }));
+        // even ids decode multiple tokens through the generation loop
+        let max_new = if i % 2 == 0 { 3 } else { 1 };
+        let req = Request::new(i, class, tok.encode_with_bos("le mika"))
+            .with_max_new_tokens(max_new);
+        assert!(server.submit(req));
     }
     let responses = server.process_all().unwrap();
     assert_eq!(responses.len(), 10);
     for r in &responses {
-        assert!(r.next_token >= 0 && (r.next_token as usize) < server.engine.vocab_size());
+        assert!(r.next_token >= 0 && (r.next_token as usize) < vocab);
+        assert!(!r.tokens.is_empty() && r.tokens.len() <= 3);
+        assert_eq!(r.next_token, r.tokens[0]);
         assert!(r.compute_ms > 0.0);
     }
     // both router classes must have produced both precisions
     let stats = server.stats();
     assert!(stats.per_width.len() >= 2, "{:?}", stats.per_width);
     assert_eq!(stats.served, 10);
+    assert!(stats.tokens_generated >= 10);
+    // empty prompts are invalid, not servable garbage
+    assert!(!server.submit(Request::new(99, TaskClass::Other, vec![])));
+    assert_eq!(server.stats().invalid, 1);
 }
 
 #[test]

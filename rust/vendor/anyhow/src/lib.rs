@@ -1,0 +1,137 @@
+//! Minimal offline stand-in for the `anyhow` crate, covering the subset
+//! this repository uses: `anyhow::Result`, the `anyhow!` / `bail!` /
+//! `ensure!` macros, and `?`-conversion from any `std::error::Error`.
+//!
+//! Deliberately NOT implemented: `Context`, downcasting, backtraces.
+//! The API is source-compatible with real anyhow for the call sites in
+//! this crate, so swapping in the real dependency later is a one-line
+//! `Cargo.toml` change.
+
+use std::fmt;
+
+/// Boxed dynamic error with a `Display`-first `Debug`, mirroring
+/// anyhow's behaviour of printing the message (not the struct) when a
+/// `main() -> Result<(), Error>` unwinds.
+pub struct Error(Box<dyn std::error::Error + Send + Sync + 'static>);
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error(Box::new(MessageError(message.to_string())))
+    }
+
+    /// The underlying error, for callers that want to inspect it.
+    pub fn inner(&self) -> &(dyn std::error::Error + Send + Sync + 'static) {
+        &*self.0
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+// NOTE: `Error` itself must NOT implement `std::error::Error`, or this
+// blanket conversion would conflict with the identity `From` impl.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(Box::new(e))
+    }
+}
+
+/// String-backed error used by the `anyhow!` macro.
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for MessageError {}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or anything `Display`).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fails() -> Result<String> {
+        Ok(std::fs::read_to_string("/definitely/not/a/path")?)
+    }
+
+    fn checked(v: usize) -> Result<usize> {
+        ensure!(v < 10, "v too big: {v}");
+        if v == 7 {
+            bail!("unlucky {}", v);
+        }
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fails().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_format_messages() {
+        let e: Error = anyhow!("x={} y={}", 1, 2);
+        assert_eq!(e.to_string(), "x=1 y=2");
+        assert_eq!(checked(3).unwrap(), 3);
+        assert_eq!(checked(12).unwrap_err().to_string(), "v too big: 12");
+        assert_eq!(checked(7).unwrap_err().to_string(), "unlucky 7");
+    }
+}

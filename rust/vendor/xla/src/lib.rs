@@ -1,0 +1,207 @@
+//! Compile-time stand-in for the PJRT/XLA Rust bindings.
+//!
+//! The real serving/training engine loads AOT-compiled HLO through a
+//! PJRT plugin; that shared library is not present in the offline image,
+//! so this stub keeps the crate COMPILING with the exact API surface
+//! `runtime::engine` uses, while erroring cleanly at runtime when a
+//! client is requested.  Everything that can work host-side (literal
+//! construction, reshape, round-trip to `Vec<T>`) does work, so unit
+//! tests of literal plumbing are meaningful; only `PjRtClient::cpu()`
+//! and executable compilation/execution report unavailability.
+
+use std::fmt;
+
+/// Error type mirroring the bindings' stringly-typed errors.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error(msg.into())
+    }
+
+    fn unavailable(what: &str) -> Self {
+        Error(format!(
+            "{what}: PJRT runtime not available in this offline build \
+             (vendored xla stub; install a PJRT plugin and swap the real bindings in)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host-side literal: typed element buffer + dims.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Elems,
+    dims: Vec<i64>,
+}
+
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Elems {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types a [`Literal`] can hold (sealed).
+pub trait NativeType: Copy + private::Sealed {
+    fn wrap(v: Vec<Self>) -> Elems;
+    fn unwrap(e: &Elems) -> Option<Vec<Self>>;
+}
+
+mod private {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Elems {
+        Elems::F32(v)
+    }
+    fn unwrap(e: &Elems) -> Option<Vec<Self>> {
+        match e {
+            Elems::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Elems {
+        Elems::I32(v)
+    }
+    fn unwrap(e: &Elems) -> Option<Vec<Self>> {
+        match e {
+            Elems::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        let n = v.len() as i64;
+        Literal { data: T::wrap(v.to_vec()), dims: vec![n] }
+    }
+
+    fn len(&self) -> usize {
+        match &self.data {
+            Elems::F32(v) => v.len(),
+            Elems::I32(v) => v.len(),
+            Elems::Tuple(v) => v.len(),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.len() {
+            return Err(Error::new(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| Error::new("to_vec: element type mismatch"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            Elems::Tuple(v) => Ok(v.clone()),
+            _ => Err(Error::new("to_tuple: literal is not a tuple")),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (text retained; the stub cannot execute it).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("read {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        XlaComputation { _proto: proto.clone() }
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("PJRT runtime not available"));
+    }
+}
