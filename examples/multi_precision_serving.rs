@@ -11,8 +11,9 @@ use std::sync::mpsc;
 use otaro::config::ServeConfig;
 use otaro::data::{Lang, Rng, Tokenizer};
 use otaro::runtime::Engine;
+use otaro::sefp::Precision;
 use otaro::serve::{
-    DynamicBatcher, PrecisionStore, Request, Router, SchedPolicy, Server, TaskClass,
+    DynamicBatcher, PrecisionLadder, Request, Router, SchedPolicy, Server, TaskClass,
 };
 
 fn main() -> anyhow::Result<()> {
@@ -31,12 +32,14 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    let store = PrecisionStore::from_params(&params);
+    let serve_cfg = ServeConfig::default();
+    let ladder = PrecisionLadder::from_params(&params)
+        .with_budget(serve_cfg.ladder_budget_bytes);
     println!(
         "single SEFP master: {} KiB (vs {} KiB for a 6-precision model zoo) — {:.1}x smaller",
-        store.master_bytes() / 1024,
-        store.zoo_bytes(&[8, 7, 6, 5, 4, 3]) / 1024,
-        store.zoo_bytes(&[8, 7, 6, 5, 4, 3]) as f64 / store.master_bytes() as f64
+        ladder.master_bytes() / 1024,
+        ladder.zoo_bytes(&Precision::LADDER) / 1024,
+        ladder.zoo_bytes(&Precision::LADDER) as f64 / ladder.master_bytes() as f64
     );
 
     // concurrent clients produce requests into a channel
@@ -73,11 +76,10 @@ fn main() -> anyhow::Result<()> {
     drop(tx);
 
     // serving loop: drain the channel into the scheduler, dispatch
-    let serve_cfg = ServeConfig::default();
     let router = Router::new(serve_cfg.clone());
     let batcher = DynamicBatcher::new(engine.batch_size(), 256)
         .with_policy(SchedPolicy::from_config(&serve_cfg));
-    let mut server = Server::new(engine.into_handle(), store, router, batcher);
+    let mut server = Server::new(engine.into_handle(), ladder, router, batcher);
     let mut responses = Vec::new();
     while let Ok(req) = rx.recv() {
         if !server.submit(req) {
@@ -106,7 +108,12 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "per-precision request counts (router policy: gen->E5M8, und->E5M4, other->E5M6): {:?}",
-        stats.per_width
+        stats.per_precision
+    );
+    println!(
+        "ladder switches: {} hits / {} misses / {} evictions; derived views resident: {} B",
+        stats.switch_hits, stats.switch_misses, stats.switch_evictions,
+        stats.ladder_resident_bytes
     );
     println!(
         "compute per batch: mean {:.1} ms; queue wait: mean {:.1} ms",
@@ -114,9 +121,10 @@ fn main() -> anyhow::Result<()> {
         stats.queue_ms.mean()
     );
     // precision switch costs (cold, no cache)
-    let store2 = PrecisionStore::from_params(&params);
+    let ladder2 = PrecisionLadder::from_params(&params);
     for m in [8u8, 5, 3] {
-        println!("cold precision switch to E5M{m}: {:.2} ms", store2.switch_cost_ms(m));
+        let p = Precision::of(m);
+        println!("cold precision switch to {p}: {:.2} ms", ladder2.switch_cost_ms(p));
     }
     println!("\nserving demo OK");
     Ok(())

@@ -13,6 +13,7 @@ use otaro::data::{corpus, Lang, StreamBatcher};
 use otaro::eval::ppl::perplexity;
 use otaro::metrics::MetricsSink;
 use otaro::runtime::{Engine, Width};
+use otaro::sefp::Precision;
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -67,7 +68,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- phase 3: evaluate the ONE model at every precision -------------
     println!("\nfinal PPL across the ladder (one model, once tuned):");
-    for w in [Width::FP, Width::m(8), Width::m(7), Width::m(6), Width::m(5), Width::m(4), Width::m(3)] {
+    for w in std::iter::once(Width::FP).chain(Precision::LADDER.map(Width::m)) {
         let ppl = perplexity(&mut engine, &params, &test, w)?;
         println!("  {:6} ppl = {ppl:.3}", w.label());
     }

@@ -10,6 +10,7 @@
 use otaro::data::tokenizer::{EOS, PAD};
 use otaro::data::{lang::Lang, Tokenizer};
 use otaro::runtime::{Engine, ParamStore, Width};
+use otaro::sefp::Precision;
 
 fn generate(
     engine: &mut Engine,
@@ -74,7 +75,8 @@ fn main() -> anyhow::Result<()> {
 
     for prompt in &prompts {
         println!("prompt {prompt:?}");
-        for width in [Width::FP, Width::m(8), Width::m(6), Width::m(4), Width::m(3)] {
+        let quant = [8u8, 6, 4, 3].map(|m| Width::m(Precision::of(m)));
+        for width in std::iter::once(Width::FP).chain(quant) {
             let out = generate(&mut engine, &params, prompt, width, 20)?;
             println!("  {:6} -> {}", width.label(), out.trim());
         }

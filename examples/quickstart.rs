@@ -8,20 +8,21 @@
 
 use otaro::data::{corpus, Lang, StreamBatcher};
 use otaro::runtime::{Engine, Width};
-use otaro::sefp::{Rounding, SefpTensor, GROUP_SIZE};
+use otaro::sefp::{Precision, SefpSpec, SefpTensor};
 
 fn main() -> anyhow::Result<()> {
     // --- 1. the format ---------------------------------------------------
     let mut rng = otaro::data::Rng::new(7);
     let weights: Vec<f32> = (0..256).map(|_| rng.normal() as f32 * 0.1).collect();
-    let master = SefpTensor::encode(&weights, 8, GROUP_SIZE, Rounding::Trunc);
+    let spec = SefpSpec::new(Precision::of(8));
+    let master = SefpTensor::encode(&weights, &spec);
     println!("encoded {} weights at E5M8: {} groups, {} packed bytes", master.len,
              master.n_groups(), master.ideal_bits() / 8);
 
     // --- 2. the ladder: ONE model, every precision -----------------------
-    for m in [7u8, 6, 5, 4, 3] {
-        let t = master.truncate(m); // integer shifts only — no floats touched
-        let direct = SefpTensor::encode(&weights, m, GROUP_SIZE, Rounding::Trunc);
+    for p in &Precision::LADDER[1..] {
+        let t = master.truncate(*p); // integer shifts only — no floats touched
+        let direct = SefpTensor::encode(&weights, &spec.at(*p));
         let err: f32 = t
             .decode()
             .iter()
@@ -29,7 +30,7 @@ fn main() -> anyhow::Result<()> {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max);
         assert_eq!(t.decode(), direct.decode(), "truncation == direct encode");
-        println!("  E5M{m}: max |Q(w)-w| = {err:.6}  (truncated from E5M8, bit-exact)");
+        println!("  {p}: max |Q(w)-w| = {err:.6}  (truncated from E5M8, bit-exact)");
     }
 
     // --- 3. the engine: eval loss across the ladder ----------------------
@@ -46,7 +47,8 @@ fn main() -> anyhow::Result<()> {
     let mut batcher = StreamBatcher::new(test, b, t, 1);
     let batch = batcher.next_batch();
     println!("\neval loss per precision (init params, one batch):");
-    for w in [Width::FP, Width::m(8), Width::m(6), Width::m(4), Width::m(3)] {
+    let widths = [8u8, 6, 4, 3].map(|m| Width::m(Precision::of(m)));
+    for w in std::iter::once(Width::FP).chain(widths) {
         let loss = engine.eval_step(&params, &batch, w)?;
         println!("  {:6} loss = {loss:.4}", w.label());
     }

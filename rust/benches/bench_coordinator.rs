@@ -4,12 +4,13 @@
 
 use otaro::benchutil::{black_box, group, Bench};
 use otaro::coordinator::{Bps, Laa, LaaAction, UniformSampler};
-use otaro::sefp::{PackedSefp, Rounding, SefpTensor, GROUP_SIZE};
+use otaro::runtime::Width;
+use otaro::sefp::{PackedSefp, Precision, SefpSpec, SefpTensor};
 use otaro::serve::DynamicBatcher;
 
 fn main() {
     let mut b = Bench::new();
-    let widths = [8u8, 7, 6, 5, 4, 3];
+    let widths = Precision::LADDER;
 
     group("BPS");
     {
@@ -28,9 +29,10 @@ fn main() {
     group("LAA accumulate (~476k params)");
     let grads: Vec<Vec<f32>> = vec![vec![0.01f32; 476_000 / 4]; 4];
     {
-        let mut laa = Laa::new(usize::MAX >> 1, 4); // never flush
+        let mut laa = Laa::new(usize::MAX >> 1, Precision::of(4)); // never flush
+        let m3 = Width::m(Precision::of(3));
         b.run_elems("laa_observe_m3", 476_000, || {
-            match laa.observe(3, black_box(grads.clone())) {
+            match laa.observe(m3, black_box(grads.clone())) {
                 LaaAction::Deferred { filled } => filled,
                 _ => unreachable!(),
             }
@@ -43,7 +45,7 @@ fn main() {
         let mut db = DynamicBatcher::new(8, 1024);
         for i in 0..64u64 {
             let req = otaro::serve::Request::new(i, otaro::serve::TaskClass::Other, vec![65, 66]);
-            db.push(req, (3 + (i % 6)) as u8).unwrap();
+            db.push(req, Precision::of((3 + (i % 6)) as u8)).unwrap();
         }
         let mut n = 0;
         while let Some((_, batch)) = db.pop_batch() {
@@ -55,13 +57,15 @@ fn main() {
     group("precision switch on 1M-element tensor");
     let mut rng = otaro::data::Rng::new(5);
     let w: Vec<f32> = (0..1 << 20).map(|_| rng.normal() as f32 * 0.1).collect();
-    let t8 = SefpTensor::encode(&w, 8, GROUP_SIZE, Rounding::Trunc);
+    let t8 = SefpTensor::encode(&w, &SefpSpec::new(Precision::of(8)));
     let p8 = PackedSefp::from_tensor(&t8);
-    b.run_elems("tensor_truncate_to_m4", 1 << 20, || black_box(&t8).truncate(4));
-    b.run_elems("packed_truncate_to_m4", 1 << 20, || black_box(&p8).truncate(4));
-    b.run_elems("truncate_plus_decode", 1 << 20, || black_box(&t8).truncate(4).decode());
+    let m4 = Precision::of(4);
+    b.run_elems("tensor_truncate_to_m4", 1 << 20, || black_box(&t8).truncate(m4));
+    b.run_elems("packed_truncate_to_m4", 1 << 20, || black_box(&p8).truncate(m4));
+    b.run_elems("truncate_plus_decode", 1 << 20, || black_box(&t8).truncate(m4).decode());
+    let spec4 = SefpSpec::new(m4);
     b.run_elems("full_reencode_baseline", 1 << 20, || {
-        SefpTensor::encode(black_box(&w), 4, GROUP_SIZE, Rounding::Trunc)
+        SefpTensor::encode(black_box(&w), &spec4)
     });
 
     println!(

@@ -4,6 +4,7 @@
 use otaro::benchutil::{group, Bench};
 use otaro::data::{corpus, Lang, StreamBatcher};
 use otaro::runtime::{Engine, Width};
+use otaro::sefp::Precision;
 
 fn main() {
     let artifacts = std::path::Path::new("artifacts");
@@ -24,21 +25,22 @@ fn main() {
     b.max_iters = 60;
 
     group("engine train_step");
-    for w in [Width::FP, Width::m(8), Width::m(4), Width::m(3)] {
+    let quant = |m: u8| Width::m(Precision::of(m));
+    for w in [Width::FP, quant(8), quant(4), quant(3)] {
         b.run(&format!("train_{}", w.tag()), || {
             engine.train_step(&params, &batch, w).unwrap()
         });
     }
 
     group("engine eval_step");
-    for w in [Width::FP, Width::m(4)] {
+    for w in [Width::FP, quant(4)] {
         b.run(&format!("eval_{}", w.tag()), || {
             engine.eval_step(&params, &batch, w).unwrap()
         });
     }
 
     group("engine logits_step");
-    for w in [Width::m(8), Width::m(3)] {
+    for w in [quant(8), quant(3)] {
         b.run(&format!("logits_{}", w.tag()), || {
             engine.logits_step(&params, &batch.tokens, w).unwrap()
         });

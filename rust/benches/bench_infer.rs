@@ -4,6 +4,7 @@
 use otaro::benchutil::{black_box, group, Bench};
 use otaro::data::Rng;
 use otaro::infer::{DecoderSim, DecoderWeights, DenseLinear, QuantLinear, SimConfig};
+use otaro::sefp::{Precision, SefpSpec};
 
 fn dense(in_dim: usize, out_dim: usize) -> DenseLinear {
     let mut rng = Rng::new(7);
@@ -25,14 +26,14 @@ fn main() {
     let n = (1024 * 1024) as u64;
     b.run_elems("f32_dense", n, || d.matvec(black_box(&x), black_box(&mut y)));
     for m in [8u8, 4, 3] {
-        let q = QuantLinear::from_dense(&d, m, 64);
+        let q = QuantLinear::from_dense(&d, &SefpSpec::new(Precision::of(m)));
         b.run_elems(&format!("sefp_m{m}"), n, || q.matvec(black_box(&x), black_box(&mut y)));
     }
 
     group("decode_step llama8b/16 sim");
     let cfg = SimConfig::llama8b_scaled(16);
     let mut dense_sim = DecoderSim::new(cfg, DecoderWeights::Dense, 1);
-    let mut sefp_sim = DecoderSim::new(cfg, DecoderWeights::Sefp(4), 1);
+    let mut sefp_sim = DecoderSim::new(cfg, DecoderWeights::Sefp(Precision::of(4)), 1);
     // prefill so attention reads a realistic cache
     let _ = dense_sim.decode_throughput_prefilled(1, cfg.context, 1);
     let _ = sefp_sim.decode_throughput_prefilled(1, cfg.context, 1);

@@ -4,7 +4,7 @@
 
 use otaro::benchutil::{black_box, group, Bench};
 use otaro::data::Rng;
-use otaro::sefp::{PackedSefp, Rounding, SefpTensor, GROUP_SIZE};
+use otaro::sefp::{PackedSefp, Precision, Rounding, SefpSpec, SefpTensor};
 
 fn weights(n: usize) -> Vec<f32> {
     let mut rng = Rng::new(42);
@@ -18,29 +18,33 @@ fn main() {
 
     group("sefp_encode (65536 elems)");
     for m in [8u8, 4, 3] {
+        let spec = SefpSpec::new(Precision::of(m));
         b.run_elems(&format!("encode_m{m}"), n, || {
-            SefpTensor::encode(black_box(&w), m, GROUP_SIZE, Rounding::Trunc)
+            SefpTensor::encode(black_box(&w), &spec)
         });
     }
+    let nearest = SefpSpec::new(Precision::of(4)).with_rounding(Rounding::Nearest);
     b.run_elems("encode_m4_nearest", n, || {
-        SefpTensor::encode(black_box(&w), 4, GROUP_SIZE, Rounding::Nearest)
+        SefpTensor::encode(black_box(&w), &nearest)
     });
 
     group("sefp_encode group-size ablation (m=4)");
     for gs in [32usize, 64, 128] {
+        let spec = SefpSpec::new(Precision::of(4)).with_group_size(gs);
         b.run_elems(&format!("encode_g{gs}"), n, || {
-            SefpTensor::encode(black_box(&w), 4, gs, Rounding::Trunc)
+            SefpTensor::encode(black_box(&w), &spec)
         });
     }
 
     group("sefp_truncate (the precision switch)");
-    let t8 = SefpTensor::encode(&w, 8, GROUP_SIZE, Rounding::Trunc);
+    let t8 = SefpTensor::encode(&w, &SefpSpec::new(Precision::of(8)));
     for m in [7u8, 4, 3] {
-        b.run_elems(&format!("truncate_m8_to_m{m}"), n, || black_box(&t8).truncate(m));
+        let p = Precision::of(m);
+        b.run_elems(&format!("truncate_m8_to_m{m}"), n, || black_box(&t8).truncate(p));
     }
 
     group("sefp_decode");
-    let t4 = SefpTensor::encode(&w, 4, GROUP_SIZE, Rounding::Trunc);
+    let t4 = SefpTensor::encode(&w, &SefpSpec::new(Precision::of(4)));
     b.run_elems("decode_m4", n, || black_box(&t4).decode());
     b.run_elems("decode_m8", n, || black_box(&t8).decode());
 
@@ -49,7 +53,7 @@ fn main() {
     let p8 = PackedSefp::from_tensor(&t8);
     b.run_elems("pack_m4", n, || PackedSefp::from_tensor(black_box(&t4)));
     b.run_elems("unpack_m4", n, || black_box(&p4).to_tensor());
-    b.run_elems("truncate_packed_m8_to_m4", n, || black_box(&p8).truncate(4));
+    b.run_elems("truncate_packed_m8_to_m4", n, || black_box(&p8).truncate(Precision::of(4)));
 
     println!(
         "\nencode->truncate speedup at m=4: {:.1}x (switch vs re-encode)",

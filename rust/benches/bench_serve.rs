@@ -11,11 +11,12 @@ use otaro::benchutil::{black_box, group, rate, Bench};
 use otaro::config::ServeConfig;
 use otaro::data::Rng;
 use otaro::runtime::ParamStore;
+use otaro::sefp::Precision;
 use otaro::serve::{
-    DynamicBatcher, PrecisionStore, Request, Router, SchedPolicy, Server, SimBackend, TaskClass,
+    DynamicBatcher, PrecisionLadder, Request, Router, SchedPolicy, Server, SimBackend, TaskClass,
 };
 
-fn store() -> PrecisionStore {
+fn ladder(cfg: &ServeConfig) -> PrecisionLadder {
     let mut rng = Rng::new(11);
     let params = ParamStore {
         tensors: vec![(0..4096).map(|_| rng.normal() as f32 * 0.1).collect(), vec![1.0; 64]],
@@ -23,7 +24,7 @@ fn store() -> PrecisionStore {
         shapes: vec![vec![64, 64], vec![64]],
         quantized: vec![true, false],
     };
-    PrecisionStore::from_params(&params)
+    PrecisionLadder::from_params(&params).with_budget(cfg.ladder_budget_bytes)
 }
 
 fn mixed_request(rng: &mut Rng, id: u64) -> Request {
@@ -35,7 +36,9 @@ fn mixed_request(rng: &mut Rng, id: u64) -> Request {
         _ => (3, 8),
     };
     let prompt: Vec<i32> = (0..rng.below(24) + 4).map(|_| rng.below(320) as i32).collect();
-    Request::new(id, TaskClass::Other, prompt).with_force_m(m).with_max_new_tokens(max_new)
+    Request::new(id, TaskClass::Other, prompt)
+        .with_precision(Precision::of(m))
+        .with_max_new_tokens(max_new)
 }
 
 fn main() {
@@ -48,7 +51,7 @@ fn main() {
         let mut rng = Rng::new(3);
         for i in 0..64u64 {
             let req = Request::new(i, TaskClass::Other, vec![65, 66]);
-            db.push(req, [3u8, 4, 6, 8][rng.below(4)]).unwrap();
+            db.push(req, Precision::of([3u8, 4, 6, 8][rng.below(4)])).unwrap();
         }
         let mut n = 0;
         while let Some((_, batch)) = db.pop_batch() {
@@ -63,7 +66,7 @@ fn main() {
         let batcher = DynamicBatcher::new(8, usize::MAX)
             .with_policy(SchedPolicy::from_config(&serve_cfg));
         let mut server =
-            Server::new(backend, store(), Router::new(serve_cfg.clone()), batcher);
+            Server::new(backend, ladder(&serve_cfg), Router::new(serve_cfg.clone()), batcher);
         let mut rng = Rng::new(17);
         for i in 0..n_requests {
             assert!(server.submit(mixed_request(&mut rng, i)));
@@ -83,7 +86,8 @@ fn main() {
     let backend = SimBackend::new(8, 32, 320);
     let batcher =
         DynamicBatcher::new(8, 4096).with_policy(SchedPolicy::from_config(&serve_cfg));
-    let mut server = Server::new(backend, store(), Router::new(serve_cfg.clone()), batcher);
+    let mut server =
+        Server::new(backend, ladder(&serve_cfg), Router::new(serve_cfg.clone()), batcher);
     let mut rng = Rng::new(23);
     let bursts = 200u64;
     let per_burst = 16u64;
@@ -105,7 +109,12 @@ fn main() {
         stats.batches,
         stats.queue_ms.mean(),
         stats.compute_ms.mean(),
-        stats.per_width
+        stats.per_precision
+    );
+    println!(
+        "ladder switches: {} hits / {} misses / {} evictions (mean derive {:.3} ms)",
+        stats.switch_hits, stats.switch_misses, stats.switch_evictions,
+        stats.switch_ms.mean()
     );
     println!(
         "server-side throughput accounting: {:.1} req/s / {:.1} tok/s over {:.3}s of work",

@@ -4,15 +4,21 @@
 //! mantissa widths oscillate harder: the mechanism behind the gradient
 //! noise LAA suppresses.
 
-use crate::sefp::{epsilon_sawtooth, Rounding};
+use crate::sefp::{epsilon_sawtooth, Precision, Rounding};
 
 /// Sample ε(ω) on a uniform grid over [lo, hi]; returns (ω, ε) pairs.
-pub fn epsilon_curve(m: u8, lo: f32, hi: f32, n: usize, rounding: Rounding) -> Vec<(f32, f32)> {
+pub fn epsilon_curve(
+    p: Precision,
+    lo: f32,
+    hi: f32,
+    n: usize,
+    rounding: Rounding,
+) -> Vec<(f32, f32)> {
     assert!(n >= 2);
     (0..n)
         .map(|i| {
             let w = lo + (hi - lo) * i as f32 / (n - 1) as f32;
-            (w, epsilon_sawtooth(w, m, rounding))
+            (w, epsilon_sawtooth(w, p, rounding))
         })
         .collect()
 }
@@ -49,9 +55,9 @@ mod tests {
     #[test]
     fn amplitude_scales_with_width() {
         // amplitude(m) ≈ 1/2^m under rounding (±half step) and truncation
-        let a3 = amplitude(&epsilon_curve(3, 0.0, 1.0, 4001, Rounding::Trunc));
-        let a5 = amplitude(&epsilon_curve(5, 0.0, 1.0, 4001, Rounding::Trunc));
-        let a8 = amplitude(&epsilon_curve(8, 0.0, 1.0, 4001, Rounding::Trunc));
+        let a3 = amplitude(&epsilon_curve(Precision::of(3), 0.0, 1.0, 4001, Rounding::Trunc));
+        let a5 = amplitude(&epsilon_curve(Precision::of(5), 0.0, 1.0, 4001, Rounding::Trunc));
+        let a8 = amplitude(&epsilon_curve(Precision::of(8), 0.0, 1.0, 4001, Rounding::Trunc));
         assert!(a3 > a5 && a5 > a8, "{a3} {a5} {a8}");
         assert!((a3 - 1.0 / 8.0).abs() < 0.02, "{a3}");
     }
@@ -59,19 +65,19 @@ mod tests {
     #[test]
     fn periodicity() {
         // ε repeats with period 1/2^m
-        let m = 4;
+        let p = Precision::of(4);
         let period = 1.0 / 16.0;
         for k in 0..10 {
             let w = 0.013 + k as f32 * period;
-            let e0 = crate::sefp::epsilon_sawtooth(0.013, m, Rounding::Trunc);
-            let ek = crate::sefp::epsilon_sawtooth(w, m, Rounding::Trunc);
+            let e0 = crate::sefp::epsilon_sawtooth(0.013, p, Rounding::Trunc);
+            let ek = crate::sefp::epsilon_sawtooth(w, p, Rounding::Trunc);
             assert!((e0 - ek).abs() < 1e-5, "k={k}");
         }
     }
 
     #[test]
     fn ascii_plot_shape() {
-        let p = ascii_plot(&epsilon_curve(3, 0.0, 0.5, 200, Rounding::Trunc), 8, 60);
+        let p = ascii_plot(&epsilon_curve(Precision::of(3), 0.0, 0.5, 200, Rounding::Trunc), 8, 60);
         assert_eq!(p.lines().count(), 8);
         assert!(p.contains('*'));
     }

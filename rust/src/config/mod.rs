@@ -10,7 +10,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::json::{arr, n, obj, s, Value};
-use crate::sefp::Rounding;
+use crate::sefp::{Precision, Rounding};
 
 /// Fine-tuning method (paper table 1 rows).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -68,18 +68,21 @@ pub struct TrainConfig {
     /// converge with a larger default, overridable per experiment).
     pub lr: f32,
     pub steps: usize,
-    /// Bit-widths in play (paper: {8,7,6,5,4,3}).
-    pub widths: Vec<u8>,
+    /// Precisions in play (paper: E5M{8..3}), validated at parse time:
+    /// out-of-range widths are a config error, duplicates are dropped,
+    /// and the ladder is kept sorted highest precision first.
+    pub widths: Vec<Precision>,
     /// BPS exploration coefficient λ (paper: 5).
     pub lambda: f64,
     /// LAA delay step N (paper: 10).
     pub delay_n: usize,
-    /// Bit-widths counted as "ultra-low" for LAA (the paper leaves this
-    /// open; Ablation A in EXPERIMENTS.md shows the bottom rung only
-    /// (m <= 3) is best — deferring m=4 too throttles its learning).
-    pub ultra_low_max_m: u8,
-    /// For Method::Fixed — which bit-width this run is fixed to.
-    pub fixed_m: Option<u8>,
+    /// Precisions at or below this count as "ultra-low" for LAA (the
+    /// paper leaves this open; Ablation A in EXPERIMENTS.md shows the
+    /// bottom rung only (E5M3) is best — deferring E5M4 too throttles
+    /// its learning).
+    pub ultra_low_max: Precision,
+    /// For Method::Fixed — which precision this run is fixed to.
+    pub fixed_m: Option<Precision>,
     pub seed: u64,
     pub rounding: Rounding,
     /// Evaluate every k steps (0 = only at the end).
@@ -104,10 +107,10 @@ impl Default for TrainConfig {
             method: Method::Otaro,
             lr: 1e-2,
             steps: 300,
-            widths: vec![8, 7, 6, 5, 4, 3],
+            widths: Precision::LADDER.to_vec(),
             lambda: 5.0,
             delay_n: 10,
-            ultra_low_max_m: 3,
+            ultra_low_max: Precision::of(3),
             fixed_m: None,
             seed: 0,
             rounding: Rounding::Trunc,
@@ -125,13 +128,13 @@ impl TrainConfig {
             ("method", s(self.method.to_string())),
             ("lr", n(self.lr as f64)),
             ("steps", n(self.steps as f64)),
-            ("widths", arr(self.widths.iter().map(|&w| n(w as f64)).collect())),
+            ("widths", arr(self.widths.iter().map(|&w| n(w.m() as f64)).collect())),
             ("lambda", n(self.lambda)),
             ("delay_n", n(self.delay_n as f64)),
-            ("ultra_low_max_m", n(self.ultra_low_max_m as f64)),
+            ("ultra_low_max_m", n(self.ultra_low_max.m() as f64)),
             (
                 "fixed_m",
-                self.fixed_m.map(|m| n(m as f64)).unwrap_or(Value::Null),
+                self.fixed_m.map(|p| n(p.m() as f64)).unwrap_or(Value::Null),
             ),
             ("seed", n(self.seed as f64)),
             (
@@ -161,7 +164,24 @@ impl TrainConfig {
             c.steps = x;
         }
         if let Some(ws) = v.get("widths").and_then(Value::as_arr) {
-            c.widths = ws.iter().filter_map(|w| w.as_f64()).map(|w| w as u8).collect();
+            // validate at parse time: out-of-range widths are a config
+            // error (the seed panicked later, deep in `SefpTensor::
+            // encode`'s assert); dedupe and sort highest-first so the
+            // trainer sees a canonical ladder.
+            let mut widths = Vec::with_capacity(ws.len());
+            for w in ws {
+                let m = w
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("widths entry not a number: {w:?}"))?;
+                let p = Precision::from_num(m)
+                    .map_err(|e| anyhow::anyhow!("config widths: {e}"))?;
+                if !widths.contains(&p) {
+                    widths.push(p);
+                }
+            }
+            anyhow::ensure!(!widths.is_empty(), "config widths must be non-empty");
+            widths.sort_unstable_by(|a, b| b.cmp(a));
+            c.widths = widths;
         }
         if let Some(x) = v.get("lambda").and_then(Value::as_f64) {
             c.lambda = x;
@@ -169,11 +189,17 @@ impl TrainConfig {
         if let Some(x) = v.get("delay_n").and_then(Value::as_usize) {
             c.delay_n = x;
         }
-        if let Some(x) = v.get("ultra_low_max_m").and_then(Value::as_usize) {
-            c.ultra_low_max_m = x as u8;
+        if let Some(x) = v.get("ultra_low_max_m").and_then(Value::as_f64) {
+            c.ultra_low_max = Precision::from_num(x)
+                .map_err(|e| anyhow::anyhow!("config ultra_low_max_m: {e}"))?;
         }
         match v.get("fixed_m") {
-            Some(Value::Num(x)) => c.fixed_m = Some(*x as u8),
+            Some(Value::Num(x)) => {
+                c.fixed_m = Some(
+                    Precision::from_num(*x)
+                        .map_err(|e| anyhow::anyhow!("config fixed_m: {e}"))?,
+                )
+            }
             Some(Value::Null) | None => {}
             Some(other) => anyhow::bail!("fixed_m not a number: {other:?}"),
         }
@@ -207,11 +233,15 @@ pub struct ServeConfig {
     /// queue capacity before backpressure
     pub queue_cap: usize,
     /// default precision when the router has no signal
-    pub default_m: u8,
+    pub default_precision: Precision,
     /// precision used for generation-class requests
-    pub generation_m: u8,
+    pub generation_precision: Precision,
     /// precision used for understanding-class requests
-    pub understanding_m: u8,
+    pub understanding_precision: Precision,
+    /// byte budget for derived-precision residency in the serving
+    /// `PrecisionLadder` (the single SEFP master is always resident and
+    /// not charged; cached truncated views are LRU-evicted past this)
+    pub ladder_budget_bytes: usize,
     /// scheduler anti-starvation bound: a precision queue whose head has
     /// waited this long is scheduled next regardless of score (in-flight
     /// decodes finish first — see `serve::SchedPolicy`)
@@ -227,11 +257,12 @@ impl Default for ServeConfig {
         ServeConfig {
             max_batch: 8,
             queue_cap: 256,
-            default_m: 6,
-            generation_m: 8,
-            understanding_m: 4,
+            default_precision: Precision::of(6),
+            generation_precision: Precision::of(8),
+            understanding_precision: Precision::of(4),
             max_wait_ms: 500,
             age_weight: 1.0,
+            ladder_budget_bytes: 256 << 20,
         }
     }
 }
@@ -241,15 +272,16 @@ impl ServeConfig {
         obj(vec![
             ("max_batch", n(self.max_batch as f64)),
             ("queue_cap", n(self.queue_cap as f64)),
-            ("default_m", n(self.default_m as f64)),
-            ("generation_m", n(self.generation_m as f64)),
-            ("understanding_m", n(self.understanding_m as f64)),
+            ("default_m", n(self.default_precision.m() as f64)),
+            ("generation_m", n(self.generation_precision.m() as f64)),
+            ("understanding_m", n(self.understanding_precision.m() as f64)),
             ("max_wait_ms", n(self.max_wait_ms as f64)),
             ("age_weight", n(self.age_weight)),
+            ("ladder_budget_bytes", n(self.ladder_budget_bytes as f64)),
         ])
     }
 
-    pub fn from_json(v: &Value) -> Self {
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
         let mut c = ServeConfig::default();
         if let Some(x) = v.get("max_batch").and_then(Value::as_usize) {
             c.max_batch = x;
@@ -257,14 +289,22 @@ impl ServeConfig {
         if let Some(x) = v.get("queue_cap").and_then(Value::as_usize) {
             c.queue_cap = x;
         }
-        if let Some(x) = v.get("default_m").and_then(Value::as_usize) {
-            c.default_m = x as u8;
+        let precision_field = |key: &str| -> anyhow::Result<Option<Precision>> {
+            match v.get(key).and_then(Value::as_f64) {
+                None => Ok(None),
+                Some(x) => Precision::from_num(x)
+                    .map(Some)
+                    .map_err(|e| anyhow::anyhow!("serve config {key}: {e}")),
+            }
+        };
+        if let Some(p) = precision_field("default_m")? {
+            c.default_precision = p;
         }
-        if let Some(x) = v.get("generation_m").and_then(Value::as_usize) {
-            c.generation_m = x as u8;
+        if let Some(p) = precision_field("generation_m")? {
+            c.generation_precision = p;
         }
-        if let Some(x) = v.get("understanding_m").and_then(Value::as_usize) {
-            c.understanding_m = x as u8;
+        if let Some(p) = precision_field("understanding_m")? {
+            c.understanding_precision = p;
         }
         if let Some(x) = v.get("max_wait_ms").and_then(Value::as_usize) {
             c.max_wait_ms = x as u64;
@@ -272,7 +312,10 @@ impl ServeConfig {
         if let Some(x) = v.get("age_weight").and_then(Value::as_f64) {
             c.age_weight = x;
         }
-        c
+        if let Some(x) = v.get("ladder_budget_bytes").and_then(Value::as_usize) {
+            c.ladder_budget_bytes = x;
+        }
+        Ok(c)
     }
 }
 
@@ -313,7 +356,7 @@ impl ExperimentConfig {
             c.train = TrainConfig::from_json(t)?;
         }
         if let Some(sv) = v.get("serve") {
-            c.serve = ServeConfig::from_json(sv);
+            c.serve = ServeConfig::from_json(sv)?;
         }
         if let Some(p) = v.get("artifacts").and_then(Value::as_str) {
             c.artifacts = PathBuf::from(p);
@@ -357,24 +400,51 @@ mod tests {
     #[test]
     fn defaults_match_paper() {
         let c = TrainConfig::default();
-        assert_eq!(c.widths, vec![8, 7, 6, 5, 4, 3]);
+        assert_eq!(c.widths, Precision::LADDER.to_vec());
         assert_eq!(c.lambda, 5.0);
         assert_eq!(c.delay_n, 10);
     }
 
     #[test]
     fn json_roundtrip() {
-        let mut c = ExperimentConfig::default();
-        c.name = "t".into();
+        let mut c = ExperimentConfig { name: "t".into(), ..ExperimentConfig::default() };
         c.train.method = Method::Fixed;
-        c.train.fixed_m = Some(4);
+        c.train.fixed_m = Some(Precision::of(4));
         c.train.lambda = 3.5;
         let text = c.to_json().to_string();
         let d = ExperimentConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
         assert_eq!(d.train.method, Method::Fixed);
-        assert_eq!(d.train.fixed_m, Some(4));
+        assert_eq!(d.train.fixed_m, Some(Precision::of(4)));
         assert_eq!(d.train.lambda, 3.5);
         assert_eq!(d.name, "t");
+        assert_eq!(d.serve.default_precision, Precision::of(6));
+    }
+
+    #[test]
+    fn widths_validated_deduped_sorted() {
+        // duplicates dropped, order canonicalized highest-first
+        let v = crate::json::parse(r#"{"widths":[3,8,3,5,8]}"#).unwrap();
+        let c = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(
+            c.widths,
+            vec![Precision::of(8), Precision::of(5), Precision::of(3)]
+        );
+        // out-of-range width is a config error, not a later encode panic
+        for bad in [r#"{"widths":[8,0]}"#, r#"{"widths":[15]}"#, r#"{"widths":[]}"#] {
+            let v = crate::json::parse(bad).unwrap();
+            assert!(TrainConfig::from_json(&v).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn serve_precision_fields_validated() {
+        let v = crate::json::parse(r#"{"default_m":5}"#).unwrap();
+        assert_eq!(
+            ServeConfig::from_json(&v).unwrap().default_precision,
+            Precision::of(5)
+        );
+        let v = crate::json::parse(r#"{"generation_m":99}"#).unwrap();
+        assert!(ServeConfig::from_json(&v).is_err());
     }
 
     #[test]

@@ -15,19 +15,21 @@
 
 use std::collections::HashMap;
 
+use crate::sefp::Precision;
+
 #[derive(Debug, Clone)]
 pub struct Bps {
-    pub widths: Vec<u8>,
+    pub widths: Vec<Precision>,
     pub lambda: f64,
     /// EMA factor for L_b (1.0 = keep only the latest loss).
     pub ema: f64,
     t: u64,
-    counts: HashMap<u8, u64>,
-    losses: HashMap<u8, f64>,
+    counts: HashMap<Precision, u64>,
+    losses: HashMap<Precision, f64>,
 }
 
 impl Bps {
-    pub fn new(widths: &[u8], lambda: f64, ema: f64) -> Self {
+    pub fn new(widths: &[Precision], lambda: f64, ema: f64) -> Self {
         assert!(!widths.is_empty());
         Bps {
             widths: widths.to_vec(),
@@ -41,7 +43,7 @@ impl Bps {
 
     /// Score(b) at the current step (eq. 5).  Unvisited widths score +inf
     /// so each gets sampled at least once up front.
-    pub fn score(&self, b: u8) -> f64 {
+    pub fn score(&self, b: Precision) -> f64 {
         let t_b = *self.counts.get(&b).unwrap_or(&0);
         if t_b == 0 {
             return f64::INFINITY;
@@ -54,7 +56,7 @@ impl Bps {
 
     /// Select the next bit-width (argmax score; ties break toward the
     /// HIGHER width, consistent with the paper's convergence argument).
-    pub fn select(&mut self) -> u8 {
+    pub fn select(&mut self) -> Precision {
         self.t += 1;
         let mut best = self.widths[0];
         let mut best_score = f64::NEG_INFINITY;
@@ -70,12 +72,12 @@ impl Bps {
     }
 
     /// Report the observed loss for the width just trained.
-    pub fn update(&mut self, b: u8, loss: f64) {
+    pub fn update(&mut self, b: Precision, loss: f64) {
         let e = self.losses.entry(b).or_insert(loss);
         *e = self.ema * loss + (1.0 - self.ema) * *e;
     }
 
-    pub fn count(&self, b: u8) -> u64 {
+    pub fn count(&self, b: Precision) -> u64 {
         *self.counts.get(&b).unwrap_or(&0)
     }
 
@@ -84,8 +86,9 @@ impl Bps {
     }
 
     /// Selection frequencies (path histogram, logged per run).
-    pub fn histogram(&self) -> Vec<(u8, u64)> {
-        let mut v: Vec<(u8, u64)> = self.widths.iter().map(|&b| (b, self.count(b))).collect();
+    pub fn histogram(&self) -> Vec<(Precision, u64)> {
+        let mut v: Vec<(Precision, u64)> =
+            self.widths.iter().map(|&b| (b, self.count(b))).collect();
         v.sort_by_key(|&(b, _)| std::cmp::Reverse(b));
         v
     }
@@ -94,16 +97,16 @@ impl Bps {
 /// Uniform sampler baseline (paper fig. 3, "uniform sampling").
 #[derive(Debug, Clone)]
 pub struct UniformSampler {
-    widths: Vec<u8>,
+    widths: Vec<Precision>,
     rng: crate::data::Rng,
 }
 
 impl UniformSampler {
-    pub fn new(widths: &[u8], seed: u64) -> Self {
+    pub fn new(widths: &[Precision], seed: u64) -> Self {
         UniformSampler { widths: widths.to_vec(), rng: crate::data::Rng::new(seed) }
     }
 
-    pub fn select(&mut self) -> u8 {
+    pub fn select(&mut self) -> Precision {
         *self.rng.choose(&self.widths)
     }
 }
@@ -112,7 +115,7 @@ impl UniformSampler {
 mod tests {
     use super::*;
 
-    const WIDTHS: [u8; 6] = [8, 7, 6, 5, 4, 3];
+    const WIDTHS: [Precision; 6] = Precision::LADDER;
 
     #[test]
     fn visits_every_width_first() {
@@ -134,11 +137,12 @@ mod tests {
         let mut bps = Bps::new(&WIDTHS, 5.0, 1.0);
         for _ in 0..600 {
             let b = bps.select();
-            let loss = 2.0 + (8 - b) as f64 * 0.3;
+            let loss = 2.0 + (8 - b.m()) as f64 * 0.3;
             bps.update(b, loss);
         }
         // high widths must dominate the tail counts (paper eq. 9)
-        assert!(bps.count(8) > bps.count(3) * 2, "{:?}", bps.histogram());
+        let (hi, lo) = (bps.count(Precision::of(8)), bps.count(Precision::of(3)));
+        assert!(hi > lo * 2, "{:?}", bps.histogram());
         // but every width keeps being explored
         for b in WIDTHS {
             assert!(bps.count(b) >= 5, "b={b} {:?}", bps.histogram());
@@ -151,9 +155,9 @@ mod tests {
             let mut bps = Bps::new(&WIDTHS, lambda, 1.0);
             for _ in 0..300 {
                 let b = bps.select();
-                bps.update(b, 2.0 + (8 - b) as f64 * 0.5);
+                bps.update(b, 2.0 + (8 - b.m()) as f64 * 0.5);
             }
-            bps.count(3)
+            bps.count(Precision::of(3))
         };
         assert!(run(20.0) > run(0.1));
     }
@@ -165,15 +169,15 @@ mod tests {
             let b = bps.select();
             bps.update(b, 1.0);
         }
-        let s1 = bps.score(8);
+        let s1 = bps.score(Precision::of(8));
         for _ in 0..50 {
             // keep selecting; t grows, t_8 grows proportionally more if
             // chosen — simply verify the exploration term shrinks
             let b = bps.select();
-            bps.update(b, if b == 8 { 1.0 } else { 1.2 });
+            bps.update(b, if b == Precision::of(8) { 1.0 } else { 1.2 });
         }
-        assert!(bps.score(8) <= s1 + 1e6); // sanity (non-NaN, finite)
-        assert!(bps.score(8).is_finite());
+        assert!(bps.score(Precision::of(8)) <= s1 + 1e6); // sanity (non-NaN, finite)
+        assert!(bps.score(Precision::of(8)).is_finite());
     }
 
     #[test]

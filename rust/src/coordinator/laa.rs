@@ -15,7 +15,8 @@
 //! `flush_on_switch = true` instead applies the partial sum whenever the
 //! path leaves the ultra-low zone.
 
-use crate::runtime::grad_accumulate;
+use crate::runtime::{grad_accumulate, Width};
+use crate::sefp::Precision;
 
 /// What the trainer should do with the gradients of the current batch.
 #[derive(Debug, PartialEq)]
@@ -34,8 +35,8 @@ pub enum LaaAction {
 pub struct Laa {
     /// delay step N (paper: 10)
     pub delay_n: usize,
-    /// widths with m <= this are "ultra-low" and get accumulated
-    pub ultra_low_max_m: u8,
+    /// precisions at or below this are "ultra-low" and get accumulated
+    pub ultra_low_max: Precision,
     /// ablation switch, see module docs
     pub flush_on_switch: bool,
     acc: Option<Vec<Vec<f32>>>,
@@ -46,11 +47,11 @@ pub struct Laa {
 }
 
 impl Laa {
-    pub fn new(delay_n: usize, ultra_low_max_m: u8) -> Self {
+    pub fn new(delay_n: usize, ultra_low_max: Precision) -> Self {
         assert!(delay_n >= 1);
         Laa {
             delay_n,
-            ultra_low_max_m,
+            ultra_low_max,
             flush_on_switch: false,
             acc: None,
             filled: 0,
@@ -59,13 +60,14 @@ impl Laa {
         }
     }
 
-    pub fn is_ultra_low(&self, m: u8) -> bool {
-        m <= self.ultra_low_max_m
+    /// Whether `width` counts as ultra-low (FP never does).
+    pub fn is_ultra_low(&self, width: Width) -> bool {
+        width.0.is_some_and(|p| p <= self.ultra_low_max)
     }
 
-    /// Feed the gradients produced at bit-width `m`; decides apply/defer.
-    pub fn observe(&mut self, m: u8, grads: Vec<Vec<f32>>) -> LaaAction {
-        if !self.is_ultra_low(m) {
+    /// Feed the gradients produced at `width`; decides apply/defer.
+    pub fn observe(&mut self, width: Width, grads: Vec<Vec<f32>>) -> LaaAction {
+        if !self.is_ultra_low(width) {
             if self.flush_on_switch && self.acc.is_some() {
                 // ablation path: the partial sum is merged into this
                 // apply, so no gradient contribution is lost
@@ -129,19 +131,32 @@ mod tests {
         vec![vec![v, v]]
     }
 
+    fn w(raw: u8) -> Width {
+        Width::m(Precision::of(raw))
+    }
+
+    #[test]
+    fn fp_is_never_ultra_low() {
+        let mut laa = Laa::new(2, Precision::of(4));
+        assert!(!laa.is_ultra_low(Width::FP));
+        assert!(laa.is_ultra_low(w(3)));
+        assert!(!laa.is_ultra_low(w(5)));
+        assert_eq!(laa.observe(Width::FP, g(1.0)), LaaAction::Apply(g(1.0)));
+    }
+
     #[test]
     fn high_width_applies_immediately() {
-        let mut laa = Laa::new(10, 4);
-        assert_eq!(laa.observe(8, g(1.0)), LaaAction::Apply(g(1.0)));
+        let mut laa = Laa::new(10, Precision::of(4));
+        assert_eq!(laa.observe(w(8), g(1.0)), LaaAction::Apply(g(1.0)));
         assert_eq!(laa.pending(), 0);
     }
 
     #[test]
     fn ultra_low_defers_until_n() {
-        let mut laa = Laa::new(3, 4);
-        assert!(matches!(laa.observe(3, g(1.0)), LaaAction::Deferred { filled: 1 }));
-        assert!(matches!(laa.observe(4, g(2.0)), LaaAction::Deferred { filled: 2 }));
-        match laa.observe(3, g(3.0)) {
+        let mut laa = Laa::new(3, Precision::of(4));
+        assert!(matches!(laa.observe(w(3), g(1.0)), LaaAction::Deferred { filled: 1 }));
+        assert!(matches!(laa.observe(w(4), g(2.0)), LaaAction::Deferred { filled: 2 }));
+        match laa.observe(w(3), g(3.0)) {
             LaaAction::Flush { grads, count } => {
                 assert_eq!(grads, vec![vec![6.0, 6.0]]);
                 assert_eq!(count, 3);
@@ -154,12 +169,12 @@ mod tests {
 
     #[test]
     fn accumulator_persists_across_high_steps() {
-        let mut laa = Laa::new(2, 4);
-        assert!(matches!(laa.observe(3, g(1.0)), LaaAction::Deferred { .. }));
+        let mut laa = Laa::new(2, Precision::of(4));
+        assert!(matches!(laa.observe(w(3), g(1.0)), LaaAction::Deferred { .. }));
         // high width in between: immediate apply, accumulator untouched
-        assert_eq!(laa.observe(8, g(9.0)), LaaAction::Apply(g(9.0)));
+        assert_eq!(laa.observe(w(8), g(9.0)), LaaAction::Apply(g(9.0)));
         assert_eq!(laa.pending(), 1);
-        match laa.observe(4, g(1.0)) {
+        match laa.observe(w(4), g(1.0)) {
             LaaAction::Flush { grads, count } => {
                 assert_eq!(grads, vec![vec![2.0, 2.0]]);
                 assert_eq!(count, 2);
@@ -170,10 +185,10 @@ mod tests {
 
     #[test]
     fn flush_on_switch_merges_partial() {
-        let mut laa = Laa::new(5, 4);
+        let mut laa = Laa::new(5, Precision::of(4));
         laa.flush_on_switch = true;
-        assert!(matches!(laa.observe(3, g(1.0)), LaaAction::Deferred { .. }));
-        match laa.observe(8, g(10.0)) {
+        assert!(matches!(laa.observe(w(3), g(1.0)), LaaAction::Deferred { .. }));
+        match laa.observe(w(8), g(10.0)) {
             LaaAction::Flush { grads, count } => {
                 assert_eq!(grads, vec![vec![11.0, 11.0]]);
                 assert_eq!(count, 2);
@@ -185,9 +200,9 @@ mod tests {
 
     #[test]
     fn drain_returns_partial() {
-        let mut laa = Laa::new(10, 4);
-        let _ = laa.observe(3, g(1.0));
-        let _ = laa.observe(3, g(2.0));
+        let mut laa = Laa::new(10, Precision::of(4));
+        let _ = laa.observe(w(3), g(1.0));
+        let _ = laa.observe(w(3), g(2.0));
         assert_eq!(laa.drain().unwrap(), (vec![vec![3.0, 3.0]], 2));
         assert!(laa.drain().is_none());
     }

@@ -10,6 +10,7 @@ use crate::config::{Method, TrainConfig};
 use crate::data::Batch;
 use crate::metrics::{MetricsSink, Timer};
 use crate::runtime::{grad_l2_norm, Engine, ParamStore, StepKind, Width};
+use crate::sefp::Precision;
 
 use super::bps::{Bps, UniformSampler};
 use super::laa::{Laa, LaaAction};
@@ -35,9 +36,9 @@ impl BatchSource for crate::data::PairBatcher {
 #[derive(Debug, Clone)]
 pub struct TrainReport {
     pub losses: Vec<f32>,
-    /// (step, selected mantissa width; 0 = fp)
-    pub path: Vec<u8>,
-    pub width_histogram: Vec<(u8, u64)>,
+    /// selected precision per step (`None` = fp step)
+    pub path: Vec<Option<Precision>>,
+    pub width_histogram: Vec<(Precision, u64)>,
     pub laa_flushes: u64,
     pub laa_deferred: u64,
     pub wall_secs: f64,
@@ -101,7 +102,7 @@ impl<'a, B: BatchSource> Trainer<'a, B> {
         let mut uniform = (method == Method::Uniform)
             .then(|| UniformSampler::new(&self.cfg.widths, self.cfg.seed ^ UNIFORM_TAG));
         let mut laa = (method == Method::Otaro).then(|| {
-            let mut l = Laa::new(self.cfg.delay_n, self.cfg.ultra_low_max_m);
+            let mut l = Laa::new(self.cfg.delay_n, self.cfg.ultra_low_max);
             l.flush_on_switch = self.cfg.laa_flush_on_switch;
             l
         });
@@ -116,17 +117,17 @@ impl<'a, B: BatchSource> Trainer<'a, B> {
             let out = self.engine.train_step(self.params, &batch, width)?;
             let loss = out.loss;
             losses.push(loss);
-            path.push(width.0.unwrap_or(0));
+            path.push(width.0);
             if let Some(b) = &mut bps {
-                if let Some(m) = width.0 {
-                    b.update(m, loss as f64);
+                if let Some(p) = width.0 {
+                    b.update(p, loss as f64);
                 }
             }
             ema = if ema.is_nan() { loss as f64 } else { 0.95 * ema + 0.05 * loss as f64 };
 
             let gnorm = grad_l2_norm(&out.grads);
             let laa_event = match &mut laa {
-                Some(l) => match l.observe(width.0.unwrap_or(u8::MAX), out.grads) {
+                Some(l) => match l.observe(width, out.grads) {
                     LaaAction::Apply(g) => {
                         self.params.sgd_update(&g, self.cfg.lr);
                         "apply"

@@ -15,7 +15,7 @@ use crate::eval::ppl::perplexity;
 use crate::eval::tables::{f2, f3, pct, TableBuilder};
 use crate::infer::{DecoderSim, DecoderWeights, SimConfig};
 use crate::runtime::{Engine, ParamStore, Width};
-use crate::sefp::Rounding;
+use crate::sefp::{Precision, Rounding, SefpSpec};
 
 use super::{ladder, Ctx};
 
@@ -153,7 +153,7 @@ pub fn table8(ctx: &Ctx, quick: bool) -> anyhow::Result<()> {
 
     // Fixed precision: one run per width, evaluated at its own width
     let mut fixed_vals = Vec::new();
-    for w in [8u8, 7, 6, 5, 4, 3] {
+    for w in Precision::LADDER {
         let cfg = TrainConfig { fixed_m: Some(w), ..base_cfg(ctx, Method::Fixed, steps) };
         let params = tune(ctx, &mut engine, "tinytext", cfg)?;
         fixed_vals.push(perplexity(&mut engine, &params, &test, Width::m(w))?);
@@ -193,7 +193,7 @@ pub fn table1(ctx: &Ctx, quick: bool) -> anyhow::Result<()> {
 
     let mut fixed_vals = Vec::new();
     let lang = ctx.lang();
-    for (wi, w) in [8u8, 7, 6, 5, 4, 3].into_iter().enumerate() {
+    for w in Precision::LADDER {
         let cfg = TrainConfig { fixed_m: Some(w), ..base_cfg(ctx, Method::Fixed, steps) };
         let params = tune(ctx, &mut engine, "instruct", cfg)?;
         let mut acc = 0.0;
@@ -202,7 +202,6 @@ pub fn table1(ctx: &Ctx, quick: bool) -> anyhow::Result<()> {
             acc += score_items(&mut engine, &params, Width::m(w), &its)?.0 / 8.0;
         }
         fixed_vals.push(acc);
-        let _ = wi;
     }
     t.row_f("Fixed Precision Fine-Tuning", &fixed_vals, pct);
 
@@ -228,7 +227,7 @@ pub fn fig3(ctx: &Ctx, quick: bool) -> anyhow::Result<()> {
 
     // fixed-precision reference PPL per width
     let mut fixed = Vec::new();
-    for w in [8u8, 7, 6, 5, 4, 3] {
+    for w in Precision::LADDER {
         let cfg = TrainConfig { fixed_m: Some(w), ..base_cfg(ctx, Method::Fixed, steps) };
         let params = tune(ctx, &mut engine, "tinytext", cfg)?;
         fixed.push(perplexity(&mut engine, &params, &test, Width::m(w))?);
@@ -357,7 +356,7 @@ pub fn fig6(ctx: &Ctx, quick: bool) -> anyhow::Result<()> {
     for _ in 0..n_batches {
         let batch = batcher.next_batch();
         let fp = engine.train_step(&params, &batch, Width::FP)?;
-        let q = engine.train_step(&params, &batch, Width::m(3))?;
+        let q = engine.train_step(&params, &batch, Width::m(Precision::of(3)))?;
         // spread tracked coordinates across the tensor
         let len = fp.grads[idx].len();
         let stride = (len / n_coords).max(1);
@@ -468,18 +467,18 @@ pub fn fig8(ctx: &Ctx, quick: bool) -> anyhow::Result<()> {
 pub fn fig9(ctx: &Ctx) -> anyhow::Result<()> {
     let mut out = String::new();
     let mut tb = TableBuilder::new("Fig. 9 — ε(ω) sawtooth amplitude per mantissa width", &["m", "amplitude", "1/2^m"]);
-    for m in [8u8, 7, 6, 5, 4, 3] {
-        let curve = epsilon_curve(m, 0.0, 1.0, 8001, Rounding::Trunc);
+    for p in Precision::LADDER {
+        let curve = epsilon_curve(p, 0.0, 1.0, 8001, Rounding::Trunc);
         tb.row(vec![
-            format!("{m}"),
+            format!("{}", p.m()),
             format!("{:.6}", amplitude(&curve)),
-            format!("{:.6}", 1.0 / (1u32 << m) as f64),
+            format!("{:.6}", 1.0 / (1u32 << p.m()) as f64),
         ]);
     }
     let md = tb.markdown();
     println!("{md}");
     out.push_str(&md);
-    let curve = epsilon_curve(3, 0.0, 0.6, 400, Rounding::Trunc);
+    let curve = epsilon_curve(Precision::of(3), 0.0, 0.6, 400, Rounding::Trunc);
     let plot = ascii_plot(&curve, 10, 72);
     println!("ε(ω) at m=3 over [0, 0.6]:\n{plot}\n");
     out.push_str(&format!("\n```\n{plot}\n```\n"));
@@ -500,7 +499,7 @@ pub fn table2(ctx: &Ctx, quick: bool) -> anyhow::Result<()> {
     let n_tokens = if quick { 12 } else { 30 };
 
     let mut dense = DecoderSim::new(cfg, DecoderWeights::Dense, ctx.seed);
-    let mut sefp4 = DecoderSim::new(cfg, DecoderWeights::Sefp(4), ctx.seed);
+    let mut sefp4 = DecoderSim::new(cfg, DecoderWeights::Sefp(Precision::of(4)), ctx.seed);
 
     // paper setup: 2000-token input already prefilled, then decode
     let prefill = cfg.context;
@@ -556,7 +555,10 @@ pub fn ablations(ctx: &Ctx, quick: bool) -> anyhow::Result<()> {
         &["ultra_low_max_m", "E5M8", "E5M4", "E5M3", "AVG"],
     );
     for ul in [3u8, 4, 5] {
-        let cfg = TrainConfig { ultra_low_max_m: ul, ..base_cfg(ctx, Method::Otaro, steps) };
+        let cfg = TrainConfig {
+            ultra_low_max: Precision::of(ul),
+            ..base_cfg(ctx, Method::Otaro, steps)
+        };
         let params = tune(ctx, &mut engine, "tinytext", cfg)?;
         let row = ppl_row(&mut engine, &params, &test)?;
         let avg = row.iter().sum::<f64>() / row.len() as f64;
@@ -612,10 +614,11 @@ pub fn ablations(ctx: &Ctx, quick: bool) -> anyhow::Result<()> {
     for rounding in [Rounding::Trunc, Rounding::Nearest] {
         let mut row = Vec::new();
         for m in [8u8, 5, 3] {
+            let spec = SefpSpec::new(Precision::of(m)).with_rounding(rounding);
             let mut q = params.clone();
             for (i, t) in q.tensors.iter_mut().enumerate() {
                 if q.quantized[i] {
-                    *t = crate::sefp::quant_dequant(t, m, crate::sefp::GROUP_SIZE, rounding);
+                    *t = crate::sefp::quant_dequant(t, &spec);
                 }
             }
             row.push(perplexity(&mut engine, &q, &test, Width::FP)?);

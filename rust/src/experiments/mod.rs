@@ -13,8 +13,9 @@ use crate::eval::ppl::perplexity;
 use crate::eval::tables::{f2, pct, TableBuilder};
 use crate::metrics::MetricsSink;
 use crate::runtime::{Engine, ParamStore, Width};
+use crate::sefp::Precision;
 use crate::serve::{
-    DynamicBatcher, PrecisionStore, Request, Router, SchedPolicy, Server, TaskClass,
+    DynamicBatcher, PrecisionLadder, Request, Router, SchedPolicy, Server, TaskClass,
 };
 
 /// Shared CLI context.
@@ -58,7 +59,7 @@ impl Ctx {
 
 /// The paper's ladder as engine widths.
 pub fn ladder() -> Vec<Width> {
-    vec![8, 7, 6, 5, 4, 3].into_iter().map(Width::m).collect()
+    Precision::LADDER.into_iter().map(Width::m).collect()
 }
 
 pub fn info(ctx: &Ctx) -> anyhow::Result<()> {
@@ -116,7 +117,7 @@ pub fn finetune(
     method: &str,
     steps: usize,
     lr: f32,
-    fixed_m: Option<u8>,
+    fixed_m: Option<Precision>,
     dataset: &str,
     checkpoint: Option<PathBuf>,
     out: Option<PathBuf>,
@@ -199,17 +200,18 @@ pub fn eval_checkpoint(ctx: &Ctx, checkpoint: Option<PathBuf>, mc_items: usize) 
 pub fn serve_demo(ctx: &Ctx, n_requests: usize, checkpoint: Option<PathBuf>) -> anyhow::Result<()> {
     let engine = ctx.engine()?;
     let params = ctx.params(&engine, checkpoint)?;
-    let store = PrecisionStore::from_params(&params);
-    println!(
-        "single-master SEFP store: {} KiB (per-precision zoo would be {} KiB)",
-        store.master_bytes() / 1024,
-        store.zoo_bytes(&[8, 7, 6, 5, 4, 3]) / 1024
-    );
     let serve_cfg = crate::config::ServeConfig::default();
+    let ladder = PrecisionLadder::from_params(&params)
+        .with_budget(serve_cfg.ladder_budget_bytes);
+    println!(
+        "single-master SEFP ladder: {} KiB (per-precision zoo would be {} KiB)",
+        ladder.master_bytes() / 1024,
+        ladder.zoo_bytes(&Precision::LADDER) / 1024
+    );
     let router = Router::new(serve_cfg.clone());
     let batcher = DynamicBatcher::new(engine.batch_size(), 256)
         .with_policy(SchedPolicy::from_config(&serve_cfg));
-    let mut server = Server::new(engine.into_handle(), store, router, batcher);
+    let mut server = Server::new(engine.into_handle(), ladder, router, batcher);
 
     let lang = ctx.lang();
     let tok = crate::data::Tokenizer::new();
@@ -248,13 +250,18 @@ pub fn serve_demo(ctx: &Ctx, n_requests: usize, checkpoint: Option<PathBuf>) -> 
         stats.compute_ms.mean(),
         stats.compute_ms.min,
         stats.compute_ms.max,
-        stats.per_width
+        stats.per_precision
+    );
+    println!(
+        "ladder switches: {} hits / {} misses / {} evictions; resident {} B",
+        stats.switch_hits, stats.switch_misses, stats.switch_evictions,
+        stats.ladder_resident_bytes
     );
     let mut sink = ctx.sink("serve_demo");
     for r in &responses {
         sink.log(&crate::json::obj(vec![
             ("id", crate::json::n(r.id as f64)),
-            ("m", crate::json::n(r.width_m as f64)),
+            ("m", crate::json::n(r.precision.m() as f64)),
             ("next", crate::json::n(r.next_token as f64)),
             ("n_tokens", crate::json::n(r.tokens.len() as f64)),
             ("queue_ms", crate::json::n(r.queue_ms)),

@@ -7,6 +7,7 @@
 //! memory number includes the cache), and the LM head.
 
 use crate::data::Rng;
+use crate::sefp::{Precision, SefpSpec};
 
 use super::kv_cache::KvCache;
 use super::{DenseLinear, QuantLinear};
@@ -53,8 +54,8 @@ pub enum LayerWeights {
 
 pub enum DecoderWeights {
     Dense,
-    /// SEFP at mantissa width m
-    Sefp(u8),
+    /// SEFP at the given precision
+    Sefp(Precision),
 }
 
 /// The simulator itself.
@@ -63,7 +64,7 @@ pub struct DecoderSim {
     layers: Vec<LayerWeights>,
     head: LayerWeights,
     caches: Vec<KvCache>,
-    quant_m: Option<u8>,
+    quant_precision: Option<Precision>,
 }
 
 fn rand_dense(rng: &mut Rng, in_dim: usize, out_dim: usize) -> DenseLinear {
@@ -90,8 +91,11 @@ impl DecoderSim {
                 dims(&cfg).into_iter().map(|(i, o)| rand_dense(rng, i, o)).collect();
             match weights {
                 DecoderWeights::Dense => LayerWeights::Dense { proj: dense },
-                DecoderWeights::Sefp(m) => LayerWeights::Quant {
-                    proj: dense.iter().map(|d| QuantLinear::from_dense(d, m, 64)).collect(),
+                DecoderWeights::Sefp(p) => LayerWeights::Quant {
+                    proj: dense
+                        .iter()
+                        .map(|d| QuantLinear::from_dense(d, &SefpSpec::new(p)))
+                        .collect(),
                 },
             }
         };
@@ -99,30 +103,30 @@ impl DecoderSim {
         let head_dense = rand_dense(&mut rng, cfg.d_model, cfg.vocab);
         let head = match weights {
             DecoderWeights::Dense => LayerWeights::Dense { proj: vec![head_dense] },
-            DecoderWeights::Sefp(m) => LayerWeights::Quant {
-                proj: vec![QuantLinear::from_dense(&head_dense, m, 64)],
+            DecoderWeights::Sefp(p) => LayerWeights::Quant {
+                proj: vec![QuantLinear::from_dense(&head_dense, &SefpSpec::new(p))],
             },
         };
-        let quant_m = match weights {
+        let quant_precision = match weights {
             DecoderWeights::Dense => None,
-            DecoderWeights::Sefp(m) => Some(m),
+            DecoderWeights::Sefp(p) => Some(p),
         };
         let caches = (0..cfg.n_layers)
-            .map(|_| match quant_m {
+            .map(|_| match quant_precision {
                 None => KvCache::f32(cfg.d_model),
-                Some(m) => KvCache::sefp(cfg.d_model, m.min(7), 64),
+                Some(p) => KvCache::sefp(cfg.d_model, Precision::of(p.m().min(7)), 64),
             })
             .collect();
-        DecoderSim { cfg, layers, head, caches, quant_m }
+        DecoderSim { cfg, layers, head, caches, quant_precision }
     }
 
     /// Reset the KV caches (new sequence).
     pub fn reset(&mut self) {
         let cfg = self.cfg;
         for c in &mut self.caches {
-            *c = match self.quant_m {
+            *c = match self.quant_precision {
                 None => KvCache::f32(cfg.d_model),
-                Some(m) => KvCache::sefp(cfg.d_model, m.min(7), 64),
+                Some(p) => KvCache::sefp(cfg.d_model, Precision::of(p.m().min(7)), 64),
             };
         }
     }
@@ -130,18 +134,18 @@ impl DecoderSim {
     /// One decode step: q/k/v projections, attention over the KV cache,
     /// o-projection, SwiGLU-shaped MLP, LM head.  Returns a checksum so
     /// the work cannot be optimized away.
-    pub fn decode_step(&mut self, x: &mut Vec<f32>) -> f32 {
+    pub fn decode_step(&mut self, x: &mut [f32]) -> f32 {
         self.decode_step_logits(x).0
     }
 
     /// One decode step that also yields the greedy next token from the
     /// LM-head logits — serving-style generation over the simulator.
-    pub fn decode_step_token(&mut self, x: &mut Vec<f32>) -> (f32, i32) {
+    pub fn decode_step_token(&mut self, x: &mut [f32]) -> (f32, i32) {
         let (checksum, logits) = self.decode_step_logits(x);
         (checksum, super::sampling::argmax(&logits) as i32)
     }
 
-    fn decode_step_logits(&mut self, x: &mut Vec<f32>) -> (f32, Vec<f32>) {
+    fn decode_step_logits(&mut self, x: &mut [f32]) -> (f32, Vec<f32>) {
         let d = self.cfg.d_model;
         let f = self.cfg.d_ff;
         let mut q = vec![0.0f32; d];
@@ -252,7 +256,7 @@ impl DecoderSim {
     pub fn memory_bytes(&self) -> usize {
         let kv_elem = match &self.layers[0] {
             LayerWeights::Dense { .. } => 2,
-            LayerWeights::Quant { proj } => (1 + proj[0].m as usize + 7) / 8,
+            LayerWeights::Quant { proj } => proj[0].precision.bits_per_elem().div_ceil(8),
         };
         self.weight_bytes() + self.cfg.kv_cache_bytes(kv_elem.max(1))
     }
@@ -268,7 +272,7 @@ mod tests {
 
     #[test]
     fn decode_runs_and_is_finite() {
-        let mut sim = DecoderSim::new(small(), DecoderWeights::Sefp(4), 1);
+        let mut sim = DecoderSim::new(small(), DecoderWeights::Sefp(Precision::of(4)), 1);
         let mut x = vec![0.1f32; 128];
         for _ in 0..5 {
             let c = sim.decode_step(&mut x);
@@ -281,8 +285,8 @@ mod tests {
 
     #[test]
     fn decode_step_token_is_greedy_and_in_vocab() {
-        let mut a = DecoderSim::new(small(), DecoderWeights::Sefp(4), 1);
-        let mut b = DecoderSim::new(small(), DecoderWeights::Sefp(4), 1);
+        let mut a = DecoderSim::new(small(), DecoderWeights::Sefp(Precision::of(4)), 1);
+        let mut b = DecoderSim::new(small(), DecoderWeights::Sefp(Precision::of(4)), 1);
         let mut xa = vec![0.1f32; 128];
         let mut xb = vec![0.1f32; 128];
         for _ in 0..3 {
@@ -308,7 +312,7 @@ mod tests {
     #[test]
     fn quant_uses_less_memory() {
         let d = DecoderSim::new(small(), DecoderWeights::Dense, 1);
-        let q = DecoderSim::new(small(), DecoderWeights::Sefp(4), 1);
+        let q = DecoderSim::new(small(), DecoderWeights::Sefp(Precision::of(4)), 1);
         assert!(q.weight_bytes() * 2 < d.weight_bytes());
         assert!(q.memory_bytes() < d.memory_bytes());
     }
@@ -317,7 +321,7 @@ mod tests {
     fn memory_reduction_near_paper_band() {
         // E5M4 vs FP16 weights: expect ~68-69% reduction
         let d = DecoderSim::new(small(), DecoderWeights::Dense, 1);
-        let q = DecoderSim::new(small(), DecoderWeights::Sefp(4), 1);
+        let q = DecoderSim::new(small(), DecoderWeights::Sefp(Precision::of(4)), 1);
         let red = 1.0 - q.memory_bytes() as f64 / d.memory_bytes() as f64;
         assert!((0.6..0.75).contains(&red), "reduction={red}");
     }

@@ -8,7 +8,7 @@
 //! and stored as significands + shared exponents; attention dequantizes
 //! on the fly with one step-multiply per group.
 
-use crate::sefp::{quantize_value, shared_exponent, step_for, Rounding};
+use crate::sefp::{quantize_value, shared_exponent, step_for, Precision, Rounding};
 
 /// One layer's cache for one sequence (single-batch decode).
 pub enum KvCache {
@@ -17,7 +17,7 @@ pub enum KvCache {
 }
 
 pub struct SefpKv {
-    pub m: u8,
+    pub precision: Precision,
     pub group_size: usize,
     pub d: usize,
     k_sigs: Vec<i8>,
@@ -32,11 +32,11 @@ impl KvCache {
         KvCache::F32 { k: Vec::new(), v: Vec::new(), d }
     }
 
-    pub fn sefp(d: usize, m: u8, group_size: usize) -> Self {
-        assert!(m <= 7, "i8 storage");
+    pub fn sefp(d: usize, precision: Precision, group_size: usize) -> Self {
+        assert!(precision.m() <= 7, "i8 storage");
         assert_eq!(d % group_size, 0, "head dim must be group-aligned");
         KvCache::Sefp(SefpKv {
-            m,
+            precision,
             group_size,
             d,
             k_sigs: Vec::new(),
@@ -108,7 +108,7 @@ impl KvCache {
                 let n = c.k_sigs.len() + c.v_sigs.len();
                 let groups = c.k_steps.len() + c.v_steps.len();
                 // packed: (1+m) bits per element + 5 bits per group
-                (n * (1 + c.m as usize) + groups * 5).div_ceil(8)
+                (n * c.precision.bits_per_elem() + groups * 5).div_ceil(8)
             }
         }
     }
@@ -133,13 +133,14 @@ impl SefpKv {
             (k_row, &mut self.k_sigs, &mut self.k_steps),
             (v_row, &mut self.v_sigs, &mut self.v_steps),
         ] {
+            let m = self.precision.m();
             for g in row.chunks(self.group_size) {
                 let maxabs = g.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
                 let e = shared_exponent(maxabs);
-                let step = step_for(e, self.m);
+                let step = step_for(e, m);
                 steps.push(step);
                 for &x in g {
-                    sigs.push(quantize_value(x, step, self.m, Rounding::Trunc) as i8);
+                    sigs.push(quantize_value(x, step, m, Rounding::Trunc) as i8);
                 }
             }
         }
@@ -222,7 +223,7 @@ mod tests {
     fn sefp_attend_close_to_f32() {
         let d = 64;
         let mut cf = KvCache::f32(d);
-        let mut cq = KvCache::sefp(d, 6, 64);
+        let mut cq = KvCache::sefp(d, Precision::of(6), 64);
         let ks = rows(8, d, 3);
         let vs = rows(8, d, 4);
         for (k, v) in ks.iter().zip(&vs) {
@@ -237,7 +238,7 @@ mod tests {
         let err: f32 = of.iter().zip(&oq).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
         assert!(err < 0.05, "max err {err}");
         // and error grows when m shrinks
-        let mut c3 = KvCache::sefp(d, 3, 64);
+        let mut c3 = KvCache::sefp(d, Precision::of(3), 64);
         for (k, v) in ks.iter().zip(&vs) {
             c3.append(k, v);
         }
@@ -251,7 +252,7 @@ mod tests {
     fn memory_accounting() {
         let d = 128;
         let mut cf = KvCache::f32(d);
-        let mut cq = KvCache::sefp(d, 4, 64);
+        let mut cq = KvCache::sefp(d, Precision::of(4), 64);
         for (k, v) in rows(10, d, 6).iter().zip(rows(10, d, 7).iter()) {
             cf.append(k, v);
             cq.append(k, v);
@@ -266,7 +267,7 @@ mod tests {
 
     #[test]
     fn empty_cache_attend_zeroes() {
-        let cache = KvCache::sefp(64, 4, 64);
+        let cache = KvCache::sefp(64, Precision::of(4), 64);
         let mut out = vec![1.0f32; 64];
         cache.attend(&vec![0.5; 64], &mut out);
         assert!(out.iter().all(|&v| v == 0.0));

@@ -22,7 +22,7 @@ pub mod sampling;
 pub use decoder::{DecoderSim, DecoderWeights, SimConfig};
 pub use kv_cache::KvCache;
 
-use crate::sefp::{Rounding, SefpTensor};
+use crate::sefp::{Precision, SefpSpec, SefpTensor};
 
 /// f32 dense layer (the FP16-class baseline; f32 here, fp16 bytes are
 /// reported separately for the paper-comparable memory table).
@@ -132,7 +132,7 @@ fn dot_f32(x: &[f32], w: &[f32]) -> f32 {
 pub struct QuantLinear {
     pub in_dim: usize,
     pub out_dim: usize,
-    pub m: u8,
+    pub precision: Precision,
     pub group_size: usize,
     /// one step (= 2^(E-m+1)) per (column, group)
     steps: Vec<f32>,
@@ -143,36 +143,86 @@ pub struct QuantLinear {
 }
 
 impl QuantLinear {
-    /// Quantize a column-major f32 weight matrix; groups run along the
-    /// input (reduction) axis of each column.
-    pub fn from_dense(dense: &DenseLinear, m: u8, group_size: usize) -> Self {
-        assert_eq!(dense.in_dim % group_size, 0, "in_dim must be group-aligned");
-        let groups_per_col = dense.in_dim / group_size;
+    /// Quantize a column-major f32 weight matrix under `spec`; groups run
+    /// along the input (reduction) axis of each column.
+    pub fn from_dense(dense: &DenseLinear, spec: &SefpSpec) -> Self {
+        assert_eq!(dense.in_dim % spec.group_size, 0, "in_dim must be group-aligned");
+        let groups_per_col = dense.in_dim / spec.group_size;
         let mut steps = Vec::with_capacity(dense.out_dim * groups_per_col);
         let mut sig16: Vec<i16> = Vec::with_capacity(dense.w.len());
         let mut packed_bits = 0usize;
+        let m = spec.precision.m();
         for n in 0..dense.out_dim {
             let col = &dense.w[n * dense.in_dim..(n + 1) * dense.in_dim];
-            let t = SefpTensor::encode(col, m, group_size, Rounding::Trunc);
+            let t = SefpTensor::encode(col, spec);
             for g in 0..groups_per_col {
                 steps.push(crate::sefp::step_for(t.exponents[g] as i32, m));
             }
             sig16.extend_from_slice(&t.significands);
             packed_bits += t.ideal_bits();
         }
-        let sigs = if m <= 7 {
+        Self::from_parts(
+            dense.in_dim,
+            dense.out_dim,
+            spec.precision,
+            spec.group_size,
+            steps,
+            sig16,
+            packed_bits,
+        )
+    }
+
+    /// Build directly from an already-encoded SEFP tensor — the
+    /// SEFP-native consumption path for `serve::PrecisionLadder` views:
+    /// significands and exponents are reused as-is (integer copies +
+    /// step-table lookups), the original f32 weights are never touched.
+    ///
+    /// `t` must hold the column-major weights of an `(in_dim, out_dim)`
+    /// matrix with `in_dim` a multiple of the group size, so every group
+    /// lies inside one column and per-column grouping coincides with the
+    /// flat encode.
+    pub fn from_sefp(t: &SefpTensor, in_dim: usize, out_dim: usize) -> Self {
+        assert_eq!(t.len, in_dim * out_dim, "tensor length must match matrix shape");
+        assert_eq!(in_dim % t.group_size, 0, "in_dim must be group-aligned");
+        let m = t.precision.m();
+        let steps = t
+            .exponents
+            .iter()
+            .map(|&e| crate::sefp::step_for(e as i32, m))
+            .collect();
+        Self::from_parts(
+            in_dim,
+            out_dim,
+            t.precision,
+            t.group_size,
+            steps,
+            t.significands.clone(),
+            t.ideal_bits(),
+        )
+    }
+
+    fn from_parts(
+        in_dim: usize,
+        out_dim: usize,
+        precision: Precision,
+        group_size: usize,
+        steps: Vec<f32>,
+        sig16: Vec<i16>,
+        packed_bits: usize,
+    ) -> Self {
+        let sigs = if precision.m() <= 7 {
             Sigs::I8(sig16.iter().map(|&s| s as i8).collect())
         } else {
             Sigs::I16(sig16)
         };
         QuantLinear {
-            in_dim: dense.in_dim,
-            out_dim: dense.out_dim,
-            m,
+            in_dim,
+            out_dim,
+            precision,
             group_size,
             steps,
             sigs,
-            groups_per_col,
+            groups_per_col: in_dim / group_size,
             packed_bytes: packed_bits.div_ceil(8),
         }
     }
@@ -244,13 +294,14 @@ mod tests {
         let d = dense(128, 32, 1);
         let mut rng = Rng::new(2);
         let x: Vec<f32> = (0..128).map(|_| rng.normal() as f32).collect();
-        for m in crate::sefp::MANTISSA_WIDTHS {
-            let q = QuantLinear::from_dense(&d, m, 64);
+        for p in Precision::LADDER {
+            let spec = SefpSpec::new(p);
+            let q = QuantLinear::from_dense(&d, &spec);
             // reference: dense matvec over explicitly dequantized columns
             let mut wq = Vec::with_capacity(d.w.len());
             for n in 0..d.out_dim {
                 let col = &d.w[n * d.in_dim..(n + 1) * d.in_dim];
-                wq.extend(quant_dequant(col, m, 64, Rounding::Trunc));
+                wq.extend(quant_dequant(col, &spec));
             }
             let dref = DenseLinear::new(d.in_dim, d.out_dim, wq);
             let mut ya = vec![0.0; 32];
@@ -258,15 +309,37 @@ mod tests {
             q.matvec(&x, &mut ya);
             dref.matvec(&x, &mut yb);
             for (a, b) in ya.iter().zip(&yb) {
-                assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0), "m={m} {a} vs {b}");
+                assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0), "{p} {a} vs {b}");
             }
+        }
+    }
+
+    #[test]
+    fn from_sefp_matches_from_dense() {
+        // the SEFP-native construction must produce the same layer as the
+        // f32 path, at every ladder width — no float round trip needed
+        let d = dense(128, 16, 9);
+        let mut rng = Rng::new(10);
+        let x: Vec<f32> = (0..128).map(|_| rng.normal() as f32).collect();
+        for p in Precision::LADDER {
+            let spec = SefpSpec::new(p);
+            let t = SefpTensor::encode(&d.w, &spec);
+            let a = QuantLinear::from_dense(&d, &spec);
+            let b = QuantLinear::from_sefp(&t, d.in_dim, d.out_dim);
+            assert_eq!(b.precision, p);
+            assert_eq!(a.packed_bytes(), b.packed_bytes());
+            let mut ya = vec![0.0; 16];
+            let mut yb = vec![0.0; 16];
+            a.matvec(&x, &mut ya);
+            b.matvec(&x, &mut yb);
+            assert_eq!(ya, yb, "{p}");
         }
     }
 
     #[test]
     fn memory_accounting() {
         let d = dense(256, 64, 3);
-        let q4 = QuantLinear::from_dense(&d, 4, 64);
+        let q4 = QuantLinear::from_dense(&d, &SefpSpec::new(Precision::of(4)));
         // packed: 5 bits/elem + 5 bits per 64-group
         let expect_bits = 256 * 64 * 5 + (256 / 64) * 64 * 5;
         assert_eq!(q4.packed_bytes(), expect_bits / 8);
@@ -277,7 +350,7 @@ mod tests {
     #[test]
     fn i16_path_for_m8() {
         let d = dense(64, 16, 5);
-        let q8 = QuantLinear::from_dense(&d, 8, 64);
+        let q8 = QuantLinear::from_dense(&d, &SefpSpec::new(Precision::of(8)));
         let mut rng = Rng::new(6);
         let x: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
         let mut y = vec![0.0; 16];

@@ -6,6 +6,7 @@ use std::collections::HashMap;
 use std::path::Path;
 
 use crate::json::Value;
+use crate::sefp::Precision;
 
 #[derive(Debug, Clone)]
 pub struct ModelConfig {
@@ -40,7 +41,7 @@ pub struct Manifest {
     pub preset: String,
     pub quant_impl: String,
     pub config: ModelConfig,
-    pub mantissa_widths: Vec<u8>,
+    pub mantissa_widths: Vec<Precision>,
     pub params: Vec<ParamEntry>,
     pub artifacts: HashMap<String, String>,
     pub init_params_sha256: String,
@@ -67,14 +68,20 @@ impl Manifest {
             group_size: cfg.req_usize("group_size")?,
             rounding: cfg.req_str("rounding")?,
         };
-        let mantissa_widths = v
+        let mut mantissa_widths = Vec::new();
+        for w in v
             .req("mantissa_widths")?
             .as_arr()
             .ok_or_else(|| anyhow::anyhow!("mantissa_widths not an array"))?
-            .iter()
-            .filter_map(|w| w.as_f64())
-            .map(|w| w as u8)
-            .collect();
+        {
+            let m = w
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("mantissa width not a number: {w:?}"))?;
+            mantissa_widths.push(
+                Precision::from_num(m)
+                    .map_err(|e| anyhow::anyhow!("manifest mantissa_widths: {e}"))?,
+            );
+        }
         let mut params = Vec::new();
         for p in v
             .req("params")?
@@ -135,19 +142,19 @@ impl Manifest {
 
 /// Width selector for step programs: `None` = unquantized fp variant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct Width(pub Option<u8>);
+pub struct Width(pub Option<Precision>);
 
 impl Width {
     pub const FP: Width = Width(None);
 
-    pub fn m(m: u8) -> Width {
-        Width(Some(m))
+    pub fn m(p: Precision) -> Width {
+        Width(Some(p))
     }
 
     pub fn tag(&self) -> String {
         match self.0 {
             None => "fp".to_string(),
-            Some(m) => format!("m{m}"),
+            Some(p) => format!("m{}", p.m()),
         }
     }
 
@@ -155,8 +162,14 @@ impl Width {
     pub fn label(&self) -> String {
         match self.0 {
             None => "FP".to_string(),
-            Some(m) => format!("E5M{m}"),
+            Some(p) => p.to_string(),
         }
+    }
+}
+
+impl From<Precision> for Width {
+    fn from(p: Precision) -> Width {
+        Width(Some(p))
     }
 }
 
@@ -173,8 +186,25 @@ mod tests {
     #[test]
     fn width_tags() {
         assert_eq!(Width::FP.tag(), "fp");
-        assert_eq!(Width::m(4).tag(), "m4");
-        assert_eq!(Width::m(4).label(), "E5M4");
+        assert_eq!(Width::m(Precision::of(4)).tag(), "m4");
+        assert_eq!(Width::m(Precision::of(4)).label(), "E5M4");
+        assert_eq!(Width::from(Precision::of(3)).tag(), "m3");
+    }
+
+    #[test]
+    fn manifest_rejects_invalid_width() {
+        let json = r#"{
+            "preset": "tiny", "quant_impl": "pallas",
+            "config": {"vocab_size": 320, "d_model": 128, "n_heads": 4,
+                       "n_layers": 2, "d_ff": 384, "max_seq": 64,
+                       "batch_size": 8, "group_size": 64, "rounding": "trunc"},
+            "mantissa_widths": [8,0],
+            "params": [],
+            "artifacts": {},
+            "init_params_sha256": "x"
+        }"#;
+        let m = Manifest::from_json(&crate::json::parse(json).unwrap());
+        assert!(m.is_err(), "width 0 must be rejected at parse time");
     }
 
     #[test]

@@ -9,20 +9,27 @@
 //! (`python/compile/kernels/ref.py`); `tests/golden_sefp.rs` checks the
 //! cross-language golden vectors emitted by `aot.py`.
 //!
+//! Precision is a first-class type here: [`Precision`] is a validated
+//! newtype over the mantissa width, [`SefpSpec`] bundles the full codec
+//! configuration (precision + group size + rounding), and the
+//! [`SefpCodec`] trait unifies encode/decode/truncate across the working
+//! ([`SefpTensor`]) and packed ([`PackedSefp`]) representations.
+//!
 //! Central deployment property (paper fig. 1): with round-toward-zero, a
 //! lower bit-width is obtained from a higher one by *truncating mantissa
-//! bits in place* — `truncate(encode(w, m_hi), m_lo) == encode(w, m_lo)`
+//! bits in place* — `encode(w, hi).truncate(lo) == encode(w, lo)`
 //! exactly — so ONE stored model serves every precision with no scaling
-//! factors and no requantization pass.
+//! factors and no requantization pass (the `SefpCodec` ladder-exactness
+//! contract).
 
 pub mod packed;
+pub mod spec;
 pub mod tensor;
 
 pub use packed::PackedSefp;
+pub use spec::{Precision, PrecisionError, SefpCodec, SefpSpec};
 pub use tensor::SefpTensor;
 
-/// The paper's precision ladder (table 1): E5Mm, m ∈ {8..3}.
-pub const MANTISSA_WIDTHS: [u8; 6] = [8, 7, 6, 5, 4, 3];
 /// Paper's group size (§Implementation Details).
 pub const GROUP_SIZE: usize = 64;
 /// E5 shared-exponent field range (bias 15): [-14, 16].
@@ -30,19 +37,14 @@ pub const EXP_MIN: i32 = -14;
 pub const EXP_MAX: i32 = 16;
 
 /// Rounding mode for the mantissa shift (paper fig. 2 step 2).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
 pub enum Rounding {
     /// Round toward zero ("forced truncation") — the repo default; the
     /// only mode under which the truncation ladder is exact.
+    #[default]
     Trunc,
     /// Round half-to-even (matches `jnp.round`) — ablation mode.
     Nearest,
-}
-
-impl Default for Rounding {
-    fn default() -> Self {
-        Rounding::Trunc
-    }
 }
 
 impl std::str::FromStr for Rounding {
@@ -64,6 +66,7 @@ impl std::str::FromStr for Rounding {
 /// resolve the leading mantissa bit (they clamp to `EXP_MIN` anyway, but
 /// we compute them honestly).
 #[inline]
+#[allow(clippy::neg_cmp_op_on_partial_ord)] // `!(x > 0)` must also catch NaN
 pub fn shared_exponent(maxabs: f32) -> i32 {
     if !(maxabs > 0.0) {
         return EXP_MIN;
@@ -110,26 +113,30 @@ pub fn quantize_value(w: f32, step: f32, m: u8, rounding: Rounding) -> i32 {
     q.clamp(-lim, lim) as i32
 }
 
-/// Quantize-dequantize a whole slice (fake-quant used by analysis code and
-/// the pure-rust inference baseline checks).  Groups run along the flat
-/// order; a ragged tail forms a final short group (identical numerics to
-/// the zero-padded Python path, since padding zeros never win the max).
-pub fn quant_dequant(w: &[f32], m: u8, group_size: usize, rounding: Rounding) -> Vec<f32> {
+/// Quantize-dequantize a whole slice under `spec` (fake-quant used by
+/// analysis code and the pure-rust inference baseline checks).  Groups
+/// run along the flat order; a ragged tail forms a final short group
+/// (identical numerics to the zero-padded Python path, since padding
+/// zeros never win the max).
+pub fn quant_dequant(w: &[f32], spec: &SefpSpec) -> Vec<f32> {
+    assert!(spec.group_size >= 1, "SefpSpec group_size must be positive");
+    let m = spec.precision.m();
     let mut out = Vec::with_capacity(w.len());
-    for g in w.chunks(group_size) {
+    for g in w.chunks(spec.group_size) {
         let maxabs = g.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
         let e = shared_exponent(maxabs);
         let step = step_for(e, m);
         for &x in g {
-            out.push(quantize_value(x, step, m, rounding) as f32 * step);
+            out.push(quantize_value(x, step, m, spec.rounding) as f32 * step);
         }
     }
     out
 }
 
-/// Mean/max absolute quantization error of `Q(w, m)` vs `w`.
-pub fn error_stats(w: &[f32], m: u8, group_size: usize) -> (f32, f32) {
-    let q = quant_dequant(w, m, group_size, Rounding::Trunc);
+/// Absolute quantization error of `Q(w)` vs `w` under `spec`, returned
+/// as `(max, mean)` — max first.
+pub fn error_stats(w: &[f32], spec: &SefpSpec) -> (f32, f32) {
+    let q = quant_dequant(w, spec);
     let mut max = 0.0f32;
     let mut sum = 0.0f64;
     for (a, b) in w.iter().zip(&q) {
@@ -141,12 +148,12 @@ pub fn error_stats(w: &[f32], m: u8, group_size: usize) -> (f32, f32) {
 }
 
 /// ε(ω) sawtooth (paper eq. 13, fig. 9): the pointwise quantization error
-/// of fixed-point rounding at mantissa width `m`, `ε(ω) = (ω·2^m − [ω·2^m])/2^m`.
+/// of fixed-point rounding at precision `p`, `ε(ω) = (ω·2^m − [ω·2^m])/2^m`.
 /// Exposed here because it is a property of the format, used by
 /// `analysis::epsilon` to regenerate fig. 9.
 #[inline]
-pub fn epsilon_sawtooth(w: f32, m: u8, rounding: Rounding) -> f32 {
-    let scale = (m as i32).exp2_f32();
+pub fn epsilon_sawtooth(w: f32, p: Precision, rounding: Rounding) -> f32 {
+    let scale = (p.m() as i32).exp2_f32();
     let q = match rounding {
         Rounding::Trunc => (w * scale).trunc(),
         Rounding::Nearest => (w * scale).round_ties_even(),
@@ -186,13 +193,14 @@ mod tests {
     #[test]
     fn quantize_max_element_fits() {
         // group max must quantize without clipping: maxabs/step < 2^m
-        for m in MANTISSA_WIDTHS {
+        for p in Precision::LADDER {
+            let m = p.m();
             for &v in &[1.0f32, 1.999, 0.7, 123.456] {
                 let e = shared_exponent(v);
                 let step = step_for(e, m);
                 let q = quantize_value(v, step, m, Rounding::Trunc);
                 // quantize_value clamps to ±(2^m − 1), so strictly < 2^m
-                assert!(q.unsigned_abs() < (1 << m), "m={m} v={v} q={q}");
+                assert!(q.unsigned_abs() < (1 << m), "{p} v={v} q={q}");
             }
         }
     }
@@ -200,26 +208,35 @@ mod tests {
     #[test]
     fn quant_dequant_error_bound() {
         let w: Vec<f32> = (0..256).map(|i| ((i * 37 % 101) as f32 - 50.0) / 17.0).collect();
-        for m in MANTISSA_WIDTHS {
-            let q = quant_dequant(&w, m, GROUP_SIZE, Rounding::Trunc);
+        for p in Precision::LADDER {
+            let q = quant_dequant(&w, &SefpSpec::new(p));
             for (g, qg) in w.chunks(GROUP_SIZE).zip(q.chunks(GROUP_SIZE)) {
                 let maxabs = g.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
-                let step = step_for(shared_exponent(maxabs), m);
+                let step = step_for(shared_exponent(maxabs), p.m());
                 for (a, b) in g.iter().zip(qg) {
-                    assert!((a - b).abs() <= step, "m={m}");
+                    assert!((a - b).abs() <= step, "{p}");
                 }
             }
         }
     }
 
     #[test]
+    fn error_stats_zero_at_exact_multiples() {
+        let spec = SefpSpec::new(Precision::of(4));
+        let w = vec![0.0f32; 16];
+        let (max, mean) = error_stats(&w, &spec);
+        assert_eq!(max, 0.0);
+        assert_eq!(mean, 0.0);
+    }
+
+    #[test]
     fn epsilon_is_sawtooth() {
         // period and amplitude 1/2^m (paper appendix A)
-        let m = 3;
+        let p = Precision::of(3);
         let amp = 1.0 / 8.0;
         for i in 0..1000 {
             let w = (i as f32) * 0.001;
-            let e = epsilon_sawtooth(w, m, Rounding::Trunc);
+            let e = epsilon_sawtooth(w, p, Rounding::Trunc);
             assert!((0.0..amp).contains(&e) || e.abs() < 1e-6, "w={w} e={e}");
         }
     }

@@ -10,11 +10,11 @@
 //! stream for E5M4 is a strict bit-subset transform of the E5M8 stream,
 //! which is the hardware-friendliness claim of SEFP.
 
-use super::{Rounding, SefpTensor, EXP_MIN};
+use super::{Precision, SefpCodec, SefpSpec, SefpTensor, EXP_MIN};
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct PackedSefp {
-    pub m: u8,
+    pub precision: Precision,
     pub group_size: usize,
     pub len: usize,
     pub n_groups: usize,
@@ -74,6 +74,7 @@ impl BitVec {
 impl PackedSefp {
     /// Pack a working tensor into the bitstream.
     pub fn from_tensor(t: &SefpTensor) -> Self {
+        let m = t.precision.m();
         let mut bits = BitVec::with_capacity(t.ideal_bits());
         for (gi, g) in t.significands.chunks(t.group_size).enumerate() {
             let e = (t.exponents[gi] as i32 - EXP_MIN) as u32;
@@ -83,19 +84,26 @@ impl PackedSefp {
                 let sign = (s < 0) as u32;
                 let mag = s.unsigned_abs() as u32;
                 bits.push_bits(sign, 1);
-                bits.push_bits(mag, t.m);
+                bits.push_bits(mag, m);
             }
         }
-        PackedSefp { m: t.m, group_size: t.group_size, len: t.len, n_groups: t.n_groups(), bits }
+        PackedSefp {
+            precision: t.precision,
+            group_size: t.group_size,
+            len: t.len,
+            n_groups: t.n_groups(),
+            bits,
+        }
     }
 
-    /// Encode straight from f32 data.
-    pub fn encode(w: &[f32], m: u8, group_size: usize, rounding: Rounding) -> Self {
-        Self::from_tensor(&SefpTensor::encode(w, m, group_size, rounding))
+    /// Encode straight from f32 data under `spec`.
+    pub fn encode(w: &[f32], spec: &SefpSpec) -> Self {
+        Self::from_tensor(&SefpTensor::encode(w, spec))
     }
 
     /// Unpack back to the working representation (bit-exact round trip).
     pub fn to_tensor(&self) -> SefpTensor {
+        let m = self.precision.m();
         let mut exponents = Vec::with_capacity(self.n_groups);
         let mut significands = Vec::with_capacity(self.len);
         let mut pos = 0usize;
@@ -108,14 +116,14 @@ impl PackedSefp {
             for _ in 0..in_group {
                 let sign = self.bits.read_bits(pos, 1);
                 pos += 1;
-                let mag = self.bits.read_bits(pos, self.m) as i16;
-                pos += self.m as usize;
+                let mag = self.bits.read_bits(pos, m) as i16;
+                pos += m as usize;
                 significands.push(if sign == 1 { -mag } else { mag });
             }
             remaining -= in_group;
         }
         SefpTensor {
-            m: self.m,
+            precision: self.precision,
             group_size: self.group_size,
             len: self.len,
             exponents,
@@ -123,15 +131,15 @@ impl PackedSefp {
         }
     }
 
-    /// Truncate the packed stream to a lower mantissa width — the
-    /// on-device precision switch: a single linear re-pack that drops the
-    /// low `m - m_new` bits of every magnitude (no float math at all).
-    pub fn truncate(&self, m_new: u8) -> Self {
-        assert!(m_new <= self.m);
-        let shift = self.m - m_new;
-        let mut bits = BitVec::with_capacity(
-            self.len * (1 + m_new as usize) + self.n_groups * 5,
-        );
+    /// Truncate the packed stream to a lower precision — the on-device
+    /// precision switch: a single linear re-pack that drops the low
+    /// `m - p.m()` bits of every magnitude (no float math at all).
+    pub fn truncate(&self, p: Precision) -> Self {
+        assert!(p <= self.precision, "can only truncate to a lower precision");
+        let m = self.precision.m();
+        let shift = m - p.m();
+        let mut bits =
+            BitVec::with_capacity(self.len * p.bits_per_elem() + self.n_groups * 5);
         let mut pos = 0usize;
         let mut remaining = self.len;
         for _ in 0..self.n_groups {
@@ -141,15 +149,15 @@ impl PackedSefp {
             for _ in 0..in_group {
                 let sign = self.bits.read_bits(pos, 1);
                 pos += 1;
-                let mag = self.bits.read_bits(pos, self.m);
-                pos += self.m as usize;
+                let mag = self.bits.read_bits(pos, m);
+                pos += m as usize;
                 bits.push_bits(sign, 1);
-                bits.push_bits(mag >> shift, m_new);
+                bits.push_bits(mag >> shift, p.m());
             }
             remaining -= in_group;
         }
         PackedSefp {
-            m: m_new,
+            precision: p,
             group_size: self.group_size,
             len: self.len,
             n_groups: self.n_groups,
@@ -173,10 +181,32 @@ impl PackedSefp {
     }
 }
 
+impl SefpCodec for PackedSefp {
+    fn encode(w: &[f32], spec: &SefpSpec) -> Self {
+        PackedSefp::encode(w, spec)
+    }
+
+    fn decode(&self) -> Vec<f32> {
+        self.to_tensor().decode()
+    }
+
+    fn truncate(&self, p: Precision) -> Self {
+        PackedSefp::truncate(self, p)
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    fn group_size(&self) -> usize {
+        self.group_size
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sefp::{GROUP_SIZE, MANTISSA_WIDTHS};
+    use crate::sefp::GROUP_SIZE;
 
     fn test_weights(n: usize, seed: u64) -> Vec<f32> {
         let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
@@ -207,31 +237,32 @@ mod tests {
     #[test]
     fn pack_unpack_roundtrip() {
         let w = test_weights(500, 2);
-        for m in MANTISSA_WIDTHS {
-            let t = SefpTensor::encode(&w, m, GROUP_SIZE, Rounding::Trunc);
-            let p = PackedSefp::from_tensor(&t);
-            assert_eq!(p.to_tensor(), t, "m={m}");
+        for p in Precision::LADDER {
+            let t = SefpTensor::encode(&w, &SefpSpec::new(p));
+            let packed = PackedSefp::from_tensor(&t);
+            assert_eq!(packed.to_tensor(), t, "{p}");
         }
     }
 
     #[test]
     fn packed_truncate_matches_tensor_truncate() {
         let w = test_weights(640, 4);
-        let p8 = PackedSefp::encode(&w, 8, GROUP_SIZE, Rounding::Trunc);
-        for m in [7, 5, 3] {
-            let a = p8.truncate(m).to_tensor();
-            let b = p8.to_tensor().truncate(m);
-            assert_eq!(a, b, "m={m}");
+        let p8 = PackedSefp::encode(&w, &SefpSpec::new(Precision::of(8)));
+        for m in [7u8, 5, 3] {
+            let lo = Precision::of(m);
+            let a = p8.truncate(lo).to_tensor();
+            let b = p8.to_tensor().truncate(lo);
+            assert_eq!(a, b, "{lo}");
         }
     }
 
     #[test]
     fn packed_size_is_ideal() {
         let w = test_weights(4096, 6);
-        for m in MANTISSA_WIDTHS {
-            let t = SefpTensor::encode(&w, m, GROUP_SIZE, Rounding::Trunc);
-            let p = PackedSefp::from_tensor(&t);
-            assert_eq!(p.packed_bytes(), t.ideal_bits().div_ceil(8));
+        for p in Precision::LADDER {
+            let t = SefpTensor::encode(&w, &SefpSpec::new(p));
+            let packed = PackedSefp::from_tensor(&t);
+            assert_eq!(packed.packed_bytes(), t.ideal_bits().div_ceil(8));
         }
     }
 
@@ -241,8 +272,9 @@ mod tests {
         // paper reports 69% (incl. KV-cache effects). Assert the format
         // side lands in the right band.
         let w = test_weights(1 << 16, 8);
-        let p = PackedSefp::encode(&w, 4, GROUP_SIZE, Rounding::Trunc);
+        let p = PackedSefp::encode(&w, &SefpSpec::new(Precision::of(4)));
         let red = p.reduction_vs_fp16();
         assert!((0.67..0.70).contains(&red), "reduction={red}");
+        assert_eq!(p.group_size, GROUP_SIZE);
     }
 }

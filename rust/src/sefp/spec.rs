@@ -1,0 +1,288 @@
+//! First-class precision types: [`Precision`], [`SefpSpec`], [`SefpCodec`].
+//!
+//! The rest of the crate used to thread precision around as a bare
+//! `m: u8` plus positional `(m, group_size, rounding)` tuples; an invalid
+//! width was only caught by an assert deep inside `encode`.  `Precision`
+//! is a validated newtype over the mantissa width (constructible only in
+//! `1..=14`), ordered so that *more mantissa bits compares greater*, and
+//! displayed in the paper's `E5M{m}` notation.  `SefpSpec` bundles the
+//! full codec configuration; every encode/quantize entry point takes a
+//! `&SefpSpec` instead of loose scalars.
+//!
+//! [`SefpCodec`] unifies encode/decode/truncate across the working
+//! ([`SefpTensor`](crate::sefp::SefpTensor)) and packed
+//! ([`PackedSefp`](crate::sefp::PackedSefp)) representations, with the
+//! ladder-exactness contract in its docs (and property-tested in
+//! `rust/tests/sefp_props.rs`).
+
+use super::Rounding;
+
+/// Error for an out-of-range mantissa width.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PrecisionError(pub u8);
+
+impl std::fmt::Display for PrecisionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mantissa width {} out of range {}..={}",
+            self.0,
+            Precision::MIN.m(),
+            Precision::MAX.m()
+        )
+    }
+}
+
+impl std::error::Error for PrecisionError {}
+
+/// A validated SEFP mantissa width (the `m` of `E5Mm`).
+///
+/// Invariant: `1 <= m <= 14` (the i16 significand store caps at 14
+/// magnitude bits + sign).  Ordering follows the mantissa width, so
+/// `Precision::of(8) > Precision::of(3)` — more bits = higher precision —
+/// and `BTreeMap<Precision, _>` iterates lowest width first.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Precision(u8);
+
+impl Precision {
+    /// Lowest representable width (E5M1).
+    pub const MIN: Precision = Precision(1);
+    /// Highest representable width (E5M14, i16 significand bound).
+    pub const MAX: Precision = Precision(14);
+
+    /// The paper's precision ladder (table 1): E5Mm, m ∈ {8..3},
+    /// highest first.
+    pub const LADDER: [Precision; 6] = [
+        Precision(8),
+        Precision(7),
+        Precision(6),
+        Precision(5),
+        Precision(4),
+        Precision(3),
+    ];
+
+    /// Validated constructor — the only way to build a `Precision` from
+    /// untrusted input (config files, CLI flags, manifests).
+    pub fn new(m: u8) -> Result<Self, PrecisionError> {
+        if (Self::MIN.0..=Self::MAX.0).contains(&m) {
+            Ok(Precision(m))
+        } else {
+            Err(PrecisionError(m))
+        }
+    }
+
+    /// Infallible constructor for compile-time-known widths; panics on an
+    /// invalid width (usable in `const` position, where the panic becomes
+    /// a compile error).
+    #[allow(clippy::manual_range_contains)] // RangeInclusive::contains is not const
+    pub const fn of(m: u8) -> Self {
+        assert!(m >= 1 && m <= 14, "mantissa width out of range 1..=14");
+        Precision(m)
+    }
+
+    /// The mantissa width `m`.
+    pub const fn m(self) -> u8 {
+        self.0
+    }
+
+    /// Parse a JSON-style number, rejecting fractional and out-of-range
+    /// values instead of silently truncating (`7.5 as u8` would quietly
+    /// become E5M7) — the shared path for config and manifest parsing.
+    pub fn from_num(x: f64) -> Result<Self, String> {
+        if x.fract() != 0.0 || !(0.0..=255.0).contains(&x) {
+            return Err(format!("mantissa width {x} is not a small integer"));
+        }
+        Precision::new(x as u8).map_err(|e| e.to_string())
+    }
+
+    /// Packed bits per element: 1 sign bit + `m` magnitude bits (the
+    /// 5-bit shared exponent is amortized per group).
+    pub const fn bits_per_elem(self) -> usize {
+        1 + self.0 as usize
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "E5M{}", self.0)
+    }
+}
+
+impl std::fmt::Debug for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "E5M{}", self.0)
+    }
+}
+
+impl From<Precision> for u8 {
+    fn from(p: Precision) -> u8 {
+        p.0
+    }
+}
+
+impl TryFrom<u8> for Precision {
+    type Error = PrecisionError;
+    fn try_from(m: u8) -> Result<Self, PrecisionError> {
+        Precision::new(m)
+    }
+}
+
+impl std::str::FromStr for Precision {
+    type Err = String;
+
+    /// Accepts `"4"`, `"m4"`, and `"E5M4"` (prefix matched ASCII
+    /// case-insensitively, so `"E5m4"` works too).
+    fn from_str(s: &str) -> Result<Self, String> {
+        let digits = match s.get(..3) {
+            Some(p3) if p3.eq_ignore_ascii_case("e5m") => &s[3..],
+            _ => match s.get(..1) {
+                Some(p1) if p1.eq_ignore_ascii_case("m") => &s[1..],
+                _ => s,
+            },
+        };
+        let m: u8 = digits
+            .parse()
+            .map_err(|_| format!("cannot parse precision {s:?} (want 4 / m4 / E5M4)"))?;
+        Precision::new(m).map_err(|e| e.to_string())
+    }
+}
+
+/// Full SEFP codec configuration: precision + grouping + rounding.
+///
+/// Builder-style: `SefpSpec::new(Precision::of(8))` gives the repo
+/// defaults (group size 64, round-toward-zero); `.with_group_size(..)` /
+/// `.with_rounding(..)` override.  `.at(p)` re-targets the same grouping
+/// and rounding to another rung of the ladder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SefpSpec {
+    pub precision: Precision,
+    pub group_size: usize,
+    pub rounding: Rounding,
+}
+
+impl SefpSpec {
+    /// Paper defaults at `precision`: group size 64, `Rounding::Trunc`.
+    pub fn new(precision: Precision) -> Self {
+        SefpSpec { precision, group_size: super::GROUP_SIZE, rounding: Rounding::Trunc }
+    }
+
+    pub fn with_group_size(mut self, group_size: usize) -> Self {
+        assert!(group_size >= 1, "group size must be positive");
+        self.group_size = group_size;
+        self
+    }
+
+    pub fn with_rounding(mut self, rounding: Rounding) -> Self {
+        self.rounding = rounding;
+        self
+    }
+
+    /// The same spec re-targeted at another precision.
+    pub fn at(&self, precision: Precision) -> Self {
+        SefpSpec { precision, ..*self }
+    }
+}
+
+/// The unified SEFP codec interface over the working and packed
+/// representations.
+///
+/// # Ladder-exactness contract
+///
+/// For every implementor, every weight slice `w`, every spec with
+/// `Rounding::Trunc`, and every `lo <= spec.precision`:
+///
+/// ```text
+/// Self::encode(w, spec).truncate(lo)  ==  Self::encode(w, &spec.at(lo))
+/// ```
+///
+/// i.e. dropping low mantissa bits of a higher-precision encoding is
+/// *bit-for-bit identical* to encoding the original weights at the lower
+/// precision — the property (paper fig. 1) that lets ONE stored master
+/// serve the whole ladder.  `truncate` must be pure integer work (shifts
+/// on significands / bitstream re-pack), never a float round trip.
+/// Property-tested for both implementors over the full {8..3} ladder in
+/// `rust/tests/sefp_props.rs`.
+pub trait SefpCodec: Sized {
+    /// Quantize an f32 slice under `spec`.
+    fn encode(w: &[f32], spec: &SefpSpec) -> Self;
+
+    /// Dequantize back to f32 (`sign * s * 2^(E - m + 1)`).
+    fn decode(&self) -> Vec<f32>;
+
+    /// Derive a lower-precision encoding by dropping low mantissa bits —
+    /// the on-device precision switch.  Panics if `p` exceeds the
+    /// current precision (bits cannot be invented).
+    fn truncate(&self, p: Precision) -> Self;
+
+    /// The precision this encoding currently holds.
+    fn precision(&self) -> Precision;
+
+    /// The group size this encoding was produced with.
+    fn group_size(&self) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_range() {
+        assert!(Precision::new(0).is_err());
+        assert!(Precision::new(15).is_err());
+        for m in 1..=14u8 {
+            assert_eq!(Precision::new(m).unwrap().m(), m);
+        }
+    }
+
+    #[test]
+    fn ordering_follows_width() {
+        assert!(Precision::of(8) > Precision::of(3));
+        assert!(Precision::of(3) < Precision::of(4));
+        let mut l = Precision::LADDER.to_vec();
+        l.sort();
+        assert_eq!(l.first(), Some(&Precision::of(3)));
+        assert_eq!(l.last(), Some(&Precision::of(8)));
+    }
+
+    #[test]
+    fn display_and_parse() {
+        let p = Precision::of(4);
+        assert_eq!(p.to_string(), "E5M4");
+        assert_eq!(format!("{p:?}"), "E5M4");
+        for s in ["4", "m4", "M4", "E5M4", "e5m4", "E5m4", "e5M4"] {
+            assert_eq!(s.parse::<Precision>().unwrap(), p, "{s}");
+        }
+        assert!("0".parse::<Precision>().is_err());
+        assert!("wat".parse::<Precision>().is_err());
+    }
+
+    #[test]
+    fn spec_builder() {
+        let spec = SefpSpec::new(Precision::of(8));
+        assert_eq!(spec.group_size, crate::sefp::GROUP_SIZE);
+        assert_eq!(spec.rounding, Rounding::Trunc);
+        let spec = spec.with_group_size(32).with_rounding(Rounding::Nearest);
+        assert_eq!(spec.group_size, 32);
+        assert_eq!(spec.rounding, Rounding::Nearest);
+        let lo = spec.at(Precision::of(3));
+        assert_eq!(lo.precision, Precision::of(3));
+        assert_eq!(lo.group_size, 32);
+        assert_eq!(lo.rounding, Rounding::Nearest);
+    }
+
+    #[test]
+    fn from_num_rejects_fractional_and_out_of_range() {
+        assert_eq!(Precision::from_num(4.0).unwrap(), Precision::of(4));
+        assert!(Precision::from_num(7.5).is_err(), "no silent truncation");
+        assert!(Precision::from_num(0.0).is_err());
+        assert!(Precision::from_num(-1.0).is_err());
+        assert!(Precision::from_num(1e9).is_err());
+        assert!(Precision::from_num(f64::NAN).is_err());
+    }
+
+    #[test]
+    fn bits_per_elem() {
+        assert_eq!(Precision::of(4).bits_per_elem(), 5);
+        assert_eq!(Precision::of(8).bits_per_elem(), 9);
+    }
+}

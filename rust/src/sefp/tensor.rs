@@ -1,18 +1,21 @@
 //! `SefpTensor` — the working (unpacked) SEFP representation.
 //!
-//! Sign-magnitude significands are stored one-per-`u16` with a per-group
+//! Sign-magnitude significands are stored one-per-`i16` with a per-group
 //! `i8` shared exponent.  This is the fast in-memory form used by the
 //! serving stack and the pure-rust inference kernel; `PackedSefp` is the
 //! bit-exact on-"disk"/on-device form used for the memory accounting of
 //! table 2.
 
-use super::{quantize_value, shared_exponent, step_for, Rounding, EXP_MIN};
+use super::{
+    quantize_value, shared_exponent, step_for, Precision, SefpCodec, SefpSpec, EXP_MIN,
+};
 
 /// One quantized tensor: per-group shared exponents + per-element signed
-/// significands.  `sig[i]` is the signed significand (|sig| < 2^m).
+/// significands.  `significands[i]` is the signed significand
+/// (`|sig| < 2^m`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SefpTensor {
-    pub m: u8,
+    pub precision: Precision,
     pub group_size: usize,
     /// logical element count (the final group may be short)
     pub len: usize,
@@ -23,30 +26,41 @@ pub struct SefpTensor {
 }
 
 impl SefpTensor {
-    /// Encode an f32 slice at mantissa width `m` (paper fig. 2: shared
-    /// exponent selection, mantissa alignment, truncation).
-    pub fn encode(w: &[f32], m: u8, group_size: usize, rounding: Rounding) -> Self {
-        assert!((1..=14).contains(&m), "mantissa width out of range: {m}");
-        let n_groups = w.len().div_ceil(group_size);
+    /// Encode an f32 slice under `spec` (paper fig. 2: shared exponent
+    /// selection, mantissa alignment, truncation).
+    pub fn encode(w: &[f32], spec: &SefpSpec) -> Self {
+        // SefpSpec's fields are pub for ergonomic reads; a hand-built
+        // spec can bypass `with_group_size`'s check, so fail loudly here
+        // instead of div_ceil-by-zero below
+        assert!(spec.group_size >= 1, "SefpSpec group_size must be positive");
+        let m = spec.precision.m();
+        let n_groups = w.len().div_ceil(spec.group_size);
         let mut exponents = Vec::with_capacity(n_groups);
         let mut significands = Vec::with_capacity(w.len());
-        for g in w.chunks(group_size) {
+        for g in w.chunks(spec.group_size) {
             let maxabs = g.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
             let e = if maxabs > 0.0 { shared_exponent(maxabs) } else { EXP_MIN };
             let step = step_for(e, m);
             exponents.push(e as i8);
             for &x in g {
-                significands.push(quantize_value(x, step, m, rounding) as i16);
+                significands.push(quantize_value(x, step, m, spec.rounding) as i16);
             }
         }
-        SefpTensor { m, group_size, len: w.len(), exponents, significands }
+        SefpTensor {
+            precision: spec.precision,
+            group_size: spec.group_size,
+            len: w.len(),
+            exponents,
+            significands,
+        }
     }
 
     /// Dequantize to f32 (`sign * s * 2^(E - m + 1)`).
     pub fn decode(&self) -> Vec<f32> {
+        let m = self.precision.m();
         let mut out = Vec::with_capacity(self.len);
         for (gi, g) in self.significands.chunks(self.group_size).enumerate() {
-            let step = step_for(self.exponents[gi] as i32, self.m);
+            let step = step_for(self.exponents[gi] as i32, m);
             for &s in g {
                 out.push(s as f32 * step);
             }
@@ -55,12 +69,14 @@ impl SefpTensor {
     }
 
     /// THE precision-switch operation (paper fig. 1, red arrows): drop
-    /// `self.m - m_new` low mantissa bits in place.  O(n) integer shifts,
-    /// no float math, no re-inspection of the weights; exact equal to
-    /// re-encoding the original weights at `m_new` under `Rounding::Trunc`.
-    pub fn truncate(&self, m_new: u8) -> Self {
-        assert!(m_new <= self.m, "can only truncate to a lower width");
-        let shift = self.m - m_new;
+    /// `self.precision.m() - p.m()` low mantissa bits in place.  O(n)
+    /// integer shifts,
+    /// no float math, no re-inspection of the weights; exactly equal to
+    /// re-encoding the original weights at `p` under `Rounding::Trunc`
+    /// (the `SefpCodec` ladder-exactness contract).
+    pub fn truncate(&self, p: Precision) -> Self {
+        assert!(p <= self.precision, "can only truncate to a lower precision");
+        let shift = self.precision.m() - p.m();
         let significands = self
             .significands
             .iter()
@@ -68,7 +84,7 @@ impl SefpTensor {
             .map(|&s| if s >= 0 { s >> shift } else { -((-s) >> shift) })
             .collect();
         SefpTensor {
-            m: m_new,
+            precision: p,
             group_size: self.group_size,
             len: self.len,
             exponents: self.exponents.clone(),
@@ -76,7 +92,7 @@ impl SefpTensor {
         }
     }
 
-    /// Working-representation memory in bytes (u16 significands + i8
+    /// Working-representation memory in bytes (i16 significands + i8
     /// exponents).  See `PackedSefp::packed_bytes` for the wire format.
     pub fn working_bytes(&self) -> usize {
         self.significands.len() * 2 + self.exponents.len()
@@ -84,7 +100,7 @@ impl SefpTensor {
 
     /// Ideal packed size in bits: (1 + m) per element + 5 per group.
     pub fn ideal_bits(&self) -> usize {
-        self.len * (1 + self.m as usize) + self.exponents.len() * 5
+        self.len * self.precision.bits_per_elem() + self.exponents.len() * 5
     }
 
     pub fn n_groups(&self) -> usize {
@@ -92,10 +108,32 @@ impl SefpTensor {
     }
 }
 
+impl SefpCodec for SefpTensor {
+    fn encode(w: &[f32], spec: &SefpSpec) -> Self {
+        SefpTensor::encode(w, spec)
+    }
+
+    fn decode(&self) -> Vec<f32> {
+        SefpTensor::decode(self)
+    }
+
+    fn truncate(&self, p: Precision) -> Self {
+        SefpTensor::truncate(self, p)
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    fn group_size(&self) -> usize {
+        self.group_size
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sefp::{quant_dequant, GROUP_SIZE, MANTISSA_WIDTHS};
+    use crate::sefp::{quant_dequant, Rounding};
 
     fn test_weights(n: usize, seed: u64) -> Vec<f32> {
         let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
@@ -112,10 +150,11 @@ mod tests {
     #[test]
     fn encode_decode_matches_quant_dequant() {
         let w = test_weights(300, 7);
-        for m in MANTISSA_WIDTHS {
+        for p in Precision::LADDER {
             for r in [Rounding::Trunc, Rounding::Nearest] {
-                let t = SefpTensor::encode(&w, m, GROUP_SIZE, r);
-                assert_eq!(t.decode(), quant_dequant(&w, m, GROUP_SIZE, r));
+                let spec = SefpSpec::new(p).with_rounding(r);
+                let t = SefpTensor::encode(&w, &spec);
+                assert_eq!(t.decode(), quant_dequant(&w, &spec));
             }
         }
     }
@@ -123,11 +162,12 @@ mod tests {
     #[test]
     fn truncate_equals_direct_encode() {
         let w = test_weights(640, 3);
-        let hi = SefpTensor::encode(&w, 8, GROUP_SIZE, Rounding::Trunc);
-        for m in [7, 6, 5, 4, 3] {
-            let direct = SefpTensor::encode(&w, m, GROUP_SIZE, Rounding::Trunc);
-            let chained = hi.truncate(m);
-            assert_eq!(direct.significands, chained.significands, "m={m}");
+        let spec = SefpSpec::new(Precision::of(8));
+        let hi = SefpTensor::encode(&w, &spec);
+        for p in &Precision::LADDER[1..] {
+            let direct = SefpTensor::encode(&w, &spec.at(*p));
+            let chained = hi.truncate(*p);
+            assert_eq!(direct.significands, chained.significands, "{p}");
             assert_eq!(direct.exponents, chained.exponents);
             assert_eq!(direct.decode(), chained.decode());
         }
@@ -137,14 +177,17 @@ mod tests {
     fn truncate_chain_associative() {
         // M8 -> M6 -> M3 == M8 -> M3
         let w = test_weights(256, 11);
-        let hi = SefpTensor::encode(&w, 8, GROUP_SIZE, Rounding::Trunc);
-        assert_eq!(hi.truncate(6).truncate(3), hi.truncate(3));
+        let hi = SefpTensor::encode(&w, &SefpSpec::new(Precision::of(8)));
+        assert_eq!(
+            hi.truncate(Precision::of(6)).truncate(Precision::of(3)),
+            hi.truncate(Precision::of(3))
+        );
     }
 
     #[test]
     fn ragged_tail_group() {
         let w = test_weights(100, 5); // 64 + 36
-        let t = SefpTensor::encode(&w, 4, GROUP_SIZE, Rounding::Trunc);
+        let t = SefpTensor::encode(&w, &SefpSpec::new(Precision::of(4)));
         assert_eq!(t.n_groups(), 2);
         assert_eq!(t.decode().len(), 100);
     }
@@ -152,16 +195,17 @@ mod tests {
     #[test]
     fn significand_bounds() {
         let w = test_weights(512, 9);
-        for m in MANTISSA_WIDTHS {
-            let t = SefpTensor::encode(&w, m, GROUP_SIZE, Rounding::Trunc);
-            let lim = (1i16 << m) - 1;
+        for p in Precision::LADDER {
+            let t = SefpTensor::encode(&w, &SefpSpec::new(p));
+            let lim = (1i16 << p.m()) - 1;
             assert!(t.significands.iter().all(|&s| s.abs() <= lim));
         }
     }
 
     #[test]
     fn ideal_bits_accounting() {
-        let t = SefpTensor::encode(&test_weights(128, 1), 4, 64, Rounding::Trunc);
+        let spec = SefpSpec::new(Precision::of(4));
+        let t = SefpTensor::encode(&test_weights(128, 1), &spec);
         assert_eq!(t.ideal_bits(), 128 * 5 + 2 * 5);
     }
 }

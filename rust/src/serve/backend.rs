@@ -1,37 +1,51 @@
 //! Logits backends: the one-step interface the generation engine drives.
 //!
 //! [`Server`](super::Server) owns its backend (no lifetime-bound
-//! `&mut Engine` — the seed's borrow made it impossible to hand the
-//! server to a thread or embed it in a long-lived service struct).
-//! Production uses [`EngineHandle`] over the PJRT engine; tests and
-//! `bench_serve` use [`SimBackend`], a deterministic pure-Rust stand-in,
-//! so the scheduler and the continuous-batching decode loop are
+//! `&mut Engine`).  A precision run starts with
+//! [`load_view`](LogitsBackend::load_view) — the backend receives the
+//! SEFP-domain [`LadderView`](super::LadderView) for the scheduled
+//! precision — then drives one
+//! [`logits_step`](LogitsBackend::logits_step) per decode iteration.
+//!
+//! Production uses [`EngineHandle`] over the PJRT engine: `load_view`
+//! decodes the view into ONE reusable f32 scratch `ParamStore` (the PJRT
+//! ABI takes f32 literals; this is the only float materialization on the
+//! serve path, and at most one copy is ever resident — switching
+//! precision overwrites it instead of growing a per-width zoo).  Tests
+//! and `bench_serve` use [`SimBackend`], a deterministic pure-Rust
+//! stand-in, so the scheduler and the continuous-batching decode loop are
 //! exercised without AOT artifacts.
 
 use crate::runtime::{Engine, ParamStore, Width};
+use crate::sefp::Precision;
+
+use super::store::LadderView;
 
 /// One forward step over the engine's fixed (B, T) token matrix,
-/// returning flat (B, T, V) logits.
+/// returning flat (B, T, V) logits, at the precision loaded by
+/// `load_view`.
 pub trait LogitsBackend {
     /// (batch rows, sequence length) of one step call.
     fn batch_shape(&self) -> (usize, usize);
     fn vocab_size(&self) -> usize;
-    fn logits_step(
-        &mut self,
-        params: &ParamStore,
-        tokens: &[i32],
-        width: Width,
-    ) -> anyhow::Result<Vec<f32>>;
+    /// Install the weights for the upcoming precision run.
+    fn load_view(&mut self, view: &LadderView) -> anyhow::Result<()>;
+    /// One decode step at the loaded precision.
+    fn logits_step(&mut self, tokens: &[i32]) -> anyhow::Result<Vec<f32>>;
 }
 
 /// Owned handle over the PJRT [`Engine`] — the production backend.
 pub struct EngineHandle {
     engine: Engine,
+    /// f32 scratch for the currently loaded view, keyed by
+    /// (ladder id, precision) so a hot-swapped ladder can never be
+    /// served from stale weights (ONE copy, reused)
+    loaded: Option<((u64, Precision), ParamStore)>,
 }
 
 impl EngineHandle {
     pub fn new(engine: Engine) -> Self {
-        EngineHandle { engine }
+        EngineHandle { engine, loaded: None }
     }
 
     pub fn engine(&self) -> &Engine {
@@ -56,34 +70,55 @@ impl LogitsBackend for EngineHandle {
         self.engine.vocab_size()
     }
 
-    fn logits_step(
-        &mut self,
-        params: &ParamStore,
-        tokens: &[i32],
-        width: Width,
-    ) -> anyhow::Result<Vec<f32>> {
-        self.engine.logits_step(params, tokens, width)
+    fn load_view(&mut self, view: &LadderView) -> anyhow::Result<()> {
+        // skip the decode when the same view is already loaded (the
+        // common continuous-batching case: back-to-back runs at one
+        // width); the ladder id keeps a hot-swapped ladder coherent
+        let key = (view.ladder_id(), view.precision);
+        if self.loaded.as_ref().map(|(k, _)| *k) != Some(key) {
+            self.loaded = Some((key, view.to_param_store()));
+        }
+        Ok(())
+    }
+
+    fn logits_step(&mut self, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+        let ((_, p), params) = self
+            .loaded
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("logits_step before load_view"))?;
+        self.engine.logits_step(params, tokens, Width::m(*p))
     }
 }
 
 /// Deterministic in-process backend for scheduler tests and serving
 /// benchmarks: logits are a pure hash of (position token, candidate
-/// token, width), so generations are reproducible bit-for-bit, distinct
-/// per precision, and independent of wall clock.
+/// token, precision), so generations are reproducible bit-for-bit,
+/// distinct per precision, and independent of wall clock.
 pub struct SimBackend {
     pub bsz: usize,
     pub seq_len: usize,
     pub vocab: usize,
     /// logits_step invocations (decode iterations observed)
     pub calls: u64,
+    /// load_view invocations (precision runs observed)
+    pub loads: u64,
     /// simulated per-step latency — lets scheduler tests and benches
     /// model sustained load in real time (zero = as fast as possible)
     pub step_delay: std::time::Duration,
+    loaded: Option<Precision>,
 }
 
 impl SimBackend {
     pub fn new(bsz: usize, seq_len: usize, vocab: usize) -> Self {
-        SimBackend { bsz, seq_len, vocab, calls: 0, step_delay: std::time::Duration::ZERO }
+        SimBackend {
+            bsz,
+            seq_len,
+            vocab,
+            calls: 0,
+            loads: 0,
+            step_delay: std::time::Duration::ZERO,
+            loaded: None,
+        }
     }
 
     pub fn with_step_delay(mut self, d: std::time::Duration) -> Self {
@@ -92,15 +127,11 @@ impl SimBackend {
     }
 
     #[inline]
-    fn score(token: i32, cand: usize, width: Width) -> f32 {
-        let w = match width {
-            Width(Some(m)) => m as u64,
-            Width(None) => 9,
-        };
+    fn score(token: i32, cand: usize, p: Precision) -> f32 {
         let mut h = (token as u64)
             .wrapping_mul(0x9E3779B97F4A7C15)
             .wrapping_add((cand as u64).wrapping_mul(0xBF58476D1CE4E5B9))
-            .wrapping_add(w.wrapping_mul(0x94D049BB133111EB));
+            .wrapping_add((p.m() as u64).wrapping_mul(0x94D049BB133111EB));
         h ^= h >> 29;
         (h % 1000) as f32 / 1000.0
     }
@@ -115,12 +146,16 @@ impl LogitsBackend for SimBackend {
         self.vocab
     }
 
-    fn logits_step(
-        &mut self,
-        _params: &ParamStore,
-        tokens: &[i32],
-        width: Width,
-    ) -> anyhow::Result<Vec<f32>> {
+    fn load_view(&mut self, view: &LadderView) -> anyhow::Result<()> {
+        self.loads += 1;
+        self.loaded = Some(view.precision);
+        Ok(())
+    }
+
+    fn logits_step(&mut self, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+        let p = self
+            .loaded
+            .ok_or_else(|| anyhow::anyhow!("logits_step before load_view"))?;
         anyhow::ensure!(
             tokens.len() == self.bsz * self.seq_len,
             "SimBackend: batch is {} tokens, shape is {}x{}",
@@ -135,7 +170,7 @@ impl LogitsBackend for SimBackend {
         let mut out = Vec::with_capacity(tokens.len() * self.vocab);
         for &t in tokens {
             for v in 0..self.vocab {
-                out.push(Self::score(t, v, width));
+                out.push(Self::score(t, v, p));
             }
         }
         Ok(out)
@@ -145,24 +180,34 @@ impl LogitsBackend for SimBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::PrecisionLadder;
+
+    fn view(ladder: &mut PrecisionLadder, raw: u8) -> std::sync::Arc<LadderView> {
+        ladder.view_at(Precision::of(raw)).unwrap()
+    }
 
     #[test]
-    fn sim_backend_is_deterministic_and_width_sensitive() {
+    fn sim_backend_is_deterministic_and_precision_sensitive() {
         let mut b = SimBackend::new(2, 4, 8);
         let params = ParamStore {
-            tensors: vec![],
-            names: vec![],
-            shapes: vec![],
-            quantized: vec![],
+            tensors: vec![vec![0.5; 8]],
+            names: vec!["w".into()],
+            shapes: vec![vec![8]],
+            quantized: vec![false],
         };
+        let mut ladder = PrecisionLadder::from_params(&params);
         let tokens = vec![1i32; 8];
-        let a = b.logits_step(&params, &tokens, Width::m(4)).unwrap();
-        let c = b.logits_step(&params, &tokens, Width::m(4)).unwrap();
-        let d = b.logits_step(&params, &tokens, Width::m(3)).unwrap();
+        assert!(b.logits_step(&tokens).is_err(), "must load a view first");
+        b.load_view(&view(&mut ladder, 4)).unwrap();
+        let a = b.logits_step(&tokens).unwrap();
+        let c = b.logits_step(&tokens).unwrap();
+        b.load_view(&view(&mut ladder, 3)).unwrap();
+        let d = b.logits_step(&tokens).unwrap();
         assert_eq!(a, c);
         assert_ne!(a, d);
         assert_eq!(a.len(), 2 * 4 * 8);
         assert_eq!(b.calls, 3);
-        assert!(b.logits_step(&params, &tokens[..4], Width::m(4)).is_err());
+        assert_eq!(b.loads, 2);
+        assert!(b.logits_step(&tokens[..4]).is_err());
     }
 }

@@ -28,11 +28,13 @@
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
 
+use crate::sefp::Precision;
+
 use super::Request;
 
 pub struct QueuedRequest {
     pub req: Request,
-    pub width_m: u8,
+    pub precision: Precision,
     pub enqueued_at: Instant,
 }
 
@@ -69,7 +71,7 @@ pub struct DynamicBatcher {
     pub max_batch: usize,
     pub queue_cap: usize,
     pub policy: SchedPolicy,
-    queues: BTreeMap<u8, VecDeque<QueuedRequest>>,
+    queues: BTreeMap<Precision, VecDeque<QueuedRequest>>,
     len: usize,
 }
 
@@ -98,8 +100,8 @@ impl DynamicBatcher {
     }
 
     /// Enqueue; `Err` = backpressure (queue full).
-    pub fn push(&mut self, req: Request, width_m: u8) -> Result<(), Request> {
-        self.push_at(req, width_m, Instant::now())
+    pub fn push(&mut self, req: Request, precision: Precision) -> Result<(), Request> {
+        self.push_at(req, precision, Instant::now())
     }
 
     /// Enqueue with an explicit arrival time.  `push` delegates here;
@@ -108,48 +110,48 @@ impl DynamicBatcher {
     pub fn push_at(
         &mut self,
         req: Request,
-        width_m: u8,
+        precision: Precision,
         enqueued_at: Instant,
     ) -> Result<(), Request> {
         if self.len >= self.queue_cap {
             return Err(req);
         }
         self.queues
-            .entry(width_m)
+            .entry(precision)
             .or_default()
-            .push_back(QueuedRequest { req, width_m, enqueued_at });
+            .push_back(QueuedRequest { req, precision, enqueued_at });
         self.len += 1;
         Ok(())
     }
 
     /// Pop the next batch to dispatch under the scheduling policy, up to
     /// `max_batch` rows, FIFO within a precision.
-    pub fn pop_batch(&mut self) -> Option<(u8, Vec<QueuedRequest>)> {
+    pub fn pop_batch(&mut self) -> Option<(Precision, Vec<QueuedRequest>)> {
         self.pop_batch_at(Instant::now())
     }
 
     /// `pop_batch` with an explicit clock — the deterministic core.
-    pub fn pop_batch_at(&mut self, now: Instant) -> Option<(u8, Vec<QueuedRequest>)> {
-        let width = self.schedule(now)?;
-        let batch = self.pop_for_width(width, self.max_batch);
-        Some((width, batch))
+    pub fn pop_batch_at(&mut self, now: Instant) -> Option<(Precision, Vec<QueuedRequest>)> {
+        let precision = self.schedule(now)?;
+        let batch = self.pop_for_width(precision, self.max_batch);
+        Some((precision, batch))
     }
 
     /// Decide which width runs next.  Forced (over-`max_wait`) queues
     /// take absolute priority, oldest head first; otherwise the highest
     /// score wins.  Strict comparisons over the width-ordered map make
     /// every tie resolve to the lowest width.
-    fn schedule(&self, now: Instant) -> Option<u8> {
+    fn schedule(&self, now: Instant) -> Option<Precision> {
         if let Some(w) = self.starving_width(now) {
             return Some(w);
         }
-        let mut best: Option<(f64, u8)> = None;
+        let mut best: Option<(f64, Precision)> = None;
         for (&w, q) in &self.queues {
             let Some(head) = q.front() else { continue };
             let fill = q.len().min(self.max_batch) as f64 / self.max_batch.max(1) as f64;
             let wait = now.saturating_duration_since(head.enqueued_at).as_secs_f64();
             let score = fill + self.policy.age_weight * wait;
-            if best.map_or(true, |(s, _)| score > s) {
+            if best.is_none_or(|(s, _)| score > s) {
                 best = Some((score, w));
             }
         }
@@ -160,12 +162,12 @@ impl DynamicBatcher {
     /// bound, if any (oldest head first, ties to the lowest width).
     /// The server's continuous-batching refill consults this to stop
     /// extending the current width's run when another width is overdue.
-    pub fn starving_width(&self, now: Instant) -> Option<u8> {
-        let mut worst: Option<(Duration, u8)> = None;
+    pub fn starving_width(&self, now: Instant) -> Option<Precision> {
+        let mut worst: Option<(Duration, Precision)> = None;
         for (&w, q) in &self.queues {
             let Some(head) = q.front() else { continue };
             let wait = now.saturating_duration_since(head.enqueued_at);
-            if wait >= self.policy.max_wait && worst.map_or(true, |(d, _)| wait > d) {
+            if wait >= self.policy.max_wait && worst.is_none_or(|(d, _)| wait > d) {
                 worst = Some((wait, w));
             }
         }
@@ -174,8 +176,8 @@ impl DynamicBatcher {
 
     /// Pop up to `k` requests of one width, FIFO — the continuous
     /// batching refill path.
-    pub fn pop_for_width(&mut self, width_m: u8, k: usize) -> Vec<QueuedRequest> {
-        let Some(q) = self.queues.get_mut(&width_m) else { return Vec::new() };
+    pub fn pop_for_width(&mut self, precision: Precision, k: usize) -> Vec<QueuedRequest> {
+        let Some(q) = self.queues.get_mut(&precision) else { return Vec::new() };
         let take = q.len().min(k);
         let batch: Vec<QueuedRequest> = q.drain(..take).collect();
         self.len -= batch.len();
@@ -183,8 +185,8 @@ impl DynamicBatcher {
     }
 
     /// Queue depth per precision (metrics).
-    pub fn depths(&self) -> Vec<(u8, usize)> {
-        let mut v: Vec<(u8, usize)> =
+    pub fn depths(&self) -> Vec<(Precision, usize)> {
+        let mut v: Vec<(Precision, usize)> =
             self.queues.iter().map(|(&w, q)| (w, q.len())).collect();
         v.sort_unstable();
         v
@@ -200,14 +202,18 @@ mod tests {
         Request::new(id, TaskClass::Other, vec![65])
     }
 
+    fn p(raw: u8) -> Precision {
+        Precision::of(raw)
+    }
+
     #[test]
     fn batches_same_precision_fifo() {
         let mut b = DynamicBatcher::new(4, 100);
         for i in 0..6 {
-            b.push(req(i), 4).unwrap();
+            b.push(req(i), p(4)).unwrap();
         }
         let (w, batch) = b.pop_batch().unwrap();
-        assert_eq!(w, 4);
+        assert_eq!(w, p(4));
         assert_eq!(batch.len(), 4);
         assert_eq!(batch[0].req.id, 0);
         let (_, rest) = b.pop_batch().unwrap();
@@ -218,22 +224,22 @@ mod tests {
     #[test]
     fn longest_queue_first() {
         let mut b = DynamicBatcher::new(8, 100);
-        b.push(req(0), 8).unwrap();
+        b.push(req(0), p(8)).unwrap();
         for i in 1..4 {
-            b.push(req(i), 4).unwrap();
+            b.push(req(i), p(4)).unwrap();
         }
         let (w, _) = b.pop_batch().unwrap();
-        assert_eq!(w, 4);
+        assert_eq!(w, p(4));
     }
 
     #[test]
     fn backpressure() {
         let mut b = DynamicBatcher::new(4, 2);
-        b.push(req(0), 4).unwrap();
-        b.push(req(1), 4).unwrap();
-        assert!(b.push(req(2), 4).is_err());
+        b.push(req(0), p(4)).unwrap();
+        b.push(req(1), p(4)).unwrap();
+        assert!(b.push(req(2), p(4)).is_err());
         let _ = b.pop_batch();
-        b.push(req(3), 4).unwrap();
+        b.push(req(3), p(4)).unwrap();
     }
 
     #[test]
@@ -243,14 +249,14 @@ mod tests {
         let t0 = Instant::now();
         let mut b = DynamicBatcher::new(4, 100);
         for (i, w) in [8u8, 5, 3, 4].into_iter().enumerate() {
-            b.push_at(req(i as u64), w, t0).unwrap();
+            b.push_at(req(i as u64), p(w), t0).unwrap();
         }
         let now = t0 + Duration::from_millis(5);
         let mut order = Vec::new();
         while let Some((w, _)) = b.pop_batch_at(now) {
             order.push(w);
         }
-        assert_eq!(order, vec![3, 4, 5, 8]);
+        assert_eq!(order, vec![p(3), p(4), p(5), p(8)]);
     }
 
     #[test]
@@ -261,12 +267,12 @@ mod tests {
         let build = || {
             let mut b = DynamicBatcher::new(2, 100);
             for i in 0..4u64 {
-                b.push_at(req(i), 4, t0 + Duration::from_millis(i)).unwrap();
+                b.push_at(req(i), p(4), t0 + Duration::from_millis(i)).unwrap();
             }
             for i in 4..6u64 {
-                b.push_at(req(i), 3, t0 + Duration::from_millis(i)).unwrap();
+                b.push_at(req(i), p(3), t0 + Duration::from_millis(i)).unwrap();
             }
-            b.push_at(req(6), 8, t0).unwrap();
+            b.push_at(req(6), p(8), t0).unwrap();
             b
         };
         let drain = |mut b: DynamicBatcher| {
@@ -289,28 +295,28 @@ mod tests {
         let old = now.checked_sub(Duration::from_millis(600)).unwrap();
         let fresh = now.checked_sub(Duration::from_millis(1)).unwrap();
         let mut b = DynamicBatcher::new(8, 100);
-        b.push_at(req(0), 3, old).unwrap();
+        b.push_at(req(0), p(3), old).unwrap();
         for i in 1..9 {
-            b.push_at(req(i), 4, fresh).unwrap();
+            b.push_at(req(i), p(4), fresh).unwrap();
         }
-        assert_eq!(b.starving_width(now), Some(3));
+        assert_eq!(b.starving_width(now), Some(p(3)));
         let (w, batch) = b.pop_batch_at(now).unwrap();
-        assert_eq!(w, 3);
+        assert_eq!(w, p(3));
         assert_eq!(batch[0].req.id, 0);
         // once the starving request is out the deep queue runs again
         let (w, _) = b.pop_batch_at(now).unwrap();
-        assert_eq!(w, 4);
+        assert_eq!(w, p(4));
     }
 
     #[test]
     fn pop_for_width_is_fifo_and_bounded() {
         let mut b = DynamicBatcher::new(8, 100);
         for i in 0..5 {
-            b.push(req(i), 6).unwrap();
+            b.push(req(i), p(6)).unwrap();
         }
-        let got = b.pop_for_width(6, 3);
+        let got = b.pop_for_width(p(6), 3);
         assert_eq!(got.iter().map(|q| q.req.id).collect::<Vec<_>>(), vec![0, 1, 2]);
         assert_eq!(b.len(), 2);
-        assert!(b.pop_for_width(7, 3).is_empty());
+        assert!(b.pop_for_width(p(7), 3).is_empty());
     }
 }

@@ -2,30 +2,32 @@
 //! fig. 1 and table 2): ONE stored model, per-request precision switching
 //! by mantissa truncation, no model zoo and no requantization pass.
 //!
-//! * [`store`]   — `PrecisionStore`: master weights kept ONCE in SEFP
-//!   E5M8; any lower precision is derived by `truncate()` and cached.
-//! * [`router`]  — task-class → precision policy (generation vs
+//! * [`store`]   — [`PrecisionLadder`]: master weights kept ONCE in SEFP
+//!   E5M8; any lower precision is a [`LadderView`] derived by integer
+//!   truncation, cached under a byte budget with LRU eviction (no f32
+//!   round trip on the switch path, no per-width model zoo).
+//! * [`router`]  — task-class → [`Precision`] policy (generation vs
 //!   understanding, paper intro).
 //! * [`batcher`] — dynamic batcher + deadline/age-aware scheduler.
 //!   Each non-empty precision queue is scored
 //!   `fill_ratio + age_weight * oldest_wait_secs`; any queue whose head
 //!   has waited `max_wait` is scheduled next regardless of score (the
 //!   anti-starvation bound — in-flight decodes still finish first), and
-//!   every tie breaks on the lowest width over `BTreeMap` iteration —
+//!   every tie breaks on the lowest precision over `BTreeMap` iteration —
 //!   the schedule is bit-for-bit deterministic.
-//! * [`backend`] — [`LogitsBackend`]: the one-step logits interface the
-//!   server generates through.  [`EngineHandle`] adapts the owned PJRT
-//!   engine; [`SimBackend`] is a deterministic in-process stand-in for
-//!   scheduler tests and serving benchmarks.
+//! * [`backend`] — [`LogitsBackend`]: `load_view` installs the SEFP view
+//!   for a precision run, `logits_step` is the one-step logits interface
+//!   the server generates through.  [`EngineHandle`] adapts the owned
+//!   PJRT engine; [`SimBackend`] is a deterministic in-process stand-in
+//!   for scheduler tests and serving benchmarks.
 //! * [`server`]  — continuous-batching generation engine.  A scheduled
 //!   batch is decoded for up to `max_new_tokens` tokens via repeated
 //!   `logits_step` calls (greedy or temperature sampling); rows freed by
 //!   finished requests are refilled FIFO from the same precision queue
 //!   between decode iterations, unless another precision has crossed the
 //!   anti-starvation bound — then the run ends and the scheduler picks
-//!   the overdue width.  Latency/throughput stats are collected from the
-//!   first moment of real work (idle time before traffic does not
-//!   deflate throughput).
+//!   the overdue precision.  Ladder switch stats (hit/miss/evict/latency)
+//!   surface through [`ServeStats`].
 
 pub mod backend;
 pub mod batcher;
@@ -37,7 +39,9 @@ pub use backend::{EngineHandle, LogitsBackend, SimBackend};
 pub use batcher::{DynamicBatcher, SchedPolicy};
 pub use router::{Router, TaskClass};
 pub use server::{Server, ServeStats};
-pub use store::PrecisionStore;
+pub use store::{LadderStats, LadderTensor, LadderView, PrecisionLadder};
+
+use crate::sefp::Precision;
 
 /// A serving request: generate up to `max_new_tokens` tokens from a
 /// token prompt (1 = classic next-token serving).
@@ -47,7 +51,7 @@ pub struct Request {
     pub class: TaskClass,
     pub prompt: Vec<i32>,
     /// explicit precision override (None = router decides)
-    pub force_m: Option<u8>,
+    pub precision: Option<Precision>,
     /// decode budget; generation stops early at EOS
     pub max_new_tokens: usize,
     /// 0.0 = greedy argmax; > 0 = softmax temperature sampling
@@ -57,11 +61,11 @@ pub struct Request {
 impl Request {
     /// A single-token (next-token) request — the common case.
     pub fn new(id: u64, class: TaskClass, prompt: Vec<i32>) -> Self {
-        Request { id, class, prompt, force_m: None, max_new_tokens: 1, temperature: 0.0 }
+        Request { id, class, prompt, precision: None, max_new_tokens: 1, temperature: 0.0 }
     }
 
-    pub fn with_force_m(mut self, m: u8) -> Self {
-        self.force_m = Some(m);
+    pub fn with_precision(mut self, p: Precision) -> Self {
+        self.precision = Some(p);
         self
     }
 
@@ -80,7 +84,8 @@ impl Request {
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
-    pub width_m: u8,
+    /// precision this request was served at
+    pub precision: Precision,
     /// first generated token (kept for next-token callers)
     pub next_token: i32,
     /// the full generation, `next_token` included

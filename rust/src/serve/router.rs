@@ -1,4 +1,4 @@
-//! Precision router: maps request classes to bit-widths.
+//! Precision router: maps request classes to [`Precision`]s.
 //!
 //! The paper's motivation (intro): generation tasks trade latency for
 //! precision, understanding tasks want immediate answers at lower
@@ -7,6 +7,7 @@
 //! happens.
 
 use crate::config::ServeConfig;
+use crate::sefp::Precision;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TaskClass {
@@ -28,15 +29,15 @@ impl Router {
         Router { cfg }
     }
 
-    /// Decide the mantissa width for a request.
-    pub fn route(&self, class: TaskClass, force_m: Option<u8>) -> u8 {
-        if let Some(m) = force_m {
-            return m;
+    /// Decide the precision for a request.
+    pub fn route(&self, class: TaskClass, force: Option<Precision>) -> Precision {
+        if let Some(p) = force {
+            return p;
         }
         match class {
-            TaskClass::Generation => self.cfg.generation_m,
-            TaskClass::Understanding => self.cfg.understanding_m,
-            TaskClass::Other => self.cfg.default_m,
+            TaskClass::Generation => self.cfg.generation_precision,
+            TaskClass::Understanding => self.cfg.understanding_precision,
+            TaskClass::Other => self.cfg.default_precision,
         }
     }
 }
@@ -48,14 +49,17 @@ mod tests {
     #[test]
     fn routes_by_class() {
         let r = Router::new(ServeConfig::default());
-        assert_eq!(r.route(TaskClass::Generation, None), 8);
-        assert_eq!(r.route(TaskClass::Understanding, None), 4);
-        assert_eq!(r.route(TaskClass::Other, None), 6);
+        assert_eq!(r.route(TaskClass::Generation, None), Precision::of(8));
+        assert_eq!(r.route(TaskClass::Understanding, None), Precision::of(4));
+        assert_eq!(r.route(TaskClass::Other, None), Precision::of(6));
     }
 
     #[test]
     fn force_overrides() {
         let r = Router::new(ServeConfig::default());
-        assert_eq!(r.route(TaskClass::Generation, Some(3)), 3);
+        assert_eq!(
+            r.route(TaskClass::Generation, Some(Precision::of(3))),
+            Precision::of(3)
+        );
     }
 }

@@ -1,4 +1,4 @@
-//! The serving front-end: router + precision store + scheduler over an
+//! The serving front-end: router + precision ladder + scheduler over an
 //! owned logits backend, with a continuous-batching generation loop.
 //! Synchronous core (deterministic, unit-testable); the
 //! `multi_precision_serving` example wraps it in threads for a
@@ -6,14 +6,16 @@
 //!
 //! Request path: `submit` routes a request to a precision queue;
 //! `process_all` repeatedly asks the scheduler for the next precision
-//! batch and hands it to the generation loop.  The loop decodes every
+//! batch and hands it to the generation loop.  Each run starts with a
+//! `PrecisionLadder::view_at` switch (SEFP-domain, cached under the byte
+//! budget) and a `load_view` on the backend; the loop then decodes every
 //! admitted row for up to `max_new_tokens` tokens (greedy or temperature
 //! sampling, EOS stops early), one `logits_step` per decode iteration
 //! over the engine's fixed (B, T) matrix; rows freed by finished
 //! requests are refilled FIFO from the same precision queue between
 //! iterations — continuous batching — unless another precision has
 //! crossed the scheduler's anti-starvation bound, in which case the run
-//! winds down so the overdue width is served next.
+//! winds down so the overdue precision is served next.
 
 use std::time::Instant;
 
@@ -21,11 +23,11 @@ use crate::data::tokenizer::{EOS, PAD};
 use crate::data::Rng;
 use crate::infer::sampling;
 use crate::metrics::Summary;
-use crate::runtime::Width;
+use crate::sefp::Precision;
 
 use super::backend::{EngineHandle, LogitsBackend};
 use super::batcher::QueuedRequest;
-use super::{DynamicBatcher, PrecisionStore, Request, Response, Router};
+use super::{DynamicBatcher, PrecisionLadder, Request, Response, Router};
 
 #[derive(Debug, Default, Clone)]
 pub struct ServeStats {
@@ -40,7 +42,17 @@ pub struct ServeStats {
     pub tokens_generated: u64,
     pub queue_ms: Summary,
     pub compute_ms: Summary,
-    pub per_width: Vec<(u8, u64)>,
+    pub per_precision: Vec<(Precision, u64)>,
+    /// precision switches answered from the ladder cache (or the master)
+    pub switch_hits: u64,
+    /// precision switches that derived a new view by truncation
+    pub switch_misses: u64,
+    /// ladder views evicted to keep residency under the byte budget
+    pub switch_evictions: u64,
+    /// per-miss view derivation latency, milliseconds
+    pub switch_ms: Summary,
+    /// bytes of derived ladder views currently resident
+    pub ladder_resident_bytes: usize,
     /// wall time from the FIRST dispatched work to the end of the last
     /// `process_all` — idle time before traffic arrives is not counted,
     /// so `throughput_rps` reflects serving, not server uptime.
@@ -95,22 +107,27 @@ impl ActiveRow {
 
 pub struct Server<B: LogitsBackend = EngineHandle> {
     backend: B,
-    pub store: PrecisionStore,
+    pub ladder: PrecisionLadder,
     pub router: Router,
     pub batcher: DynamicBatcher,
     stats: ServeStats,
     /// set when the first batch is dispatched (NOT at construction —
-    /// the seed measured from `Server::new` and deflated throughput
-    /// whenever the server idled before traffic arrived)
+    /// measuring from `Server::new` would deflate throughput whenever
+    /// the server idled before traffic arrived)
     first_work: Option<Instant>,
     rng: Rng,
 }
 
 impl<B: LogitsBackend> Server<B> {
-    pub fn new(backend: B, store: PrecisionStore, router: Router, batcher: DynamicBatcher) -> Self {
+    pub fn new(
+        backend: B,
+        ladder: PrecisionLadder,
+        router: Router,
+        batcher: DynamicBatcher,
+    ) -> Self {
         Server {
             backend,
-            store,
+            ladder,
             router,
             batcher,
             stats: ServeStats::default(),
@@ -134,16 +151,22 @@ impl<B: LogitsBackend> Server<B> {
     }
 
     /// Enqueue a request (routing decides the precision).  `false` =
-    /// rejected: empty prompts are invalid (there is no position to
-    /// read logits from — the seed argmaxed an all-PAD row and returned
-    /// garbage), and a full queue sheds by backpressure.
+    /// rejected: empty prompts and precisions above the ladder master
+    /// are invalid (there is no position to read logits from / no
+    /// mantissa bits to invent), and a full queue sheds by backpressure.
     pub fn submit(&mut self, req: Request) -> bool {
         if req.prompt.is_empty() {
             self.stats.invalid += 1;
             return false;
         }
-        let m = self.router.route(req.class, req.force_m);
-        match self.batcher.push(req, m) {
+        let p = self.router.route(req.class, req.precision);
+        if p > self.ladder.top() {
+            // reject here so one bad request cannot poison a whole
+            // popped batch when view_at errors mid-run
+            self.stats.invalid += 1;
+            return false;
+        }
+        match self.batcher.push(req, p) {
             Ok(()) => true,
             Err(_) => {
                 self.stats.rejected += 1;
@@ -157,12 +180,12 @@ impl<B: LogitsBackend> Server<B> {
     pub fn process_all(&mut self) -> anyhow::Result<Vec<Response>> {
         let mut out = Vec::new();
         let mut dispatched = false;
-        while let Some((m, batch)) = self.batcher.pop_batch() {
+        while let Some((p, batch)) = self.batcher.pop_batch() {
             dispatched = true;
             if self.first_work.is_none() {
                 self.first_work = Some(Instant::now());
             }
-            out.extend(self.run_generation(m, batch)?);
+            out.extend(self.run_generation(p, batch)?);
         }
         // only stamp the wall clock when this call did work — a no-op
         // poll on an idle server must not stretch wall_secs and deflate
@@ -178,15 +201,18 @@ impl<B: LogitsBackend> Server<B> {
     /// The continuous-batching generation loop for one precision run.
     fn run_generation(
         &mut self,
-        m: u8,
+        p: Precision,
         batch: Vec<QueuedRequest>,
     ) -> anyhow::Result<Vec<Response>> {
         let (bsz, seq_len) = self.backend.batch_shape();
         let vocab = self.backend.vocab_size();
         anyhow::ensure!(batch.len() <= bsz, "batch exceeds engine rows");
         // single-master precision switch — the OTARo deployment property
-        // in action: no reload, just (cached) truncation
-        let params = self.store.params_at(m).clone();
+        // in action: no reload, no f32 zoo; a (cached) integer truncation
+        let view = self.ladder.view_at(p)?;
+        self.backend.load_view(&view)?;
+        drop(view);
+        self.sync_ladder_stats();
         self.stats.batches += 1;
 
         let mut rows: Vec<Option<ActiveRow>> = Vec::with_capacity(bsz);
@@ -199,9 +225,7 @@ impl<B: LogitsBackend> Server<B> {
         let mut tokens = vec![PAD; bsz * seq_len];
         while rows.iter().any(Option::is_some) {
             // build the token matrix from each row's context window
-            for t in tokens.iter_mut() {
-                *t = PAD;
-            }
+            tokens.fill(PAD);
             let mut last_pos = vec![0usize; bsz];
             for (ri, row) in rows.iter().enumerate() {
                 let Some(r) = row else { continue };
@@ -212,7 +236,7 @@ impl<B: LogitsBackend> Server<B> {
             }
 
             let t0 = Instant::now();
-            let logits = self.backend.logits_step(&params, &tokens, Width::m(m))?;
+            let logits = self.backend.logits_step(&tokens)?;
             let step_ms = t0.elapsed().as_secs_f64() * 1e3;
             self.stats.decode_steps += 1;
 
@@ -234,20 +258,20 @@ impl<B: LogitsBackend> Server<B> {
                 }
                 if finished {
                     let r = rows[ri].take().expect("row just borrowed");
-                    self.finalize(m, r, &mut out);
+                    self.finalize(p, r, &mut out);
                 }
             }
 
             // continuous batching: refill freed rows FIFO from the same
-            // precision queue — unless another width is overdue, then
+            // precision queue — unless another precision is overdue, then
             // let this run wind down so the scheduler can serve it.
             let now = Instant::now();
             let yield_to_other =
-                self.batcher.starving_width(now).map_or(false, |w| w != m);
+                self.batcher.starving_width(now).is_some_and(|w| w != p);
             if !yield_to_other {
                 for ri in 0..bsz {
                     if rows[ri].is_none() {
-                        if let Some(q) = self.batcher.pop_for_width(m, 1).pop() {
+                        if let Some(q) = self.batcher.pop_for_width(p, 1).pop() {
                             rows[ri] = Some(ActiveRow::admit(q));
                         }
                     }
@@ -257,18 +281,28 @@ impl<B: LogitsBackend> Server<B> {
         Ok(out)
     }
 
-    fn finalize(&mut self, m: u8, row: ActiveRow, out: &mut Vec<Response>) {
+    /// Mirror the ladder's switch statistics into the serving stats.
+    fn sync_ladder_stats(&mut self) {
+        let ls = &self.ladder.stats;
+        self.stats.switch_hits = ls.hits;
+        self.stats.switch_misses = ls.misses;
+        self.stats.switch_evictions = ls.evictions;
+        self.stats.switch_ms = ls.switch_ms.clone();
+        self.stats.ladder_resident_bytes = self.ladder.resident_bytes();
+    }
+
+    fn finalize(&mut self, p: Precision, row: ActiveRow, out: &mut Vec<Response>) {
         self.stats.served += 1;
         self.stats.queue_ms.push(row.queue_ms.max(0.0));
         self.stats.compute_ms.push(row.compute_ms);
-        if let Some(e) = self.stats.per_width.iter_mut().find(|e| e.0 == m) {
+        if let Some(e) = self.stats.per_precision.iter_mut().find(|e| e.0 == p) {
             e.1 += 1;
         } else {
-            self.stats.per_width.push((m, 1));
+            self.stats.per_precision.push((p, 1));
         }
         out.push(Response {
             id: row.id,
-            width_m: m,
+            precision: p,
             next_token: row.generated.first().copied().unwrap_or(PAD),
             tokens: row.generated,
             queue_ms: row.queue_ms.max(0.0),

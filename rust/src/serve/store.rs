@@ -1,132 +1,355 @@
-//! `PrecisionStore` — single-master multi-precision weights.
+//! `PrecisionLadder` — single-master multi-precision weights, SEFP-native.
 //!
 //! The fine-tuned f32 master is encoded ONCE into SEFP E5M8 (the top of
 //! the ladder).  Every other precision is derived by `SefpTensor::truncate`
-//! — pure integer shifts, no access to the original floats — exactly the
-//! on-device switch conventional quantization cannot do (paper fig. 1).
-//! Dequantized `ParamStore`s per precision are cached so repeated switches
-//! are free; `switch_cost_ms` exposes the cold-switch latency for the
-//! serving benchmarks.
+//! — pure integer shifts on significands, no access to the original
+//! floats — exactly the on-device switch conventional quantization cannot
+//! do (paper fig. 1).
+//!
+//! Unlike the old `PrecisionStore`, which cached a **full dequantized f32
+//! `ParamStore` per width** (a 6-wide ladder meant six f32 copies — the
+//! very "model zoo" memory cost the paper eliminates), the ladder stays
+//! in the SEFP domain end to end: [`view_at`](PrecisionLadder::view_at)
+//! returns a [`LadderView`] whose quantized tensors are `SefpTensor`s
+//! consumable directly by `QuantLinear::from_sefp` / `DecoderSim`, and
+//! non-quantized tensors (1-D norm gains) are `Arc`-shared across every
+//! view instead of being placeholder-encoded per width.
+//!
+//! Cached residency of derived views is governed by a configurable byte
+//! budget with LRU eviction; per-switch hit/miss/evict/latency stats are
+//! kept in [`LadderStats`] and surfaced through `serve::ServeStats`.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
 
+use crate::metrics::Summary;
 use crate::runtime::ParamStore;
-use crate::sefp::{Rounding, SefpTensor, GROUP_SIZE};
+use crate::sefp::{Precision, SefpSpec, SefpTensor};
 
-pub struct PrecisionStore {
-    /// E5M8 master, one entry per parameter tensor
-    master: Vec<SefpTensor>,
-    names: Vec<String>,
-    shapes: Vec<Vec<usize>>,
-    quantized: Vec<bool>,
-    /// non-quantized tensors (1-D norm gains) pass through unchanged
-    passthrough: Vec<Option<Vec<f32>>>,
-    cache: HashMap<u8, ParamStore>,
-    pub switch_log: Vec<(u8, f64)>,
+/// One tensor slot of a [`LadderView`].
+#[derive(Debug, Clone)]
+pub enum LadderTensor {
+    /// SEFP-quantized weight at the view's precision.
+    Quant(SefpTensor),
+    /// Non-quantized tensor (norm gains, pos embed) — `Arc`-shared across
+    /// the master and every derived view, never copied per width.
+    Pass(Arc<Vec<f32>>),
 }
 
-impl PrecisionStore {
-    /// Encode the fine-tuned master.  The manifest's `quantized` flags say
-    /// exactly which tensors the training graph fake-quantized (2-D
-    /// weights; pos_embed and norm gains stay f32) — the store mirrors
-    /// that, so the serving-side switch reproduces training numerics.
-    pub fn from_params(params: &ParamStore) -> Self {
-        let mut master = Vec::with_capacity(params.tensors.len());
-        let mut passthrough = Vec::with_capacity(params.tensors.len());
-        for (i, t) in params.tensors.iter().enumerate() {
-            if params.quantized[i] {
-                master.push(SefpTensor::encode(t, 8, GROUP_SIZE, Rounding::Trunc));
-                passthrough.push(None);
-            } else {
-                // placeholder tensor keeps indices aligned
-                master.push(SefpTensor::encode(&[], 8, GROUP_SIZE, Rounding::Trunc));
-                passthrough.push(Some(t.clone()));
-            }
-        }
-        PrecisionStore {
-            master,
-            names: params.names.clone(),
-            shapes: params.shapes.clone(),
-            quantized: params.quantized.clone(),
-            passthrough,
-            cache: HashMap::new(),
-            switch_log: Vec::new(),
+/// SEFP-domain weights at one precision, aligned with the manifest's
+/// tensor order.  Produced by [`PrecisionLadder::view_at`]; quantized
+/// slots feed `QuantLinear::from_sefp` directly, and
+/// [`to_param_store`](LadderView::to_param_store) bridges to the f32 ABI
+/// the PJRT engine requires (the only place a float round trip happens,
+/// and only for that backend).
+#[derive(Debug, Clone)]
+pub struct LadderView {
+    pub precision: Precision,
+    /// identity of the ladder this view was derived from (see
+    /// [`LadderView::ladder_id`])
+    ladder_id: u64,
+    tensors: Vec<LadderTensor>,
+    names: Arc<Vec<String>>,
+    shapes: Arc<Vec<Vec<usize>>>,
+    quantized: Arc<Vec<bool>>,
+}
+
+impl LadderView {
+    pub fn tensors(&self) -> &[LadderTensor] {
+        &self.tensors
+    }
+
+    /// Process-unique id of the originating [`PrecisionLadder`].
+    /// Backends key their prepared-weights scratch on
+    /// `(ladder_id, precision)` so that swapping in a NEW ladder (a hot
+    /// weight update) can never be served from weights prepared for the
+    /// old one.
+    pub fn ladder_id(&self) -> u64 {
+        self.ladder_id
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn shapes(&self) -> &[Vec<usize>] {
+        &self.shapes
+    }
+
+    /// Derive the view one or more rungs down — integer shifts only.
+    fn truncate(&self, p: Precision) -> LadderView {
+        LadderView {
+            precision: p,
+            ladder_id: self.ladder_id,
+            tensors: self
+                .tensors
+                .iter()
+                .map(|t| match t {
+                    LadderTensor::Quant(q) => LadderTensor::Quant(q.truncate(p)),
+                    LadderTensor::Pass(f) => LadderTensor::Pass(f.clone()),
+                })
+                .collect(),
+            names: self.names.clone(),
+            shapes: self.shapes.clone(),
+            quantized: self.quantized.clone(),
         }
     }
 
-    /// Storage bytes of the single master copy (ideal packed bits).
-    pub fn master_bytes(&self) -> usize {
-        let quant: usize = self.master.iter().map(|t| t.ideal_bits()).sum::<usize>() / 8;
-        let pass: usize = self
-            .passthrough
+    /// Bytes of SEFP working state this view owns (what the ladder budget
+    /// charges).  Passthrough tensors are shared with the master and cost
+    /// nothing per view.
+    pub fn sefp_bytes(&self) -> usize {
+        self.tensors
             .iter()
-            .flatten()
-            .map(|t| t.len() * 4)
-            .sum();
-        quant + pass
+            .map(|t| match t {
+                LadderTensor::Quant(q) => q.working_bytes(),
+                LadderTensor::Pass(_) => 0,
+            })
+            .sum()
+    }
+
+    /// Materialize an f32 `ParamStore` — the ABI bridge for the PJRT
+    /// engine backend, which takes f32 parameter literals.  Serving code
+    /// holds at most ONE of these at a time (the backend's scratch),
+    /// never one per width.
+    pub fn to_param_store(&self) -> ParamStore {
+        ParamStore {
+            tensors: self
+                .tensors
+                .iter()
+                .map(|t| match t {
+                    LadderTensor::Quant(q) => q.decode(),
+                    LadderTensor::Pass(f) => (**f).clone(),
+                })
+                .collect(),
+            names: (*self.names).clone(),
+            shapes: (*self.shapes).clone(),
+            quantized: (*self.quantized).clone(),
+        }
+    }
+}
+
+/// Per-switch statistics of a [`PrecisionLadder`].
+#[derive(Debug, Clone, Default)]
+pub struct LadderStats {
+    /// `view_at` calls answered from cache (or by the master itself)
+    pub hits: u64,
+    /// `view_at` calls that had to derive a view by truncation
+    pub misses: u64,
+    /// views dropped to keep residency under the byte budget
+    pub evictions: u64,
+    /// derivation latency per miss, milliseconds
+    pub switch_ms: Summary,
+    /// (precision, derivation ms) of the most recent misses, oldest
+    /// first, capped at [`SWITCH_LOG_CAP`] — under a tight budget every
+    /// switch can be a miss, so an unbounded log would leak on a
+    /// long-running server (`switch_ms` keeps the full-run aggregates)
+    pub switch_log: Vec<(Precision, f64)>,
+}
+
+/// Retention bound for [`LadderStats::switch_log`].
+pub const SWITCH_LOG_CAP: usize = 256;
+
+/// Monotonic source of [`LadderView::ladder_id`]s.
+static LADDER_IDS: AtomicU64 = AtomicU64::new(0);
+
+/// The serving-side precision ladder: one SEFP master + budget-governed
+/// cache of truncated views.
+pub struct PrecisionLadder {
+    master: Arc<LadderView>,
+    budget_bytes: usize,
+    /// derived views with their last-use tick (LRU)
+    cache: HashMap<Precision, (Arc<LadderView>, u64)>,
+    tick: u64,
+    pub stats: LadderStats,
+}
+
+impl PrecisionLadder {
+    /// Encode the fine-tuned master at the top of the paper's ladder
+    /// (E5M8).  The manifest's `quantized` flags say exactly which
+    /// tensors the training graph fake-quantized (2-D weights; pos_embed
+    /// and norm gains stay f32) — the ladder mirrors that, so the
+    /// serving-side switch reproduces training numerics.
+    pub fn from_params(params: &ParamStore) -> Self {
+        Self::from_params_at(params, Precision::of(8))
+    }
+
+    /// Encode the master at an explicit top precision.
+    pub fn from_params_at(params: &ParamStore, top: Precision) -> Self {
+        let spec = SefpSpec::new(top);
+        let tensors = params
+            .tensors
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                if params.quantized[i] {
+                    LadderTensor::Quant(SefpTensor::encode(t, &spec))
+                } else {
+                    LadderTensor::Pass(Arc::new(t.clone()))
+                }
+            })
+            .collect();
+        PrecisionLadder {
+            master: Arc::new(LadderView {
+                precision: top,
+                ladder_id: LADDER_IDS.fetch_add(1, Ordering::Relaxed),
+                tensors,
+                names: Arc::new(params.names.clone()),
+                shapes: Arc::new(params.shapes.clone()),
+                quantized: Arc::new(params.quantized.clone()),
+            }),
+            budget_bytes: usize::MAX,
+            cache: HashMap::new(),
+            tick: 0,
+            stats: LadderStats::default(),
+        }
+    }
+
+    /// Cap the bytes of derived views kept resident (the master is always
+    /// resident and is not charged — it IS the model).
+    pub fn with_budget(mut self, budget_bytes: usize) -> Self {
+        self.budget_bytes = budget_bytes;
+        self
+    }
+
+    /// Top-of-ladder precision the master is stored at.
+    pub fn top(&self) -> Precision {
+        self.master.precision
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// THE precision switch: SEFP-domain weights at `p`.  Cache hit =
+    /// free; miss = one truncation pass (integer shifts), then the view
+    /// is retained under the byte budget with LRU eviction.  Asking for
+    /// a precision above the master is an error — mantissa bits cannot
+    /// be invented.
+    pub fn view_at(&mut self, p: Precision) -> anyhow::Result<Arc<LadderView>> {
+        anyhow::ensure!(
+            p <= self.master.precision,
+            "precision {p} above the {} master",
+            self.master.precision
+        );
+        self.tick += 1;
+        if p == self.master.precision {
+            self.stats.hits += 1;
+            return Ok(self.master.clone());
+        }
+        if let Some((view, last_used)) = self.cache.get_mut(&p) {
+            *last_used = self.tick;
+            self.stats.hits += 1;
+            return Ok(view.clone());
+        }
+        let start = Instant::now();
+        let view = Arc::new(self.master.truncate(p));
+        let ms = start.elapsed().as_secs_f64() * 1e3;
+        self.stats.misses += 1;
+        self.stats.switch_ms.push(ms);
+        self.stats.switch_log.push((p, ms));
+        if self.stats.switch_log.len() > SWITCH_LOG_CAP {
+            self.stats.switch_log.remove(0);
+        }
+        self.cache.insert(p, (view.clone(), self.tick));
+        self.evict_to_budget(p);
+        Ok(view)
+    }
+
+    /// Evict least-recently-used views until residency fits the budget.
+    /// The just-requested precision is evicted only as a last resort —
+    /// when it alone exceeds the budget it is simply not retained (the
+    /// budget is a hard cap, not advisory; the caller still gets its
+    /// `Arc`, it just re-derives next time).
+    fn evict_to_budget(&mut self, keep: Precision) {
+        while self.resident_bytes() > self.budget_bytes {
+            let victim = self
+                .cache
+                .iter()
+                .filter(|(&p, _)| p != keep)
+                .min_by_key(|(_, (_, last_used))| *last_used)
+                .map(|(&p, _)| p);
+            let victim = victim.unwrap_or(keep);
+            if self.cache.remove(&victim).is_some() {
+                self.stats.evictions += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Bytes of derived views currently resident (excludes the master).
+    pub fn resident_bytes(&self) -> usize {
+        self.cache.values().map(|(v, _)| v.sefp_bytes()).sum()
+    }
+
+    /// Storage bytes of the single master copy: packed SEFP bits for the
+    /// quantized tensors + the passthrough f32 tensors once.
+    pub fn master_bytes(&self) -> usize {
+        self.master
+            .tensors
+            .iter()
+            .map(|t| match t {
+                LadderTensor::Quant(q) => q.ideal_bits().div_ceil(8),
+                LadderTensor::Pass(f) => f.len() * 4,
+            })
+            .sum()
     }
 
     /// Bytes a per-precision model zoo would need for the same ladder —
-    /// the storage overhead OTARo eliminates.  Each tensor's significand
-    /// and exponent bits are summed and rounded up to bytes ONCE,
-    /// matching per-tensor `packed_bytes()` accounting — the seed's
-    /// separate integer divisions floored away fractional significand
-    /// and exponent bytes twice per tensor.
-    pub fn zoo_bytes(&self, widths: &[u8]) -> usize {
+    /// the storage overhead OTARo eliminates.  Every zoo entry is a
+    /// complete deployable model, so the non-quantized f32 tensors are
+    /// charged once per width too (the seed omitted them and understated
+    /// the zoo footprint the paper's table compares against).
+    pub fn zoo_bytes(&self, widths: &[Precision]) -> usize {
         widths
             .iter()
-            .map(|&m| {
+            .map(|&p| {
                 self.master
+                    .tensors
                     .iter()
-                    .map(|t| (t.len * (1 + m as usize) + t.n_groups() * 5).div_ceil(8))
+                    .map(|t| match t {
+                        LadderTensor::Quant(q) => {
+                            (q.len * p.bits_per_elem() + q.n_groups() * 5).div_ceil(8)
+                        }
+                        LadderTensor::Pass(f) => f.len() * 4,
+                    })
                     .sum::<usize>()
             })
             .sum()
     }
 
-    /// Get (deriving + caching if needed) the engine-ready params at
-    /// mantissa width `m`.
-    pub fn params_at(&mut self, m: u8) -> &ParamStore {
-        if !self.cache.contains_key(&m) {
-            let start = std::time::Instant::now();
-            let mut tensors = Vec::with_capacity(self.master.len());
-            for (i, t) in self.master.iter().enumerate() {
-                if let Some(p) = &self.passthrough[i] {
-                    tensors.push(p.clone());
-                } else {
-                    let tm = if m == t.m { t.clone() } else { t.truncate(m) };
-                    tensors.push(tm.decode());
-                }
-            }
-            let ps = ParamStore {
-                tensors,
-                names: self.names.clone(),
-                shapes: self.shapes.clone(),
-                quantized: self.quantized.clone(),
-            };
-            self.switch_log.push((m, start.elapsed().as_secs_f64() * 1e3));
-            self.cache.insert(m, ps);
-        }
-        &self.cache[&m]
-    }
-
-    /// Cold-switch cost: derive `m` from scratch (cache bypassed).
-    pub fn switch_cost_ms(&self, m: u8) -> f64 {
-        let start = std::time::Instant::now();
+    /// Cold-switch cost: derive `p` from the master and materialize f32
+    /// (the full engine-backend switch path), cache bypassed.
+    pub fn switch_cost_ms(&self, p: Precision) -> f64 {
+        let start = Instant::now();
         let mut total = 0usize;
-        for (i, t) in self.master.iter().enumerate() {
-            if self.passthrough[i].is_none() {
-                let d = t.truncate(m).decode();
-                total += d.len();
+        for t in &self.master.tensors {
+            if let LadderTensor::Quant(q) = t {
+                total += q.truncate(p).decode().len();
             }
         }
         let ms = start.elapsed().as_secs_f64() * 1e3;
-        assert!(total > 0 || self.master.is_empty());
+        // a model with quantized tensors must have produced work; checked
+        // in debug only so release benchmarks don't carry the branch
+        debug_assert!(
+            total > 0
+                || !self
+                    .master
+                    .tensors
+                    .iter()
+                    .any(|t| matches!(t, LadderTensor::Quant(_))),
+            "cold switch touched no weights"
+        );
         ms
     }
 
-    pub fn cached_widths(&self) -> Vec<u8> {
-        let mut v: Vec<u8> = self.cache.keys().copied().collect();
+    /// Precisions currently resident in the derived-view cache (sorted
+    /// ascending; the master's own precision is not listed).
+    pub fn cached_precisions(&self) -> Vec<Precision> {
+        let mut v: Vec<Precision> = self.cache.keys().copied().collect();
         v.sort_unstable();
         v
     }
@@ -135,6 +358,7 @@ impl PrecisionStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::infer::QuantLinear;
 
     fn params() -> ParamStore {
         let mut rng = crate::data::Rng::new(1);
@@ -152,28 +376,161 @@ mod tests {
     #[test]
     fn switch_derives_truncated_weights() {
         let p = params();
-        let mut store = PrecisionStore::from_params(&p);
-        let p4 = store.params_at(4).clone();
+        let mut ladder = PrecisionLadder::from_params(&p);
+        let v4 = ladder.view_at(Precision::of(4)).unwrap();
         // 2-D tensor quantized at m=4 == direct encode (ladder exactness)
-        let direct = SefpTensor::encode(&p.tensors[0], 4, GROUP_SIZE, Rounding::Trunc).decode();
-        assert_eq!(p4.tensors[0], direct);
-        // 1-D passthrough untouched
-        assert_eq!(p4.tensors[1], p.tensors[1]);
+        let direct = SefpTensor::encode(&p.tensors[0], &SefpSpec::new(Precision::of(4)));
+        match &v4.tensors()[0] {
+            LadderTensor::Quant(q) => assert_eq!(*q, direct),
+            other => panic!("expected quant slot, got {other:?}"),
+        }
+        // 1-D passthrough untouched and shared, not re-encoded
+        match &v4.tensors()[1] {
+            LadderTensor::Pass(f) => assert_eq!(**f, p.tensors[1]),
+            other => panic!("expected passthrough slot, got {other:?}"),
+        }
+        // the f32 ABI bridge decodes the same numbers
+        let ps = v4.to_param_store();
+        assert_eq!(ps.tensors[0], direct.decode());
+        assert_eq!(ps.tensors[1], p.tensors[1]);
+        assert_eq!(ps.names, p.names);
     }
 
     #[test]
     fn cache_hits_after_first_switch() {
-        let mut store = PrecisionStore::from_params(&params());
-        let _ = store.params_at(5);
-        let _ = store.params_at(5);
-        assert_eq!(store.switch_log.len(), 1);
-        assert_eq!(store.cached_widths(), vec![5]);
+        let mut ladder = PrecisionLadder::from_params(&params());
+        let _ = ladder.view_at(Precision::of(5)).unwrap();
+        let _ = ladder.view_at(Precision::of(5)).unwrap();
+        assert_eq!(ladder.stats.misses, 1);
+        assert_eq!(ladder.stats.hits, 1);
+        assert_eq!(ladder.stats.switch_log.len(), 1);
+        assert_eq!(ladder.cached_precisions(), vec![Precision::of(5)]);
+        // the master itself is a hit, not a derivation
+        let top = ladder.view_at(Precision::of(8)).unwrap();
+        assert_eq!(top.precision, Precision::of(8));
+        assert_eq!(ladder.stats.misses, 1);
+        assert_eq!(ladder.stats.hits, 2);
+    }
+
+    #[test]
+    fn view_above_master_is_an_error() {
+        let mut ladder =
+            PrecisionLadder::from_params_at(&params(), Precision::of(6));
+        assert!(ladder.view_at(Precision::of(8)).is_err());
+        assert!(ladder.view_at(Precision::of(6)).is_ok());
+    }
+
+    #[test]
+    fn budget_bounds_residency_across_full_ladder() {
+        // Acceptance scenario: walk the whole {8,7,6,5,4,3} ladder twice
+        // under a budget that holds ~2 derived views; residency must stay
+        // under the budget after every switch and evictions must be
+        // recorded.  (Each derived view here is 256*2 + 4 = 516 bytes.)
+        let mut ladder = PrecisionLadder::from_params(&params()).with_budget(1200);
+        for _ in 0..2 {
+            for p in Precision::LADDER {
+                let v = ladder.view_at(p).unwrap();
+                assert_eq!(v.precision, p);
+                assert!(
+                    ladder.resident_bytes() <= ladder.budget_bytes(),
+                    "resident {} exceeds budget {} after switch to {p}",
+                    ladder.resident_bytes(),
+                    ladder.budget_bytes()
+                );
+            }
+        }
+        assert!(ladder.stats.evictions > 0, "budget must have forced evictions");
+        assert_eq!(ladder.stats.hits + ladder.stats.misses, 12);
+        assert!(ladder.stats.misses > 5, "evicted views must re-derive");
+        assert!(ladder.stats.switch_ms.n >= ladder.stats.misses);
+        assert!(ladder.cached_precisions().len() <= 2);
+    }
+
+    #[test]
+    fn zero_budget_caches_nothing() {
+        // "cache nothing" must be expressible: a view larger than the
+        // budget is handed out but never retained, so residency stays at
+        // zero instead of silently exceeding the cap forever
+        let mut ladder = PrecisionLadder::from_params(&params()).with_budget(0);
+        for _ in 0..3 {
+            let v = ladder.view_at(Precision::of(4)).unwrap();
+            assert_eq!(v.precision, Precision::of(4));
+            assert_eq!(ladder.resident_bytes(), 0);
+        }
+        assert!(ladder.cached_precisions().is_empty());
+        assert_eq!(ladder.stats.misses, 3, "nothing retained, every switch derives");
+        assert_eq!(ladder.stats.evictions, 3);
+    }
+
+    #[test]
+    fn views_carry_the_ladder_identity() {
+        // two ladders over identical params must hand out distinguishable
+        // views — backends key prepared weights on (ladder_id, precision)
+        let p = params();
+        let mut a = PrecisionLadder::from_params(&p);
+        let mut b = PrecisionLadder::from_params(&p);
+        let va = a.view_at(Precision::of(4)).unwrap();
+        let vb = b.view_at(Precision::of(4)).unwrap();
+        assert_ne!(va.ladder_id(), vb.ladder_id());
+        // and a view keeps its ladder's id down the whole ladder
+        let va3 = a.view_at(Precision::of(3)).unwrap();
+        assert_eq!(va.ladder_id(), va3.ladder_id());
+    }
+
+    #[test]
+    fn lru_keeps_recently_used_views() {
+        // budget for two views: touching m=5 before inserting m=3 must
+        // evict m=4 (the least recently used), not m=5
+        let mut ladder = PrecisionLadder::from_params(&params()).with_budget(1200);
+        let _ = ladder.view_at(Precision::of(5)).unwrap();
+        let _ = ladder.view_at(Precision::of(4)).unwrap();
+        let _ = ladder.view_at(Precision::of(5)).unwrap(); // refresh 5
+        let _ = ladder.view_at(Precision::of(3)).unwrap(); // evicts 4
+        assert_eq!(
+            ladder.cached_precisions(),
+            vec![Precision::of(3), Precision::of(5)]
+        );
+        assert_eq!(ladder.stats.evictions, 1);
     }
 
     #[test]
     fn master_smaller_than_zoo() {
-        let store = PrecisionStore::from_params(&params());
-        let widths = [8, 7, 6, 5, 4, 3];
-        assert!(store.master_bytes() < store.zoo_bytes(&widths));
+        let ladder = PrecisionLadder::from_params(&params());
+        assert!(ladder.master_bytes() < ladder.zoo_bytes(&Precision::LADDER));
+    }
+
+    #[test]
+    fn zoo_charges_passthrough_per_width() {
+        // quant: 256 elems in 4 groups; pass: 16 f32 = 64 bytes per entry
+        let ladder = PrecisionLadder::from_params(&params());
+        let widths = [Precision::of(8), Precision::of(4)];
+        let quant8 = (256 * 9 + 4 * 5usize).div_ceil(8);
+        let quant4 = (256 * 5 + 4 * 5usize).div_ceil(8);
+        assert_eq!(ladder.zoo_bytes(&widths), quant8 + quant4 + 2 * 64);
+    }
+
+    #[test]
+    fn views_feed_quant_linear_without_f32() {
+        // SEFP-native consumption: a ladder view slots straight into
+        // QuantLinear; the matvec matches the decode-then-dense reference
+        let p = params();
+        let mut ladder = PrecisionLadder::from_params(&p);
+        let v = ladder.view_at(Precision::of(4)).unwrap();
+        let LadderTensor::Quant(t) = &v.tensors()[0] else {
+            panic!("quant slot expected")
+        };
+        let q = QuantLinear::from_sefp(t, 64, 4);
+        let x: Vec<f32> = (0..64).map(|i| (i as f32) * 0.01).collect();
+        let mut y = vec![0.0f32; 4];
+        q.matvec(&x, &mut y);
+        let dec = t.decode();
+        for (n, yv) in y.iter().enumerate() {
+            let expect: f32 = x
+                .iter()
+                .zip(&dec[n * 64..(n + 1) * 64])
+                .map(|(a, b)| a * b)
+                .sum();
+            assert!((yv - expect).abs() < 1e-4, "col {n}: {yv} vs {expect}");
+        }
     }
 }

@@ -12,7 +12,8 @@ use otaro::eval::mc::score_items;
 use otaro::eval::ppl::perplexity;
 use otaro::metrics::MetricsSink;
 use otaro::runtime::{Engine, Width};
-use otaro::serve::{DynamicBatcher, PrecisionStore, Request, Router, Server, TaskClass};
+use otaro::sefp::Precision;
+use otaro::serve::{DynamicBatcher, PrecisionLadder, Request, Router, Server, TaskClass};
 
 fn artifacts() -> Option<&'static Path> {
     let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
@@ -40,7 +41,7 @@ fn train_step_shapes_and_losses() {
     let params = engine.init_params().unwrap();
     let (_, mut batcher) = setup(&engine);
     let batch = batcher.next_batch();
-    for w in [Width::FP, Width::m(8), Width::m(3)] {
+    for w in [Width::FP, Width::m(Precision::of(8)), Width::m(Precision::of(3))] {
         let out = engine.train_step(&params, &batch, w).unwrap();
         assert!(out.loss.is_finite() && out.loss > 0.0, "{w}");
         assert_eq!(out.grads.len(), params.tensors.len());
@@ -61,8 +62,8 @@ fn quantized_loss_deviates_more_at_lower_width() {
     let (_, mut batcher) = setup(&engine);
     let batch = batcher.next_batch();
     let fp = engine.eval_step(&params, &batch, Width::FP).unwrap();
-    let d8 = (engine.eval_step(&params, &batch, Width::m(8)).unwrap() - fp).abs();
-    let d3 = (engine.eval_step(&params, &batch, Width::m(3)).unwrap() - fp).abs();
+    let d8 = (engine.eval_step(&params, &batch, Width::m(Precision::of(8))).unwrap() - fp).abs();
+    let d3 = (engine.eval_step(&params, &batch, Width::m(Precision::of(3))).unwrap() - fp).abs();
     assert!(d8 <= d3 + 1e-4, "m8 dev {d8} vs m3 dev {d3}");
 }
 
@@ -78,13 +79,14 @@ fn rust_sefp_weights_reproduce_engine_quantized_loss() {
     let (_, mut batcher) = setup(&engine);
     let batch = batcher.next_batch();
     for m in [8u8, 4, 3] {
-        let engine_q = engine.eval_step(&params, &batch, Width::m(m)).unwrap();
-        let mut store = PrecisionStore::from_params(&params);
-        let qparams = store.params_at(m).clone();
+        let p = Precision::of(m);
+        let engine_q = engine.eval_step(&params, &batch, Width::m(p)).unwrap();
+        let mut ladder = PrecisionLadder::from_params(&params);
+        let qparams = ladder.view_at(p).unwrap().to_param_store();
         let rust_q = engine.eval_step(&qparams, &batch, Width::FP).unwrap();
         assert!(
             (engine_q - rust_q).abs() < 2e-5,
-            "m={m}: engine {engine_q} vs rust-switched {rust_q}"
+            "{p}: engine {engine_q} vs rust-switched {rust_q}"
         );
     }
 }
@@ -101,7 +103,7 @@ fn trainer_every_method_reduces_loss() {
             lr: 3e-2,
             steps: 12,
             delay_n: 3,
-            fixed_m: (method == Method::Fixed).then_some(4),
+            fixed_m: (method == Method::Fixed).then_some(Precision::of(4)),
             ..TrainConfig::default()
         };
         let mut sink = MetricsSink::null();
@@ -127,7 +129,7 @@ fn eval_loss_helper_runs() {
     let mut engine = Engine::new(dir).unwrap();
     let params = engine.init_params().unwrap();
     let (_, mut batcher) = setup(&engine);
-    let l = eval_loss(&mut engine, &params, &mut batcher, Width::m(5), 2).unwrap();
+    let l = eval_loss(&mut engine, &params, &mut batcher, Width::m(Precision::of(5)), 2).unwrap();
     assert!(l.is_finite() && l > 0.0);
 }
 
@@ -150,7 +152,8 @@ fn mc_scoring_runs_and_is_bounded() {
     let params = engine.init_params().unwrap();
     let lang = Lang::new(0x1A06);
     let items = otaro::data::Suite::Arith.eval_set(&lang, 10, 0);
-    let (acc, correct) = score_items(&mut engine, &params, Width::m(6), &items).unwrap();
+    let w6 = Width::m(Precision::of(6));
+    let (acc, correct) = score_items(&mut engine, &params, w6, &items).unwrap();
     assert!(correct <= 10);
     assert!((0.0..=1.0).contains(&acc));
 }
@@ -161,10 +164,10 @@ fn serving_stack_end_to_end() {
     let engine = Engine::new(dir).unwrap();
     let params = engine.init_params().unwrap();
     let vocab = engine.vocab_size();
-    let store = PrecisionStore::from_params(&params);
+    let ladder = PrecisionLadder::from_params(&params);
     let router = Router::new(otaro::config::ServeConfig::default());
     let batcher = DynamicBatcher::new(engine.batch_size(), 64);
-    let mut server = Server::new(engine.into_handle(), store, router, batcher);
+    let mut server = Server::new(engine.into_handle(), ladder, router, batcher);
     let tok = otaro::data::Tokenizer::new();
     for i in 0..10u64 {
         let class = if i % 2 == 0 { TaskClass::Generation } else { TaskClass::Understanding };
@@ -184,7 +187,7 @@ fn serving_stack_end_to_end() {
     }
     // both router classes must have produced both precisions
     let stats = server.stats();
-    assert!(stats.per_width.len() >= 2, "{:?}", stats.per_width);
+    assert!(stats.per_precision.len() >= 2, "{:?}", stats.per_precision);
     assert_eq!(stats.served, 10);
     assert!(stats.tokens_generated >= 10);
     // empty prompts are invalid, not servable garbage
@@ -199,7 +202,7 @@ fn analysis_cosine_matrix_structure() {
     let params = engine.init_params().unwrap();
     let (_, mut batcher) = setup(&engine);
     let batch = batcher.next_batch();
-    let widths = [Width::m(8), Width::m(5), Width::m(3)];
+    let widths = [8u8, 5, 3].map(|m| Width::m(Precision::of(m)));
     let mat = otaro::analysis::cosine_matrix(&mut engine, &params, &batch, &widths, "layer0.wq")
         .unwrap();
     for i in 0..3 {

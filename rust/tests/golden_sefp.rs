@@ -7,7 +7,7 @@
 use std::path::Path;
 
 use otaro::json;
-use otaro::sefp::{quant_dequant, shared_exponent, Rounding, SefpTensor};
+use otaro::sefp::{quant_dequant, shared_exponent, Precision, Rounding, SefpSpec, SefpTensor};
 
 fn golden() -> Option<json::Value> {
     let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden_sefp.json");
@@ -34,15 +34,16 @@ fn golden_quant_dequant_exact() {
     assert!(cases.len() >= 70, "expected the full golden matrix");
     for case in cases {
         let name = case.req_str("name").unwrap();
-        let m = case.req_usize("m").unwrap() as u8;
+        let m = Precision::new(case.req_usize("m").unwrap() as u8).unwrap();
         let rounding: Rounding = case.req_str("rounding").unwrap().parse().unwrap();
+        let spec = SefpSpec::new(m).with_group_size(group_size).with_rounding(rounding);
         let input = floats(case.get("input").unwrap());
         let expect = floats(case.get("output").unwrap());
-        let got = quant_dequant(&input, m, group_size, rounding);
-        assert_eq!(got, expect, "case {name} m={m} {rounding:?}");
+        let got = quant_dequant(&input, &spec);
+        assert_eq!(got, expect, "case {name} {m} {rounding:?}");
         // and through the tensor representation
-        let t = SefpTensor::encode(&input, m, group_size, rounding);
-        assert_eq!(t.decode(), expect, "tensor case {name} m={m} {rounding:?}");
+        let t = SefpTensor::encode(&input, &spec);
+        assert_eq!(t.decode(), expect, "tensor case {name} {m} {rounding:?}");
     }
 }
 

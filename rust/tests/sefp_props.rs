@@ -3,12 +3,20 @@
 //! The offline vendor set has no proptest crate, so these are randomized
 //! property sweeps over the in-repo SplitMix64 RNG: many cases per
 //! property, deterministic seeds, failure messages carrying the seed.
+//!
+//! The headline properties are the [`SefpCodec`] ladder-exactness
+//! contract — `encode(w, hi).truncate(lo) == encode(w, lo)` — checked
+//! generically for BOTH codec implementations over the full {8..3}
+//! ladder, and `QuantLinear::matvec` equivalence against a
+//! decode-then-dense reference matvec at every ladder width.
 
 use otaro::coordinator::{Bps, Laa, LaaAction};
 use otaro::data::Rng;
+use otaro::infer::{DenseLinear, QuantLinear};
+use otaro::runtime::Width;
 use otaro::sefp::{
-    quant_dequant, shared_exponent, step_for, PackedSefp, Rounding, SefpTensor, GROUP_SIZE,
-    MANTISSA_WIDTHS,
+    quant_dequant, shared_exponent, step_for, PackedSefp, Precision, SefpCodec, SefpSpec,
+    SefpTensor, GROUP_SIZE,
 };
 
 const CASES: u64 = 200;
@@ -17,19 +25,90 @@ fn rand_weights(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| rng.normal() as f32 * scale).collect()
 }
 
+/// The `SefpCodec` ladder-exactness contract, written once for any
+/// implementor: chained truncation from the TOP of the ladder equals a
+/// direct encode, at every lower rung.
+fn assert_ladder_exact<C>(w: &[f32], label: &str)
+where
+    C: SefpCodec + PartialEq + std::fmt::Debug,
+{
+    let spec = SefpSpec::new(Precision::of(8));
+    let top = C::encode(w, &spec);
+    assert_eq!(top.precision(), Precision::of(8));
+    for &lo in &Precision::LADDER[1..] {
+        let chained = top.truncate(lo);
+        let direct = C::encode(w, &spec.at(lo));
+        assert_eq!(chained, direct, "{label}: truncate(E5M8 -> {lo}) != encode at {lo}");
+        assert_eq!(chained.precision(), lo, "{label}");
+        assert_eq!(chained.decode(), direct.decode(), "{label} {lo}");
+    }
+}
+
 #[test]
-fn prop_truncation_ladder_exact() {
-    // ∀ w, hi > lo: truncate(encode(w, hi), lo) == encode(w, lo)
+fn prop_ladder_exact_full_ladder_both_codecs() {
+    // ∀ w: the full {8,7,6,5,4,3} ladder is exact for the working AND
+    // the packed representation (tentpole acceptance property)
     for seed in 0..CASES {
         let mut rng = Rng::new(seed);
         let n = 1 + rng.below(500);
         let scale = [1e-4f32, 0.1, 1.0, 100.0][rng.below(4)];
         let w = rand_weights(&mut rng, n, scale);
-        let hi = [8u8, 7, 6, 5][rng.below(4)];
-        let lo = 3 + rng.below((hi - 3) as usize) as u8;
-        let chained = SefpTensor::encode(&w, hi, GROUP_SIZE, Rounding::Trunc).truncate(lo);
-        let direct = SefpTensor::encode(&w, lo, GROUP_SIZE, Rounding::Trunc);
+        assert_ladder_exact::<SefpTensor>(&w, &format!("SefpTensor seed={seed} n={n}"));
+        assert_ladder_exact::<PackedSefp>(&w, &format!("PackedSefp seed={seed} n={n}"));
+    }
+}
+
+#[test]
+fn prop_truncation_ladder_exact_random_pairs() {
+    // ∀ w, hi > lo (not just from the top): truncate(encode(w, hi), lo)
+    // == encode(w, lo)
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.below(500);
+        let scale = [1e-4f32, 0.1, 1.0, 100.0][rng.below(4)];
+        let w = rand_weights(&mut rng, n, scale);
+        let hi = Precision::of([8u8, 7, 6, 5][rng.below(4)]);
+        let lo = Precision::of(3 + rng.below((hi.m() - 3) as usize) as u8);
+        let spec = SefpSpec::new(hi);
+        let chained = SefpTensor::encode(&w, &spec).truncate(lo);
+        let direct = SefpTensor::encode(&w, &spec.at(lo));
         assert_eq!(chained, direct, "seed={seed} n={n} hi={hi} lo={lo}");
+    }
+}
+
+#[test]
+fn prop_quant_matvec_equals_decode_then_dense() {
+    // QuantLinear::matvec (integer significands + per-group step) must
+    // match a dense f32 matvec over the explicitly decoded weights, at
+    // EVERY ladder width — the satellite acceptance property.
+    for seed in 0..40 {
+        let mut rng = Rng::new(seed ^ 0x9C);
+        let in_dim = GROUP_SIZE * (1 + rng.below(3)); // 64/128/192
+        let out_dim = 1 + rng.below(24);
+        let w = rand_weights(&mut rng, in_dim * out_dim, 0.5);
+        let d = DenseLinear::new(in_dim, out_dim, w);
+        let x = rand_weights(&mut rng, in_dim, 1.0);
+        for p in Precision::LADDER {
+            let spec = SefpSpec::new(p);
+            let q = QuantLinear::from_dense(&d, &spec);
+            // reference: decode every column, run the dense kernel
+            let mut dec = Vec::with_capacity(d.w.len());
+            for c in 0..out_dim {
+                let col = &d.w[c * in_dim..(c + 1) * in_dim];
+                dec.extend(SefpTensor::encode(col, &spec).decode());
+            }
+            let dref = DenseLinear::new(in_dim, out_dim, dec);
+            let mut ya = vec![0.0f32; out_dim];
+            let mut yb = vec![0.0f32; out_dim];
+            q.matvec(&x, &mut ya);
+            dref.matvec(&x, &mut yb);
+            for (c, (a, b)) in ya.iter().zip(&yb).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                    "seed={seed} {p} col {c}: {a} vs {b}"
+                );
+            }
+        }
     }
 }
 
@@ -39,13 +118,13 @@ fn prop_error_bounded_by_step() {
         let mut rng = Rng::new(seed ^ 0xE0);
         let n = 1 + rng.below(300);
         let w = rand_weights(&mut rng, n, 0.5);
-        let m = MANTISSA_WIDTHS[rng.below(6)];
-        let q = quant_dequant(&w, m, GROUP_SIZE, Rounding::Trunc);
+        let p = Precision::LADDER[rng.below(6)];
+        let q = quant_dequant(&w, &SefpSpec::new(p));
         for (g, qg) in w.chunks(GROUP_SIZE).zip(q.chunks(GROUP_SIZE)) {
             let maxabs = g.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
-            let step = step_for(shared_exponent(maxabs), m);
+            let step = step_for(shared_exponent(maxabs), p.m());
             for (a, b) in g.iter().zip(qg) {
-                assert!((a - b).abs() <= step, "seed={seed} m={m}");
+                assert!((a - b).abs() <= step, "seed={seed} {p}");
             }
         }
     }
@@ -57,11 +136,11 @@ fn prop_idempotent_and_sign_symmetric() {
         let mut rng = Rng::new(seed ^ 0xF1);
         let n = 1 + rng.below(200);
         let w = rand_weights(&mut rng, n, 2.0);
-        let m = MANTISSA_WIDTHS[rng.below(6)];
-        let q = quant_dequant(&w, m, GROUP_SIZE, Rounding::Trunc);
-        assert_eq!(q, quant_dequant(&q, m, GROUP_SIZE, Rounding::Trunc), "idempotent seed={seed}");
+        let spec = SefpSpec::new(Precision::LADDER[rng.below(6)]);
+        let q = quant_dequant(&w, &spec);
+        assert_eq!(q, quant_dequant(&q, &spec), "idempotent seed={seed}");
         let neg: Vec<f32> = w.iter().map(|&x| -x).collect();
-        let qn = quant_dequant(&neg, m, GROUP_SIZE, Rounding::Trunc);
+        let qn = quant_dequant(&neg, &spec);
         for (a, b) in q.iter().zip(&qn) {
             assert_eq!(*a, -*b, "sign symmetry seed={seed}");
         }
@@ -74,14 +153,14 @@ fn prop_packed_roundtrip_bit_exact() {
         let mut rng = Rng::new(seed ^ 0xA3);
         let n = 1 + rng.below(400);
         let w = rand_weights(&mut rng, n, 0.3);
-        let m = MANTISSA_WIDTHS[rng.below(6)];
-        let t = SefpTensor::encode(&w, m, GROUP_SIZE, Rounding::Trunc);
-        let p = PackedSefp::from_tensor(&t);
-        assert_eq!(p.to_tensor(), t, "seed={seed} m={m} n={n}");
+        let p = Precision::LADDER[rng.below(6)];
+        let t = SefpTensor::encode(&w, &SefpSpec::new(p));
+        let packed = PackedSefp::from_tensor(&t);
+        assert_eq!(packed.to_tensor(), t, "seed={seed} {p} n={n}");
         // packed truncate commutes with tensor truncate
-        if m > 3 {
-            let lo = 3 + rng.below((m - 3) as usize) as u8;
-            assert_eq!(p.truncate(lo).to_tensor(), t.truncate(lo), "seed={seed}");
+        if p.m() > 3 {
+            let lo = Precision::of(3 + rng.below((p.m() - 3) as usize) as u8);
+            assert_eq!(packed.truncate(lo).to_tensor(), t.truncate(lo), "seed={seed}");
         }
     }
 }
@@ -93,7 +172,7 @@ fn prop_monotone_error_in_width() {
         let w = rand_weights(&mut rng, 640, 1.0);
         let mut last = f64::INFINITY;
         for m in [3u8, 4, 5, 6, 7, 8] {
-            let q = quant_dequant(&w, m, GROUP_SIZE, Rounding::Trunc);
+            let q = quant_dequant(&w, &SefpSpec::new(Precision::of(m)));
             let err: f64 = w.iter().zip(&q).map(|(a, b)| ((a - b).abs()) as f64).sum();
             assert!(err <= last + 1e-9, "seed={seed} m={m}: {err} > {last}");
             last = err;
@@ -111,7 +190,7 @@ fn prop_bps_selection_counts_consistent() {
     // warmup — for random loss landscapes and λ values.
     for seed in 0..60 {
         let mut rng = Rng::new(seed ^ 0xC5);
-        let widths = [8u8, 7, 6, 5, 4, 3];
+        let widths = Precision::LADDER;
         let lambda = 0.5 + rng.f64() * 9.5;
         let mut bps = Bps::new(&widths, lambda, 0.9);
         let base: Vec<f64> = widths.iter().map(|_| 1.0 + rng.f64() * 3.0).collect();
@@ -137,14 +216,14 @@ fn prop_laa_conserves_gradient_mass() {
     for seed in 0..60 {
         let mut rng = Rng::new(seed ^ 0xD6);
         let n = 1 + rng.below(12);
-        let mut laa = Laa::new(n, 4);
+        let mut laa = Laa::new(n, Precision::of(4));
         let mut observed_sum = 0.0f64;
         let mut applied_sum = 0.0f64;
         for _ in 0..rng.below(200) + 20 {
             let m = [8u8, 6, 4, 3][rng.below(4)];
             let v = rng.normal() as f32;
             observed_sum += v as f64;
-            match laa.observe(m, vec![vec![v]]) {
+            match laa.observe(Width::m(Precision::of(m)), vec![vec![v]]) {
                 LaaAction::Apply(g) => applied_sum += g[0][0] as f64,
                 LaaAction::Flush { grads, .. } => applied_sum += grads[0][0] as f64,
                 LaaAction::Deferred { .. } => {}
@@ -165,10 +244,11 @@ fn prop_laa_flushes_at_exactly_n() {
     for seed in 0..40 {
         let mut rng = Rng::new(seed ^ 0xE7);
         let n = 2 + rng.below(10);
-        let mut laa = Laa::new(n, 4);
+        let mut laa = Laa::new(n, Precision::of(4));
+        let m3 = Width::m(Precision::of(3));
         let mut deferred_run = 0usize;
         for i in 0..(n * 3) {
-            match laa.observe(3, vec![vec![1.0]]) {
+            match laa.observe(m3, vec![vec![1.0]]) {
                 LaaAction::Deferred { filled } => {
                     deferred_run += 1;
                     assert_eq!(filled, deferred_run, "seed={seed} i={i}");

@@ -11,13 +11,14 @@ use std::time::Duration;
 
 use otaro::config::ServeConfig;
 use otaro::runtime::ParamStore;
+use otaro::sefp::Precision;
 use otaro::serve::{
-    DynamicBatcher, PrecisionStore, Request, Router, SchedPolicy, Server, SimBackend, TaskClass,
+    DynamicBatcher, PrecisionLadder, Request, Router, SchedPolicy, Server, SimBackend, TaskClass,
 };
 
 /// Tiny synthetic parameter set — `SimBackend` never reads the values,
-/// but the precision store exercises the real truncate-and-cache path.
-fn store() -> PrecisionStore {
+/// but the precision ladder exercises the real truncate-and-cache path.
+fn ladder() -> PrecisionLadder {
     let mut rng = otaro::data::Rng::new(9);
     let params = ParamStore {
         tensors: vec![(0..128).map(|_| rng.normal() as f32 * 0.1).collect(), vec![1.0; 8]],
@@ -25,19 +26,19 @@ fn store() -> PrecisionStore {
         shapes: vec![vec![16, 8], vec![8]],
         quantized: vec![true, false],
     };
-    PrecisionStore::from_params(&params)
+    PrecisionLadder::from_params(&params)
 }
 
 fn server(bsz: usize, policy: SchedPolicy) -> Server<SimBackend> {
     let backend = SimBackend::new(bsz, 8, 32);
     let router = Router::new(ServeConfig::default());
     let batcher = DynamicBatcher::new(bsz, 1024).with_policy(policy);
-    Server::new(backend, store(), router, batcher)
+    Server::new(backend, ladder(), router, batcher)
 }
 
 fn req(id: u64, m: u8, max_new: usize) -> Request {
     Request::new(id, TaskClass::Other, vec![1, 2, 3])
-        .with_force_m(m)
+        .with_precision(Precision::of(m))
         .with_max_new_tokens(max_new)
 }
 
@@ -71,8 +72,8 @@ fn widths_generate_different_tokens() {
     let responses = s.process_all().unwrap();
     let r0 = responses.iter().find(|r| r.id == 0).unwrap();
     let r1 = responses.iter().find(|r| r.id == 1).unwrap();
-    assert_eq!(r0.width_m, 4);
-    assert_eq!(r1.width_m, 3);
+    assert_eq!(r0.precision, Precision::of(4));
+    assert_eq!(r1.precision, Precision::of(3));
     // same prompt, different precision -> the sim logits differ
     assert_ne!(r0.tokens, r1.tokens);
 }
@@ -112,7 +113,7 @@ fn lone_low_precision_request_is_not_starved_by_flood() {
     }
     let responses = s.process_all().unwrap();
     assert_eq!(responses.len(), 201);
-    let pos = responses.iter().position(|r| r.width_m == 3).unwrap();
+    let pos = responses.iter().position(|r| r.precision == Precision::of(3)).unwrap();
     assert!(
         pos < responses.len() / 2,
         "m=3 served at position {pos} of {} — starved past the bound",
@@ -171,7 +172,9 @@ fn long_prompts_use_a_rolling_window() {
     // prompt longer than the engine's seq_len must not panic or reject
     let mut s = server(2, SchedPolicy::default());
     let long_prompt: Vec<i32> = (0..50).map(|i| i % 32).collect();
-    let r = Request::new(7, TaskClass::Other, long_prompt).with_force_m(5).with_max_new_tokens(3);
+    let r = Request::new(7, TaskClass::Other, long_prompt)
+        .with_precision(Precision::of(5))
+        .with_max_new_tokens(3);
     assert!(s.submit(r));
     let responses = s.process_all().unwrap();
     assert_eq!(responses.len(), 1);
@@ -190,11 +193,46 @@ fn temperature_sampling_is_seeded() {
 }
 
 #[test]
+fn precision_above_master_is_rejected_at_submit() {
+    // a forced width above the E5M8 master must be shed at submit (like
+    // empty prompts), not abort a whole popped batch later in view_at
+    let mut s = server(2, SchedPolicy::default());
+    assert!(!s.submit(req(0, 9, 1)));
+    assert_eq!(s.stats().invalid, 1);
+    assert!(s.batcher.is_empty());
+    // valid traffic afterwards is unaffected
+    assert!(s.submit(req(1, 4, 1)));
+    assert_eq!(s.process_all().unwrap().len(), 1);
+}
+
+#[test]
+fn ladder_switch_stats_surface_through_serve_stats() {
+    let mut s = server(2, SchedPolicy::default());
+    // two precisions -> one ladder miss each (m=8 is the master: a hit)
+    for (i, m) in [(0u64, 4u8), (1, 3), (2, 8)] {
+        assert!(s.submit(req(i, m, 1)));
+    }
+    let _ = s.process_all().unwrap();
+    // repeat traffic at the same widths: all cache hits now
+    for (i, m) in [(3u64, 4u8), (4, 3)] {
+        assert!(s.submit(req(i, m, 1)));
+    }
+    let _ = s.process_all().unwrap();
+    let stats = s.stats();
+    assert_eq!(stats.switch_misses, 2, "m4 + m3 derive once each");
+    assert_eq!(stats.switch_hits, 3, "master + two repeats");
+    assert_eq!(stats.switch_evictions, 0, "default budget is unbounded");
+    assert_eq!(stats.switch_ms.n, 2);
+    assert!(stats.ladder_resident_bytes > 0);
+    assert_eq!(s.ladder.cached_precisions(), vec![Precision::of(3), Precision::of(4)]);
+}
+
+#[test]
 fn backpressure_still_sheds_and_counts() {
     let backend = SimBackend::new(2, 8, 32);
     let router = Router::new(ServeConfig::default());
     let batcher = DynamicBatcher::new(2, 3);
-    let mut s = Server::new(backend, store(), router, batcher);
+    let mut s = Server::new(backend, ladder(), router, batcher);
     for i in 0..5u64 {
         s.submit(req(i, 4, 1));
     }
