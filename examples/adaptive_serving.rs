@@ -1,0 +1,144 @@
+//! Adaptive precision control-plane demo — the serve-time feedback loop
+//! on a deterministic in-process backend (no AOT artifacts needed).
+//!
+//! Three load phases over one `AdaptivePolicy` server:
+//!
+//! 1. **calm** — light traffic, everything serves at the configured
+//!    static precisions;
+//! 2. **latency burst** — the simulated decode step slows down, the
+//!    p95 SLO is violated, and the controller demotes the
+//!    latency-sensitive Understanding class to a lower rung (probes
+//!    confirm quality headroom);
+//! 3. **quality loss** — the backend's quality model is degraded so
+//!    low-precision argmaxes diverge from the master; shadow probes
+//!    catch it and the controller promotes back up.
+//!
+//! Run: `cargo run --release --example adaptive_serving`
+
+use std::time::Duration;
+
+use otaro::config::{PolicyConfig, ServeConfig};
+use otaro::data::Rng;
+use otaro::runtime::ParamStore;
+use otaro::serve::{
+    DynamicBatcher, PrecisionLadder, Request, Router, SchedPolicy, Server, SimBackend, TaskClass,
+};
+
+fn ladder() -> PrecisionLadder {
+    let mut rng = Rng::new(42);
+    let params = ParamStore {
+        tensors: vec![(0..4096).map(|_| rng.normal() as f32 * 0.1).collect(), vec![1.0; 64]],
+        names: vec!["w".into(), "ln".into()],
+        shapes: vec![vec![64, 64], vec![64]],
+        quantized: vec![true, false],
+    };
+    PrecisionLadder::from_params(&params)
+}
+
+fn phase(
+    server: &mut Server<SimBackend>,
+    rng: &mut Rng,
+    name: &str,
+    rounds: usize,
+    per_round: u64,
+    next_id: &mut u64,
+) -> anyhow::Result<()> {
+    let before = server.stats().clone();
+    for _ in 0..rounds {
+        for _ in 0..per_round {
+            let id = *next_id;
+            *next_id += 1;
+            // understanding-heavy mix: the latency-sensitive class the
+            // controller steers
+            let class = match rng.below(10) {
+                0..=6 => TaskClass::Understanding,
+                7 | 8 => TaskClass::Other,
+                _ => TaskClass::Generation,
+            };
+            let max_new = if matches!(class, TaskClass::Generation) { 4 } else { 2 };
+            let prompt: Vec<i32> = (0..rng.below(6) + 2).map(|_| rng.below(32) as i32).collect();
+            let req = Request::new(id, class, prompt).with_max_new_tokens(max_new);
+            server.submit(req);
+        }
+        server.process_all()?;
+    }
+    let s = server.stats();
+    println!("\n== phase: {name} ==");
+    println!(
+        "served {} (+{}), per-precision {:?}",
+        s.served,
+        s.served - before.served,
+        s.per_precision
+    );
+    println!(
+        "latency: queue p50/p95/p99 = {:.2}/{:.2}/{:.2} ms, compute p50/p95 = {:.2}/{:.2} ms",
+        s.queue_ms.p50(),
+        s.queue_ms.p95(),
+        s.queue_ms.p99(),
+        s.compute_ms.p50(),
+        s.compute_ms.p95(),
+    );
+    println!(
+        "policy: {} demotions (+{}), {} promotions (+{}), {} probes, agreement p50 {:.2}",
+        s.demotions,
+        s.demotions - before.demotions,
+        s.promotions,
+        s.promotions - before.promotions,
+        s.probes_run,
+        s.probe_agreement.p50(),
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ServeConfig {
+        policy: PolicyConfig {
+            adaptive: true,
+            slo_p95_ms: 1.0,
+            probe_rate: 0.25,
+            quality_floor: 0.5,
+            quality_headroom: 0.1,
+            window: 64,
+            min_samples: 8,
+            cooldown: 4,
+            ..PolicyConfig::default()
+        },
+        ..ServeConfig::default()
+    };
+    let backend = SimBackend::new(8, 16, 64).with_quality_model(1e-3);
+    let batcher =
+        DynamicBatcher::new(8, 4096).with_policy(SchedPolicy::from_config(&cfg));
+    let mut server = Server::new(backend, ladder(), Router::from_config(cfg), batcher);
+    let mut rng = Rng::new(0xADA);
+    let mut next_id = 0u64;
+
+    println!("adaptive precision control plane over ONE SEFP master (ladder E5M8..E5M3)");
+
+    // phase 1: calm — no pressure, no movement
+    phase(&mut server, &mut rng, "calm", 4, 8, &mut next_id)?;
+
+    // phase 2: latency burst — every decode step now costs 2 ms, the
+    // 1 ms p95 SLO is violated, Understanding demotes
+    server.backend_mut().step_delay = Duration::from_millis(2);
+    phase(&mut server, &mut rng, "latency burst -> demotion", 6, 16, &mut next_id)?;
+
+    // phase 3: quality loss — the burst passes, but the backend's
+    // low-precision fidelity collapses; probes drive promotion
+    server.backend_mut().step_delay = Duration::ZERO;
+    server.backend_mut().quality_noise = Some(10.0);
+    phase(&mut server, &mut rng, "quality loss -> promotion", 6, 16, &mut next_id)?;
+
+    let s = server.stats();
+    println!(
+        "\ntotal: {} served, {:.1} req/s, {} ladder switches ({} hits), \
+         {} demotions / {} promotions / {} probes",
+        s.served,
+        s.throughput_rps(),
+        s.switch_hits + s.switch_misses,
+        s.switch_hits,
+        s.demotions,
+        s.promotions,
+        s.probes_run,
+    );
+    Ok(())
+}

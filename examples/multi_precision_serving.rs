@@ -76,7 +76,8 @@ fn main() -> anyhow::Result<()> {
     drop(tx);
 
     // serving loop: drain the channel into the scheduler, dispatch
-    let router = Router::new(serve_cfg.clone());
+    // from_config honors serve_cfg.policy.adaptive (static by default)
+    let router = Router::from_config(serve_cfg.clone());
     let batcher = DynamicBatcher::new(engine.batch_size(), 256)
         .with_policy(SchedPolicy::from_config(&serve_cfg));
     let mut server = Server::new(engine.into_handle(), ladder, router, batcher);

@@ -1,0 +1,99 @@
+//! Policy-layer benchmarks: the per-request decision + observation hot
+//! path must be effectively free next to a decode step.
+//!
+//! Run: `cargo bench --bench bench_policy`
+//!
+//! The acceptance bound is asserted, not just printed: the adaptive
+//! decide+observe path (telemetry ring push + controller tick) must
+//! stay under 1 µs per request — the serve loop calls it once per
+//! completion, so anything slower would tax every request.
+
+use otaro::benchutil::{black_box, group, Bench};
+use otaro::config::{PolicyConfig, ServeConfig};
+use otaro::policy::{AdaptivePolicy, Observation, PrecisionPolicy, StaticPolicy};
+use otaro::sefp::Precision;
+use otaro::serve::{LogitsBackend, PrecisionLadder, Router, SimBackend, TaskClass};
+
+fn adaptive_cfg() -> ServeConfig {
+    ServeConfig {
+        policy: PolicyConfig { adaptive: true, ..PolicyConfig::default() },
+        ..ServeConfig::default()
+    }
+}
+
+fn obs(class: TaskClass, p: Precision, ms: f64) -> Observation {
+    Observation {
+        class,
+        precision: p,
+        queue_ms: ms / 2.0,
+        compute_ms: ms / 2.0,
+        tokens: 2,
+        queue_depth: 5,
+    }
+}
+
+const CLASSES: [TaskClass; 3] =
+    [TaskClass::Generation, TaskClass::Understanding, TaskClass::Other];
+
+fn main() {
+    let mut b = Bench::new();
+
+    group("per-request decision + observation path");
+    let cfg = adaptive_cfg();
+    let mut adaptive = AdaptivePolicy::new(&cfg);
+    // warm the telemetry lanes so the rings are full (steady state:
+    // no allocation on push)
+    for i in 0..256 {
+        let class = CLASSES[i % 3];
+        let at = adaptive.decide(class);
+        adaptive.observe(&obs(class, at, 1.0 + (i % 7) as f64));
+    }
+    let mut i = 0u64;
+    let adaptive_res = b
+        .run("adaptive_decide_plus_observe", || {
+            i += 1;
+            let class = CLASSES[(i % 3) as usize];
+            let at = adaptive.decide(class);
+            adaptive.observe(&obs(class, at, 1.0 + (i % 7) as f64));
+            at
+        })
+        .median_ns;
+
+    let mut stat = StaticPolicy::new(&ServeConfig::default());
+    b.run("static_decide", || black_box(stat.decide(TaskClass::Understanding)));
+
+    let mut router = Router::from_config(adaptive_cfg());
+    b.run("router_route_forced_clamp", || {
+        black_box(router.route(TaskClass::Other, Some(Precision::of(1))))
+    });
+
+    group("scale reference: one SimBackend decode step (8x32, vocab 320)");
+    let params = otaro::runtime::ParamStore {
+        tensors: vec![vec![0.5; 64]],
+        names: vec!["w".into()],
+        shapes: vec![vec![8, 8]],
+        quantized: vec![true],
+    };
+    let mut ladder = PrecisionLadder::from_params(&params);
+    let mut sim = SimBackend::new(8, 32, 320);
+    let view = ladder.view_at(Precision::of(4)).unwrap();
+    sim.load_view(&view).unwrap();
+    let tokens = vec![1i32; 8 * 32];
+    let step_res = b
+        .run("sim_logits_step_8x32x320", || sim.logits_step(&tokens).unwrap())
+        .median_ns;
+
+    println!(
+        "\ndecision path is {:.0}x cheaper than one simulated decode step \
+         ({:.0} ns vs {:.0} ns)",
+        step_res / adaptive_res.max(1.0),
+        adaptive_res,
+        step_res
+    );
+    assert!(
+        adaptive_res < 1_000.0,
+        "adaptive decide+observe took {adaptive_res:.0} ns/iter — the decision \
+         path must stay under 1 µs"
+    );
+    println!("OK: decision + observation path < 1 µs");
+}

@@ -105,10 +105,14 @@ fn main() {
     rate("sustained_mixed_tokens", stats.tokens_generated, secs);
     rate("decode_steps", stats.decode_steps, secs);
     println!(
-        "scheduled runs: {}; mean queue {:.2} ms; mean compute {:.3} ms; widths {:?}",
+        "scheduled runs: {}; queue p50/p95/p99 {:.2}/{:.2}/{:.2} ms; \
+         compute p50/p95 {:.3}/{:.3} ms; widths {:?}",
         stats.batches,
-        stats.queue_ms.mean(),
-        stats.compute_ms.mean(),
+        stats.queue_ms.p50(),
+        stats.queue_ms.p95(),
+        stats.queue_ms.p99(),
+        stats.compute_ms.p50(),
+        stats.compute_ms.p95(),
         stats.per_precision
     );
     println!(

@@ -30,6 +30,16 @@ pub fn amplitude(curve: &[(f32, f32)]) -> f32 {
     max - min
 }
 
+/// Mean ordinate of a sampled curve (0.0 when empty).  Shared by the
+/// ε(ω) analysis and the serving-side shadow probes, whose per-position
+/// logit-divergence curves are summarized with the same machinery.
+pub fn mean_ordinate(curve: &[(f32, f32)]) -> f32 {
+    if curve.is_empty() {
+        return 0.0;
+    }
+    curve.iter().map(|&(_, e)| e).sum::<f32>() / curve.len() as f32
+}
+
 /// Crude ASCII rendering for terminal output of fig. 9.
 pub fn ascii_plot(curve: &[(f32, f32)], rows: usize, cols: usize) -> String {
     let (min_e, max_e) = curve.iter().fold((f32::INFINITY, f32::NEG_INFINITY), |(lo, hi), &(_, e)| {
@@ -73,6 +83,13 @@ mod tests {
             let ek = crate::sefp::epsilon_sawtooth(w, p, Rounding::Trunc);
             assert!((e0 - ek).abs() < 1e-5, "k={k}");
         }
+    }
+
+    #[test]
+    fn mean_ordinate_basics() {
+        assert_eq!(mean_ordinate(&[]), 0.0);
+        let curve = [(0.0, 1.0), (1.0, 2.0), (2.0, 6.0)];
+        assert!((mean_ordinate(&curve) - 3.0).abs() < 1e-6);
     }
 
     #[test]

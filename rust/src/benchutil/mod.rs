@@ -17,6 +17,10 @@ pub struct BenchResult {
     pub iters: usize,
     pub mean_ns: f64,
     pub median_ns: f64,
+    /// tail latency across timed iterations — a jitter-sensitive
+    /// benchmark (locks, allocator, scheduler) shows it here long
+    /// before the median moves
+    pub p95_ns: f64,
     pub min_ns: f64,
     /// elements per iteration (0 = unset)
     pub elements: u64,
@@ -28,20 +32,20 @@ impl BenchResult {
         if self.elements > 0 {
             let eps = self.elements as f64 / (self.median_ns * 1e-9);
             println!(
-                "{:<44} {:>12}/iter  (mean {}, min {}, {} iters, {:.1} Melem/s)",
+                "{:<44} {:>12}/iter  (p95 {}, min {}, {} iters, {:.1} Melem/s)",
                 self.name,
                 t,
-                fmt_ns(self.mean_ns),
+                fmt_ns(self.p95_ns),
                 fmt_ns(self.min_ns),
                 self.iters,
                 eps / 1e6
             );
         } else {
             println!(
-                "{:<44} {:>12}/iter  (mean {}, min {}, {} iters)",
+                "{:<44} {:>12}/iter  (p95 {}, min {}, {} iters)",
                 self.name,
                 t,
-                fmt_ns(self.mean_ns),
+                fmt_ns(self.p95_ns),
                 fmt_ns(self.min_ns),
                 self.iters
             );
@@ -71,7 +75,14 @@ pub struct Bench {
 
 impl Default for Bench {
     fn default() -> Self {
-        Bench { warmup_iters: 3, budget_ms: 900.0, max_iters: 10_000, results: Vec::new() }
+        // max_iters matches the Summary percentile retention window so
+        // the reported median/p95 always cover EVERY timed iteration
+        Bench {
+            warmup_iters: 3,
+            budget_ms: 900.0,
+            max_iters: crate::metrics::SUMMARY_SAMPLE_CAP,
+            results: Vec::new(),
+        }
     }
 }
 
@@ -99,22 +110,21 @@ impl Bench {
         bb(f());
         let est_ns = t0.elapsed().as_nanos().max(1) as f64;
         let iters = ((self.budget_ms * 1e6 / est_ns) as usize).clamp(5, self.max_iters);
-        let mut samples = Vec::with_capacity(iters);
+        // exact percentiles via the shared metrics substrate — median
+        // AND tail, not a mean that hides jitter
+        let mut samples = crate::metrics::Summary::new();
         for _ in 0..iters {
             let t = Instant::now();
             bb(f());
             samples.push(t.elapsed().as_nanos() as f64);
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
-        let median = samples[samples.len() / 2];
-        let min = samples[0];
         let res = BenchResult {
             name: name.to_string(),
             iters,
-            mean_ns: mean,
-            median_ns: median,
-            min_ns: min,
+            mean_ns: samples.mean(),
+            median_ns: samples.p50(),
+            p95_ns: samples.p95(),
+            min_ns: samples.min,
             elements,
         };
         res.report();

@@ -225,6 +225,122 @@ impl TrainConfig {
     }
 }
 
+/// Adaptive precision control-plane configuration (`rust/src/policy/`).
+///
+/// Governs the `AdaptivePolicy` feedback loop: telemetry window sizes,
+/// the latency SLO, shadow-probe cadence, the quality floor/hysteresis
+/// band, controller cooldown, and the BPS exploration coefficient the
+/// serve-time scoring reuses from the paper (eq. 5).
+#[derive(Debug, Clone)]
+pub struct PolicyConfig {
+    /// route through `AdaptivePolicy` (false = today's `StaticPolicy`)
+    pub adaptive: bool,
+    /// per-class p95 end-to-end latency SLO, milliseconds
+    pub slo_p95_ms: f64,
+    /// fraction of completions shadow-probed at master precision, [0, 1]
+    pub probe_rate: f64,
+    /// minimum probe token-agreement before a class is promoted
+    pub quality_floor: f64,
+    /// demotion additionally requires agreement ≥ floor + headroom —
+    /// the hysteresis band that stops demote/promote flapping
+    pub quality_headroom: f64,
+    /// telemetry sliding-window capacity (samples per lane)
+    pub window: usize,
+    /// latency observations required before the controller may demote
+    pub min_samples: usize,
+    /// decision ticks a class holds after any switch
+    pub cooldown: u64,
+    /// BPS exploration coefficient λ (paper: 5)
+    pub lambda: f64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig {
+            adaptive: false,
+            slo_p95_ms: 25.0,
+            probe_rate: 0.1,
+            quality_floor: 0.9,
+            quality_headroom: 0.02,
+            window: 128,
+            min_samples: 16,
+            cooldown: 32,
+            lambda: 5.0,
+        }
+    }
+}
+
+impl PolicyConfig {
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("adaptive", Value::Bool(self.adaptive)),
+            ("slo_p95_ms", n(self.slo_p95_ms)),
+            ("probe_rate", n(self.probe_rate)),
+            ("quality_floor", n(self.quality_floor)),
+            ("quality_headroom", n(self.quality_headroom)),
+            ("window", n(self.window as f64)),
+            ("min_samples", n(self.min_samples as f64)),
+            ("cooldown", n(self.cooldown as f64)),
+            ("lambda", n(self.lambda)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let mut c = PolicyConfig::default();
+        if let Some(x) = v.get("adaptive").and_then(Value::as_bool) {
+            c.adaptive = x;
+        }
+        if let Some(x) = v.get("slo_p95_ms").and_then(Value::as_f64) {
+            anyhow::ensure!(x > 0.0, "policy slo_p95_ms must be positive, got {x}");
+            c.slo_p95_ms = x;
+        }
+        if let Some(x) = v.get("probe_rate").and_then(Value::as_f64) {
+            anyhow::ensure!((0.0..=1.0).contains(&x), "policy probe_rate not in [0,1]: {x}");
+            c.probe_rate = x;
+        }
+        if let Some(x) = v.get("quality_floor").and_then(Value::as_f64) {
+            anyhow::ensure!((0.0..=1.0).contains(&x), "policy quality_floor not in [0,1]: {x}");
+            c.quality_floor = x;
+        }
+        if let Some(x) = v.get("quality_headroom").and_then(Value::as_f64) {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&x),
+                "policy quality_headroom not in [0,1]: {x}"
+            );
+            c.quality_headroom = x;
+        }
+        if let Some(x) = v.get("window").and_then(Value::as_usize) {
+            anyhow::ensure!(x >= 1, "policy window must be at least 1");
+            c.window = x;
+        }
+        if let Some(x) = v.get("min_samples").and_then(Value::as_usize) {
+            c.min_samples = x;
+        }
+        if let Some(x) = v.get("cooldown").and_then(Value::as_usize) {
+            c.cooldown = x as u64;
+        }
+        if let Some(x) = v.get("lambda").and_then(Value::as_f64) {
+            c.lambda = x;
+        }
+        // cross-field contracts: shadow probes are the adaptive loop's
+        // only quality guard (without them demotion would run blind and
+        // promotion could never trigger), and a demotion gate deeper
+        // than the telemetry window could never fill
+        anyhow::ensure!(
+            !c.adaptive || c.probe_rate > 0.0,
+            "adaptive policy requires probe_rate > 0 (shadow probes are the quality guard)"
+        );
+        anyhow::ensure!(
+            c.min_samples <= c.window,
+            "policy min_samples ({}) exceeds the telemetry window ({}) — demotion could \
+             never trigger",
+            c.min_samples,
+            c.window
+        );
+        Ok(c)
+    }
+}
+
 /// Serving configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -238,6 +354,13 @@ pub struct ServeConfig {
     pub generation_precision: Precision,
     /// precision used for understanding-class requests
     pub understanding_precision: Precision,
+    /// the precisions serving may run at (the deployment ladder):
+    /// adaptive-policy switching stays inside it, and forced per-request
+    /// precisions are clamped to it by the router.  Validated at parse
+    /// time like `TrainConfig::widths` (deduped, sorted highest first).
+    pub ladder: Vec<Precision>,
+    /// adaptive control-plane knobs (`rust/src/policy/`)
+    pub policy: PolicyConfig,
     /// byte budget for derived-precision residency in the serving
     /// `PrecisionLadder` (the single SEFP master is always resident and
     /// not charged; cached truncated views are LRU-evicted past this)
@@ -260,6 +383,8 @@ impl Default for ServeConfig {
             default_precision: Precision::of(6),
             generation_precision: Precision::of(8),
             understanding_precision: Precision::of(4),
+            ladder: Precision::LADDER.to_vec(),
+            policy: PolicyConfig::default(),
             max_wait_ms: 500,
             age_weight: 1.0,
             ladder_budget_bytes: 256 << 20,
@@ -275,6 +400,8 @@ impl ServeConfig {
             ("default_m", n(self.default_precision.m() as f64)),
             ("generation_m", n(self.generation_precision.m() as f64)),
             ("understanding_m", n(self.understanding_precision.m() as f64)),
+            ("ladder_m", arr(self.ladder.iter().map(|&w| n(w.m() as f64)).collect())),
+            ("policy", self.policy.to_json()),
             ("max_wait_ms", n(self.max_wait_ms as f64)),
             ("age_weight", n(self.age_weight)),
             ("ladder_budget_bytes", n(self.ladder_budget_bytes as f64)),
@@ -305,6 +432,28 @@ impl ServeConfig {
         }
         if let Some(p) = precision_field("understanding_m")? {
             c.understanding_precision = p;
+        }
+        if let Some(ws) = v.get("ladder_m").and_then(Value::as_arr) {
+            // same validation contract as TrainConfig::widths: reject
+            // out-of-range widths at parse time, dedupe, sort highest
+            // precision first
+            let mut ladder = Vec::with_capacity(ws.len());
+            for w in ws {
+                let m = w
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("ladder_m entry not a number: {w:?}"))?;
+                let p = Precision::from_num(m)
+                    .map_err(|e| anyhow::anyhow!("serve config ladder_m: {e}"))?;
+                if !ladder.contains(&p) {
+                    ladder.push(p);
+                }
+            }
+            anyhow::ensure!(!ladder.is_empty(), "serve config ladder_m must be non-empty");
+            Precision::canonicalize_ladder(&mut ladder);
+            c.ladder = ladder;
+        }
+        if let Some(p) = v.get("policy") {
+            c.policy = PolicyConfig::from_json(p)?;
         }
         if let Some(x) = v.get("max_wait_ms").and_then(Value::as_usize) {
             c.max_wait_ms = x as u64;
@@ -434,6 +583,58 @@ mod tests {
             let v = crate::json::parse(bad).unwrap();
             assert!(TrainConfig::from_json(&v).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn serve_ladder_and_policy_roundtrip() {
+        let c = ServeConfig {
+            ladder: vec![Precision::of(8), Precision::of(5), Precision::of(3)],
+            policy: PolicyConfig {
+                adaptive: true,
+                slo_p95_ms: 12.5,
+                probe_rate: 0.25,
+                ..PolicyConfig::default()
+            },
+            ..ServeConfig::default()
+        };
+        let d = ServeConfig::from_json(&crate::json::parse(&c.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(d.ladder, c.ladder);
+        assert!(d.policy.adaptive);
+        assert_eq!(d.policy.slo_p95_ms, 12.5);
+        assert_eq!(d.policy.probe_rate, 0.25);
+        assert_eq!(d.policy.quality_floor, PolicyConfig::default().quality_floor);
+    }
+
+    #[test]
+    fn serve_ladder_validated_deduped_sorted() {
+        let v = crate::json::parse(r#"{"ladder_m":[3,8,3,5]}"#).unwrap();
+        let c = ServeConfig::from_json(&v).unwrap();
+        assert_eq!(c.ladder, vec![Precision::of(8), Precision::of(5), Precision::of(3)]);
+        for bad in [r#"{"ladder_m":[]}"#, r#"{"ladder_m":[0]}"#, r#"{"ladder_m":[15]}"#] {
+            let v = crate::json::parse(bad).unwrap();
+            assert!(ServeConfig::from_json(&v).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn policy_config_rejects_out_of_range() {
+        for bad in [
+            r#"{"policy":{"probe_rate":1.5}}"#,
+            r#"{"policy":{"quality_floor":-0.1}}"#,
+            r#"{"policy":{"slo_p95_ms":0}}"#,
+            r#"{"policy":{"window":0}}"#,
+            // adaptive without probes would demote blind and never promote
+            r#"{"policy":{"adaptive":true,"probe_rate":0}}"#,
+            // a demotion gate deeper than the window could never fill
+            r#"{"policy":{"window":8,"min_samples":16}}"#,
+        ] {
+            let v = crate::json::parse(bad).unwrap();
+            assert!(ServeConfig::from_json(&v).is_err(), "{bad}");
+        }
+        // probe_rate 0 stays legal for the static policy
+        let v = crate::json::parse(r#"{"policy":{"probe_rate":0}}"#).unwrap();
+        assert!(ServeConfig::from_json(&v).is_ok());
     }
 
     #[test]

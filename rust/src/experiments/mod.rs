@@ -208,7 +208,9 @@ pub fn serve_demo(ctx: &Ctx, n_requests: usize, checkpoint: Option<PathBuf>) -> 
         ladder.master_bytes() / 1024,
         ladder.zoo_bytes(&Precision::LADDER) / 1024
     );
-    let router = Router::new(serve_cfg.clone());
+    // from_config honors serve_cfg.policy.adaptive (Router::new would
+    // pin StaticPolicy and silently ignore the config flag)
+    let router = Router::from_config(serve_cfg.clone());
     let batcher = DynamicBatcher::new(engine.batch_size(), 256)
         .with_policy(SchedPolicy::from_config(&serve_cfg));
     let mut server = Server::new(engine.into_handle(), ladder, router, batcher);

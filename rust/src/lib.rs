@@ -24,6 +24,7 @@ pub mod data;
 pub mod eval;
 pub mod infer;
 pub mod metrics;
+pub mod policy;
 pub mod runtime;
 pub mod sefp;
 pub mod serve;

@@ -58,7 +58,20 @@ impl Timer {
     }
 }
 
-/// Online mean/std/min/max accumulator (Welford).
+/// Newest samples a [`Summary`] retains for percentile queries.  The
+/// Welford aggregates (`n`/mean/std/min/max) always cover the full
+/// stream; bounding the percentile window keeps a long-running server's
+/// per-request stats O(1) in memory instead of growing per request.
+pub const SUMMARY_SAMPLE_CAP: usize = 4096;
+
+/// Mean/std/min/max accumulator (Welford) with exact percentiles.
+///
+/// Samples are retained (newest [`SUMMARY_SAMPLE_CAP`], ring-buffered)
+/// so [`percentile`](Summary::percentile) is exact nearest-rank over
+/// the retained window, not an approximation — tail latencies
+/// (p95/p99) are the signal the serving policy layer steers by, and a
+/// mean hides exactly the violations an SLO cares about.  Smaller
+/// fixed windows live in `policy::telemetry`.
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
     pub n: u64,
@@ -66,11 +79,23 @@ pub struct Summary {
     m2: f64,
     pub min: f64,
     pub max: f64,
+    /// newest samples, ring-buffered at [`SUMMARY_SAMPLE_CAP`]
+    samples: Vec<f64>,
+    /// next overwrite position once the ring has wrapped
+    head: usize,
 }
 
 impl Summary {
     pub fn new() -> Self {
-        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+        Summary {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            samples: Vec::new(),
+            head: 0,
+        }
     }
 
     pub fn push(&mut self, x: f64) {
@@ -80,6 +105,12 @@ impl Summary {
         self.m2 += d * (x - self.mean);
         self.min = self.min.min(x);
         self.max = self.max.max(x);
+        if self.samples.len() < SUMMARY_SAMPLE_CAP {
+            self.samples.push(x);
+        } else {
+            self.samples[self.head] = x;
+            self.head = (self.head + 1) % SUMMARY_SAMPLE_CAP;
+        }
     }
 
     pub fn mean(&self) -> f64 {
@@ -93,6 +124,39 @@ impl Summary {
         }
         (self.m2 / self.n as f64).sqrt()
     }
+
+    /// Exact nearest-rank percentile over the retained window — the
+    /// newest [`SUMMARY_SAMPLE_CAP`] samples (`q` in [0, 100]); 0.0
+    /// when empty.  Sorts a copy — this is a reporting path, not a
+    /// per-event one.
+    pub fn percentile(&self, q: f64) -> f64 {
+        percentile_of(&self.samples, q)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Exact nearest-rank percentile of an unsorted slice (`q` in [0, 100]);
+/// 0.0 when empty.  Shared by [`Summary`] and the fixed-size telemetry
+/// windows in `policy::telemetry`.
+pub fn percentile_of(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = (q.clamp(0.0, 100.0) / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
 }
 
 #[cfg(test)]
@@ -109,6 +173,48 @@ mod tests {
         assert!((s.std() - 2.0).abs() < 1e-12);
         assert_eq!(s.min, 2.0);
         assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn percentiles_are_exact_nearest_rank() {
+        let mut s = Summary::new();
+        for x in 1..=100 {
+            s.push(x as f64);
+        }
+        assert_eq!(s.p50(), 50.0);
+        assert_eq!(s.p95(), 95.0);
+        assert_eq!(s.p99(), 99.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        // order-independent: a reversed stream gives the same answers
+        let mut r = Summary::new();
+        for x in (1..=100).rev() {
+            r.push(x as f64);
+        }
+        assert_eq!(r.p95(), 95.0);
+        // empty and singleton edge cases
+        assert_eq!(Summary::new().p95(), 0.0);
+        let mut one = Summary::new();
+        one.push(7.0);
+        assert_eq!(one.p50(), 7.0);
+        assert_eq!(one.p99(), 7.0);
+        assert_eq!(percentile_of(&[3.0, 1.0, 2.0], 50.0), 2.0);
+    }
+
+    #[test]
+    fn retention_is_bounded_and_keeps_newest() {
+        let mut s = Summary::new();
+        for x in 0..(SUMMARY_SAMPLE_CAP + 1000) {
+            s.push(x as f64);
+        }
+        // full-stream aggregates are unaffected by the ring
+        assert_eq!(s.n, (SUMMARY_SAMPLE_CAP + 1000) as u64);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, (SUMMARY_SAMPLE_CAP + 999) as f64);
+        // percentiles cover the NEWEST cap samples: the minimum retained
+        // value is the 1000th push, not the 0th
+        assert_eq!(s.percentile(0.0), 1000.0);
+        assert_eq!(s.percentile(100.0), (SUMMARY_SAMPLE_CAP + 999) as f64);
     }
 
     #[test]

@@ -1,0 +1,378 @@
+//! SLO-driven precision feedback controller.
+//!
+//! Ports the paper's BPS exploitation–exploration scoring (eq. 5) from
+//! fine-tuning to serve time.  At training time BPS scores a bit-width
+//! `λ·sqrt(ln t / t_b) − L_b` and follows the argmax; here the loss term
+//! becomes an *SLO cost* — normalized p95 latency plus a quality penalty
+//! from shadow-probe agreement — and the controller moves a task class
+//! ONE rung at a time toward the better-scoring width:
+//!
+//! * **demote** (fewer mantissa bits, faster) when the class's p95
+//!   latency violates its SLO — detected O(1) via the telemetry ring's
+//!   over-SLO fraction (see [`LaneSignal`]) — *and* probe agreement
+//!   shows quality headroom (`agreement ≥ floor + headroom`) *and* the
+//!   candidate rung outscores the current one — an unvisited candidate
+//!   scores `+inf`, exactly like an unvisited width in BPS, so pressure
+//!   always gets one exploratory demotion before real telemetry takes
+//!   over;
+//! * **promote** (more mantissa bits, higher fidelity) whenever probe
+//!   agreement drops below the quality floor — a safety move that needs
+//!   no scoring and no minimum window;
+//! * **hysteresis + cooldown**: demotion requires the full headroom band
+//!   above the floor (so a class cannot demote and immediately
+//!   promote), every switch starts a cooldown of `cooldown` decision
+//!   ticks, and decisions need `min_samples` latency observations.
+//!
+//! Output is hard-clamped by construction: the state is an *index into
+//! the configured ladder*, so the controller can never emit a precision
+//! outside it regardless of the observation sequence (property-tested in
+//! `rust/tests/policy_adaptive.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::config::PolicyConfig;
+use crate::sefp::Precision;
+use crate::serve::TaskClass;
+
+/// What the controller saw about one lane at a decision point.
+///
+/// The latency signal is the fraction of the lane's window above the
+/// SLO, maintained incrementally by the telemetry ring — O(1) to read
+/// on every observation, and equivalent to the nearest-rank p95 test
+/// (`p95 > SLO` ⇔ more than 5% of the window lies above the SLO), so
+/// the per-request hot path never sorts a window.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LaneSignal {
+    /// fraction of the lane's latency window above the SLO, [0, 1]
+    pub frac_over_slo: f64,
+    /// shadow-probe token-agreement EMA (None = never probed)
+    pub agreement: Option<f64>,
+    /// latency observations currently in the lane's window
+    pub samples: usize,
+}
+
+/// One controller decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    Hold,
+    /// moved one rung down the ladder (lower precision, lower latency)
+    Demote { from: Precision, to: Precision },
+    /// moved one rung up the ladder (higher precision, higher fidelity)
+    Promote { from: Precision, to: Precision },
+}
+
+#[derive(Debug, Clone)]
+struct ClassState {
+    /// index into `ladder` (0 = highest precision)
+    rung: usize,
+    /// decision ticks left before the next switch is allowed
+    cooldown: u64,
+    /// decision ticks observed for this class (the BPS `t`)
+    ticks: u64,
+    /// ticks spent at each rung (the BPS `t_b`)
+    visits: Vec<u64>,
+}
+
+/// The per-class SLO feedback controller.  See the module docs for the
+/// decision rules.
+#[derive(Debug, Clone)]
+pub struct SloController {
+    /// configured ladder, highest precision first, deduped
+    ladder: Vec<Precision>,
+    cfg: PolicyConfig,
+    classes: BTreeMap<TaskClass, ClassState>,
+    /// total demotions/promotions across all classes
+    pub demotions: u64,
+    pub promotions: u64,
+}
+
+impl SloController {
+    /// `ladder` is canonicalized (sorted highest-first, deduped) and must
+    /// be non-empty.  `min_samples` is clamped to the telemetry window —
+    /// a demotion gate that can never fill would otherwise silently
+    /// disable the controller.
+    pub fn new(ladder: &[Precision], mut cfg: PolicyConfig) -> Self {
+        assert!(!ladder.is_empty(), "controller ladder must be non-empty");
+        let mut ladder = ladder.to_vec();
+        Precision::canonicalize_ladder(&mut ladder);
+        cfg.min_samples = cfg.min_samples.min(cfg.window.max(1));
+        SloController { ladder, cfg, classes: BTreeMap::new(), demotions: 0, promotions: 0 }
+    }
+
+    pub fn ladder(&self) -> &[Precision] {
+        &self.ladder
+    }
+
+    /// Pin a class's starting rung to the ladder rung nearest `p` (the
+    /// next rung up when `p` falls between rungs, the bounds when it
+    /// falls outside).  Classes never initialized start at the top.
+    pub fn init_class(&mut self, class: TaskClass, p: Precision) {
+        let rung = self.nearest_rung(p);
+        let n = self.ladder.len();
+        self.classes
+            .entry(class)
+            .or_insert_with(|| ClassState { rung, cooldown: 0, ticks: 0, visits: vec![0; n] })
+            .rung = rung;
+    }
+
+    fn nearest_rung(&self, p: Precision) -> usize {
+        // the shared snap rule, then its index in the canonical ladder
+        let snapped = Precision::snap_to_ladder(&self.ladder, p);
+        self.ladder
+            .iter()
+            .position(|&w| w == snapped)
+            .expect("snap returns a ladder rung")
+    }
+
+    /// The precision this class currently serves at.
+    pub fn current(&self, class: TaskClass) -> Precision {
+        self.classes.get(&class).map_or(self.ladder[0], |s| self.ladder[s.rung])
+    }
+
+    /// BPS score of a rung (eq. 5 shape): `λ·sqrt(ln t / t_b) − cost`,
+    /// `+inf` when the rung was never visited, where the training-time
+    /// loss `L_b` is replaced by the serve-time SLO cost — the lane's
+    /// over-SLO window fraction plus a heavily-weighted quality
+    /// shortfall.
+    fn score(&self, st: &ClassState, rung: usize, signal: LaneSignal) -> f64 {
+        let visits = st.visits[rung];
+        if visits == 0 {
+            return f64::INFINITY;
+        }
+        let t = st.ticks.max(1) as f64;
+        let explore = self.cfg.lambda * (t.ln().max(0.0) / visits as f64).sqrt();
+        let latency = signal.frac_over_slo * LATENCY_COST_WEIGHT;
+        let quality = (self.cfg.quality_floor - signal.agreement.unwrap_or(1.0)).max(0.0);
+        // a quality shortfall must dominate any latency win: the floor
+        // is a constraint, not a term to trade against
+        explore - (latency + quality * QUALITY_COST_WEIGHT)
+    }
+
+    /// One decision tick for `class`: `current` is the lane the class is
+    /// serving on, `candidate` the lane one rung down (if any data
+    /// exists for it).  Returns what the controller did.
+    pub fn tick(
+        &mut self,
+        class: TaskClass,
+        current: LaneSignal,
+        candidate: LaneSignal,
+    ) -> Decision {
+        let n = self.ladder.len();
+        let st = self
+            .classes
+            .entry(class)
+            .or_insert_with(|| ClassState { rung: 0, cooldown: 0, ticks: 0, visits: vec![0; n] });
+        st.ticks += 1;
+        st.visits[st.rung] += 1;
+        if st.cooldown > 0 {
+            st.cooldown -= 1;
+            return Decision::Hold;
+        }
+
+        // safety first: probe agreement under the floor promotes
+        // unconditionally (no minimum window, no scoring)
+        let quality_collapsed =
+            current.agreement.is_some_and(|a| a < self.cfg.quality_floor);
+        if quality_collapsed && st.rung > 0 {
+            let from = self.ladder[st.rung];
+            st.rung -= 1;
+            st.cooldown = self.cfg.cooldown;
+            let to = self.ladder[st.rung];
+            self.promotions += 1;
+            return Decision::Promote { from, to };
+        }
+
+        if current.samples < self.cfg.min_samples || st.rung + 1 >= n {
+            return Decision::Hold;
+        }
+        let slo_violated = current.frac_over_slo > SLO_VIOLATION_FRACTION;
+        let headroom = current
+            .agreement
+            .is_none_or(|a| a >= self.cfg.quality_floor + self.cfg.quality_headroom);
+        if !(slo_violated && headroom) {
+            return Decision::Hold;
+        }
+        // exploitation–exploration: demote only when the rung below
+        // outscores the current one (an unvisited rung always does)
+        let st_ref = self.classes.get(&class).expect("state just inserted");
+        let cur_score = self.score(st_ref, st_ref.rung, current);
+        let cand_score = self.score(st_ref, st_ref.rung + 1, candidate);
+        if cand_score <= cur_score {
+            return Decision::Hold;
+        }
+        let st = self.classes.get_mut(&class).expect("state just inserted");
+        let from = self.ladder[st.rung];
+        st.rung += 1;
+        st.cooldown = self.cfg.cooldown;
+        let to = self.ladder[st.rung];
+        self.demotions += 1;
+        Decision::Demote { from, to }
+    }
+}
+
+/// The nearest-rank p95 test: `p95 > SLO` ⇔ strictly more than 5% of
+/// the window lies above the SLO.
+const SLO_VIOLATION_FRACTION: f64 = 0.05;
+
+/// Scales the over-SLO window fraction (≤ 1.0) into a cost comparable
+/// to the exploration term at the paper's λ = 5.
+const LATENCY_COST_WEIGHT: f64 = 10.0;
+
+/// Weight turning a probe-agreement shortfall (≤ 1.0) into an SLO cost
+/// that dominates any realistic latency term.
+const QUALITY_COST_WEIGHT: f64 = 100.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PolicyConfig {
+        PolicyConfig {
+            slo_p95_ms: 10.0,
+            quality_floor: 0.8,
+            quality_headroom: 0.05,
+            min_samples: 4,
+            cooldown: 2,
+            ..PolicyConfig::default()
+        }
+    }
+
+    fn ctl() -> SloController {
+        let mut c = SloController::new(&Precision::LADDER, cfg());
+        c.init_class(TaskClass::Understanding, Precision::of(4));
+        c
+    }
+
+    fn pressured(samples: usize) -> LaneSignal {
+        LaneSignal { frac_over_slo: 1.0, agreement: Some(0.95), samples }
+    }
+
+    #[test]
+    fn init_snaps_to_nearest_rung() {
+        let mut c = SloController::new(
+            &[Precision::of(8), Precision::of(6), Precision::of(3)],
+            cfg(),
+        );
+        c.init_class(TaskClass::Other, Precision::of(5)); // between 6 and 3
+        assert_eq!(c.current(TaskClass::Other), Precision::of(6));
+        c.init_class(TaskClass::Other, Precision::of(1)); // below the ladder
+        assert_eq!(c.current(TaskClass::Other), Precision::of(3));
+        c.init_class(TaskClass::Other, Precision::of(14)); // above the ladder
+        assert_eq!(c.current(TaskClass::Other), Precision::of(8));
+        // a never-initialized class serves at the top
+        assert_eq!(c.current(TaskClass::Generation), Precision::of(8));
+    }
+
+    #[test]
+    fn demotes_under_slo_violation_with_quality_headroom() {
+        let mut c = ctl();
+        let mut demoted = false;
+        for _ in 0..8 {
+            if let Decision::Demote { from, to } =
+                c.tick(TaskClass::Understanding, pressured(8), LaneSignal::default())
+            {
+                assert_eq!(from, Precision::of(4));
+                assert_eq!(to, Precision::of(3));
+                demoted = true;
+                break;
+            }
+        }
+        assert!(demoted, "sustained violation with headroom must demote");
+        assert_eq!(c.current(TaskClass::Understanding), Precision::of(3));
+        assert_eq!(c.demotions, 1);
+    }
+
+    #[test]
+    fn holds_without_enough_samples_or_without_violation() {
+        let mut c = ctl();
+        assert_eq!(
+            c.tick(TaskClass::Understanding, pressured(2), LaneSignal::default()),
+            Decision::Hold,
+            "below min_samples"
+        );
+        let healthy = LaneSignal { frac_over_slo: 0.0, agreement: Some(0.95), samples: 8 };
+        for _ in 0..8 {
+            assert_eq!(
+                c.tick(TaskClass::Understanding, healthy, LaneSignal::default()),
+                Decision::Hold,
+                "no SLO violation, no move"
+            );
+        }
+        assert_eq!(c.current(TaskClass::Understanding), Precision::of(4));
+    }
+
+    #[test]
+    fn quality_floor_blocks_demotion_and_forces_promotion() {
+        let mut c = ctl();
+        // violated SLO but agreement inside the hysteresis band: hold
+        let tight = LaneSignal { frac_over_slo: 1.0, agreement: Some(0.82), samples: 8 };
+        assert_eq!(
+            c.tick(TaskClass::Understanding, tight, LaneSignal::default()),
+            Decision::Hold
+        );
+        // agreement under the floor: promote regardless of latency
+        let bad = LaneSignal { frac_over_slo: 0.0, agreement: Some(0.5), samples: 1 };
+        let d = c.tick(TaskClass::Understanding, bad, LaneSignal::default());
+        assert_eq!(
+            d,
+            Decision::Promote { from: Precision::of(4), to: Precision::of(5) }
+        );
+        assert_eq!(c.promotions, 1);
+    }
+
+    #[test]
+    fn cooldown_spaces_out_switches() {
+        let mut c = ctl();
+        // drive to a demotion
+        while c.current(TaskClass::Understanding) != Precision::of(3) {
+            c.tick(TaskClass::Understanding, pressured(8), LaneSignal::default());
+        }
+        // quality collapse right after: cooldown must absorb 2 ticks
+        let bad = LaneSignal { frac_over_slo: 0.0, agreement: Some(0.1), samples: 8 };
+        assert_eq!(c.tick(TaskClass::Understanding, bad, LaneSignal::default()), Decision::Hold);
+        assert_eq!(c.tick(TaskClass::Understanding, bad, LaneSignal::default()), Decision::Hold);
+        assert!(matches!(
+            c.tick(TaskClass::Understanding, bad, LaneSignal::default()),
+            Decision::Promote { .. }
+        ));
+    }
+
+    #[test]
+    fn bottom_rung_never_demotes_top_never_promotes() {
+        let mut c = SloController::new(&[Precision::of(4), Precision::of(3)], cfg());
+        c.init_class(TaskClass::Other, Precision::of(3));
+        for _ in 0..20 {
+            c.tick(TaskClass::Other, pressured(8), pressured(8));
+            assert_eq!(c.current(TaskClass::Other), Precision::of(3));
+        }
+        c.init_class(TaskClass::Other, Precision::of(4));
+        let bad = LaneSignal { frac_over_slo: 0.0, agreement: Some(0.0), samples: 0 };
+        for _ in 0..20 {
+            c.tick(TaskClass::Other, bad, LaneSignal::default());
+            assert_eq!(c.current(TaskClass::Other), Precision::of(4));
+        }
+    }
+
+    #[test]
+    fn visited_candidate_uses_real_telemetry() {
+        // after the exploratory demotion, a candidate whose own lane is
+        // ALSO violated (and now visited) must not win the score again
+        // once the exploration bonus decays — the controller settles
+        // instead of oscillating down a ladder that cannot help.
+        let mut c = SloController::new(&Precision::LADDER, cfg());
+        c.init_class(TaskClass::Other, Precision::of(8));
+        let mut demotions_seen = 0;
+        for _ in 0..200 {
+            if let Decision::Demote { .. } =
+                c.tick(TaskClass::Other, pressured(8), pressured(8))
+            {
+                demotions_seen += 1;
+            }
+        }
+        // every rung gets its exploratory visit (ladder has 6 rungs), but
+        // the walk is bounded by the ladder — never more demotions than
+        // rungs below the start
+        assert!(demotions_seen <= 5, "{demotions_seen} demotions on a 6-rung ladder");
+        assert!(c.current(TaskClass::Other) >= Precision::of(3));
+    }
+}

@@ -1,0 +1,346 @@
+//! Adaptive precision control plane — the serve-time feedback loop.
+//!
+//! The paper's deployment thesis is that ONE SEFP master should switch
+//! precisions *in response to real scenarios*: understanding traffic
+//! tolerates low bit-widths, generation does not (intro, fig. 1).  The
+//! static `serve::Router` config encodes that as a frozen 3-arm lookup;
+//! this module closes the loop so the serving stack decides for itself:
+//!
+//! ```text
+//!             decide(class)                observe / observe_probe
+//!   Router ──────────────────► PrecisionPolicy ◄────────────────── Server
+//!                                   │
+//!              AdaptivePolicy = Telemetry + ProbeSampler + SloController
+//!                                   │
+//!          telemetry::Lane p50/p95/p99 windows per (class, precision)
+//!          probe::shadow_probe  master-precision re-scoring (sampled)
+//!          controller::SloController  BPS-scored demote/promote + clamps
+//! ```
+//!
+//! * [`telemetry`] — per-`(TaskClass, Precision)` sliding windows:
+//!   exact-percentile latency rings, throughput, queue depth, probe
+//!   agreement EMA.
+//! * [`probe`] — shadow quality probes: a sampled fraction of completed
+//!   requests is re-scored teacher-forced at the ladder master and at
+//!   the served precision; token agreement and logit divergence come
+//!   back as the online quality signal.
+//! * [`controller`] — the SLO feedback controller: demote on latency
+//!   violation with quality headroom, promote on probe-agreement
+//!   collapse, BPS exploitation–exploration scoring, hysteresis +
+//!   cooldown, output hard-clamped to the configured ladder.
+//! * [`PrecisionPolicy`] — the trait `serve::Router` delegates to, with
+//!   [`StaticPolicy`] (the old config lookup, still the default) and
+//!   [`AdaptivePolicy`] (the full control plane) implementations.
+
+pub mod controller;
+pub mod probe;
+pub mod telemetry;
+
+pub use controller::{Decision, LaneSignal, SloController};
+pub use probe::{shadow_probe, ProbeResult, ProbeSampler, ProbeTask};
+pub use telemetry::{Lane, Telemetry, Window};
+
+use crate::config::ServeConfig;
+use crate::sefp::Precision;
+use crate::serve::TaskClass;
+
+/// One completed request, as the policy layer sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct Observation {
+    pub class: TaskClass,
+    /// precision the request was served at
+    pub precision: Precision,
+    pub queue_ms: f64,
+    pub compute_ms: f64,
+    /// tokens generated
+    pub tokens: usize,
+    /// batcher depth at completion time
+    pub queue_depth: usize,
+}
+
+impl Observation {
+    /// End-to-end latency the SLO is judged on.
+    pub fn latency_ms(&self) -> f64 {
+        self.queue_ms + self.compute_ms
+    }
+}
+
+/// Decision counters a policy exposes to `ServeStats`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PolicySnapshot {
+    /// `decide` calls answered
+    pub decisions: u64,
+    /// controller moves to a lower precision
+    pub demotions: u64,
+    /// controller moves to a higher precision
+    pub promotions: u64,
+    /// shadow probes scored
+    pub probes: u64,
+}
+
+/// The precision policy a [`Router`](crate::serve::Router) delegates
+/// non-forced routing to.  `decide` is the per-request hot path;
+/// `observe`/`observe_probe` are the feedback edges the
+/// [`Server`](crate::serve::Server) drives after each completion.
+pub trait PrecisionPolicy: std::fmt::Debug + Send {
+    /// Precision this request class should be served at, right now.
+    fn decide(&mut self, class: TaskClass) -> Precision;
+
+    /// Feed one completed request back into the policy.
+    fn observe(&mut self, obs: &Observation);
+
+    /// Feed one shadow-probe result back into the policy.
+    fn observe_probe(&mut self, class: TaskClass, precision: Precision, probe: &ProbeResult);
+
+    /// Should the server shadow-probe this completion?  Stateful (the
+    /// sampler advances its cadence counter on every call).
+    fn wants_probe(&mut self, class: TaskClass, precision: Precision) -> bool;
+
+    /// Decision counters for stats surfacing.
+    fn snapshot(&self) -> PolicySnapshot;
+}
+
+/// Today's behavior, unchanged: a static class → precision config
+/// lookup.  No telemetry, no probes, no switches — and therefore zero
+/// overhead beyond three copies.
+#[derive(Debug, Clone)]
+pub struct StaticPolicy {
+    generation: Precision,
+    understanding: Precision,
+    default: Precision,
+    decisions: u64,
+}
+
+impl StaticPolicy {
+    pub fn new(cfg: &ServeConfig) -> Self {
+        StaticPolicy {
+            generation: cfg.generation_precision,
+            understanding: cfg.understanding_precision,
+            default: cfg.default_precision,
+            decisions: 0,
+        }
+    }
+}
+
+impl PrecisionPolicy for StaticPolicy {
+    fn decide(&mut self, class: TaskClass) -> Precision {
+        self.decisions += 1;
+        match class {
+            TaskClass::Generation => self.generation,
+            TaskClass::Understanding => self.understanding,
+            TaskClass::Other => self.default,
+        }
+    }
+
+    fn observe(&mut self, _obs: &Observation) {}
+
+    fn observe_probe(&mut self, _class: TaskClass, _precision: Precision, _probe: &ProbeResult) {}
+
+    fn wants_probe(&mut self, _class: TaskClass, _precision: Precision) -> bool {
+        false
+    }
+
+    fn snapshot(&self) -> PolicySnapshot {
+        PolicySnapshot { decisions: self.decisions, ..PolicySnapshot::default() }
+    }
+}
+
+/// The adaptive control plane: telemetry windows feeding an SLO
+/// controller, with shadow probes supplying the quality signal.  Each
+/// class starts at its static config precision (clamped to the
+/// configured ladder) and moves one rung at a time from there.
+#[derive(Debug)]
+pub struct AdaptivePolicy {
+    telemetry: Telemetry,
+    controller: SloController,
+    sampler: ProbeSampler,
+    decisions: u64,
+    probes: u64,
+}
+
+impl AdaptivePolicy {
+    /// Panics if `cfg.policy.probe_rate` is 0: shadow probes are the
+    /// adaptive loop's only quality signal — without them demotion
+    /// would run blind and promotion could never trigger.  (The JSON
+    /// config path rejects this combination at parse time.)
+    pub fn new(cfg: &ServeConfig) -> Self {
+        assert!(
+            cfg.policy.probe_rate > 0.0,
+            "AdaptivePolicy requires probe_rate > 0 (shadow probes are the quality guard)"
+        );
+        let mut controller = SloController::new(&cfg.ladder, cfg.policy.clone());
+        controller.init_class(TaskClass::Generation, cfg.generation_precision);
+        controller.init_class(TaskClass::Understanding, cfg.understanding_precision);
+        controller.init_class(TaskClass::Other, cfg.default_precision);
+        AdaptivePolicy {
+            telemetry: Telemetry::new(cfg.policy.window, cfg.policy.slo_p95_ms),
+            controller,
+            sampler: ProbeSampler::new(cfg.policy.probe_rate),
+            decisions: 0,
+            probes: 0,
+        }
+    }
+
+    /// Read access for reporting/tests.
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
+    }
+
+    pub fn controller(&self) -> &SloController {
+        &self.controller
+    }
+
+    /// O(1): the over-SLO fraction is maintained incrementally by the
+    /// lane's ring — no sorting or allocation on the observation path.
+    fn signal(&self, class: TaskClass, p: Precision) -> LaneSignal {
+        match self.telemetry.lane(class, p) {
+            Some(l) => LaneSignal {
+                frac_over_slo: l.latency_ms.frac_over(),
+                agreement: l.agreement,
+                samples: l.latency_ms.len(),
+            },
+            None => LaneSignal::default(),
+        }
+    }
+
+    /// Run one controller decision for `class` at its current rung.
+    fn tick(&mut self, class: TaskClass) {
+        let current = self.controller.current(class);
+        let ladder = self.controller.ladder();
+        let below = ladder
+            .iter()
+            .position(|&w| w == current)
+            .and_then(|i| ladder.get(i + 1))
+            .copied();
+        let cur_signal = self.signal(class, current);
+        let cand_signal = below.map(|p| self.signal(class, p)).unwrap_or_default();
+        self.controller.tick(class, cur_signal, cand_signal);
+    }
+}
+
+impl PrecisionPolicy for AdaptivePolicy {
+    fn decide(&mut self, class: TaskClass) -> Precision {
+        self.decisions += 1;
+        self.controller.current(class)
+    }
+
+    fn observe(&mut self, obs: &Observation) {
+        self.telemetry.observe(
+            obs.class,
+            obs.precision,
+            obs.latency_ms(),
+            obs.tokens,
+            obs.queue_depth,
+        );
+        // decide-by-observation: every completion is a controller tick
+        // for its class (cooldown inside the controller spaces out the
+        // actual switches)
+        self.tick(obs.class);
+    }
+
+    fn observe_probe(&mut self, class: TaskClass, precision: Precision, probe: &ProbeResult) {
+        self.probes += 1;
+        self.telemetry.observe_probe(class, precision, probe);
+        // quality reacts immediately — a collapsed probe must not wait
+        // for the next latency observation to promote
+        self.tick(class);
+    }
+
+    fn wants_probe(&mut self, class: TaskClass, precision: Precision) -> bool {
+        self.sampler.should_probe(class, precision)
+    }
+
+    fn snapshot(&self) -> PolicySnapshot {
+        PolicySnapshot {
+            decisions: self.decisions,
+            demotions: self.controller.demotions,
+            promotions: self.controller.promotions,
+            probes: self.probes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            policy: crate::config::PolicyConfig {
+                adaptive: true,
+                slo_p95_ms: 5.0,
+                min_samples: 4,
+                cooldown: 0,
+                ..crate::config::PolicyConfig::default()
+            },
+            ..ServeConfig::default()
+        }
+    }
+
+    fn obs(class: TaskClass, p: Precision, ms: f64) -> Observation {
+        Observation {
+            class,
+            precision: p,
+            queue_ms: ms / 2.0,
+            compute_ms: ms / 2.0,
+            tokens: 1,
+            queue_depth: 0,
+        }
+    }
+
+    #[test]
+    fn static_policy_matches_config() {
+        let c = ServeConfig::default();
+        let mut p = StaticPolicy::new(&c);
+        assert_eq!(p.decide(TaskClass::Generation), c.generation_precision);
+        assert_eq!(p.decide(TaskClass::Understanding), c.understanding_precision);
+        assert_eq!(p.decide(TaskClass::Other), c.default_precision);
+        assert!(!p.wants_probe(TaskClass::Generation, Precision::of(4)));
+        let snap = p.snapshot();
+        assert_eq!(snap.decisions, 3);
+        assert_eq!(snap.demotions + snap.promotions + snap.probes, 0);
+    }
+
+    #[test]
+    fn adaptive_starts_at_static_precisions() {
+        let c = cfg();
+        let mut p = AdaptivePolicy::new(&c);
+        assert_eq!(p.decide(TaskClass::Generation), c.generation_precision);
+        assert_eq!(p.decide(TaskClass::Understanding), c.understanding_precision);
+        assert_eq!(p.decide(TaskClass::Other), c.default_precision);
+    }
+
+    #[test]
+    fn latency_pressure_demotes_a_class() {
+        let c = cfg();
+        let mut p = AdaptivePolicy::new(&c);
+        let start = p.decide(TaskClass::Understanding);
+        for _ in 0..16 {
+            let at = p.decide(TaskClass::Understanding);
+            p.observe(&obs(TaskClass::Understanding, at, 40.0));
+        }
+        let now = p.decide(TaskClass::Understanding);
+        assert!(now < start, "sustained SLO violation must demote ({start} -> {now})");
+        assert!(p.snapshot().demotions >= 1);
+        // the untouched class did not move
+        assert_eq!(p.decide(TaskClass::Generation), c.generation_precision);
+    }
+
+    #[test]
+    fn probe_collapse_promotes_a_class() {
+        let c = cfg();
+        let mut p = AdaptivePolicy::new(&c);
+        let start = p.decide(TaskClass::Understanding);
+        let bad = ProbeResult {
+            agreement: 0.1,
+            mean_divergence: 1.0,
+            divergence_amplitude: 0.5,
+            positions: 4,
+        };
+        p.observe_probe(TaskClass::Understanding, start, &bad);
+        let now = p.decide(TaskClass::Understanding);
+        assert!(now > start, "collapsed agreement must promote ({start} -> {now})");
+        assert_eq!(p.snapshot().promotions, 1);
+        assert_eq!(p.snapshot().probes, 1);
+    }
+}

@@ -1,0 +1,293 @@
+//! Shadow quality probes: re-score served generations at master
+//! precision.
+//!
+//! Serving at a truncated precision is only safe while its outputs stay
+//! close to the master's — the very robustness OTARo fine-tunes for.
+//! The probe measures that *online*: for a sampled fraction of completed
+//! requests, every decode position is re-scored **teacher-forced**
+//! (conditioning on the tokens that were actually served) at both the
+//! served precision and the ladder master, through the same
+//! [`LogitsBackend`] that served the traffic.  Two signals come out:
+//!
+//! * **token agreement** — the fraction of positions where the greedy
+//!   argmax at the served precision matches the master's (computed with
+//!   [`sampling::argmax`], the exact tie-breaking the serving loop
+//!   uses);
+//! * **logit divergence** — mean |Δlogit| per position over the vocab,
+//!   summarized by its mean and by the peak-to-peak
+//!   [`amplitude`](crate::analysis::epsilon::amplitude) of the
+//!   per-position curve (the same machinery that quantifies the ε(ω)
+//!   sawtooth the paper attributes precision noise to).
+//!
+//! Probes run *between* generation runs (never mid-run — they swap the
+//! backend's loaded view), teacher-forcing keeps them independent of
+//! sampling temperature, and batching packs up to `batch_shape().0`
+//! positions per `logits_step`, so one probe costs about
+//! `2 · ceil(new_tokens / batch_rows)` extra forward steps.
+
+use crate::data::tokenizer::PAD;
+use crate::infer::sampling;
+use crate::sefp::Precision;
+use crate::serve::{LogitsBackend, PrecisionLadder, TaskClass};
+
+/// A completed request queued for shadow re-scoring.
+#[derive(Debug, Clone)]
+pub struct ProbeTask {
+    pub class: TaskClass,
+    /// precision the request was served at
+    pub precision: Precision,
+    /// prompt followed by the served generation
+    pub context: Vec<i32>,
+    /// how many trailing tokens of `context` were generated
+    pub n_gen: usize,
+}
+
+/// What a shadow probe measured.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProbeResult {
+    /// fraction of decode positions where the served precision's greedy
+    /// token equals the master's (1.0 when nothing was generated)
+    pub agreement: f64,
+    /// mean |Δlogit| between the two precisions, averaged over vocab
+    /// and positions
+    pub mean_divergence: f64,
+    /// peak-to-peak amplitude of the per-position divergence curve
+    pub divergence_amplitude: f64,
+    /// decode positions scored
+    pub positions: usize,
+}
+
+impl ProbeResult {
+    fn trivial() -> Self {
+        ProbeResult {
+            agreement: 1.0,
+            mean_divergence: 0.0,
+            divergence_amplitude: 0.0,
+            positions: 0,
+        }
+    }
+}
+
+/// Teacher-forced logits for every decode position of `task`, at one
+/// precision.  Positions are packed `batch_rows` at a time; each row's
+/// window is the last `seq_len` tokens of the context prefix ending
+/// just before that position's token.
+fn position_logits<B: LogitsBackend>(
+    backend: &mut B,
+    ladder: &mut PrecisionLadder,
+    task: &ProbeTask,
+    p: Precision,
+) -> anyhow::Result<Vec<Vec<f32>>> {
+    let (bsz, seq_len) = backend.batch_shape();
+    let vocab = backend.vocab_size();
+    let view = ladder.view_at(p)?;
+    backend.load_view(&view)?;
+    drop(view);
+
+    let prompt_len = task.context.len() - task.n_gen;
+    let mut out = Vec::with_capacity(task.n_gen);
+    let mut tokens = vec![PAD; bsz * seq_len];
+    let mut last_pos = vec![0usize; bsz];
+    for start in (0..task.n_gen).step_by(bsz.max(1)) {
+        let end = (start + bsz).min(task.n_gen);
+        tokens.fill(PAD);
+        for (ri, i) in (start..end).enumerate() {
+            let prefix = &task.context[..prompt_len + i];
+            let n = prefix.len().min(seq_len);
+            tokens[ri * seq_len..ri * seq_len + n]
+                .copy_from_slice(&prefix[prefix.len() - n..]);
+            last_pos[ri] = n - 1;
+        }
+        let logits = backend.logits_step(&tokens)?;
+        for (ri, &lp) in last_pos.iter().take(end - start).enumerate() {
+            let off = (ri * seq_len + lp) * vocab;
+            out.push(logits[off..off + vocab].to_vec());
+        }
+    }
+    Ok(out)
+}
+
+/// Run one shadow probe: re-score `task` teacher-forced at its served
+/// precision and at the ladder master, and compare.  Leaves the
+/// backend's loaded view at the master — callers (the serve loop)
+/// reload their own view at the start of every run.
+pub fn shadow_probe<B: LogitsBackend>(
+    backend: &mut B,
+    ladder: &mut PrecisionLadder,
+    task: &ProbeTask,
+) -> anyhow::Result<ProbeResult> {
+    let master = ladder.top();
+    if task.n_gen == 0 || task.precision >= master {
+        return Ok(ProbeResult::trivial());
+    }
+    anyhow::ensure!(
+        task.n_gen < task.context.len(),
+        "probe task needs a non-empty prompt before its generated tokens"
+    );
+    let served = position_logits(backend, ladder, task, task.precision)?;
+    let reference = position_logits(backend, ladder, task, master)?;
+
+    let mut matches = 0usize;
+    let mut curve = Vec::with_capacity(task.n_gen);
+    for (i, (lo, hi)) in served.iter().zip(&reference).enumerate() {
+        if sampling::argmax(lo) == sampling::argmax(hi) {
+            matches += 1;
+        }
+        let div = lo
+            .iter()
+            .zip(hi)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>()
+            / lo.len().max(1) as f64;
+        curve.push((i as f32, div as f32));
+    }
+    let mean_divergence = crate::analysis::epsilon::mean_ordinate(&curve) as f64;
+    let divergence_amplitude = if curve.len() > 1 {
+        crate::analysis::epsilon::amplitude(&curve) as f64
+    } else {
+        0.0
+    };
+    Ok(ProbeResult {
+        agreement: matches as f64 / task.n_gen as f64,
+        mean_divergence,
+        divergence_amplitude,
+        positions: task.n_gen,
+    })
+}
+
+/// Deterministic probe cadence: a per-`(TaskClass, Precision)`
+/// fractional accumulator adds `rate` per completion and fires whenever
+/// it crosses 1.0, so the probed fraction matches the configured rate
+/// exactly for ANY rate in (0, 1] (an integer `1/rate` cadence would
+/// round 0.7 up to probing every completion).  A counter, not an RNG
+/// draw — probe timing is reproducible run-to-run, which the
+/// integration tests and any trace replay depend on.
+#[derive(Debug, Clone)]
+pub struct ProbeSampler {
+    /// target probed fraction in [0, 1]; 0 = probing disabled
+    rate: f64,
+    accumulators: std::collections::BTreeMap<(TaskClass, Precision), f64>,
+}
+
+impl ProbeSampler {
+    pub fn new(rate: f64) -> Self {
+        ProbeSampler {
+            rate: rate.clamp(0.0, 1.0),
+            accumulators: std::collections::BTreeMap::new(),
+        }
+    }
+
+    /// Should this completion be shadow-probed?
+    pub fn should_probe(&mut self, class: TaskClass, precision: Precision) -> bool {
+        if self.rate <= 0.0 {
+            return false;
+        }
+        let acc = self.accumulators.entry((class, precision)).or_insert(0.0);
+        *acc += self.rate;
+        if *acc >= 1.0 {
+            *acc -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ParamStore;
+    use crate::serve::SimBackend;
+
+    fn ladder() -> PrecisionLadder {
+        let params = ParamStore {
+            tensors: vec![vec![0.25; 64]],
+            names: vec!["w".into()],
+            shapes: vec![vec![8, 8]],
+            quantized: vec![true],
+        };
+        PrecisionLadder::from_params(&params)
+    }
+
+    fn task(m: u8, context: Vec<i32>, n_gen: usize) -> ProbeTask {
+        ProbeTask { class: TaskClass::Understanding, precision: Precision::of(m), context, n_gen }
+    }
+
+    #[test]
+    fn high_fidelity_backend_scores_full_agreement() {
+        // quality_noise small enough that no argmax flips: the served
+        // precision tracks the master everywhere
+        let mut b = SimBackend::new(2, 8, 16).with_quality_model(1e-4);
+        let mut l = ladder();
+        let r = shadow_probe(&mut b, &mut l, &task(4, vec![1, 2, 3, 4, 5], 3)).unwrap();
+        assert_eq!(r.positions, 3);
+        assert_eq!(r.agreement, 1.0);
+        assert!(r.mean_divergence > 0.0, "precisions still differ in logit space");
+        // 3 positions at 2 rows/step = 2 steps per precision, 2 precisions
+        assert_eq!(b.calls, 4);
+    }
+
+    #[test]
+    fn degraded_backend_scores_low_agreement() {
+        let mut b = SimBackend::new(2, 8, 16).with_quality_model(20.0);
+        let mut l = ladder();
+        let r = shadow_probe(&mut b, &mut l, &task(3, (0..12).collect(), 8)).unwrap();
+        assert_eq!(r.positions, 8);
+        assert!(
+            r.agreement < 0.8,
+            "noise 20.0 swamps the base logits, agreement {} should collapse",
+            r.agreement
+        );
+        assert!(r.mean_divergence > 0.0);
+    }
+
+    #[test]
+    fn probe_is_deterministic() {
+        let run = || {
+            let mut b = SimBackend::new(2, 8, 16).with_quality_model(0.5);
+            let mut l = ladder();
+            shadow_probe(&mut b, &mut l, &task(3, (0..10).collect(), 6)).unwrap()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn master_precision_probe_is_trivial() {
+        let mut b = SimBackend::new(2, 8, 16).with_quality_model(1.0);
+        let mut l = ladder();
+        let r = shadow_probe(&mut b, &mut l, &task(8, vec![1, 2, 3], 2)).unwrap();
+        assert_eq!(r.agreement, 1.0);
+        assert_eq!(r.positions, 0);
+        assert_eq!(b.calls, 0, "nothing to compare against itself");
+    }
+
+    #[test]
+    fn sampler_cadence_is_deterministic_per_lane() {
+        let mut s = ProbeSampler::new(0.25);
+        let lane = (TaskClass::Understanding, Precision::of(4));
+        let fired: Vec<bool> =
+            (0..8).map(|_| s.should_probe(lane.0, lane.1)).collect();
+        assert_eq!(fired, vec![false, false, false, true, false, false, false, true]);
+        // independent lanes have independent counters
+        assert!(!s.should_probe(TaskClass::Generation, Precision::of(4)));
+        // rate 0 never probes; rate 1 always probes
+        assert!(!ProbeSampler::new(0.0).should_probe(lane.0, lane.1));
+        assert!(ProbeSampler::new(1.0).should_probe(lane.0, lane.1));
+    }
+
+    #[test]
+    fn sampler_hits_fractional_rates_exactly() {
+        // a rate whose reciprocal is not an integer must still probe the
+        // configured fraction, not round up to every completion
+        for (rate, expect) in [(0.7, 700), (0.6, 600), (0.4, 400), (0.1, 100)] {
+            let mut s = ProbeSampler::new(rate);
+            let fired = (0..1000)
+                .filter(|_| s.should_probe(TaskClass::Other, Precision::of(4)))
+                .count();
+            assert!(
+                (fired as i64 - expect).abs() <= 1,
+                "rate {rate}: fired {fired}, expected ~{expect}"
+            );
+        }
+    }
+}

@@ -1,0 +1,313 @@
+//! Serve-time telemetry: per-`(TaskClass, Precision)` sliding windows.
+//!
+//! Every completed request lands one observation in its *lane* — the
+//! (task class, served precision) pair.  A lane keeps a fixed-capacity
+//! ring of end-to-end latencies (queue + compute) with exact p50/p95/p99
+//! queries, throughput counters, the queue depth seen at completion, and
+//! an EMA of shadow-probe token agreement.  The
+//! [`SloController`](super::SloController) reads lanes at its decision
+//! points; nothing here allocates on the observation hot path once a
+//! lane's ring is full.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::percentile_of;
+use crate::sefp::Precision;
+use crate::serve::TaskClass;
+
+use super::probe::ProbeResult;
+
+/// Fixed-capacity sliding window over `f64` samples (ring buffer).
+///
+/// Percentile queries are exact over the retained window — the newest
+/// `cap` samples — which is the horizon an SLO controller should react
+/// to (a run-lifetime mean would let ancient good latencies mask a
+/// current violation).
+///
+/// With [`with_threshold`](Window::with_threshold), the window also
+/// maintains the count of retained samples above the threshold in
+/// O(1) per push.  [`frac_over`](Window::frac_over) is then the cheap
+/// per-observation SLO test the controller polls: nearest-rank
+/// `p95 > threshold` is equivalent to more than 5% of the window lying
+/// above it, so the decision hot path never sorts — the exact
+/// percentile queries stay available for reporting.
+#[derive(Debug, Clone)]
+pub struct Window {
+    buf: Vec<f64>,
+    cap: usize,
+    /// next write position once the ring has wrapped
+    head: usize,
+    /// threshold for the incremental over-count (None = not tracked)
+    threshold: Option<f64>,
+    /// retained samples strictly above `threshold`
+    over: usize,
+}
+
+impl Window {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "window capacity must be positive");
+        Window { buf: Vec::with_capacity(cap), cap, head: 0, threshold: None, over: 0 }
+    }
+
+    /// Track the fraction of retained samples above `t` incrementally.
+    pub fn with_threshold(mut self, t: f64) -> Self {
+        self.threshold = Some(t);
+        self
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.threshold.is_some_and(|t| x > t) {
+            self.over += 1;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else {
+            if self.threshold.is_some_and(|t| self.buf[self.head] > t) {
+                self.over -= 1;
+            }
+            self.buf[self.head] = x;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// Fraction of the retained window strictly above the threshold
+    /// (0.0 when empty or no threshold is tracked) — O(1).
+    pub fn frac_over(&self) -> f64 {
+        if self.buf.is_empty() {
+            0.0
+        } else {
+            self.over as f64 / self.buf.len() as f64
+        }
+    }
+
+    /// Samples currently retained (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        self.buf.iter().sum::<f64>() / self.buf.len() as f64
+    }
+
+    /// Exact nearest-rank percentile over the retained window
+    /// (`q` in [0, 100]); 0.0 when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        percentile_of(&self.buf, q)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// One telemetry lane: the sliding-window state for a
+/// `(TaskClass, Precision)` pair.
+#[derive(Debug, Clone)]
+pub struct Lane {
+    /// end-to-end latency (queue + compute) per completed request, ms
+    pub latency_ms: Window,
+    /// completed requests observed on this lane
+    pub served: u64,
+    /// tokens generated on this lane
+    pub tokens: u64,
+    /// queue depth seen at the most recent completion
+    pub queue_depth: usize,
+    /// EMA of shadow-probe token agreement (None until the first probe)
+    pub agreement: Option<f64>,
+    /// shadow probes scored on this lane
+    pub probes: u64,
+}
+
+impl Lane {
+    fn new(window: usize, slo_ms: f64) -> Self {
+        Lane {
+            latency_ms: Window::new(window).with_threshold(slo_ms),
+            served: 0,
+            tokens: 0,
+            queue_depth: 0,
+            agreement: None,
+            probes: 0,
+        }
+    }
+}
+
+/// EMA factor for probe agreement: heavy enough on the newest probe to
+/// react within a few samples, light enough that one outlier cannot
+/// flip a promotion decision by itself.
+const AGREEMENT_EMA: f64 = 0.5;
+
+/// Per-`(TaskClass, Precision)` sliding-window statistics.  `BTreeMap`
+/// keyed, so iteration (and therefore any reporting built on it) is
+/// deterministic.  Every lane's latency ring tracks the over-`slo_ms`
+/// fraction incrementally, so the controller's per-observation SLO test
+/// is O(1).
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    window: usize,
+    /// latency SLO the lanes' over-fraction counters are keyed to, ms
+    slo_ms: f64,
+    lanes: BTreeMap<(TaskClass, Precision), Lane>,
+}
+
+impl Telemetry {
+    pub fn new(window: usize, slo_ms: f64) -> Self {
+        Telemetry { window: window.max(1), slo_ms, lanes: BTreeMap::new() }
+    }
+
+    /// Record one completed request.
+    pub fn observe(
+        &mut self,
+        class: TaskClass,
+        precision: Precision,
+        latency_ms: f64,
+        tokens: usize,
+        queue_depth: usize,
+    ) {
+        let lane = self
+            .lanes
+            .entry((class, precision))
+            .or_insert_with(|| Lane::new(self.window, self.slo_ms));
+        lane.latency_ms.push(latency_ms.max(0.0));
+        lane.served += 1;
+        lane.tokens += tokens as u64;
+        lane.queue_depth = queue_depth;
+    }
+
+    /// Record one shadow-probe result.
+    pub fn observe_probe(&mut self, class: TaskClass, precision: Precision, probe: &ProbeResult) {
+        let lane = self
+            .lanes
+            .entry((class, precision))
+            .or_insert_with(|| Lane::new(self.window, self.slo_ms));
+        lane.probes += 1;
+        lane.agreement = Some(match lane.agreement {
+            Some(prev) => AGREEMENT_EMA * probe.agreement + (1.0 - AGREEMENT_EMA) * prev,
+            None => probe.agreement,
+        });
+    }
+
+    pub fn lane(&self, class: TaskClass, precision: Precision) -> Option<&Lane> {
+        self.lanes.get(&(class, precision))
+    }
+
+    /// Latency-window fill of a lane (0 when the lane does not exist).
+    pub fn samples(&self, class: TaskClass, precision: Precision) -> usize {
+        self.lane(class, precision).map_or(0, |l| l.latency_ms.len())
+    }
+
+    /// All lanes, deterministically ordered — reporting/debugging.
+    pub fn lanes(&self) -> impl Iterator<Item = (&(TaskClass, Precision), &Lane)> {
+        self.lanes.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe(agreement: f64) -> ProbeResult {
+        ProbeResult { agreement, mean_divergence: 0.0, divergence_amplitude: 0.0, positions: 1 }
+    }
+
+    #[test]
+    fn window_ring_keeps_newest() {
+        let mut w = Window::new(4);
+        assert!(w.is_empty());
+        for x in 1..=6 {
+            w.push(x as f64);
+        }
+        // retained: {3, 4, 5, 6}
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.capacity(), 4);
+        assert_eq!(w.p50(), 4.0);
+        assert_eq!(w.percentile(100.0), 6.0);
+        assert!((w.mean() - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_percentiles_track_tail() {
+        let mut w = Window::new(100);
+        for _ in 0..95 {
+            w.push(1.0);
+        }
+        for _ in 0..5 {
+            w.push(50.0);
+        }
+        assert_eq!(w.p50(), 1.0);
+        assert_eq!(w.p99(), 50.0, "the tail must be visible at p99");
+    }
+
+    #[test]
+    fn threshold_fraction_is_incremental_and_slides() {
+        let mut w = Window::new(4).with_threshold(10.0);
+        assert_eq!(w.frac_over(), 0.0);
+        for x in [1.0, 20.0, 30.0, 2.0] {
+            w.push(x);
+        }
+        assert_eq!(w.frac_over(), 0.5);
+        // overwriting the oldest (1.0, under) with an over sample
+        w.push(40.0); // retained: {20, 30, 2, 40}
+        assert_eq!(w.frac_over(), 0.75);
+        // overwriting an over sample (20.0) with an under sample
+        w.push(3.0); // retained: {30, 2, 40, 3}
+        assert_eq!(w.frac_over(), 0.5);
+        // the nearest-rank equivalence the controller relies on:
+        // frac_over > 0.05 <=> p95 > threshold
+        assert!(w.p95() > 10.0);
+        let mut calm = Window::new(100).with_threshold(10.0);
+        for _ in 0..100 {
+            calm.push(1.0);
+        }
+        assert_eq!(calm.frac_over(), 0.0);
+        assert!(calm.p95() <= 10.0);
+    }
+
+    #[test]
+    fn lanes_are_keyed_by_class_and_precision() {
+        let mut t = Telemetry::new(8, 25.0);
+        t.observe(TaskClass::Understanding, Precision::of(4), 2.0, 1, 3);
+        t.observe(TaskClass::Understanding, Precision::of(3), 9.0, 1, 0);
+        t.observe(TaskClass::Generation, Precision::of(8), 30.0, 4, 1);
+        let u4 = t.lane(TaskClass::Understanding, Precision::of(4)).unwrap();
+        assert_eq!(u4.served, 1);
+        assert_eq!(u4.queue_depth, 3);
+        assert_eq!(u4.latency_ms.p95(), 2.0);
+        assert_eq!(u4.latency_ms.frac_over(), 0.0);
+        let g8 = t.lane(TaskClass::Generation, Precision::of(8)).unwrap();
+        assert_eq!(g8.latency_ms.frac_over(), 1.0, "30 ms > the 25 ms SLO");
+        assert_eq!(t.samples(TaskClass::Understanding, Precision::of(3)), 1);
+        assert!(t.lane(TaskClass::Other, Precision::of(4)).is_none());
+        assert_eq!(t.lanes().count(), 3);
+    }
+
+    #[test]
+    fn probe_agreement_is_an_ema() {
+        let mut t = Telemetry::new(8, 25.0);
+        let (c, p) = (TaskClass::Understanding, Precision::of(4));
+        t.observe_probe(c, p, &probe(1.0));
+        assert_eq!(t.lane(c, p).unwrap().agreement, Some(1.0));
+        t.observe_probe(c, p, &probe(0.0));
+        let a = t.lane(c, p).unwrap().agreement.unwrap();
+        assert!((a - 0.5).abs() < 1e-12, "EMA halves toward the new probe: {a}");
+        assert_eq!(t.lane(c, p).unwrap().probes, 2);
+    }
+}

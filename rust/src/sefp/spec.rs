@@ -100,6 +100,38 @@ impl Precision {
     pub const fn bits_per_elem(self) -> usize {
         1 + self.0 as usize
     }
+
+    /// Canonicalize a precision ladder in place: sorted highest
+    /// precision first, duplicates dropped.  THE ladder normal form —
+    /// config parsing, the serve router, and the policy controller all
+    /// share it, so "highest first, deduped" is defined exactly once.
+    pub fn canonicalize_ladder(ladder: &mut Vec<Precision>) {
+        ladder.sort_unstable_by(|a, b| b.cmp(a));
+        ladder.dedup();
+    }
+
+    /// Snap `p` onto a canonicalized (highest-first) non-empty ladder:
+    /// above the top rung snaps down to it, below the bottom snaps up,
+    /// and a width strictly inside the range that is not a rung snaps
+    /// to the next rung up (quality-preserving).  The single source of
+    /// the snap rule shared by router clamping and controller
+    /// initialization.
+    pub fn snap_to_ladder(ladder: &[Precision], p: Precision) -> Precision {
+        assert!(!ladder.is_empty(), "ladder must be non-empty");
+        let top = ladder[0];
+        let bottom = *ladder.last().expect("non-empty");
+        if p > top {
+            top
+        } else if p < bottom {
+            bottom
+        } else {
+            *ladder
+                .iter()
+                .rev()
+                .find(|&&w| w >= p)
+                .expect("top rung bounds p")
+        }
+    }
 }
 
 impl std::fmt::Display for Precision {
@@ -284,5 +316,20 @@ mod tests {
     fn bits_per_elem() {
         assert_eq!(Precision::of(4).bits_per_elem(), 5);
         assert_eq!(Precision::of(8).bits_per_elem(), 9);
+    }
+
+    #[test]
+    fn ladder_canonicalize_and_snap() {
+        let mut l = vec![Precision::of(3), Precision::of(8), Precision::of(3), Precision::of(6)];
+        Precision::canonicalize_ladder(&mut l);
+        assert_eq!(l, vec![Precision::of(8), Precision::of(6), Precision::of(3)]);
+        // exact rung passes through
+        assert_eq!(Precision::snap_to_ladder(&l, Precision::of(6)), Precision::of(6));
+        // between rungs: next rung up
+        assert_eq!(Precision::snap_to_ladder(&l, Precision::of(4)), Precision::of(6));
+        assert_eq!(Precision::snap_to_ladder(&l, Precision::of(7)), Precision::of(8));
+        // outside the range: clamped to the bounds
+        assert_eq!(Precision::snap_to_ladder(&l, Precision::of(1)), Precision::of(3));
+        assert_eq!(Precision::snap_to_ladder(&l, Precision::of(14)), Precision::of(8));
     }
 }

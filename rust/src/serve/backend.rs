@@ -94,6 +94,16 @@ impl LogitsBackend for EngineHandle {
 /// benchmarks: logits are a pure hash of (position token, candidate
 /// token, precision), so generations are reproducible bit-for-bit,
 /// distinct per precision, and independent of wall clock.
+///
+/// Two logit models:
+/// * default — every precision gets an unrelated hash stream (maximally
+///   precision-sensitive; scheduler tests rely on widths disagreeing);
+/// * [`with_quality_model`](SimBackend::with_quality_model) — a shared
+///   base score plus a per-precision perturbation whose amplitude
+///   scales like the SEFP ε(ω) sawtooth, `quality_noise · 2^-m`, so
+///   lower widths drift further from the master and the drift is
+///   *tunable*.  Policy tests inject quality degradation by raising
+///   `quality_noise` mid-run.
 pub struct SimBackend {
     pub bsz: usize,
     pub seq_len: usize,
@@ -105,6 +115,8 @@ pub struct SimBackend {
     /// simulated per-step latency — lets scheduler tests and benches
     /// model sustained load in real time (zero = as fast as possible)
     pub step_delay: std::time::Duration,
+    /// `Some(noise)` switches to the shared-base quality model
+    pub quality_noise: Option<f32>,
     loaded: Option<Precision>,
 }
 
@@ -117,6 +129,7 @@ impl SimBackend {
             calls: 0,
             loads: 0,
             step_delay: std::time::Duration::ZERO,
+            quality_noise: None,
             loaded: None,
         }
     }
@@ -126,14 +139,39 @@ impl SimBackend {
         self
     }
 
+    /// Switch to the quality model: logits become a shared
+    /// precision-independent base plus `noise · 2^-m`-scaled
+    /// perturbation (see the type docs).
+    pub fn with_quality_model(mut self, noise: f32) -> Self {
+        self.quality_noise = Some(noise);
+        self
+    }
+
     #[inline]
-    fn score(token: i32, cand: usize, p: Precision) -> f32 {
+    fn hash(token: i32, cand: usize, salt: u64) -> u64 {
         let mut h = (token as u64)
             .wrapping_mul(0x9E3779B97F4A7C15)
             .wrapping_add((cand as u64).wrapping_mul(0xBF58476D1CE4E5B9))
-            .wrapping_add((p.m() as u64).wrapping_mul(0x94D049BB133111EB));
+            .wrapping_add(salt.wrapping_mul(0x94D049BB133111EB));
         h ^= h >> 29;
-        (h % 1000) as f32 / 1000.0
+        h
+    }
+
+    #[inline]
+    fn score(token: i32, cand: usize, p: Precision) -> f32 {
+        (Self::hash(token, cand, p.m() as u64) % 1000) as f32 / 1000.0
+    }
+
+    /// Quality-model score: 24-bit base in [0, 1) shared by every
+    /// precision (ties astronomically unlikely, so tiny noise cannot
+    /// flip an argmax through a grid collision) + per-precision
+    /// perturbation in [-1, 1) scaled by `noise · 2^-m`.
+    #[inline]
+    fn score_quality(token: i32, cand: usize, p: Precision, noise: f32) -> f32 {
+        let base = (Self::hash(token, cand, 0) >> 40) as f32 / (1u64 << 24) as f32;
+        let salt = 0x5EFu64 | ((p.m() as u64) << 16);
+        let raw = (Self::hash(token, cand, salt) >> 40) as f32 / (1u64 << 23) as f32 - 1.0;
+        base + raw * noise * (-(p.m() as f32)).exp2()
     }
 }
 
@@ -168,9 +206,20 @@ impl LogitsBackend for SimBackend {
             std::thread::sleep(self.step_delay);
         }
         let mut out = Vec::with_capacity(tokens.len() * self.vocab);
-        for &t in tokens {
-            for v in 0..self.vocab {
-                out.push(Self::score(t, v, p));
+        match self.quality_noise {
+            Some(noise) => {
+                for &t in tokens {
+                    for v in 0..self.vocab {
+                        out.push(Self::score_quality(t, v, p, noise));
+                    }
+                }
+            }
+            None => {
+                for &t in tokens {
+                    for v in 0..self.vocab {
+                        out.push(Self::score(t, v, p));
+                    }
+                }
             }
         }
         Ok(out)
@@ -209,5 +258,38 @@ mod tests {
         assert_eq!(b.calls, 3);
         assert_eq!(b.loads, 2);
         assert!(b.logits_step(&tokens[..4]).is_err());
+    }
+
+    #[test]
+    fn quality_model_noise_scales_with_width() {
+        // the quality model shares one base across precisions, so the
+        // distance from the master shrinks as noise shrinks and as the
+        // width grows — unlike the default fully-keyed model
+        let params = ParamStore {
+            tensors: vec![vec![0.5; 8]],
+            names: vec!["w".into()],
+            shapes: vec![vec![8]],
+            quantized: vec![false],
+        };
+        let mut ladder = PrecisionLadder::from_params(&params);
+        let tokens = vec![7i32; 8];
+        let logits_at = |noise: f32, m: u8, ladder: &mut PrecisionLadder| {
+            let mut b = SimBackend::new(2, 4, 8).with_quality_model(noise);
+            b.load_view(&ladder.view_at(Precision::of(m)).unwrap()).unwrap();
+            b.logits_step(&tokens).unwrap()
+        };
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+        };
+        let m8 = logits_at(1.0, 8, &mut ladder);
+        let m4 = logits_at(1.0, 4, &mut ladder);
+        let m3 = logits_at(1.0, 3, &mut ladder);
+        assert!(dist(&m3, &m8) > dist(&m4, &m8), "lower width drifts further");
+        // shrinking the noise shrinks the drift at a fixed width
+        let m3_quiet = logits_at(0.01, 3, &mut ladder);
+        let m8_quiet = logits_at(0.01, 8, &mut ladder);
+        assert!(dist(&m3_quiet, &m8_quiet) < dist(&m3, &m8));
+        // still deterministic
+        assert_eq!(logits_at(1.0, 3, &mut ladder), m3);
     }
 }

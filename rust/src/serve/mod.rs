@@ -6,8 +6,14 @@
 //!   E5M8; any lower precision is a [`LadderView`] derived by integer
 //!   truncation, cached under a byte budget with LRU eviction (no f32
 //!   round trip on the switch path, no per-width model zoo).
-//! * [`router`]  — task-class → [`Precision`] policy (generation vs
-//!   understanding, paper intro).
+//! * [`router`]  — task-class → [`Precision`] routing.  The decision is
+//!   delegated to a [`PrecisionPolicy`](crate::policy::PrecisionPolicy):
+//!   [`StaticPolicy`](crate::policy::StaticPolicy) is the frozen config
+//!   lookup (default), [`AdaptivePolicy`](crate::policy::AdaptivePolicy)
+//!   closes the loop from serve-time telemetry and shadow quality
+//!   probes (the `policy` control plane).  Forced per-request
+//!   precisions are clamped to the configured ladder, never passed
+//!   through unvalidated.
 //! * [`batcher`] — dynamic batcher + deadline/age-aware scheduler.
 //!   Each non-empty precision queue is scored
 //!   `fill_ratio + age_weight * oldest_wait_secs`; any queue whose head
@@ -26,8 +32,13 @@
 //!   finished requests are refilled FIFO from the same precision queue
 //!   between decode iterations, unless another precision has crossed the
 //!   anti-starvation bound — then the run ends and the scheduler picks
-//!   the overdue precision.  Ladder switch stats (hit/miss/evict/latency)
-//!   surface through [`ServeStats`].
+//!   the overdue precision.  Every completion is fed back to the
+//!   routing policy as an [`Observation`](crate::policy::Observation);
+//!   a sampled fraction is re-scored at master precision between runs
+//!   ([`shadow_probe`](crate::policy::shadow_probe)).  Ladder switch
+//!   stats (hit/miss/evict/latency) and policy decision counters
+//!   (promotions/demotions/probe agreement/forced clamps) surface
+//!   through [`ServeStats`].
 
 pub mod backend;
 pub mod batcher;

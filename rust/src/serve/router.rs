@@ -3,13 +3,30 @@
 //! The paper's motivation (intro): generation tasks trade latency for
 //! precision, understanding tasks want immediate answers at lower
 //! precision; prefill/decode can also run at different widths.  The
-//! router encodes that policy and is the single place deployment tuning
-//! happens.
+//! router is the single place that decision is made — but the decision
+//! itself is delegated to a [`PrecisionPolicy`]:
+//! [`StaticPolicy`] (the default) reproduces the frozen 3-arm config
+//! lookup, [`AdaptivePolicy`](crate::policy::AdaptivePolicy) closes the
+//! loop from serve-time telemetry and shadow quality probes
+//! (`rust/src/policy/`).
+//!
+//! Routing output is always a rung of the configured ladder
+//! (`ServeConfig::ladder`), on BOTH paths.  Forced per-request
+//! precisions do not bypass validation: below the bottom rung snaps up
+//! to it, above the top rung snaps down, a width strictly inside the
+//! ladder's range that is not a rung snaps to the next rung up
+//! (quality-preserving); every forced snap is counted and surfaced
+//! through `ServeStats::forced_clamps`.  Non-forced policy decisions
+//! snap the same way (uncounted), so a `StaticPolicy` class precision
+//! configured off-ladder cannot escape it either.
 
 use crate::config::ServeConfig;
+use crate::policy::{PrecisionPolicy, StaticPolicy};
 use crate::sefp::Precision;
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// Request class, ordered so policy/telemetry maps keyed on it iterate
+/// deterministically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum TaskClass {
     /// free-form continuation (quality-sensitive -> high precision)
     Generation,
@@ -19,26 +36,91 @@ pub enum TaskClass {
     Other,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct Router {
-    cfg: ServeConfig,
+    /// configured ladder, highest precision first, deduped
+    ladder: Vec<Precision>,
+    policy: Box<dyn PrecisionPolicy>,
+    /// forced precisions snapped into the configured ladder
+    clamps: u64,
 }
 
 impl Router {
+    /// Static routing from the config's three class precisions — today's
+    /// behavior and the default.
     pub fn new(cfg: ServeConfig) -> Self {
-        Router { cfg }
+        let policy = Box::new(StaticPolicy::new(&cfg));
+        Self::with_policy(cfg, policy)
     }
 
-    /// Decide the precision for a request.
-    pub fn route(&self, class: TaskClass, force: Option<Precision>) -> Precision {
-        if let Some(p) = force {
-            return p;
+    /// Route through an explicit policy implementation.
+    pub fn with_policy(cfg: ServeConfig, policy: Box<dyn PrecisionPolicy>) -> Self {
+        let mut ladder = cfg.ladder.clone();
+        assert!(!ladder.is_empty(), "serve ladder must be non-empty");
+        Precision::canonicalize_ladder(&mut ladder);
+        Router { ladder, policy, clamps: 0 }
+    }
+
+    /// Build from config, choosing
+    /// [`AdaptivePolicy`](crate::policy::AdaptivePolicy) when
+    /// `cfg.policy.adaptive` is set, [`StaticPolicy`] otherwise.
+    pub fn from_config(cfg: ServeConfig) -> Self {
+        if cfg.policy.adaptive {
+            let policy = Box::new(crate::policy::AdaptivePolicy::new(&cfg));
+            Self::with_policy(cfg, policy)
+        } else {
+            Self::new(cfg)
         }
-        match class {
-            TaskClass::Generation => self.cfg.generation_precision,
-            TaskClass::Understanding => self.cfg.understanding_precision,
-            TaskClass::Other => self.cfg.default_precision,
+    }
+
+    /// Decide the precision for a request.  `force` pins the request to
+    /// an explicit width, clamped to the configured ladder (and
+    /// counted); non-forced decisions honor the ladder too — a
+    /// `StaticPolicy` class precision configured outside it snaps
+    /// silently (`AdaptivePolicy` output is in-ladder by construction),
+    /// so `route` can never return an off-ladder width through either
+    /// path.
+    pub fn route(&mut self, class: TaskClass, force: Option<Precision>) -> Precision {
+        match force {
+            Some(p) => {
+                let snapped = self.snap(p);
+                if snapped != p {
+                    self.clamps += 1;
+                }
+                snapped
+            }
+            None => {
+                let p = self.policy.decide(class);
+                self.snap(p)
+            }
         }
+    }
+
+    /// Snap a precision into the configured ladder — the shared
+    /// [`Precision::snap_to_ladder`] rule (next rung up inside the
+    /// range, clamped at the bounds).
+    fn snap(&self, p: Precision) -> Precision {
+        Precision::snap_to_ladder(&self.ladder, p)
+    }
+
+    /// The canonicalized serve ladder (highest precision first).
+    pub fn ladder(&self) -> &[Precision] {
+        &self.ladder
+    }
+
+    /// Forced precisions snapped into the ladder so far.
+    pub fn forced_clamps(&self) -> u64 {
+        self.clamps
+    }
+
+    /// The active policy — the server feeds completion observations and
+    /// probe results through this.
+    pub fn policy(&self) -> &dyn PrecisionPolicy {
+        self.policy.as_ref()
+    }
+
+    pub fn policy_mut(&mut self) -> &mut dyn PrecisionPolicy {
+        self.policy.as_mut()
     }
 }
 
@@ -48,18 +130,81 @@ mod tests {
 
     #[test]
     fn routes_by_class() {
-        let r = Router::new(ServeConfig::default());
+        let mut r = Router::new(ServeConfig::default());
         assert_eq!(r.route(TaskClass::Generation, None), Precision::of(8));
         assert_eq!(r.route(TaskClass::Understanding, None), Precision::of(4));
         assert_eq!(r.route(TaskClass::Other, None), Precision::of(6));
+        assert_eq!(r.policy().snapshot().decisions, 3);
     }
 
     #[test]
-    fn force_overrides() {
-        let r = Router::new(ServeConfig::default());
+    fn force_on_a_rung_passes_through() {
+        let mut r = Router::new(ServeConfig::default());
+        for p in Precision::LADDER {
+            assert_eq!(r.route(TaskClass::Generation, Some(p)), p);
+        }
+        assert_eq!(r.forced_clamps(), 0, "exact rungs are not clamps");
+    }
+
+    #[test]
+    fn force_outside_the_ladder_is_clamped() {
+        let mut r = Router::new(ServeConfig::default()); // ladder {8..3}
+        // below the bottom rung: snaps up to it
         assert_eq!(
-            r.route(TaskClass::Generation, Some(Precision::of(3))),
+            r.route(TaskClass::Understanding, Some(Precision::of(1))),
             Precision::of(3)
         );
+        // above the top rung: snaps down to it
+        assert_eq!(
+            r.route(TaskClass::Generation, Some(Precision::of(12))),
+            Precision::of(8)
+        );
+        assert_eq!(r.forced_clamps(), 2);
+    }
+
+    #[test]
+    fn force_between_rungs_snaps_to_the_next_rung_up() {
+        let cfg = ServeConfig {
+            ladder: vec![Precision::of(8), Precision::of(6), Precision::of(3)],
+            ..ServeConfig::default()
+        };
+        let mut r = Router::with_policy(cfg.clone(), Box::new(StaticPolicy::new(&cfg)));
+        // 4 and 5 are inside the range but not rungs -> snap up to 6
+        assert_eq!(r.route(TaskClass::Other, Some(Precision::of(4))), Precision::of(6));
+        assert_eq!(r.route(TaskClass::Other, Some(Precision::of(5))), Precision::of(6));
+        // exact rungs still pass through
+        assert_eq!(r.route(TaskClass::Other, Some(Precision::of(3))), Precision::of(3));
+        assert_eq!(r.forced_clamps(), 2);
+    }
+
+    #[test]
+    fn non_forced_decisions_honor_the_ladder_too() {
+        // a StaticPolicy class precision configured outside the ladder
+        // must snap into it on the non-forced path (uncounted — nothing
+        // was forced), so route output is always an in-ladder rung
+        let cfg = ServeConfig {
+            ladder: vec![Precision::of(7), Precision::of(5), Precision::of(4)],
+            ..ServeConfig::default() // generation 8, default 6 — off-ladder
+        };
+        let mut r = Router::from_config(cfg);
+        assert_eq!(r.route(TaskClass::Generation, None), Precision::of(7));
+        assert_eq!(r.route(TaskClass::Other, None), Precision::of(7));
+        assert_eq!(r.route(TaskClass::Understanding, None), Precision::of(4));
+        assert_eq!(r.forced_clamps(), 0, "nothing was forced");
+    }
+
+    #[test]
+    fn from_config_selects_the_policy_kind() {
+        let r = Router::from_config(ServeConfig::default());
+        assert!(format!("{:?}", r.policy()).contains("StaticPolicy"));
+        let cfg = ServeConfig {
+            policy: crate::config::PolicyConfig {
+                adaptive: true,
+                ..crate::config::PolicyConfig::default()
+            },
+            ..ServeConfig::default()
+        };
+        let r = Router::from_config(cfg);
+        assert!(format!("{:?}", r.policy()).contains("AdaptivePolicy"));
     }
 }

@@ -23,11 +23,12 @@ use crate::data::tokenizer::{EOS, PAD};
 use crate::data::Rng;
 use crate::infer::sampling;
 use crate::metrics::Summary;
+use crate::policy::{shadow_probe, Observation, ProbeTask};
 use crate::sefp::Precision;
 
 use super::backend::{EngineHandle, LogitsBackend};
 use super::batcher::QueuedRequest;
-use super::{DynamicBatcher, PrecisionLadder, Request, Response, Router};
+use super::{DynamicBatcher, PrecisionLadder, Request, Response, Router, TaskClass};
 
 #[derive(Debug, Default, Clone)]
 pub struct ServeStats {
@@ -53,6 +54,16 @@ pub struct ServeStats {
     pub switch_ms: Summary,
     /// bytes of derived ladder views currently resident
     pub ladder_resident_bytes: usize,
+    /// shadow quality probes scored (policy layer)
+    pub probes_run: u64,
+    /// probe token-agreement per probe (exact percentiles available)
+    pub probe_agreement: Summary,
+    /// policy moves to a higher precision (quality floor violated)
+    pub promotions: u64,
+    /// policy moves to a lower precision (latency SLO violated)
+    pub demotions: u64,
+    /// forced per-request precisions snapped into the configured ladder
+    pub forced_clamps: u64,
     /// wall time from the FIRST dispatched work to the end of the last
     /// `process_all` — idle time before traffic arrives is not counted,
     /// so `throughput_rps` reflects serving, not server uptime.
@@ -80,6 +91,7 @@ impl ServeStats {
 /// One in-flight batch row of the generation loop.
 struct ActiveRow {
     id: u64,
+    class: TaskClass,
     /// prompt + generated tokens; the last `seq_len` form the window
     context: Vec<i32>,
     generated: Vec<i32>,
@@ -95,6 +107,7 @@ impl ActiveRow {
         let req = q.req;
         ActiveRow {
             id: req.id,
+            class: req.class,
             context: req.prompt,
             generated: Vec::new(),
             max_new_tokens: req.max_new_tokens.max(1),
@@ -115,6 +128,10 @@ pub struct Server<B: LogitsBackend = EngineHandle> {
     /// measuring from `Server::new` would deflate throughput whenever
     /// the server idled before traffic arrived)
     first_work: Option<Instant>,
+    /// completions sampled for shadow probing, run BETWEEN generation
+    /// runs (a probe swaps the backend's loaded view, so it can never
+    /// run while rows are still decoding at the serving precision)
+    pending_probes: Vec<ProbeTask>,
     rng: Rng,
 }
 
@@ -132,6 +149,7 @@ impl<B: LogitsBackend> Server<B> {
             batcher,
             stats: ServeStats::default(),
             first_work: None,
+            pending_probes: Vec::new(),
             rng: Rng::new(0x5EED),
         }
     }
@@ -194,6 +212,7 @@ impl<B: LogitsBackend> Server<B> {
             if let Some(t) = self.first_work {
                 self.stats.wall_secs = t.elapsed().as_secs_f64();
             }
+            self.sync_policy_stats();
         }
         Ok(out)
     }
@@ -278,7 +297,35 @@ impl<B: LogitsBackend> Server<B> {
                 }
             }
         }
+        // the run is over and no rows reference the loaded view: safe
+        // to let sampled shadow probes swap precisions on the backend
+        self.run_pending_probes()?;
         Ok(out)
+    }
+
+    /// Score every completion sampled for shadow probing during the
+    /// run that just ended, and feed the results back to the policy.
+    fn run_pending_probes(&mut self) -> anyhow::Result<()> {
+        if self.pending_probes.is_empty() {
+            return Ok(());
+        }
+        for task in std::mem::take(&mut self.pending_probes) {
+            let result = shadow_probe(&mut self.backend, &mut self.ladder, &task)?;
+            self.stats.probes_run += 1;
+            self.stats.probe_agreement.push(result.agreement);
+            self.router.policy_mut().observe_probe(task.class, task.precision, &result);
+        }
+        // probe replays go through the ladder cache like any switch
+        self.sync_ladder_stats();
+        Ok(())
+    }
+
+    /// Mirror the policy's decision counters into the serving stats.
+    fn sync_policy_stats(&mut self) {
+        let snap = self.router.policy().snapshot();
+        self.stats.promotions = snap.promotions;
+        self.stats.demotions = snap.demotions;
+        self.stats.forced_clamps = self.router.forced_clamps();
     }
 
     /// Mirror the ladder's switch statistics into the serving stats.
@@ -291,7 +338,7 @@ impl<B: LogitsBackend> Server<B> {
         self.stats.ladder_resident_bytes = self.ladder.resident_bytes();
     }
 
-    fn finalize(&mut self, p: Precision, row: ActiveRow, out: &mut Vec<Response>) {
+    fn finalize(&mut self, p: Precision, mut row: ActiveRow, out: &mut Vec<Response>) {
         self.stats.served += 1;
         self.stats.queue_ms.push(row.queue_ms.max(0.0));
         self.stats.compute_ms.push(row.compute_ms);
@@ -299,6 +346,28 @@ impl<B: LogitsBackend> Server<B> {
             e.1 += 1;
         } else {
             self.stats.per_precision.push((p, 1));
+        }
+        // close the control loop: every completion is an observation,
+        // and a sampled fraction below the master is queued for shadow
+        // probing (run after this precision run winds down)
+        let obs = Observation {
+            class: row.class,
+            precision: p,
+            queue_ms: row.queue_ms.max(0.0),
+            compute_ms: row.compute_ms,
+            tokens: row.generated.len(),
+            queue_depth: self.batcher.len(),
+        };
+        self.router.policy_mut().observe(&obs);
+        if p < self.ladder.top() && self.router.policy_mut().wants_probe(row.class, p) {
+            // the context is dead after finalize (the Response only
+            // keeps the generation), so the probe task takes it by move
+            self.pending_probes.push(ProbeTask {
+                class: row.class,
+                precision: p,
+                context: std::mem::take(&mut row.context),
+                n_gen: row.generated.len(),
+            });
         }
         out.push(Response {
             id: row.id,

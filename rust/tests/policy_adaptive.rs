@@ -1,0 +1,252 @@
+//! Adaptive precision control-plane tests over [`SimBackend`] — no AOT
+//! artifacts required, so this suite always runs.
+//!
+//! Covers the acceptance scenario (under injected latency pressure,
+//! `AdaptivePolicy` serves Understanding traffic at a strictly lower
+//! precision than `StaticPolicy` while probe token-agreement stays above
+//! the configured quality floor), the promotion path under injected
+//! quality degradation, and the hard-clamping property: controller and
+//! policy output stay within the configured ladder for ANY observation
+//! sequence.
+
+use std::time::Duration;
+
+use otaro::config::{PolicyConfig, ServeConfig};
+use otaro::data::Rng;
+use otaro::policy::{
+    AdaptivePolicy, LaneSignal, Observation, PrecisionPolicy, ProbeResult, SloController,
+};
+use otaro::runtime::ParamStore;
+use otaro::sefp::Precision;
+use otaro::serve::{
+    DynamicBatcher, PrecisionLadder, Request, Router, Server, SimBackend, TaskClass,
+};
+
+fn ladder() -> PrecisionLadder {
+    let mut rng = Rng::new(9);
+    let params = ParamStore {
+        tensors: vec![(0..128).map(|_| rng.normal() as f32 * 0.1).collect(), vec![1.0; 8]],
+        names: vec!["w".into(), "ln".into()],
+        shapes: vec![vec![16, 8], vec![8]],
+        quantized: vec![true, false],
+    };
+    PrecisionLadder::from_params(&params)
+}
+
+/// Serving config for the pressure scenario: a sub-millisecond p95 SLO
+/// that a 2 ms simulated decode step must violate, a quality floor the
+/// low-noise backend comfortably clears, and short windows/cooldowns so
+/// the loop reacts within one test round.
+fn pressure_cfg(adaptive: bool) -> ServeConfig {
+    ServeConfig {
+        policy: PolicyConfig {
+            adaptive,
+            slo_p95_ms: 0.5,
+            probe_rate: 0.25,
+            quality_floor: 0.5,
+            quality_headroom: 0.1,
+            window: 64,
+            min_samples: 8,
+            cooldown: 4,
+            ..PolicyConfig::default()
+        },
+        ..ServeConfig::default()
+    }
+}
+
+fn pressured_server(cfg: ServeConfig) -> Server<SimBackend> {
+    let backend = SimBackend::new(4, 8, 32)
+        .with_quality_model(1e-3)
+        .with_step_delay(Duration::from_millis(2));
+    let batcher = DynamicBatcher::new(4, 4096);
+    Server::new(backend, ladder(), Router::from_config(cfg), batcher)
+}
+
+/// Drive `rounds` bursts of Understanding traffic and return the served
+/// precisions in completion order.
+fn drive_understanding(s: &mut Server<SimBackend>, rounds: usize, per_round: u64) -> Vec<Precision> {
+    let mut served = Vec::new();
+    for round in 0..rounds {
+        for i in 0..per_round {
+            let id = round as u64 * per_round + i;
+            let prompt = vec![1, 2, (id % 7) as i32 + 3];
+            let req = Request::new(id, TaskClass::Understanding, prompt).with_max_new_tokens(2);
+            assert!(s.submit(req));
+        }
+        for r in s.process_all().unwrap() {
+            served.push(r.precision);
+        }
+    }
+    served
+}
+
+#[test]
+fn adaptive_demotes_under_latency_pressure_while_static_holds() {
+    // Acceptance scenario.  Static baseline: every Understanding request
+    // is served at the config's E5M4 regardless of pressure.
+    let mut stat = pressured_server(pressure_cfg(false));
+    let static_served = drive_understanding(&mut stat, 4, 12);
+    assert!(static_served.iter().all(|&p| p == Precision::of(4)));
+    assert_eq!(stat.stats().demotions, 0);
+
+    // Adaptive: the 2 ms step latency violates the 0.5 ms SLO; once
+    // min_samples observations land, the controller demotes
+    // Understanding to the E5M3 rung below.
+    let mut adap = pressured_server(pressure_cfg(true));
+    let adaptive_served = drive_understanding(&mut adap, 4, 12);
+    let stats = adap.stats().clone();
+    assert!(stats.demotions >= 1, "latency pressure must demote: {stats:?}");
+    let at3 = adaptive_served.iter().filter(|&&p| p == Precision::of(3)).count();
+    assert!(at3 > 0, "demoted traffic must actually serve at E5M3");
+    // strictly lower than the static baseline's floor
+    let adaptive_min = adaptive_served.iter().min().copied().unwrap();
+    let static_min = static_served.iter().min().copied().unwrap();
+    assert!(
+        adaptive_min < static_min,
+        "adaptive must serve strictly lower than static ({adaptive_min} vs {static_min})"
+    );
+    // ...while shadow-probe quality stays above the configured floor
+    assert!(stats.probes_run > 0, "probe sampling must have fired");
+    assert_eq!(stats.probe_agreement.n, stats.probes_run);
+    assert!(
+        stats.probe_agreement.mean() > 0.5,
+        "token agreement {} fell below the quality floor",
+        stats.probe_agreement.mean()
+    );
+    assert_eq!(stats.promotions, 0, "healthy quality must not promote back");
+}
+
+#[test]
+fn adaptive_promotes_under_injected_quality_degradation() {
+    // No latency pressure (huge SLO), but the backend's quality model is
+    // degraded so hard that low-precision argmaxes diverge from the
+    // master almost everywhere — probes must drive promotion.
+    let cfg = ServeConfig {
+        understanding_precision: Precision::of(3),
+        policy: PolicyConfig {
+            adaptive: true,
+            slo_p95_ms: 1e9,
+            probe_rate: 1.0,
+            quality_floor: 0.6,
+            quality_headroom: 0.1,
+            window: 64,
+            min_samples: 1,
+            cooldown: 0,
+            ..PolicyConfig::default()
+        },
+        ..ServeConfig::default()
+    };
+    let backend = SimBackend::new(4, 8, 32).with_quality_model(10.0);
+    let batcher = DynamicBatcher::new(4, 4096);
+    let mut s = Server::new(backend, ladder(), Router::from_config(cfg), batcher);
+    let served = drive_understanding(&mut s, 8, 8);
+    let stats = s.stats().clone();
+    assert!(stats.probes_run > 0);
+    assert!(
+        stats.promotions >= 1,
+        "collapsed probe agreement must promote: {stats:?}"
+    );
+    let last = *served.last().unwrap();
+    assert!(
+        last > Precision::of(3),
+        "later traffic must serve above the degraded E5M3 start, got {last}"
+    );
+    assert!(
+        stats.probe_agreement.mean() < 0.6,
+        "the injected degradation must be visible in the probe stats"
+    );
+}
+
+#[test]
+fn controller_output_is_always_within_ladder_bounds() {
+    // Property: for ANY ladder subset, init width, and observation
+    // sequence, the controller's current precision is a ladder rung.
+    let classes = [TaskClass::Generation, TaskClass::Understanding, TaskClass::Other];
+    let mut rng = Rng::new(0xBEEF);
+    for trial in 0..50 {
+        let mut pool = Precision::LADDER.to_vec();
+        rng.shuffle(&mut pool);
+        let ladder = pool[..rng.below(pool.len()) + 1].to_vec();
+        let cfg = PolicyConfig {
+            slo_p95_ms: 1.0,
+            quality_floor: 0.8,
+            quality_headroom: 0.05,
+            min_samples: 1,
+            cooldown: rng.below(3) as u64,
+            ..PolicyConfig::default()
+        };
+        let mut c = SloController::new(&ladder, cfg);
+        c.init_class(*rng.choose(&classes), Precision::of(rng.below(14) as u8 + 1));
+        let mut signal = |rng: &mut Rng| LaneSignal {
+            frac_over_slo: rng.f64(),
+            agreement: if rng.below(4) == 0 { None } else { Some(rng.f64()) },
+            samples: rng.below(64),
+        };
+        for _ in 0..200 {
+            let class = *rng.choose(&classes);
+            let cur = signal(&mut rng);
+            let cand = signal(&mut rng);
+            c.tick(class, cur, cand);
+            for &cl in &classes {
+                assert!(
+                    ladder.contains(&c.current(cl)),
+                    "trial {trial}: {} escaped ladder {ladder:?}",
+                    c.current(cl)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn adaptive_policy_stays_within_ladder_for_any_observation_sequence() {
+    // Same property one level up: arbitrary (even out-of-ladder)
+    // observation lanes and probe results can never push `decide`
+    // outside the configured ladder.
+    let serve_ladder = vec![Precision::of(7), Precision::of(5), Precision::of(4)];
+    let cfg = ServeConfig {
+        ladder: serve_ladder.clone(),
+        policy: PolicyConfig {
+            adaptive: true,
+            min_samples: 1,
+            cooldown: 0,
+            ..PolicyConfig::default()
+        },
+        ..ServeConfig::default()
+    };
+    let classes = [TaskClass::Generation, TaskClass::Understanding, TaskClass::Other];
+    let mut p = AdaptivePolicy::new(&cfg);
+    let mut rng = Rng::new(7);
+    for _ in 0..500 {
+        let class = *rng.choose(&classes);
+        let precision = Precision::of(rng.below(14) as u8 + 1);
+        match rng.below(3) {
+            0 => p.observe(&Observation {
+                class,
+                precision,
+                queue_ms: rng.f64() * 100.0,
+                compute_ms: rng.f64() * 100.0,
+                tokens: rng.below(8),
+                queue_depth: rng.below(100),
+            }),
+            1 => p.observe_probe(
+                class,
+                precision,
+                &ProbeResult {
+                    agreement: rng.f64(),
+                    mean_divergence: rng.f64(),
+                    divergence_amplitude: rng.f64(),
+                    positions: rng.below(8),
+                },
+            ),
+            _ => {
+                let _ = p.decide(class);
+            }
+        }
+        for &cl in &classes {
+            let d = p.decide(cl);
+            assert!(d >= Precision::of(4) && d <= Precision::of(7), "{d} escaped");
+            assert!(serve_ladder.contains(&d), "{d} is not a configured rung");
+        }
+    }
+}

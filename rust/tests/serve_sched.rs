@@ -193,11 +193,40 @@ fn temperature_sampling_is_seeded() {
 }
 
 #[test]
-fn precision_above_master_is_rejected_at_submit() {
-    // a forced width above the E5M8 master must be shed at submit (like
-    // empty prompts), not abort a whole popped batch later in view_at
+fn forced_precision_is_clamped_to_the_ladder() {
+    // forced widths no longer bypass validation: above the configured
+    // ladder snaps down to its top rung, below snaps up to the bottom,
+    // and every snap is counted in the stats
     let mut s = server(2, SchedPolicy::default());
-    assert!(!s.submit(req(0, 9, 1)));
+    assert!(s.submit(req(0, 9, 1)));
+    let responses = s.process_all().unwrap();
+    assert_eq!(responses[0].precision, Precision::of(8));
+    assert_eq!(s.stats().forced_clamps, 1);
+    assert!(s.submit(req(1, 1, 1)));
+    let responses = s.process_all().unwrap();
+    assert_eq!(responses[0].precision, Precision::of(3));
+    assert_eq!(s.stats().forced_clamps, 2);
+    assert_eq!(s.stats().invalid, 0, "clamped requests are served, not shed");
+    // exact rungs pass through unclamped
+    assert!(s.submit(req(2, 4, 1)));
+    let responses = s.process_all().unwrap();
+    assert_eq!(responses[0].precision, Precision::of(4));
+    assert_eq!(s.stats().forced_clamps, 2);
+}
+
+#[test]
+fn ladder_above_master_is_still_rejected_at_submit() {
+    // clamping snaps to the CONFIGURED ladder; if that ladder itself
+    // exceeds the model master, the submit guard must still shed the
+    // request rather than let view_at abort a whole popped batch
+    let cfg = ServeConfig {
+        ladder: vec![Precision::of(12), Precision::of(4)],
+        ..ServeConfig::default()
+    };
+    let backend = SimBackend::new(2, 8, 32);
+    let batcher = DynamicBatcher::new(2, 1024);
+    let mut s = Server::new(backend, ladder(), Router::new(cfg), batcher);
+    assert!(!s.submit(req(0, 12, 1)), "rung above the E5M8 master");
     assert_eq!(s.stats().invalid, 1);
     assert!(s.batcher.is_empty());
     // valid traffic afterwards is unaffected
