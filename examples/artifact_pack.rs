@@ -1,0 +1,79 @@
+//! The `.sefp` artifact end to end, no AOT artifacts needed:
+//! pack a synthetic f32 master into the on-device container, reopen it,
+//! walk the ladder with zero-copy truncate-at-load views, and build a
+//! serving `PrecisionLadder` straight from the planes.
+//!
+//!   cargo run --release --example artifact_pack
+
+use otaro::artifact::{write_artifact, Artifact, ArtifactMeta};
+use otaro::data::Rng;
+use otaro::runtime::ParamStore;
+use otaro::sefp::{Precision, SefpSpec, SefpTensor};
+use otaro::serve::{LadderTensor, PrecisionLadder};
+
+fn main() -> anyhow::Result<()> {
+    // a toy 2-layer master: quantized 2-D weights + f32 norm gains
+    let mut rng = Rng::new(42);
+    let mut tensors = Vec::new();
+    let mut names = Vec::new();
+    let mut shapes = Vec::new();
+    let mut quantized = Vec::new();
+    for l in 0..2 {
+        tensors.push((0..64 * 64).map(|_| rng.normal() as f32 * 0.1).collect());
+        names.push(format!("layer{l}.w"));
+        shapes.push(vec![64, 64]);
+        quantized.push(true);
+        tensors.push(vec![1.0f32; 64]);
+        names.push(format!("layer{l}.ln"));
+        shapes.push(vec![64]);
+        quantized.push(false);
+    }
+    let params = ParamStore { tensors, names, shapes, quantized };
+    let f32_bytes = params.total_len() * 4;
+
+    // pack at the top of the paper's ladder and reopen
+    let dir = std::env::temp_dir().join("otaro_artifact_example");
+    let path = dir.join("master.sefp");
+    let written = write_artifact(&path, &params, &ArtifactMeta::new(Precision::of(8)))?;
+    println!(
+        "packed {} weights: f32 {} B -> .sefp {} B ({:.1}%)",
+        params.total_len(),
+        f32_bytes,
+        written,
+        written as f64 / f32_bytes as f64 * 100.0
+    );
+
+    let a = Artifact::open(&path)?;
+    println!("\nper-rung borrowed footprint (zero-copy truncate-at-load):");
+    for p in Precision::LADDER {
+        println!(
+            "  {p}: {:>6} B borrowed ({:.1}% of f32)",
+            a.view_bytes_at(p),
+            a.view_bytes_at(p) as f64 / f32_bytes as f64 * 100.0
+        );
+    }
+
+    // ladder exactness through the container: opening at E5M4 equals
+    // re-encoding the original floats at E5M4
+    let v4 = a.view(0, Precision::of(4))?;
+    let direct = SefpTensor::encode(&params.tensors[0], &SefpSpec::new(Precision::of(4)));
+    assert_eq!(v4.to_tensor(), direct);
+    println!("\nview_at(E5M4) == encode(w, E5M4): exact (ladder-exactness through the file)");
+
+    // and the serve layer consumes the container directly — no f32
+    // master is ever rebuilt
+    let mut ladder = PrecisionLadder::from_artifact(&a)?;
+    let view = ladder.view_at(Precision::of(3))?;
+    let quant_slots = view
+        .tensors()
+        .iter()
+        .filter(|t| matches!(t, LadderTensor::Quant(_)))
+        .count();
+    println!(
+        "serving ladder from artifact: top {}, E5M3 view has {quant_slots} quantized slots",
+        ladder.top()
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

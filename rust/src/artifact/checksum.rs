@@ -1,0 +1,45 @@
+//! FNV-1a 64 — the `.sefp` container's per-tensor integrity checksum.
+//!
+//! Chosen over CRC32 because it is a handful of lines with no lookup
+//! table, has a published reference (the 64-bit FNV-1a variant) pinned
+//! by known-answer tests in `rust/tests/artifact_golden.rs`, and one
+//! 8-byte word per tensor is cheap next to the plane data it guards.
+//! This is an integrity check against torn writes and bit rot, not a
+//! cryptographic authenticator.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64 over `bytes` (hash of the empty slice is [`FNV_OFFSET`]).
+#[inline]
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn published_vectors() {
+        // reference vectors from the FNV specification
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"abc"), 0xe71f_a219_0541_574b);
+    }
+
+    #[test]
+    fn sensitive_to_every_byte() {
+        let a = fnv1a64(&[1, 2, 3, 4]);
+        assert_ne!(a, fnv1a64(&[1, 2, 3, 5]));
+        assert_ne!(a, fnv1a64(&[0, 2, 3, 4]));
+        assert_ne!(a, fnv1a64(&[1, 2, 3, 4, 0]));
+    }
+}

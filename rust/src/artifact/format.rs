@@ -1,0 +1,262 @@
+//! The fixed binary skeleton of the `.sefp` container (format v1,
+//! frozen): header and per-tensor index records.
+//!
+//! Everything here is little-endian and fixed-size so the reader can
+//! validate the whole skeleton with pure bounds arithmetic before it
+//! trusts a single offset.  The full container layout is specified in
+//! the `artifact` module docs; the byte-level freeze is enforced by
+//! `rust/tests/artifact_golden.rs`.
+
+/// File magic, bytes 0..8 of every `.sefp` artifact.
+pub const MAGIC: [u8; 8] = *b"OTARSEFP";
+/// Current (and only) format version.
+pub const VERSION: u32 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 64;
+/// Fixed per-tensor index record size in bytes.
+pub const INDEX_ENTRY_LEN: usize = 48;
+/// Section alignment: manifest/index/tensor blobs start on this.
+pub const ALIGN: usize = 8;
+
+/// Round `x` up to the next [`ALIGN`] boundary.
+pub fn align_up(x: usize) -> usize {
+    x.div_ceil(ALIGN) * ALIGN
+}
+
+/// Byte length of a packed tensor blob: 5-bit shared exponents + sign
+/// plane + `m` mantissa bit-planes, each region starting on a fresh
+/// byte.  The single source of the blob-size arithmetic — the writer
+/// asserts against it and the reader rejects index entries that
+/// disagree with it.
+pub fn packed_blob_len(len: usize, n_groups: usize, m: u8) -> usize {
+    (n_groups * 5).div_ceil(8) + len.div_ceil(8) * (1 + m as usize)
+}
+
+/// Overflow-checked twin of [`packed_blob_len`] for UNTRUSTED index
+/// fields: a crafted container with `len`/`n_groups` near `usize::MAX`
+/// must produce a validation error, not an arithmetic panic.
+pub fn checked_packed_blob_len(len: usize, n_groups: usize, m: u8) -> Option<usize> {
+    let exp = n_groups.checked_mul(5)?.div_ceil(8);
+    let planes = len.div_ceil(8).checked_mul(1 + m as usize)?;
+    exp.checked_add(planes)
+}
+
+#[inline]
+pub(crate) fn read_u32(buf: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([buf[off], buf[off + 1], buf[off + 2], buf[off + 3]])
+}
+
+#[inline]
+pub(crate) fn read_u64(buf: &[u8], off: usize) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&buf[off..off + 8]);
+    u64::from_le_bytes(b)
+}
+
+/// Parsed fixed header (bytes 0..64).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub version: u32,
+    pub flags: u32,
+    /// absolute byte offset of the embedded JSON manifest
+    pub manifest_off: u64,
+    pub manifest_len: u64,
+    /// absolute byte offset of the first index record
+    pub index_off: u64,
+    pub tensor_count: u64,
+    /// absolute byte offset of the first tensor blob
+    pub data_off: u64,
+    /// total file length — lets the reader reject truncation up front
+    pub file_len: u64,
+}
+
+impl Header {
+    pub fn to_bytes(&self) -> [u8; HEADER_LEN] {
+        let mut b = [0u8; HEADER_LEN];
+        b[..8].copy_from_slice(&MAGIC);
+        b[8..12].copy_from_slice(&self.version.to_le_bytes());
+        b[12..16].copy_from_slice(&self.flags.to_le_bytes());
+        b[16..24].copy_from_slice(&self.manifest_off.to_le_bytes());
+        b[24..32].copy_from_slice(&self.manifest_len.to_le_bytes());
+        b[32..40].copy_from_slice(&self.index_off.to_le_bytes());
+        b[40..48].copy_from_slice(&self.tensor_count.to_le_bytes());
+        b[48..56].copy_from_slice(&self.data_off.to_le_bytes());
+        b[56..64].copy_from_slice(&self.file_len.to_le_bytes());
+        b
+    }
+
+    pub fn parse(buf: &[u8]) -> anyhow::Result<Header> {
+        anyhow::ensure!(
+            buf.len() >= HEADER_LEN,
+            "file too short for a .sefp header ({} bytes)",
+            buf.len()
+        );
+        anyhow::ensure!(buf[..8] == MAGIC, "bad magic: not a .sefp artifact");
+        let version = read_u32(buf, 8);
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported .sefp format version {version} (this reader supports v{VERSION})"
+        );
+        let flags = read_u32(buf, 12);
+        anyhow::ensure!(
+            flags == 0,
+            "unsupported .sefp flags {flags:#x} (v1 reserves the flag field zero; a set \
+             flag means a layout this reader would misinterpret)"
+        );
+        Ok(Header {
+            version,
+            flags,
+            manifest_off: read_u64(buf, 16),
+            manifest_len: read_u64(buf, 24),
+            index_off: read_u64(buf, 32),
+            tensor_count: read_u64(buf, 40),
+            data_off: read_u64(buf, 48),
+            file_len: read_u64(buf, 56),
+        })
+    }
+}
+
+/// How a tensor's blob is stored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorKind {
+    /// SEFP bit-planes (quantized weights): exponents + sign + mantissa
+    /// planes, truncatable at load by taking a plane prefix.
+    Packed,
+    /// Raw little-endian f32 (non-quantized tensors: norm gains,
+    /// pos_embed) — stored once, never per rung.
+    RawF32,
+}
+
+impl TensorKind {
+    pub const fn code(self) -> u32 {
+        match self {
+            TensorKind::Packed => 0,
+            TensorKind::RawF32 => 1,
+        }
+    }
+
+    pub fn from_code(code: u32) -> anyhow::Result<Self> {
+        match code {
+            0 => Ok(TensorKind::Packed),
+            1 => Ok(TensorKind::RawF32),
+            other => anyhow::bail!("unknown tensor kind {other}"),
+        }
+    }
+}
+
+/// One fixed-size index record (48 bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IndexEntry {
+    pub kind: TensorKind,
+    /// logical element count
+    pub len: u64,
+    /// SEFP group count (0 for raw f32)
+    pub n_groups: u64,
+    /// absolute byte offset of this tensor's blob
+    pub data_off: u64,
+    /// blob length in bytes (excludes alignment padding)
+    pub data_len: u64,
+    /// FNV-1a 64 of the blob bytes
+    pub checksum: u64,
+}
+
+impl IndexEntry {
+    pub fn to_bytes(&self) -> [u8; INDEX_ENTRY_LEN] {
+        let mut b = [0u8; INDEX_ENTRY_LEN];
+        b[..4].copy_from_slice(&self.kind.code().to_le_bytes());
+        // bytes 4..8 reserved (zero)
+        b[8..16].copy_from_slice(&self.len.to_le_bytes());
+        b[16..24].copy_from_slice(&self.n_groups.to_le_bytes());
+        b[24..32].copy_from_slice(&self.data_off.to_le_bytes());
+        b[32..40].copy_from_slice(&self.data_len.to_le_bytes());
+        b[40..48].copy_from_slice(&self.checksum.to_le_bytes());
+        b
+    }
+
+    /// Parse one record from exactly [`INDEX_ENTRY_LEN`] bytes.
+    pub fn parse(buf: &[u8]) -> anyhow::Result<IndexEntry> {
+        anyhow::ensure!(buf.len() == INDEX_ENTRY_LEN, "index record must be 48 bytes");
+        anyhow::ensure!(read_u32(buf, 4) == 0, "reserved index bytes must be zero in v1");
+        Ok(IndexEntry {
+            kind: TensorKind::from_code(read_u32(buf, 0))?,
+            len: read_u64(buf, 8),
+            n_groups: read_u64(buf, 16),
+            data_off: read_u64(buf, 24),
+            data_len: read_u64(buf, 32),
+            checksum: read_u64(buf, 40),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip() {
+        let h = Header {
+            version: VERSION,
+            flags: 0,
+            manifest_off: 64,
+            manifest_len: 123,
+            index_off: 192,
+            tensor_count: 3,
+            data_off: 336,
+            file_len: 4096,
+        };
+        assert_eq!(Header::parse(&h.to_bytes()).unwrap(), h);
+    }
+
+    #[test]
+    fn header_rejects_bad_magic_and_version() {
+        let h = Header {
+            version: VERSION,
+            flags: 0,
+            manifest_off: 64,
+            manifest_len: 0,
+            index_off: 64,
+            tensor_count: 0,
+            data_off: 64,
+            file_len: 64,
+        };
+        let mut b = h.to_bytes();
+        b[0] ^= 0xff;
+        assert!(Header::parse(&b).is_err());
+        let mut b = h.to_bytes();
+        b[8] = 2; // version 2
+        assert!(Header::parse(&b).is_err());
+        let mut b = h.to_bytes();
+        b[12] = 1; // v1 reserves flags zero — a set flag must be refused
+        assert!(Header::parse(&b).is_err());
+        assert!(Header::parse(&h.to_bytes()[..32]).is_err());
+    }
+
+    #[test]
+    fn index_roundtrip_and_kind_codes() {
+        let e = IndexEntry {
+            kind: TensorKind::RawF32,
+            len: 16,
+            n_groups: 0,
+            data_off: 512,
+            data_len: 64,
+            checksum: 0xdead_beef_cafe_f00d,
+        };
+        assert_eq!(IndexEntry::parse(&e.to_bytes()).unwrap(), e);
+        assert!(TensorKind::from_code(2).is_err());
+        let mut b = e.to_bytes();
+        b[4] = 1; // reserved bytes must stay zero
+        assert!(IndexEntry::parse(&b).is_err());
+    }
+
+    #[test]
+    fn blob_len_arithmetic() {
+        // 100 elems, 2 groups, m=4: exp = ceil(10/8) = 2, stride = 13,
+        // planes = (1 sign + 4 mantissa) * 13
+        assert_eq!(packed_blob_len(100, 2, 4), 2 + 13 * 5);
+        assert_eq!(packed_blob_len(0, 0, 8), 0);
+        assert_eq!(align_up(0), 0);
+        assert_eq!(align_up(1), 8);
+        assert_eq!(align_up(8), 8);
+        assert_eq!(align_up(9), 16);
+    }
+}

@@ -1,0 +1,86 @@
+//! The `.sefp` on-device artifact: a versioned packed-weight container
+//! for the single SEFP master, with **zero-copy truncate-at-load**.
+//!
+//! OTARo's deployment premise is that ONE stored model yields every
+//! bit-width by mantissa truncation (paper fig. 1).  The f32 checkpoint
+//! path (`init_params.bin` + JSON sidecar) stores 4 bytes/weight and
+//! must re-encode to SEFP on every startup; this container stores the
+//! packed planes themselves, so the on-device artifact is the paper's
+//! `(1+m)/elem + 5/group` bits, the reader never materializes an f32
+//! master, and a view at a lower rung borrows (and gathers) strictly
+//! fewer bytes — the file is read and checksummed once, whole, at open.
+//!
+//! # Container layout (format v1, little-endian, frozen)
+//!
+//! ```text
+//! offset               section
+//! 0                    header, 64 bytes:
+//!                        0..8   magic  "OTARSEFP"
+//!                        8..12  u32 version (= 1)
+//!                        12..16 u32 flags   (= 0 in v1)
+//!                        16..24 u64 manifest_off   24..32 u64 manifest_len
+//!                        32..40 u64 index_off      40..48 u64 tensor_count
+//!                        48..56 u64 data_off       56..64 u64 file_len
+//! manifest_off         embedded JSON manifest: group_size, rounding,
+//!                      ladder top precision, tensor names/shapes/
+//!                      quantized flags, optional model config
+//! index_off            tensor_count x 48-byte index records:
+//!                        u32 kind (0 packed / 1 raw f32), u32 reserved,
+//!                        u64 len, u64 n_groups, u64 data_off,
+//!                        u64 data_len, u64 checksum (FNV-1a 64 of blob)
+//! data_off             tensor blobs, each 8-byte aligned:
+//!                        packed:  exponent plane (5 bits/group,
+//!                                 LSB-first, byte-padded)
+//!                                 sign plane     (1 bit/elem)
+//!                                 mantissa planes, top.m() of them,
+//!                                 MSB FIRST, each ceil(len/8) bytes
+//!                        raw f32: len x f32 LE
+//! ```
+//!
+//! The mantissa bit-planes are stored most-significant-bit first, so a
+//! view at rung `p` borrows the exponent plane, the sign plane, and the
+//! first `p.m()` mantissa planes — a plane *prefix*.  That makes
+//! truncate-at-load literally free: the integer shift
+//! `sig >> (top.m() - p.m())` is performed by *not borrowing* the low
+//! planes, and under `Rounding::Trunc` the result is bit-identical to
+//! re-encoding the original weights at `p` (the `SefpCodec`
+//! ladder-exactness contract, property-tested in
+//! `rust/tests/artifact_props.rs`).
+//!
+//! # Versioning policy
+//!
+//! v1 is frozen: byte-level stability is enforced by the golden test in
+//! `rust/tests/artifact_golden.rs` (hand-computed plane bytes + FNV
+//! known-answer vectors).  Any layout change bumps `version` and keeps
+//! this reader refusing unknown versions loudly; `flags` is reserved
+//! zero in v1 so v1 readers also refuse files that set it (reserved
+//! index bytes likewise).  Integrity is per-tensor: a flipped bit
+//! anywhere in a blob fails that tensor's FNV-1a 64 check at open.
+//!
+//! # Wiring
+//!
+//! * [`writer::pack_params`] / [`writer::write_artifact`] — f32 master
+//!   in, container bytes out (deterministic).
+//! * [`reader::Artifact`] — validate once, then [`reader::Artifact::view`]
+//!   hands out borrowed [`reader::TensorView`]s at any rung.
+//! * `serve::PrecisionLadder::from_artifact` builds the serving ladder
+//!   straight from the container (integer plane gather, no f32).
+//! * `coordinator::Trainer::save_checkpoint` writes the `.sefp` next to
+//!   every f32 checkpoint; `runtime::Manifest` records the artifact
+//!   under the `sefp_master` key.
+//! * CLI: `otaro pack` (f32 checkpoint -> `.sefp`) and `otaro inspect`
+//!   (header/index/ladder report); `benches/bench_artifact.rs` measures
+//!   pack/open/view against the f32-parse-then-encode path.
+
+pub mod checksum;
+pub mod format;
+pub mod reader;
+pub mod writer;
+
+pub use checksum::fnv1a64;
+pub use format::{
+    align_up, packed_blob_len, Header, IndexEntry, TensorKind, ALIGN, HEADER_LEN,
+    INDEX_ENTRY_LEN, MAGIC, VERSION,
+};
+pub use reader::{Artifact, TensorView};
+pub use writer::{pack_params, write_artifact, ArtifactMeta, TensorMeta};

@@ -1,0 +1,481 @@
+//! `.sefp` reader: one contiguous buffer, borrowed zero-copy tensor
+//! views, truncate-at-load.
+//!
+//! [`Artifact::from_bytes`] validates the whole container up front —
+//! header bounds, manifest/index consistency, per-tensor blob geometry,
+//! and FNV-1a checksums — after which [`Artifact::view`] is pure
+//! pointer arithmetic: a [`TensorView`] borrows the exponent plane, the
+//! sign plane, and a *prefix* of the mantissa planes, so opening the
+//! master at any lower rung borrows strictly fewer bytes and allocates
+//! nothing.  (The container file itself is read and checksummed once,
+//! whole, at open — the per-rung saving is in what is borrowed,
+//! gathered, and kept hot, not in file I/O.)  No f32 master is ever
+//! materialized; dequantization is an explicit, separate step.
+
+use std::path::Path;
+
+use crate::json;
+use crate::runtime::manifest::ModelConfig;
+use crate::sefp::packed::BitVec;
+use crate::sefp::{PackedSefp, Precision, Rounding, SefpTensor, EXP_MIN};
+
+use super::checksum::fnv1a64;
+use super::format::{
+    checked_packed_blob_len, packed_blob_len, Header, IndexEntry, TensorKind, HEADER_LEN,
+    INDEX_ENTRY_LEN,
+};
+use super::writer::{ArtifactMeta, TensorMeta};
+
+/// An open `.sefp` container: the file bytes plus the validated
+/// skeleton parsed out of them.
+pub struct Artifact {
+    buf: Vec<u8>,
+    header: Header,
+    meta: ArtifactMeta,
+    tensors: Vec<TensorMeta>,
+    index: Vec<IndexEntry>,
+}
+
+impl Artifact {
+    /// Read and validate an artifact file.
+    pub fn open(path: &Path) -> anyhow::Result<Self> {
+        let buf = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("cannot read artifact {path:?}: {e}"))?;
+        Self::from_bytes(buf).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Validate container bytes: header, section bounds, manifest/index
+    /// agreement, blob geometry, and every tensor checksum.  After this
+    /// returns `Ok`, views are infallible except for caller errors
+    /// (bad index, rung above the stored top).
+    pub fn from_bytes(buf: Vec<u8>) -> anyhow::Result<Self> {
+        let header = Header::parse(&buf)?;
+        anyhow::ensure!(
+            header.file_len as usize == buf.len(),
+            "file is {} bytes but the header records {} (truncated?)",
+            buf.len(),
+            header.file_len
+        );
+        let m_off = header.manifest_off as usize;
+        let m_len = header.manifest_len as usize;
+        let idx_off = header.index_off as usize;
+        let count = header.tensor_count as usize;
+        let data_off = header.data_off as usize;
+        let m_end = m_off
+            .checked_add(m_len)
+            .ok_or_else(|| anyhow::anyhow!("manifest range overflows"))?;
+        let idx_end = count
+            .checked_mul(INDEX_ENTRY_LEN)
+            .and_then(|n| idx_off.checked_add(n))
+            .ok_or_else(|| anyhow::anyhow!("index range overflows"))?;
+        anyhow::ensure!(
+            m_off >= HEADER_LEN
+                && m_end <= idx_off
+                && idx_end <= data_off
+                && data_off <= buf.len(),
+            "corrupt .sefp section layout (manifest {m_off}+{m_len}, index {idx_off}x{count}, \
+             data {data_off}, file {})",
+            buf.len()
+        );
+
+        let mtext = std::str::from_utf8(&buf[m_off..m_end])
+            .map_err(|_| anyhow::anyhow!("embedded manifest is not UTF-8"))?;
+        let v = json::parse(mtext).map_err(|e| anyhow::anyhow!("embedded manifest: {e}"))?;
+        let group_size = v.req_usize("group_size")?;
+        anyhow::ensure!(group_size >= 1, "manifest group_size must be positive");
+        let rounding: Rounding = v
+            .req_str("rounding")?
+            .parse()
+            .map_err(|e: String| anyhow::anyhow!("manifest rounding: {e}"))?;
+        let top = Precision::from_num(
+            v.req("top")?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("manifest top not a number"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("manifest top: {e}"))?;
+        let config = match v.get("config") {
+            None => None,
+            Some(c) => Some(ModelConfig::from_json(c)?),
+        };
+        let mut tensors = Vec::with_capacity(count);
+        for t in v
+            .req("tensors")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest tensors not an array"))?
+        {
+            let mut shape = Vec::new();
+            for d in t
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("tensor shape not an array"))?
+            {
+                shape.push(
+                    d.as_usize().ok_or_else(|| anyhow::anyhow!("shape dim not a number"))?,
+                );
+            }
+            tensors.push(TensorMeta {
+                name: t.req_str("name")?,
+                quantized: t
+                    .req("quantized")?
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("tensor quantized not a bool"))?,
+                shape,
+            });
+        }
+        anyhow::ensure!(
+            tensors.len() == count,
+            "manifest lists {} tensors, header records {count}",
+            tensors.len()
+        );
+
+        let mut index = Vec::with_capacity(count);
+        for (i, tm) in tensors.iter().enumerate() {
+            let at = idx_off + i * INDEX_ENTRY_LEN;
+            let e = IndexEntry::parse(&buf[at..at + INDEX_ENTRY_LEN])
+                .map_err(|err| anyhow::anyhow!("tensor {:?}: {err}", tm.name))?;
+            let len = e.len as usize;
+            // every arithmetic step below runs on untrusted fields:
+            // checked, so a crafted container errors instead of panicking
+            let numel = tm
+                .shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .ok_or_else(|| {
+                    anyhow::anyhow!("tensor {:?}: shape {:?} overflows", tm.name, tm.shape)
+                })?;
+            anyhow::ensure!(
+                numel == len,
+                "tensor {:?}: shape {:?} has {numel} elements, index records {len}",
+                tm.name,
+                tm.shape
+            );
+            let start = e.data_off as usize;
+            let end = start
+                .checked_add(e.data_len as usize)
+                .ok_or_else(|| anyhow::anyhow!("tensor {:?}: blob range overflows", tm.name))?;
+            anyhow::ensure!(
+                start >= data_off && end <= buf.len(),
+                "tensor {:?}: blob [{start}, {end}) out of bounds",
+                tm.name
+            );
+            match e.kind {
+                TensorKind::Packed => {
+                    anyhow::ensure!(
+                        tm.quantized,
+                        "tensor {:?}: packed blob but manifest says not quantized",
+                        tm.name
+                    );
+                    let n_groups = len.div_ceil(group_size);
+                    anyhow::ensure!(
+                        e.n_groups as usize == n_groups,
+                        "tensor {:?}: {} groups recorded, {n_groups} expected for {len} \
+                         elements at group size {group_size}",
+                        tm.name,
+                        e.n_groups
+                    );
+                    let expect =
+                        checked_packed_blob_len(len, n_groups, top.m()).ok_or_else(|| {
+                            anyhow::anyhow!("tensor {:?}: plane layout size overflows", tm.name)
+                        })?;
+                    anyhow::ensure!(
+                        e.data_len as usize == expect,
+                        "tensor {:?}: blob is {} bytes, plane layout expects {expect}",
+                        tm.name,
+                        e.data_len
+                    );
+                }
+                TensorKind::RawF32 => {
+                    anyhow::ensure!(
+                        !tm.quantized,
+                        "tensor {:?}: raw f32 blob but manifest says quantized",
+                        tm.name
+                    );
+                    anyhow::ensure!(
+                        e.n_groups == 0,
+                        "tensor {:?}: raw f32 blob cannot have groups",
+                        tm.name
+                    );
+                    let expect = len.checked_mul(4).ok_or_else(|| {
+                        anyhow::anyhow!("tensor {:?}: raw f32 size overflows", tm.name)
+                    })?;
+                    anyhow::ensure!(
+                        e.data_len as usize == expect,
+                        "tensor {:?}: raw blob is {} bytes, {len} f32 need {expect}",
+                        tm.name,
+                        e.data_len
+                    );
+                }
+            }
+            let got = fnv1a64(&buf[start..end]);
+            anyhow::ensure!(
+                got == e.checksum,
+                "tensor {:?}: checksum mismatch (stored {:#018x}, computed {got:#018x}) — \
+                 artifact corrupt",
+                tm.name,
+                e.checksum
+            );
+            index.push(e);
+        }
+        Ok(Artifact {
+            buf,
+            header,
+            meta: ArtifactMeta { top, group_size, rounding, config },
+            tensors,
+            index,
+        })
+    }
+
+    pub fn header(&self) -> &Header {
+        &self.header
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Per-tensor manifest entries, in storage order.
+    pub fn tensors(&self) -> &[TensorMeta] {
+        &self.tensors
+    }
+
+    /// Per-tensor index records, in storage order.
+    pub fn index(&self) -> &[IndexEntry] {
+        &self.index
+    }
+
+    pub fn tensor_count(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Total container size in bytes.
+    pub fn file_len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Total packed payload bytes (sum of tensor blobs, no padding).
+    pub fn data_bytes(&self) -> usize {
+        self.index.iter().map(|e| e.data_len as usize).sum()
+    }
+
+    /// THE truncate-at-load entry point: a borrowed view of quantized
+    /// tensor `i` at rung `p`.  Pure pointer arithmetic — the view
+    /// aliases the exponent plane, the sign plane, and the first
+    /// `p.m()` mantissa planes of the container buffer; a lower rung
+    /// simply borrows fewer planes.  Errors if `i` is raw f32 or `p`
+    /// exceeds the stored top (mantissa bits cannot be invented).
+    pub fn view(&self, i: usize, p: Precision) -> anyhow::Result<TensorView<'_>> {
+        let e = self
+            .index
+            .get(i)
+            .ok_or_else(|| {
+                anyhow::anyhow!("tensor index {i} out of range ({})", self.index.len())
+            })?;
+        anyhow::ensure!(
+            e.kind == TensorKind::Packed,
+            "tensor {:?} is raw f32 — use raw_f32",
+            self.tensors[i].name
+        );
+        anyhow::ensure!(
+            p <= self.meta.top,
+            "rung {p} above the stored {} master",
+            self.meta.top
+        );
+        let len = e.len as usize;
+        let n_groups = e.n_groups as usize;
+        let stride = len.div_ceil(8);
+        let exp_bytes = (n_groups * 5).div_ceil(8);
+        let blob = &self.buf[e.data_off as usize..(e.data_off + e.data_len) as usize];
+        let (exp, rest) = blob.split_at(exp_bytes);
+        let (sign, mant) = rest.split_at(stride);
+        Ok(TensorView {
+            precision: p,
+            top: self.meta.top,
+            group_size: self.meta.group_size,
+            len,
+            n_groups,
+            exp,
+            sign,
+            planes: &mant[..p.m() as usize * stride],
+        })
+    }
+
+    /// Copy out a non-quantized tensor (norm gains, pos_embed).
+    pub fn raw_f32(&self, i: usize) -> anyhow::Result<Vec<f32>> {
+        let e = self
+            .index
+            .get(i)
+            .ok_or_else(|| {
+                anyhow::anyhow!("tensor index {i} out of range ({})", self.index.len())
+            })?;
+        anyhow::ensure!(
+            e.kind == TensorKind::RawF32,
+            "tensor {:?} is SEFP-packed — use view",
+            self.tensors[i].name
+        );
+        let blob = &self.buf[e.data_off as usize..(e.data_off + e.data_len) as usize];
+        Ok(blob
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    /// Bytes an open at rung `p` actually touches: exponent + sign
+    /// planes plus `p.m()` mantissa planes per packed tensor, and raw
+    /// f32 tensors whole — the per-rung deployment footprint `inspect`
+    /// reports.
+    pub fn view_bytes_at(&self, p: Precision) -> usize {
+        self.index
+            .iter()
+            .map(|e| match e.kind {
+                // a view at rung p borrows exactly the blob a p-top
+                // master would occupy — exp + sign + p.m() planes
+                TensorKind::Packed => {
+                    packed_blob_len(e.len as usize, e.n_groups as usize, p.m())
+                }
+                TensorKind::RawF32 => e.data_len as usize,
+            })
+            .sum()
+    }
+}
+
+/// A borrowed, zero-copy view of one packed tensor at a chosen rung.
+/// Holds three slices into the artifact buffer and nothing else;
+/// materializing [`SefpTensor`] / f32 is explicit.
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    /// the rung this view was opened at
+    pub precision: Precision,
+    /// the precision the planes are stored at
+    pub top: Precision,
+    pub group_size: usize,
+    pub len: usize,
+    pub n_groups: usize,
+    exp: &'a [u8],
+    sign: &'a [u8],
+    /// first `precision.m()` mantissa planes (MSB first), each
+    /// `len.div_ceil(8)` bytes
+    planes: &'a [u8],
+}
+
+impl TensorView<'_> {
+    /// Bytes this view borrows from the artifact buffer — its entire
+    /// footprint; nothing is allocated.
+    pub fn borrowed_bytes(&self) -> usize {
+        self.exp.len() + self.sign.len() + self.planes.len()
+    }
+
+    /// Materialize the working representation: plane gather + shared
+    /// exponent unpack, pure integer work.  Because the planes are MSB
+    /// first, gathering only the borrowed prefix IS the mantissa shift
+    /// `sig >> (top.m() - precision.m())` — bit-identical to
+    /// `SefpTensor::truncate` on a fully-loaded master.
+    pub fn to_tensor(&self) -> SefpTensor {
+        let m = self.precision.m() as usize;
+        let stride = self.len.div_ceil(8);
+        let mut exponents = Vec::with_capacity(self.n_groups);
+        for g in 0..self.n_groups {
+            exponents.push((BitVec::read_bits_in(self.exp, g * 5, 5) as i32 + EXP_MIN) as i8);
+        }
+        let mut significands = Vec::with_capacity(self.len);
+        // gather byte-column-wise: hoist the m plane bytes covering 8
+        // elements once, then compose each element's magnitude from
+        // registers — this is the artifact load's hot loop
+        let mut col = [0u8; Precision::MAX.m() as usize];
+        for byte in 0..stride {
+            for (k, c) in col.iter_mut().take(m).enumerate() {
+                *c = self.planes[k * stride + byte];
+            }
+            let sb = self.sign[byte];
+            let lo = byte * 8;
+            let hi = (lo + 8).min(self.len);
+            for bit in 0..hi - lo {
+                let mut mag = 0u16;
+                for &c in col.iter().take(m) {
+                    mag = (mag << 1) | ((c >> bit) & 1) as u16;
+                }
+                let neg = (sb >> bit) & 1 == 1;
+                significands.push(if neg { -(mag as i16) } else { mag as i16 });
+            }
+        }
+        SefpTensor {
+            precision: self.precision,
+            group_size: self.group_size,
+            len: self.len,
+            exponents,
+            significands,
+        }
+    }
+
+    /// Re-pack into the interleaved `PackedSefp` bitstream — bit-exact
+    /// with `PackedSefp::encode` at this rung when the master was
+    /// stored with `Rounding::Trunc` (the ladder-exactness contract,
+    /// property-tested in `rust/tests/artifact_props.rs`).
+    pub fn to_packed(&self) -> PackedSefp {
+        PackedSefp::from_tensor(&self.to_tensor())
+    }
+
+    /// Dequantize to f32 — explicit and last, never implicit on the
+    /// load path.
+    pub fn decode(&self) -> Vec<f32> {
+        self.to_tensor().decode()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::writer::{pack_params, ArtifactMeta};
+    use super::*;
+    use crate::runtime::ParamStore;
+    use crate::sefp::SefpSpec;
+
+    fn params() -> ParamStore {
+        let mut rng = crate::data::Rng::new(7);
+        ParamStore {
+            tensors: vec![
+                (0..200).map(|_| rng.normal() as f32 * 0.2).collect(),
+                vec![1.0, -2.0, 0.5],
+            ],
+            names: vec!["w".into(), "ln".into()],
+            shapes: vec![vec![10, 20], vec![3]],
+            quantized: vec![true, false],
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_views() {
+        let p = params();
+        let meta = ArtifactMeta::new(Precision::of(8));
+        let a = Artifact::from_bytes(pack_params(&p, &meta)).unwrap();
+        assert_eq!(a.tensor_count(), 2);
+        assert_eq!(a.meta().top, Precision::of(8));
+        let direct = SefpTensor::encode(&p.tensors[0], &SefpSpec::new(Precision::of(8)));
+        assert_eq!(a.view(0, Precision::of(8)).unwrap().to_tensor(), direct);
+        assert_eq!(a.raw_f32(1).unwrap(), p.tensors[1]);
+        // truncate-at-load: fewer borrowed bytes at a lower rung
+        let v8 = a.view(0, Precision::of(8)).unwrap();
+        let v3 = a.view(0, Precision::of(3)).unwrap();
+        assert!(v3.borrowed_bytes() < v8.borrowed_bytes());
+        assert_eq!(v3.to_tensor(), direct.truncate(Precision::of(3)));
+    }
+
+    #[test]
+    fn kind_and_rung_errors() {
+        let a = Artifact::from_bytes(pack_params(&params(), &ArtifactMeta::new(Precision::of(6))))
+            .unwrap();
+        assert!(a.view(1, Precision::of(4)).is_err(), "raw tensor has no packed view");
+        assert!(a.raw_f32(0).is_err(), "packed tensor is not raw");
+        assert!(a.view(0, Precision::of(8)).is_err(), "rung above stored top");
+        assert!(a.view(2, Precision::of(4)).is_err(), "index out of range");
+    }
+
+    #[test]
+    fn view_bytes_at_matches_borrowed_bytes() {
+        let p = params();
+        let a = Artifact::from_bytes(pack_params(&p, &ArtifactMeta::new(Precision::of(8))))
+            .unwrap();
+        for rung in [Precision::of(8), Precision::of(4)] {
+            let borrowed = a.view(0, rung).unwrap().borrowed_bytes() + p.tensors[1].len() * 4;
+            assert_eq!(a.view_bytes_at(rung), borrowed);
+        }
+    }
+}

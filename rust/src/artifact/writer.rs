@@ -1,0 +1,289 @@
+//! `.sefp` writer: encode an f32 `ParamStore` once at the ladder top and
+//! lay the planes out in the v1 container.
+//!
+//! Packing is the ONLY place f32 weights are touched; everything
+//! downstream of the written file is integer work.  The output is fully
+//! deterministic — same weights + same [`ArtifactMeta`] produce
+//! byte-identical files (frozen by `rust/tests/artifact_golden.rs`).
+
+use std::path::Path;
+
+use crate::json::{self, Value};
+use crate::runtime::manifest::ModelConfig;
+use crate::runtime::ParamStore;
+use crate::sefp::packed::BitVec;
+use crate::sefp::{Precision, Rounding, SefpSpec, SefpTensor, EXP_MIN};
+
+use super::checksum::fnv1a64;
+use super::format::{
+    align_up, packed_blob_len, Header, IndexEntry, TensorKind, HEADER_LEN, INDEX_ENTRY_LEN,
+    VERSION,
+};
+
+/// Per-tensor metadata carried in the embedded manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// SEFP-packed (true) vs raw f32 passthrough (false) — mirrors the
+    /// training graph's quantization rule
+    pub quantized: bool,
+}
+
+/// Container-level metadata: what the packed master IS.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// ladder top: the precision the mantissa planes are stored at;
+    /// every rung at or below it opens zero-copy
+    pub top: Precision,
+    pub group_size: usize,
+    /// rounding the master was encoded with (truncate-at-load equals
+    /// re-encoding only under `Rounding::Trunc` — the ladder-exactness
+    /// contract)
+    pub rounding: Rounding,
+    /// model architecture, when packing from a training manifest
+    pub config: Option<ModelConfig>,
+}
+
+impl ArtifactMeta {
+    /// Repo defaults at `top`: group size 64, round-toward-zero, no
+    /// model config.
+    pub fn new(top: Precision) -> Self {
+        ArtifactMeta {
+            top,
+            group_size: crate::sefp::GROUP_SIZE,
+            rounding: Rounding::Trunc,
+            config: None,
+        }
+    }
+
+    /// The codec spec this artifact's planes were produced with.
+    pub fn spec(&self) -> SefpSpec {
+        SefpSpec::new(self.top)
+            .with_group_size(self.group_size)
+            .with_rounding(self.rounding)
+    }
+}
+
+/// Serialize the embedded manifest (deterministic: object keys are
+/// emitted sorted).
+fn manifest_json(meta: &ArtifactMeta, tensors: &[TensorMeta]) -> String {
+    let mut fields: Vec<(&str, Value)> = Vec::new();
+    if let Some(cfg) = &meta.config {
+        fields.push(("config", cfg.to_json()));
+    }
+    fields.push(("group_size", json::n(meta.group_size as f64)));
+    fields.push(("rounding", json::s(meta.rounding.to_string())));
+    fields.push((
+        "tensors",
+        json::arr(
+            tensors
+                .iter()
+                .map(|t| {
+                    json::obj(vec![
+                        ("name", json::s(t.name.clone())),
+                        ("quantized", Value::Bool(t.quantized)),
+                        (
+                            "shape",
+                            json::arr(t.shape.iter().map(|&d| json::n(d as f64)).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        ),
+    ));
+    fields.push(("top", json::n(meta.top.m() as f64)));
+    json::obj(fields).to_string()
+}
+
+/// Bit-plane layout of one quantized tensor: 5-bit shared exponents,
+/// then the sign plane, then `m` mantissa planes ordered most
+/// significant bit first — so that opening at a lower rung is a plane
+/// *prefix*, not a re-pack.
+fn pack_planes(t: &SefpTensor) -> Vec<u8> {
+    let m = t.precision.m() as usize;
+    let stride = t.len.div_ceil(8);
+    let exp_bytes = (t.n_groups() * 5).div_ceil(8);
+    let mut blob = vec![0u8; exp_bytes + stride * (1 + m)];
+    let mut exps = BitVec::with_capacity(t.n_groups() * 5);
+    for &e in &t.exponents {
+        exps.push_bits((e as i32 - EXP_MIN) as u32, 5);
+    }
+    blob[..exps.data.len()].copy_from_slice(&exps.data);
+    let (sign, mant) = blob[exp_bytes..].split_at_mut(stride);
+    for (i, &s) in t.significands.iter().enumerate() {
+        let byte = i / 8;
+        let bit = 1u8 << (i % 8);
+        if s < 0 {
+            sign[byte] |= bit;
+        }
+        let mag = s.unsigned_abs();
+        for (k, plane) in mant.chunks_exact_mut(stride).enumerate() {
+            if (mag >> (m - 1 - k)) & 1 == 1 {
+                plane[byte] |= bit;
+            }
+        }
+    }
+    debug_assert_eq!(blob.len(), packed_blob_len(t.len, t.n_groups(), t.precision.m()));
+    blob
+}
+
+/// Pack a full parameter store into v1 container bytes.  Quantized
+/// tensors are SEFP-encoded at `meta.top` and stored as bit-planes;
+/// non-quantized tensors are stored as raw f32 once.
+pub fn pack_params(params: &ParamStore, meta: &ArtifactMeta) -> Vec<u8> {
+    assert!(meta.group_size >= 1, "artifact group_size must be positive");
+    let spec = meta.spec();
+    let tensors: Vec<TensorMeta> = params
+        .names
+        .iter()
+        .zip(&params.shapes)
+        .zip(&params.quantized)
+        .map(|((name, shape), &quantized)| TensorMeta {
+            name: name.clone(),
+            shape: shape.clone(),
+            quantized,
+        })
+        .collect();
+    let manifest = manifest_json(meta, &tensors);
+
+    let mut blobs: Vec<(TensorKind, u64, u64, Vec<u8>)> = Vec::with_capacity(params.tensors.len());
+    for (i, t) in params.tensors.iter().enumerate() {
+        if params.quantized[i] {
+            let enc = SefpTensor::encode(t, &spec);
+            blobs.push((
+                TensorKind::Packed,
+                t.len() as u64,
+                enc.n_groups() as u64,
+                pack_planes(&enc),
+            ));
+        } else {
+            let mut raw = Vec::with_capacity(t.len() * 4);
+            for v in t {
+                raw.extend_from_slice(&v.to_le_bytes());
+            }
+            blobs.push((TensorKind::RawF32, t.len() as u64, 0, raw));
+        }
+    }
+
+    let manifest_off = HEADER_LEN;
+    let index_off = align_up(manifest_off + manifest.len());
+    let data_off = align_up(index_off + blobs.len() * INDEX_ENTRY_LEN);
+    let mut index = Vec::with_capacity(blobs.len());
+    let mut off = data_off;
+    for (kind, len, n_groups, blob) in &blobs {
+        index.push(IndexEntry {
+            kind: *kind,
+            len: *len,
+            n_groups: *n_groups,
+            data_off: off as u64,
+            data_len: blob.len() as u64,
+            checksum: fnv1a64(blob),
+        });
+        off = align_up(off + blob.len());
+    }
+    // the file ends where its data does — no padding after the final blob
+    let file_len = index
+        .last()
+        .map(|e| (e.data_off + e.data_len) as usize)
+        .unwrap_or(data_off);
+    let header = Header {
+        version: VERSION,
+        flags: 0,
+        manifest_off: manifest_off as u64,
+        manifest_len: manifest.len() as u64,
+        index_off: index_off as u64,
+        tensor_count: blobs.len() as u64,
+        data_off: data_off as u64,
+        file_len: file_len as u64,
+    };
+    let mut out = vec![0u8; file_len];
+    out[..HEADER_LEN].copy_from_slice(&header.to_bytes());
+    out[manifest_off..manifest_off + manifest.len()].copy_from_slice(manifest.as_bytes());
+    for (i, e) in index.iter().enumerate() {
+        let at = index_off + i * INDEX_ENTRY_LEN;
+        out[at..at + INDEX_ENTRY_LEN].copy_from_slice(&e.to_bytes());
+    }
+    for (e, (_, _, _, blob)) in index.iter().zip(&blobs) {
+        let at = e.data_off as usize;
+        out[at..at + blob.len()].copy_from_slice(blob);
+    }
+    out
+}
+
+/// Pack and write to `path` (directories created as needed).  Returns
+/// the number of bytes written.
+pub fn write_artifact(
+    path: &Path,
+    params: &ParamStore,
+    meta: &ArtifactMeta,
+) -> anyhow::Result<u64> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let bytes = pack_params(params, meta);
+    std::fs::write(path, &bytes)
+        .map_err(|e| anyhow::anyhow!("cannot write artifact {path:?}: {e}"))?;
+    Ok(bytes.len() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_is_sorted_and_minimal() {
+        let meta = ArtifactMeta::new(Precision::of(8));
+        let tensors = [TensorMeta { name: "w".into(), shape: vec![2, 3], quantized: true }];
+        let m = manifest_json(&meta, &tensors);
+        assert_eq!(
+            m,
+            r#"{"group_size":64,"rounding":"trunc","tensors":[{"name":"w","quantized":true,"shape":[2,3]}],"top":8}"#
+        );
+        // config is present when provided, and keys stay sorted
+        let meta = ArtifactMeta {
+            config: Some(ModelConfig {
+                vocab_size: 320,
+                d_model: 128,
+                n_heads: 4,
+                n_layers: 2,
+                d_ff: 384,
+                max_seq: 64,
+                batch_size: 8,
+                group_size: 64,
+                rounding: "trunc".into(),
+            }),
+            ..ArtifactMeta::new(Precision::of(8))
+        };
+        let m = manifest_json(&meta, &tensors);
+        assert!(m.starts_with(r#"{"config":{"batch_size":8,"#), "{m}");
+        assert!(crate::json::parse(&m).is_ok());
+    }
+
+    #[test]
+    fn plane_layout_hand_example() {
+        // two weights [1.0, -0.5] at m=2, group 2: E=0, step=0.5,
+        // sigs = [2, -1]; exp plane = [14] (E-EXP_MIN, 5-bit LSB-first),
+        // sign plane = [0b10], mantissa planes MSB->LSB = [0b01, 0b10]
+        let spec = SefpSpec::new(Precision::of(2)).with_group_size(2);
+        let t = SefpTensor::encode(&[1.0, -0.5], &spec);
+        assert_eq!(t.significands, vec![2, -1]);
+        assert_eq!(pack_planes(&t), vec![14, 2, 1, 2]);
+    }
+
+    #[test]
+    fn empty_store_packs_to_skeleton() {
+        let params = ParamStore {
+            tensors: vec![],
+            names: vec![],
+            shapes: vec![],
+            quantized: vec![],
+        };
+        let bytes = pack_params(&params, &ArtifactMeta::new(Precision::of(8)));
+        let h = Header::parse(&bytes).unwrap();
+        assert_eq!(h.tensor_count, 0);
+        assert_eq!(h.file_len as usize, bytes.len());
+    }
+}

@@ -365,6 +365,11 @@ pub struct ServeConfig {
     /// `PrecisionLadder` (the single SEFP master is always resident and
     /// not charged; cached truncated views are LRU-evicted past this)
     pub ladder_budget_bytes: usize,
+    /// packed `.sefp` container to serve from (`rust/src/artifact/`):
+    /// when set, the serve path builds its ladder with
+    /// `PrecisionLadder::from_artifact` — no f32 master parse/encode on
+    /// startup — instead of encoding an f32 checkpoint
+    pub sefp_artifact: Option<PathBuf>,
     /// scheduler anti-starvation bound: a precision queue whose head has
     /// waited this long is scheduled next regardless of score (in-flight
     /// decodes finish first — see `serve::SchedPolicy`)
@@ -388,6 +393,7 @@ impl Default for ServeConfig {
             max_wait_ms: 500,
             age_weight: 1.0,
             ladder_budget_bytes: 256 << 20,
+            sefp_artifact: None,
         }
     }
 }
@@ -405,6 +411,13 @@ impl ServeConfig {
             ("max_wait_ms", n(self.max_wait_ms as f64)),
             ("age_weight", n(self.age_weight)),
             ("ladder_budget_bytes", n(self.ladder_budget_bytes as f64)),
+            (
+                "sefp_artifact",
+                match &self.sefp_artifact {
+                    Some(p) => s(p.display().to_string()),
+                    None => Value::Null,
+                },
+            ),
         ])
     }
 
@@ -463,6 +476,11 @@ impl ServeConfig {
         }
         if let Some(x) = v.get("ladder_budget_bytes").and_then(Value::as_usize) {
             c.ladder_budget_bytes = x;
+        }
+        match v.get("sefp_artifact") {
+            Some(Value::Str(p)) => c.sefp_artifact = Some(PathBuf::from(p)),
+            Some(Value::Null) | None => {}
+            Some(other) => anyhow::bail!("sefp_artifact not a path string: {other:?}"),
         }
         Ok(c)
     }
@@ -604,6 +622,24 @@ mod tests {
         assert_eq!(d.policy.slo_p95_ms, 12.5);
         assert_eq!(d.policy.probe_rate, 0.25);
         assert_eq!(d.policy.quality_floor, PolicyConfig::default().quality_floor);
+    }
+
+    #[test]
+    fn serve_sefp_artifact_roundtrip() {
+        let c = ServeConfig {
+            sefp_artifact: Some(PathBuf::from("runs/master.sefp")),
+            ..ServeConfig::default()
+        };
+        let d = ServeConfig::from_json(&crate::json::parse(&c.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(d.sefp_artifact, Some(PathBuf::from("runs/master.sefp")));
+        // absent and null both mean "no artifact"
+        let d = ServeConfig::from_json(&crate::json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d.sefp_artifact, None);
+        let v = crate::json::parse(r#"{"sefp_artifact":null}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&v).unwrap().sefp_artifact, None);
+        let v = crate::json::parse(r#"{"sefp_artifact":42}"#).unwrap();
+        assert!(ServeConfig::from_json(&v).is_err());
     }
 
     #[test]

@@ -6,6 +6,9 @@
 //! run the AOT train step at that width, route the gradients through LAA
 //! (full OTARo only), and apply SGD updates to the f32 master weights.
 
+use std::path::{Path, PathBuf};
+
+use crate::artifact::{write_artifact, ArtifactMeta};
 use crate::config::{Method, TrainConfig};
 use crate::data::Batch;
 use crate::metrics::{MetricsSink, Timer};
@@ -179,6 +182,37 @@ impl<'a, B: BatchSource> Trainer<'a, B> {
             wall_secs: timer.secs(),
             final_loss_ema: ema,
         })
+    }
+}
+
+impl<B: BatchSource> Trainer<'_, B> {
+    /// Persist the run's weights twice: the raw f32 checkpoint at `out`
+    /// (loadable by `ParamStore::load_into`, unchanged format) and the
+    /// packed single-master `.sefp` artifact next to it (same stem,
+    /// `.sefp` extension) — so every training run yields the on-device
+    /// container the serve layer can open with
+    /// `PrecisionLadder::from_artifact`, without a separate pack step.
+    ///
+    /// The artifact's ladder top is the highest width the run trained
+    /// with; group size and rounding come from the engine manifest.
+    /// Returns the artifact path.
+    pub fn save_checkpoint(&self, out: &Path) -> anyhow::Result<PathBuf> {
+        self.params.save(out)?;
+        let model = &self.engine.manifest.config;
+        let meta = ArtifactMeta {
+            // max(), not first(): widths are canonicalized highest-first
+            // only by the config parser, and the field is pub
+            top: self.cfg.widths.iter().copied().max().unwrap_or(Precision::of(8)),
+            group_size: model.group_size,
+            rounding: model
+                .rounding
+                .parse()
+                .map_err(|e: String| anyhow::anyhow!("manifest rounding: {e}"))?,
+            config: Some(model.clone()),
+        };
+        let sefp = out.with_extension("sefp");
+        write_artifact(&sefp, &*self.params, &meta)?;
+        Ok(sefp)
     }
 }
 

@@ -80,6 +80,9 @@ pub fn info(ctx: &Ctx) -> anyhow::Result<()> {
     println!("params:       {} tensors, {} total", m.params.len(), m.total_params());
     println!("widths:       {:?}", m.mantissa_widths);
     println!("artifacts:    {}", m.artifacts.len());
+    if let Some(p) = m.sefp_artifact() {
+        println!("sefp master:  {p}");
+    }
     Ok(())
 }
 
@@ -97,16 +100,18 @@ pub fn pretrain(ctx: &Ctx, steps: usize, lr: f32, out: Option<PathBuf>) -> anyho
         ..TrainConfig::default()
     };
     let mut sink = ctx.sink("pretrain");
-    let report = Trainer::new(&mut engine, &mut params, &mut batches, cfg).run(&mut sink)?;
     let out = out.unwrap_or_else(|| ctx.pretrained_path());
-    params.save(&out)?;
+    let mut trainer = Trainer::new(&mut engine, &mut params, &mut batches, cfg);
+    let report = trainer.run(&mut sink)?;
+    let sefp = trainer.save_checkpoint(&out)?;
     println!(
-        "pretrained {} steps: loss {:.3} -> {:.3} (ema {:.3}), saved {}",
+        "pretrained {} steps: loss {:.3} -> {:.3} (ema {:.3}), saved {} (+ packed master {})",
         steps,
         report.losses.first().copied().unwrap_or(f32::NAN),
         report.losses.last().copied().unwrap_or(f32::NAN),
         report.final_loss_ema,
-        out.display()
+        out.display(),
+        sefp.display()
     );
     Ok(())
 }
@@ -135,29 +140,33 @@ pub fn finetune(
         ..TrainConfig::default()
     };
     let mut sink = ctx.sink(&format!("finetune_{method}"));
-    let report = match dataset {
+    let out = out.unwrap_or_else(|| ctx.runs.join(format!("finetuned_{method}.bin")));
+    let (report, sefp) = match dataset {
         "tinytext" => {
             let (train, _) = corpus::tinytext_corpus(&lang, ctx.seed, 8_000, 1_000);
             let mut batches = StreamBatcher::new(train, b, t, ctx.seed ^ 0x5);
-            Trainer::new(&mut engine, &mut params, &mut batches, cfg).run(&mut sink)?
+            let mut trainer = Trainer::new(&mut engine, &mut params, &mut batches, cfg);
+            let report = trainer.run(&mut sink)?;
+            (report, trainer.save_checkpoint(&out)?)
         }
         "instruct" => {
             let pairs = corpus::instruct_corpus(&lang, ctx.seed, 4_000);
             let mut batches = PairBatcher::new(pairs, b, t, ctx.seed ^ 0x6);
-            Trainer::new(&mut engine, &mut params, &mut batches, cfg).run(&mut sink)?
+            let mut trainer = Trainer::new(&mut engine, &mut params, &mut batches, cfg);
+            let report = trainer.run(&mut sink)?;
+            (report, trainer.save_checkpoint(&out)?)
         }
         other => anyhow::bail!("unknown dataset {other:?} (tinytext|instruct)"),
     };
-    let out = out.unwrap_or_else(|| ctx.runs.join(format!("finetuned_{method}.bin")));
-    params.save(&out)?;
     println!(
-        "finetuned [{method}] {} steps, final ema loss {:.3}, path hist {:?}, laa flush/defer {}/{}; saved {}",
+        "finetuned [{method}] {} steps, final ema loss {:.3}, path hist {:?}, laa flush/defer {}/{}; saved {} (+ packed master {})",
         steps,
         report.final_loss_ema,
         report.width_histogram,
         report.laa_flushes,
         report.laa_deferred,
-        out.display()
+        out.display(),
+        sefp.display()
     );
     Ok(())
 }
@@ -197,12 +206,97 @@ pub fn eval_checkpoint(ctx: &Ctx, checkpoint: Option<PathBuf>, mc_items: usize) 
     Ok(())
 }
 
-pub fn serve_demo(ctx: &Ctx, n_requests: usize, checkpoint: Option<PathBuf>) -> anyhow::Result<()> {
+pub fn serve_demo(
+    ctx: &Ctx,
+    n_requests: usize,
+    checkpoint: Option<PathBuf>,
+    serve_config: Option<PathBuf>,
+) -> anyhow::Result<()> {
     let engine = ctx.engine()?;
-    let params = ctx.params(&engine, checkpoint)?;
-    let serve_cfg = crate::config::ServeConfig::default();
-    let ladder = PrecisionLadder::from_params(&params)
-        .with_budget(serve_cfg.ladder_budget_bytes);
+    let mut serve_cfg = match &serve_config {
+        Some(p) => {
+            let text = std::fs::read_to_string(p)
+                .map_err(|e| anyhow::anyhow!("cannot read serve config {p:?}: {e}"))?;
+            crate::config::ServeConfig::from_json(&crate::json::parse(&text)?)?
+        }
+        None => crate::config::ServeConfig::default(),
+    };
+    // a packed .sefp master (config `sefp_artifact`, or recorded in the
+    // training manifest) skips the f32 parse + encode on startup.  An
+    // explicit --checkpoint always wins — the artifact may hold other
+    // weights; a config-specified artifact must exist (a typo is a
+    // config error, not a silent fallback), and a manifest-recorded one
+    // may be stale so it falls back with a warning.
+    let artifact_path = if checkpoint.is_some() {
+        None
+    } else if let Some(p) = serve_cfg.sefp_artifact.clone() {
+        anyhow::ensure!(
+            p.exists(),
+            "configured sefp_artifact {} does not exist",
+            p.display()
+        );
+        Some(p)
+    } else {
+        match engine.manifest.sefp_artifact().map(|p| ctx.artifacts.join(p)) {
+            Some(p) if p.exists() => Some(p),
+            Some(p) => {
+                eprintln!(
+                    "manifest records sefp master {} but it is missing — serving from the \
+                     f32 checkpoint instead",
+                    p.display()
+                );
+                None
+            }
+            None => None,
+        }
+    };
+    let ladder = match artifact_path {
+        Some(p) => {
+            let a = crate::artifact::Artifact::open(&p)?;
+            // the container is self-consistent, but it must also be THIS
+            // model: a stale/mismatched artifact would otherwise surface
+            // as a shape panic or garbage logits on the first request
+            anyhow::ensure!(
+                a.tensors().len() == engine.manifest.params.len(),
+                "artifact {} holds {} tensors, engine manifest lists {}",
+                p.display(),
+                a.tensors().len(),
+                engine.manifest.params.len()
+            );
+            for (tm, pe) in a.tensors().iter().zip(&engine.manifest.params) {
+                anyhow::ensure!(
+                    tm.name == pe.name && tm.shape == pe.shape,
+                    "artifact tensor {:?} {:?} does not match the engine manifest \
+                     ({:?} {:?}) — wrong artifact for this model",
+                    tm.name,
+                    tm.shape,
+                    pe.name,
+                    pe.shape
+                );
+            }
+            let top = a.meta().top;
+            println!(
+                "serving from packed artifact {} ({} KiB at {top})",
+                p.display(),
+                a.file_len() / 1024
+            );
+            // the serve ladder cannot reach above the stored master —
+            // clamp it so the router snaps every class to a servable
+            // rung instead of erroring at view_at time
+            serve_cfg.ladder.retain(|&w| w <= top);
+            anyhow::ensure!(
+                !serve_cfg.ladder.is_empty(),
+                "serve ladder has no rung at or below the {top} artifact master"
+            );
+            PrecisionLadder::from_artifact(&a)?
+        }
+        None => {
+            // f32 checkpoint startup: read + parse + encode the master
+            let params = ctx.params(&engine, checkpoint)?;
+            PrecisionLadder::from_params(&params)
+        }
+    }
+    .with_budget(serve_cfg.ladder_budget_bytes);
     println!(
         "single-master SEFP ladder: {} KiB (per-precision zoo would be {} KiB)",
         ladder.master_bytes() / 1024,
@@ -269,6 +363,119 @@ pub fn serve_demo(ctx: &Ctx, n_requests: usize, checkpoint: Option<PathBuf>) -> 
             ("queue_ms", crate::json::n(r.queue_ms)),
             ("compute_ms", crate::json::n(r.compute_ms)),
         ]));
+    }
+    Ok(())
+}
+
+/// `otaro pack`: f32 checkpoint -> packed `.sefp` container.  Reads the
+/// training manifest for shapes/config (no PJRT engine needed), so it
+/// runs anywhere the artifacts dir exists.
+pub fn pack_artifact(
+    ctx: &Ctx,
+    checkpoint: Option<PathBuf>,
+    out: Option<PathBuf>,
+    top: Option<Precision>,
+) -> anyhow::Result<()> {
+    let manifest = crate::runtime::Manifest::load(&ctx.artifacts)?;
+    let bin = match checkpoint {
+        Some(p) => p,
+        None => {
+            let pre = ctx.pretrained_path();
+            if pre.exists() {
+                pre
+            } else {
+                ctx.artifacts.join("init_params.bin")
+            }
+        }
+    };
+    let params = ParamStore::from_manifest_bin(&manifest, &bin)?;
+    let top = top
+        .or_else(|| manifest.mantissa_widths.iter().copied().max())
+        .unwrap_or(Precision::of(8));
+    let meta = crate::artifact::ArtifactMeta {
+        top,
+        group_size: manifest.config.group_size,
+        rounding: manifest
+            .config
+            .rounding
+            .parse()
+            .map_err(|e: String| anyhow::anyhow!("manifest rounding: {e}"))?,
+        config: Some(manifest.config.clone()),
+    };
+    let out = out.unwrap_or_else(|| bin.with_extension("sefp"));
+    let written = crate::artifact::write_artifact(&out, &params, &meta)?;
+    let f32_bytes = params.total_len() * 4 + 4096; // + sidecar order of magnitude
+    println!(
+        "packed {} tensors ({} weights) at {top} -> {} ({} KiB; f32 checkpoint {} KiB, \
+         {:.1}% of f32)",
+        params.tensors.len(),
+        params.total_len(),
+        out.display(),
+        written / 1024,
+        (params.total_len() * 4) / 1024,
+        written as f64 / f32_bytes as f64 * 100.0
+    );
+    println!(
+        "record it in manifest.json under artifacts.{} to serve from it",
+        crate::runtime::manifest::SEFP_MASTER_KEY
+    );
+    Ok(())
+}
+
+/// `otaro inspect`: decode a `.sefp` container's header, index, and
+/// per-rung deployment footprint without touching any weights.
+pub fn inspect_artifact(path: &std::path::Path) -> anyhow::Result<()> {
+    let a = crate::artifact::Artifact::open(path)?;
+    let h = a.header();
+    let meta = a.meta();
+    println!("{}", path.display());
+    println!(
+        "  format v{} · {} bytes (manifest {} B @ {}, index {} tensors @ {}, data @ {})",
+        h.version,
+        h.file_len,
+        h.manifest_len,
+        h.manifest_off,
+        h.tensor_count,
+        h.index_off,
+        h.data_off
+    );
+    println!(
+        "  top {} · group_size {} · rounding {} · checksums OK",
+        meta.top, meta.group_size, meta.rounding
+    );
+    if let Some(c) = &meta.config {
+        println!(
+            "  model: d={} h={} L={} ff={} V={} T={}",
+            c.d_model, c.n_heads, c.n_layers, c.d_ff, c.vocab_size, c.max_seq
+        );
+    }
+    println!(
+        "  {:<18} {:>12} {:>8} {:>10}  {:<10} checksum",
+        "tensor", "elems", "groups", "bytes", "kind"
+    );
+    for (tm, e) in a.tensors().iter().zip(a.index()) {
+        println!(
+            "  {:<18} {:>12} {:>8} {:>10}  {:<10} {:#018x}",
+            tm.name,
+            e.len,
+            e.n_groups,
+            e.data_len,
+            if tm.quantized { "sefp" } else { "raw f32" },
+            e.checksum
+        );
+    }
+    println!("  ladder report (borrowed bytes per rung, vs f32 master):");
+    let f32_bytes: usize = a.tensors().iter().map(|t| t.shape.iter().product::<usize>() * 4).sum();
+    for p in Precision::LADDER {
+        if p > meta.top {
+            continue;
+        }
+        let bytes = a.view_bytes_at(p);
+        println!(
+            "    {p}: {:>10} B  ({:.1}% of f32)",
+            bytes,
+            bytes as f64 / f32_bytes.max(1) as f64 * 100.0
+        );
     }
     Ok(())
 }

@@ -15,6 +15,7 @@
 //!     the request path.
 
 pub mod analysis;
+pub mod artifact;
 pub mod benchutil;
 pub mod config;
 pub mod experiments;

@@ -21,7 +21,11 @@ COMMANDS:
              [--dataset tinytext|instruct] [--checkpoint FILE] [--out FILE]
              (methods: none fp fixed uniform bps_only otaro)
   eval       [--checkpoint FILE] [--mc-items N]
-  serve-demo [--requests N] [--checkpoint FILE]
+  serve-demo [--requests N] [--checkpoint FILE] [--serve-config FILE.json]
+  pack       [--checkpoint FILE] [--out FILE] [--top M]
+             (f32 checkpoint -> packed .sefp single-master container)
+  inspect    FILE.sefp
+             (header / tensor index / per-rung footprint report)
   bench      <table1|table2|table8|fig3|fig4|fig5|fig6|fig8|fig9|all> [--quick]
 ";
 
@@ -127,8 +131,29 @@ fn main() -> anyhow::Result<()> {
         "serve-demo" => {
             let requests = args.opt_parse("--requests", 64usize);
             let checkpoint = args.opt("--checkpoint").map(PathBuf::from);
+            let serve_config = args.opt("--serve-config").map(PathBuf::from);
             args.finish();
-            experiments::serve_demo(&ctx, requests, checkpoint)
+            experiments::serve_demo(&ctx, requests, checkpoint, serve_config)
+        }
+        "pack" => {
+            let checkpoint = args.opt("--checkpoint").map(PathBuf::from);
+            let out = args.opt("--out").map(PathBuf::from);
+            let top = args.opt("--top").map(|v| {
+                v.parse().unwrap_or_else(|e| {
+                    eprintln!("bad value for --top: {e}");
+                    std::process::exit(2);
+                })
+            });
+            args.finish();
+            experiments::pack_artifact(&ctx, checkpoint, out, top)
+        }
+        "inspect" => {
+            let file = args.positional().unwrap_or_else(|| {
+                eprintln!("inspect requires a .sefp file\n\n{USAGE}");
+                std::process::exit(2);
+            });
+            args.finish();
+            experiments::inspect_artifact(std::path::Path::new(&file))
         }
         "bench" => {
             let quick = args.flag("--quick");

@@ -5,8 +5,12 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use crate::json::Value;
+use crate::json::{n, obj, s, Value};
 use crate::sefp::Precision;
+
+/// Key under [`Manifest::artifacts`] recording the packed single-master
+/// `.sefp` container (see `rust/src/artifact/`).
+pub const SEFP_MASTER_KEY: &str = "sefp_master";
 
 #[derive(Debug, Clone)]
 pub struct ModelConfig {
@@ -19,6 +23,41 @@ pub struct ModelConfig {
     pub batch_size: usize,
     pub group_size: usize,
     pub rounding: String,
+}
+
+impl ModelConfig {
+    /// Parse from a manifest `config` object — shared by the training
+    /// manifest and the embedded `.sefp` artifact manifest.
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        Ok(ModelConfig {
+            vocab_size: v.req_usize("vocab_size")?,
+            d_model: v.req_usize("d_model")?,
+            n_heads: v.req_usize("n_heads")?,
+            n_layers: v.req_usize("n_layers")?,
+            d_ff: v.req_usize("d_ff")?,
+            max_seq: v.req_usize("max_seq")?,
+            batch_size: v.req_usize("batch_size")?,
+            group_size: v.req_usize("group_size")?,
+            rounding: v.req_str("rounding")?,
+        })
+    }
+
+    /// Serialize back to the same shape `from_json` reads (keys sorted
+    /// by the JSON substrate — deterministic, which the `.sefp` golden
+    /// bytes rely on).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("vocab_size", n(self.vocab_size as f64)),
+            ("d_model", n(self.d_model as f64)),
+            ("n_heads", n(self.n_heads as f64)),
+            ("n_layers", n(self.n_layers as f64)),
+            ("d_ff", n(self.d_ff as f64)),
+            ("max_seq", n(self.max_seq as f64)),
+            ("batch_size", n(self.batch_size as f64)),
+            ("group_size", n(self.group_size as f64)),
+            ("rounding", s(self.rounding.clone())),
+        ])
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -56,18 +95,7 @@ impl Manifest {
     }
 
     pub fn from_json(v: &Value) -> anyhow::Result<Self> {
-        let cfg = v.req("config")?;
-        let config = ModelConfig {
-            vocab_size: cfg.req_usize("vocab_size")?,
-            d_model: cfg.req_usize("d_model")?,
-            n_heads: cfg.req_usize("n_heads")?,
-            n_layers: cfg.req_usize("n_layers")?,
-            d_ff: cfg.req_usize("d_ff")?,
-            max_seq: cfg.req_usize("max_seq")?,
-            batch_size: cfg.req_usize("batch_size")?,
-            group_size: cfg.req_usize("group_size")?,
-            rounding: cfg.req_str("rounding")?,
-        };
+        let config = ModelConfig::from_json(v.req("config")?)?;
         let mut mantissa_widths = Vec::new();
         for w in v
             .req("mantissa_widths")?
@@ -137,6 +165,13 @@ impl Manifest {
             .get(&format!("{kind}_{tag}"))
             .map(|s| s.as_str())
             .ok_or_else(|| anyhow::anyhow!("no artifact for {kind}_{tag}"))
+    }
+
+    /// Path of the packed single-master `.sefp` container, when the
+    /// manifest records one under [`SEFP_MASTER_KEY`] (relative to the
+    /// artifacts dir, like every other artifact entry).
+    pub fn sefp_artifact(&self) -> Option<&str> {
+        self.artifacts.get(SEFP_MASTER_KEY).map(|s| s.as_str())
     }
 }
 
@@ -224,6 +259,39 @@ mod tests {
         assert_eq!(m.artifact("train", "m4").unwrap(), "train_m4.hlo.txt");
         assert!(m.artifact("train", "m9").is_err());
         assert_eq!(m.config.d_model, 128);
+    }
+
+    #[test]
+    fn model_config_json_roundtrip_and_sefp_key() {
+        let cfg = ModelConfig {
+            vocab_size: 320,
+            d_model: 128,
+            n_heads: 4,
+            n_layers: 2,
+            d_ff: 384,
+            max_seq: 64,
+            batch_size: 8,
+            group_size: 64,
+            rounding: "trunc".into(),
+        };
+        let back =
+            ModelConfig::from_json(&crate::json::parse(&cfg.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back.d_model, cfg.d_model);
+        assert_eq!(back.rounding, cfg.rounding);
+
+        let json = r#"{
+            "preset": "tiny", "quant_impl": "pallas",
+            "config": {"vocab_size": 320, "d_model": 128, "n_heads": 4,
+                       "n_layers": 2, "d_ff": 384, "max_seq": 64,
+                       "batch_size": 8, "group_size": 64, "rounding": "trunc"},
+            "mantissa_widths": [8],
+            "params": [],
+            "artifacts": {"sefp_master": "master.sefp"},
+            "init_params_sha256": "x"
+        }"#;
+        let m = Manifest::from_json(&crate::json::parse(json).unwrap()).unwrap();
+        assert_eq!(m.sefp_artifact(), Some("master.sefp"));
     }
 
     #[test]

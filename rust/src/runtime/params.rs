@@ -36,11 +36,15 @@ impl ParamStore {
         let mut off = 0usize;
         for p in &manifest.params {
             let n = p.numel();
-            let mut t = Vec::with_capacity(n);
-            for i in 0..n {
-                let b = &bytes[off + i * 4..off + i * 4 + 4];
-                t.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
-            }
+            // bulk conversion over 4-byte chunks — the seed parsed
+            // element-by-element with a fresh range check per weight,
+            // so startup scaled with per-element overhead instead of
+            // memory bandwidth (guarded by the load-throughput
+            // assertion in benches/bench_artifact.rs)
+            let t: Vec<f32> = bytes[off..off + n * 4]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
             off += n * 4;
             tensors.push(t);
         }
@@ -56,7 +60,10 @@ impl ParamStore {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let mut bytes = Vec::new();
+        // single exact-size allocation; the seed grew the buffer
+        // element-by-element through Vec doubling
+        let total: usize = self.tensors.iter().map(|t| t.len() * 4).sum();
+        let mut bytes = Vec::with_capacity(total);
         for t in &self.tensors {
             for v in t {
                 bytes.extend_from_slice(&v.to_le_bytes());
@@ -72,11 +79,10 @@ impl ParamStore {
         anyhow::ensure!(bytes.len() == expect, "checkpoint size mismatch");
         let mut off = 0;
         for t in &mut self.tensors {
-            for v in t.iter_mut() {
-                let b = &bytes[off..off + 4];
+            for (v, b) in t.iter_mut().zip(bytes[off..].chunks_exact(4)) {
                 *v = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
-                off += 4;
             }
+            off += t.len() * 4;
         }
         Ok(())
     }

@@ -47,6 +47,18 @@ pub enum Rounding {
     Nearest,
 }
 
+impl std::fmt::Display for Rounding {
+    /// The config/manifest spelling (`"trunc"` / `"nearest"`) — the
+    /// exact inverse of `FromStr`, so round-tripping through the
+    /// `.sefp` artifact manifest is lossless.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Rounding::Trunc => "trunc",
+            Rounding::Nearest => "nearest",
+        })
+    }
+}
+
 impl std::str::FromStr for Rounding {
     type Err = String;
     fn from_str(s: &str) -> Result<Self, String> {

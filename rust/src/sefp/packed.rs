@@ -55,6 +55,28 @@ impl BitVec {
 
     #[inline]
     pub fn read_bits(&self, pos: usize, n: u8) -> u32 {
+        debug_assert!(
+            pos + n as usize <= self.len_bits,
+            "bit read [{pos}, {pos}+{n}) past stream end {}",
+            self.len_bits
+        );
+        Self::read_bits_in(&self.data, pos, n)
+    }
+
+    /// Read `n` bits LSB-first at bit offset `pos` from a raw byte
+    /// slice — the borrowed-buffer twin of [`read_bits`](Self::read_bits),
+    /// shared with the zero-copy artifact views (`rust/src/artifact/`).
+    /// Reading zero bits is always valid and returns 0; a read past the
+    /// end of `data` is a caller bug (debug-asserted with a clear
+    /// message instead of an opaque index panic).
+    #[inline]
+    pub fn read_bits_in(data: &[u8], pos: usize, n: u8) -> u32 {
+        debug_assert!(n <= 32);
+        debug_assert!(
+            pos + n as usize <= data.len() * 8,
+            "bit read [{pos}, {pos}+{n}) past slice end {}",
+            data.len() * 8
+        );
         let mut out: u64 = 0;
         let mut got = 0usize;
         let mut p = pos;
@@ -62,7 +84,7 @@ impl BitVec {
             let byte_idx = p / 8;
             let bit_idx = p % 8;
             let take = (8 - bit_idx).min(n as usize - got);
-            let bits = (self.data[byte_idx] >> bit_idx) as u64 & ((1u64 << take) - 1);
+            let bits = (data[byte_idx] >> bit_idx) as u64 & ((1u64 << take) - 1);
             out |= bits << got;
             got += take;
             p += take;
@@ -175,8 +197,12 @@ impl PackedSefp {
         self.len * 2
     }
 
-    /// Paper table 2's reduction ratio vs FP16.
+    /// Paper table 2's reduction ratio vs FP16 (0.0 for an empty
+    /// tensor, where the ratio is undefined rather than NaN).
     pub fn reduction_vs_fp16(&self) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
         1.0 - self.packed_bytes() as f64 / self.fp16_bytes() as f64
     }
 }
@@ -264,6 +290,64 @@ mod tests {
             let packed = PackedSefp::from_tensor(&t);
             assert_eq!(packed.packed_bytes(), t.ideal_bits().div_ceil(8));
         }
+    }
+
+    #[test]
+    fn zero_length_tensor_roundtrips() {
+        // the degenerate container cases: no elements means no groups,
+        // no bits, and a 0-byte stream — encode/decode/truncate must all
+        // be total on it (exercised again through the artifact format in
+        // rust/tests/artifact_props.rs)
+        for p in [Precision::of(8), Precision::of(3)] {
+            let packed = PackedSefp::encode(&[], &SefpSpec::new(p));
+            assert_eq!(packed.len, 0);
+            assert_eq!(packed.n_groups, 0);
+            assert_eq!(packed.packed_bytes(), 0);
+            assert_eq!(packed.reduction_vs_fp16(), 0.0);
+            let t = packed.to_tensor();
+            assert_eq!(t.len, 0);
+            assert!(t.decode().is_empty());
+            let lo = packed.truncate(Precision::of(1));
+            assert_eq!(lo.packed_bytes(), 0);
+            assert_eq!(lo.to_tensor().decode(), Vec::<f32>::new());
+        }
+    }
+
+    #[test]
+    fn partial_final_group_roundtrips() {
+        // lengths straddling the group boundary: the final short group
+        // must pack, unpack, and truncate identically to the working
+        // representation
+        for n in [1usize, 63, 64, 65, 100, 129] {
+            let w = test_weights(n, n as u64);
+            let p8 = PackedSefp::encode(&w, &SefpSpec::new(Precision::of(8)));
+            assert_eq!(p8.len, n);
+            assert_eq!(p8.n_groups, n.div_ceil(GROUP_SIZE));
+            let t = p8.to_tensor();
+            assert_eq!(t.decode().len(), n);
+            assert_eq!(
+                p8.truncate(Precision::of(3)).to_tensor(),
+                t.truncate(Precision::of(3)),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn read_bits_in_matches_owned_reader() {
+        let mut bv = BitVec::default();
+        for (v, n) in [(14u32, 5u8), (1, 1), (175, 8), (0, 3), (12345, 14)] {
+            bv.push_bits(v, n);
+        }
+        let mut pos = 0;
+        for (v, n) in [(14u32, 5u8), (1, 1), (175, 8), (0, 3), (12345, 14)] {
+            assert_eq!(BitVec::read_bits_in(&bv.data, pos, n), v);
+            assert_eq!(bv.read_bits(pos, n), v);
+            pos += n as usize;
+        }
+        // zero-width reads are total, even at the very end of the stream
+        assert_eq!(bv.read_bits(pos, 0), 0);
+        assert_eq!(BitVec::read_bits_in(&[], 0, 0), 0);
     }
 
     #[test]

@@ -207,6 +207,50 @@ impl PrecisionLadder {
         }
     }
 
+    /// Build the serving ladder straight from a packed `.sefp` container
+    /// at its stored top precision — no f32 master is ever materialized:
+    /// quantized tensors come off the artifact's bit-planes as integer
+    /// gathers, and passthrough tensors are copied out of the raw-f32
+    /// region once.
+    pub fn from_artifact(a: &crate::artifact::Artifact) -> anyhow::Result<Self> {
+        Self::from_artifact_at(a, a.meta().top)
+    }
+
+    /// Like [`from_artifact`](Self::from_artifact) but opened at an
+    /// explicit rung — truncate-at-load: the artifact's lower mantissa
+    /// planes are simply never borrowed or gathered, so a deployment
+    /// pinned below the stored top materializes exactly the bits it
+    /// serves (the container itself was read and checksummed whole at
+    /// open).  Errors if `top` exceeds the artifact's stored precision.
+    pub fn from_artifact_at(
+        a: &crate::artifact::Artifact,
+        top: Precision,
+    ) -> anyhow::Result<Self> {
+        let metas = a.tensors();
+        let mut tensors = Vec::with_capacity(metas.len());
+        for (i, tm) in metas.iter().enumerate() {
+            if tm.quantized {
+                tensors.push(LadderTensor::Quant(a.view(i, top)?.to_tensor()));
+            } else {
+                tensors.push(LadderTensor::Pass(Arc::new(a.raw_f32(i)?)));
+            }
+        }
+        Ok(PrecisionLadder {
+            master: Arc::new(LadderView {
+                precision: top,
+                ladder_id: LADDER_IDS.fetch_add(1, Ordering::Relaxed),
+                tensors,
+                names: Arc::new(metas.iter().map(|t| t.name.clone()).collect()),
+                shapes: Arc::new(metas.iter().map(|t| t.shape.clone()).collect()),
+                quantized: Arc::new(metas.iter().map(|t| t.quantized).collect()),
+            }),
+            budget_bytes: usize::MAX,
+            cache: HashMap::new(),
+            tick: 0,
+            stats: LadderStats::default(),
+        })
+    }
+
     /// Cap the bytes of derived views kept resident (the master is always
     /// resident and is not charged — it IS the model).
     pub fn with_budget(mut self, budget_bytes: usize) -> Self {
@@ -491,6 +535,41 @@ mod tests {
             vec![Precision::of(3), Precision::of(5)]
         );
         assert_eq!(ladder.stats.evictions, 1);
+    }
+
+    #[test]
+    fn from_artifact_matches_from_params() {
+        use crate::artifact::{pack_params, Artifact, ArtifactMeta};
+        let p = params();
+        let a = Artifact::from_bytes(pack_params(&p, &ArtifactMeta::new(Precision::of(8))))
+            .unwrap();
+        let mut from_art = PrecisionLadder::from_artifact(&a).unwrap();
+        let mut from_par = PrecisionLadder::from_params(&p);
+        assert_eq!(from_art.top(), from_par.top());
+        for rung in Precision::LADDER {
+            let va = from_art.view_at(rung).unwrap();
+            let vp = from_par.view_at(rung).unwrap();
+            for (ta, tp) in va.tensors().iter().zip(vp.tensors()) {
+                match (ta, tp) {
+                    (LadderTensor::Quant(qa), LadderTensor::Quant(qp)) => assert_eq!(qa, qp),
+                    (LadderTensor::Pass(fa), LadderTensor::Pass(fp)) => assert_eq!(fa, fp),
+                    other => panic!("slot kind mismatch at {rung}: {other:?}"),
+                }
+            }
+        }
+        assert_eq!(from_art.master.names(), from_par.master.names());
+        // truncate-at-load: a ladder opened two rungs down equals the
+        // full master truncated there
+        let low = PrecisionLadder::from_artifact_at(&a, Precision::of(6)).unwrap();
+        let direct = SefpTensor::encode(&p.tensors[0], &SefpSpec::new(Precision::of(6)));
+        match &low.master.tensors()[0] {
+            LadderTensor::Quant(q) => assert_eq!(*q, direct),
+            other => panic!("expected quant slot, got {other:?}"),
+        }
+        assert!(
+            PrecisionLadder::from_artifact_at(&a, Precision::of(9)).is_err(),
+            "rung above the stored master must be rejected"
+        );
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Golden-bytes format-stability tests for the `.sefp` container.
+//!
+//! Format v1 is FROZEN: a tiny fixed model must pack to the exact bytes
+//! spelled out here, hand-computed from the layout specification in
+//! `rust/src/artifact/mod.rs` (not from the implementation).  If any of
+//! these assertions fail, the container layout changed — that is a
+//! format break and requires a version bump, not a test update.
+
+use otaro::artifact::{
+    align_up, fnv1a64, pack_params, write_artifact, Artifact, ArtifactMeta, HEADER_LEN,
+    INDEX_ENTRY_LEN, MAGIC, VERSION,
+};
+use otaro::runtime::ParamStore;
+use otaro::sefp::Precision;
+
+/// One group of two weights at E5M2, chosen so every plane byte is
+/// hand-computable: maxabs 1.0 -> E = 0, step = 2^(0-2+1) = 0.5,
+/// significands [2, -1].
+fn tiny_params() -> ParamStore {
+    ParamStore {
+        tensors: vec![vec![1.0, -0.5]],
+        names: vec!["w".into()],
+        shapes: vec![vec![2]],
+        quantized: vec![true],
+    }
+}
+
+fn tiny_meta() -> ArtifactMeta {
+    ArtifactMeta {
+        group_size: 2,
+        ..ArtifactMeta::new(Precision::of(2))
+    }
+}
+
+/// Hand-computed tensor blob (see module docs above):
+///   exponent plane: E - EXP_MIN = 14, 5 bits LSB-first      -> 0b01110
+///   sign plane:     [+, -]                                   -> 0b10
+///   mantissa planes MSB first: bit1 of [2,1] = [1,0] -> 0b01,
+///                              bit0 of [2,1] = [0,1] -> 0b10
+const GOLDEN_BLOB: [u8; 4] = [14, 2, 1, 2];
+
+/// The embedded manifest is deterministic JSON with sorted keys.
+const GOLDEN_MANIFEST: &str = r#"{"group_size":2,"rounding":"trunc","tensors":[{"name":"w","quantized":true,"shape":[2]}],"top":2}"#;
+
+fn rd64(b: &[u8], off: usize) -> u64 {
+    let mut x = [0u8; 8];
+    x.copy_from_slice(&b[off..off + 8]);
+    u64::from_le_bytes(x)
+}
+
+fn rd32(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+#[test]
+fn golden_bytes_v1_frozen() {
+    let bytes = pack_params(&tiny_params(), &tiny_meta());
+
+    // section offsets follow from the spec arithmetic alone
+    let mlen = GOLDEN_MANIFEST.len();
+    let index_off = align_up(HEADER_LEN + mlen);
+    let data_off = align_up(index_off + INDEX_ENTRY_LEN);
+    let file_len = data_off + GOLDEN_BLOB.len();
+    assert_eq!(bytes.len(), file_len, "total file size");
+
+    // header
+    assert_eq!(&bytes[..8], &MAGIC, "magic");
+    assert_eq!(rd32(&bytes, 8), VERSION, "version");
+    assert_eq!(rd32(&bytes, 12), 0, "flags reserved zero in v1");
+    assert_eq!(rd64(&bytes, 16), HEADER_LEN as u64, "manifest_off");
+    assert_eq!(rd64(&bytes, 24), mlen as u64, "manifest_len");
+    assert_eq!(rd64(&bytes, 32), index_off as u64, "index_off");
+    assert_eq!(rd64(&bytes, 40), 1, "tensor_count");
+    assert_eq!(rd64(&bytes, 48), data_off as u64, "data_off");
+    assert_eq!(rd64(&bytes, 56), file_len as u64, "file_len");
+
+    // embedded manifest, byte for byte
+    assert_eq!(
+        std::str::from_utf8(&bytes[HEADER_LEN..HEADER_LEN + mlen]).unwrap(),
+        GOLDEN_MANIFEST
+    );
+
+    // index record
+    assert_eq!(rd32(&bytes, index_off), 0, "kind = packed");
+    assert_eq!(rd32(&bytes, index_off + 4), 0, "reserved");
+    assert_eq!(rd64(&bytes, index_off + 8), 2, "len");
+    assert_eq!(rd64(&bytes, index_off + 16), 1, "n_groups");
+    assert_eq!(rd64(&bytes, index_off + 24), data_off as u64, "blob off");
+    assert_eq!(rd64(&bytes, index_off + 32), GOLDEN_BLOB.len() as u64, "blob len");
+    // FNV-1a 64 of [14, 2, 1, 2], precomputed independently
+    assert_eq!(rd64(&bytes, index_off + 40), 0x1e55_10b1_acdd_9cee, "checksum");
+    assert_eq!(fnv1a64(&GOLDEN_BLOB), 0x1e55_10b1_acdd_9cee);
+
+    // the plane bytes themselves
+    assert_eq!(&bytes[data_off..], &GOLDEN_BLOB, "tensor blob");
+
+    // and the frozen file loads back to the expected weights exactly
+    let a = Artifact::from_bytes(bytes).unwrap();
+    assert_eq!(a.view(0, Precision::of(2)).unwrap().decode(), vec![1.0, -0.5]);
+    // truncate-at-load at m=1: sigs [2 >> 1, -(1 >> 1)] = [1, 0],
+    // step = 2^0 = 1.0
+    assert_eq!(a.view(0, Precision::of(1)).unwrap().decode(), vec![1.0, 0.0]);
+}
+
+#[test]
+fn checksum_known_answer_vectors() {
+    // published FNV-1a 64 vectors pin the checksum function itself
+    assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+    assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    assert_eq!(fnv1a64(b"abc"), 0xe71f_a219_0541_574b);
+}
+
+#[test]
+fn byte_identical_across_runs() {
+    let a = pack_params(&tiny_params(), &tiny_meta());
+    let b = pack_params(&tiny_params(), &tiny_meta());
+    assert_eq!(a, b, "packing must be deterministic");
+
+    // and identical through the file writer
+    let dir = std::env::temp_dir().join("otaro_artifact_golden");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tiny.sefp");
+    write_artifact(&path, &tiny_params(), &tiny_meta()).unwrap();
+    let from_disk = std::fs::read(&path).unwrap();
+    assert_eq!(from_disk, a);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_checksum_rejected() {
+    let mut bytes = pack_params(&tiny_params(), &tiny_meta());
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01; // flip one bit in the mantissa plane
+    let err = Artifact::from_bytes(bytes).unwrap_err().to_string();
+    assert!(err.contains("checksum"), "want checksum error, got: {err}");
+}
+
+#[test]
+fn corrupted_skeleton_rejected() {
+    let good = pack_params(&tiny_params(), &tiny_meta());
+
+    let mut bad = good.clone();
+    bad[0] ^= 0xff;
+    assert!(Artifact::from_bytes(bad).is_err(), "bad magic");
+
+    let mut bad = good.clone();
+    bad[8] = 99;
+    assert!(Artifact::from_bytes(bad).is_err(), "unknown version");
+
+    let mut bad = good.clone();
+    bad.truncate(bad.len() - 1);
+    assert!(Artifact::from_bytes(bad).is_err(), "truncated file");
+
+    let mut bad = good.clone();
+    bad.push(0);
+    assert!(Artifact::from_bytes(bad).is_err(), "trailing bytes");
+
+    // flipping a manifest byte breaks JSON or the index agreement
+    let mut bad = good.clone();
+    bad[HEADER_LEN] = b'[';
+    assert!(Artifact::from_bytes(bad).is_err(), "corrupt manifest");
+
+    assert!(Artifact::from_bytes(good).is_ok(), "control: pristine bytes load");
+}

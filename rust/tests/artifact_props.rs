@@ -1,0 +1,174 @@
+//! Property tests for the `.sefp` artifact: pack -> load -> decode must
+//! be bit-exact with the in-memory codec at EVERY rung of the ladder,
+//! truncate-at-load must equal load-then-truncate, and the serving
+//! ladder built from a container must be indistinguishable from one
+//! built from the f32 master.
+
+use otaro::artifact::{pack_params, Artifact, ArtifactMeta};
+use otaro::runtime::ParamStore;
+use otaro::sefp::{PackedSefp, Precision, Rounding, SefpCodec, SefpSpec, SefpTensor};
+use otaro::serve::{LadderTensor, PrecisionLadder};
+
+fn weights(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    (0..n)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s as i32) as f32) / (i32::MAX as f32) * 2.0
+        })
+        .collect()
+}
+
+/// Sizes deliberately straddle group boundaries and include the
+/// degenerate zero-length tensor (the edge cases of `PackedSefp` /
+/// `BitVec` exercised through the full artifact round trip).
+const QUANT_SIZES: [usize; 7] = [4096, 129, 100, 65, 64, 1, 0];
+
+fn test_params() -> ParamStore {
+    let mut tensors = Vec::new();
+    let mut names = Vec::new();
+    let mut shapes = Vec::new();
+    let mut quantized = Vec::new();
+    for (i, &n) in QUANT_SIZES.iter().enumerate() {
+        tensors.push(weights(n, i as u64 + 1));
+        names.push(format!("w{i}"));
+        shapes.push(vec![n]);
+        quantized.push(true);
+    }
+    // passthrough tensors, including an empty one
+    tensors.push(weights(16, 99));
+    names.push("ln".into());
+    shapes.push(vec![16]);
+    quantized.push(false);
+    tensors.push(vec![]);
+    names.push("empty_pass".into());
+    shapes.push(vec![0]);
+    quantized.push(false);
+    ParamStore { tensors, names, shapes, quantized }
+}
+
+#[test]
+fn pack_load_decode_equals_in_memory_codec_at_every_rung() {
+    let p = test_params();
+    let meta = ArtifactMeta::new(Precision::of(8));
+    let a = Artifact::from_bytes(pack_params(&p, &meta)).unwrap();
+    assert_eq!(a.tensor_count(), p.tensors.len());
+    for (i, tm) in a.tensors().iter().enumerate() {
+        if !tm.quantized {
+            assert_eq!(a.raw_f32(i).unwrap(), p.tensors[i], "raw tensor {i}");
+            continue;
+        }
+        for rung in Precision::LADDER {
+            let view = a.view(i, rung).unwrap();
+            let spec = SefpSpec::new(rung);
+            let direct = PackedSefp::encode(&p.tensors[i], &spec);
+            assert_eq!(view.to_packed(), direct, "tensor {i} ({} elems) rung {rung}", view.len);
+            // decode bit-exactly (f32 equality, not tolerance)
+            assert_eq!(
+                view.to_tensor().decode(),
+                direct.decode(),
+                "tensor {i} rung {rung} decode"
+            );
+            assert_eq!(
+                view.to_tensor(),
+                SefpTensor::encode(&p.tensors[i], &spec),
+                "tensor {i} rung {rung} working repr"
+            );
+        }
+    }
+}
+
+#[test]
+fn truncate_at_load_equals_load_then_truncate() {
+    let p = test_params();
+    let top = Precision::of(8);
+    let a = Artifact::from_bytes(pack_params(&p, &ArtifactMeta::new(top))).unwrap();
+    for (i, tm) in a.tensors().iter().enumerate() {
+        if !tm.quantized {
+            continue;
+        }
+        let full = a.view(i, top).unwrap().to_tensor();
+        for rung in &Precision::LADDER[1..] {
+            let at_load = a.view(i, *rung).unwrap();
+            assert_eq!(at_load.to_tensor(), full.truncate(*rung), "tensor {i} rung {rung}");
+            // and strictly fewer borrowed bytes for non-empty tensors
+            if tm.shape.iter().product::<usize>() > 0 {
+                assert!(
+                    at_load.borrowed_bytes() < a.view(i, top).unwrap().borrowed_bytes(),
+                    "tensor {i} rung {rung} must borrow fewer planes"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn serve_ladder_from_artifact_equals_from_params() {
+    let p = test_params();
+    let a = Artifact::from_bytes(pack_params(&p, &ArtifactMeta::new(Precision::of(8)))).unwrap();
+    let mut from_art = PrecisionLadder::from_artifact(&a).unwrap();
+    let mut from_par = PrecisionLadder::from_params(&p);
+    for rung in Precision::LADDER {
+        let va = from_art.view_at(rung).unwrap();
+        let vp = from_par.view_at(rung).unwrap();
+        assert_eq!(va.names(), vp.names());
+        for (slot, (ta, tp)) in va.tensors().iter().zip(vp.tensors()).enumerate() {
+            match (ta, tp) {
+                (LadderTensor::Quant(qa), LadderTensor::Quant(qp)) => {
+                    assert_eq!(qa, qp, "slot {slot} at {rung}")
+                }
+                (LadderTensor::Pass(fa), LadderTensor::Pass(fp)) => {
+                    assert_eq!(fa, fp, "slot {slot} at {rung}")
+                }
+                other => panic!("slot {slot} kind mismatch at {rung}: {other:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn custom_group_size_and_lower_top() {
+    let w = weights(333, 5);
+    let p = ParamStore {
+        tensors: vec![w.clone()],
+        names: vec!["w".into()],
+        shapes: vec![vec![333]],
+        quantized: vec![true],
+    };
+    let meta = ArtifactMeta { group_size: 5, ..ArtifactMeta::new(Precision::of(6)) };
+    let a = Artifact::from_bytes(pack_params(&p, &meta)).unwrap();
+    assert_eq!(a.meta().group_size, 5);
+    for rung in [Precision::of(6), Precision::of(4), Precision::of(1)] {
+        let spec = SefpSpec::new(rung).with_group_size(5);
+        assert_eq!(a.view(0, rung).unwrap().to_tensor(), SefpTensor::encode(&w, &spec), "{rung}");
+    }
+    assert!(a.view(0, Precision::of(7)).is_err(), "rung above the stored top");
+}
+
+#[test]
+fn nearest_rounding_master_is_stored_losslessly() {
+    // plane packing is lossless whatever the rounding; the top rung
+    // must round-trip exactly even for Rounding::Nearest.  (Only Trunc
+    // carries the ladder-exactness guarantee for LOWER rungs — but
+    // truncate-at-load still equals load-then-truncate on the stored
+    // bits, which is what the artifact promises.)
+    let w = weights(500, 17);
+    let p = ParamStore {
+        tensors: vec![w.clone()],
+        names: vec!["w".into()],
+        shapes: vec![vec![500]],
+        quantized: vec![true],
+    };
+    let meta = ArtifactMeta { rounding: Rounding::Nearest, ..ArtifactMeta::new(Precision::of(8)) };
+    let a = Artifact::from_bytes(pack_params(&p, &meta)).unwrap();
+    assert_eq!(a.meta().rounding, Rounding::Nearest);
+    let spec = SefpSpec::new(Precision::of(8)).with_rounding(Rounding::Nearest);
+    let master = SefpTensor::encode(&w, &spec);
+    assert_eq!(a.view(0, Precision::of(8)).unwrap().to_tensor(), master);
+    assert_eq!(
+        a.view(0, Precision::of(4)).unwrap().to_tensor(),
+        master.truncate(Precision::of(4))
+    );
+}
