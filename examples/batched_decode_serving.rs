@@ -1,0 +1,78 @@
+//! Batched SEFP decode serving, fully in-process: a model-shaped
+//! parameter set is encoded ONCE into a `PrecisionLadder` master, and
+//! the [`DecoderBackend`] serves mixed-precision traffic with REAL
+//! quantized matmuls + KV-cache attention — no PJRT, no AOT artifacts,
+//! no hash logits.  This is the infer↔serve gap closed: the
+//! continuous-batching scheduler drives the pure-Rust decode engine
+//! end-to-end, and the same traffic is replayed at 1 and 2 matmul
+//! worker threads to show the batched kernels are a throughput knob,
+//! never a numerics one (responses are bit-identical).
+//!
+//! Run: `cargo run --release --example batched_decode_serving`
+
+use otaro::config::ServeConfig;
+use otaro::data::Rng;
+use otaro::infer::SimConfig;
+use otaro::sefp::Precision;
+use otaro::serve::{
+    demo_decoder_params, DecoderBackend, DynamicBatcher, PrecisionLadder, Request, Router,
+    SchedPolicy, Server, TaskClass,
+};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SimConfig { d_model: 128, d_ff: 256, n_layers: 2, vocab: 256, context: 32 };
+    let params = demo_decoder_params(&cfg, 42);
+    let serve_cfg = ServeConfig::default();
+
+    let run = |threads: usize| -> anyhow::Result<(Vec<Vec<i32>>, f64, u64)> {
+        let ladder = PrecisionLadder::from_params(&params)
+            .with_budget(serve_cfg.ladder_budget_bytes);
+        let backend = DecoderBackend::from_ladder(&ladder, 8, 32, threads)?;
+        let router = Router::from_config(serve_cfg.clone());
+        let batcher =
+            DynamicBatcher::new(8, 4096).with_policy(SchedPolicy::from_config(&serve_cfg));
+        let mut server = Server::new(backend, ladder, router, batcher);
+
+        let mut rng = Rng::new(7);
+        for i in 0..96u64 {
+            let (class, m, max_new) = match i % 3 {
+                0 => (TaskClass::Generation, 8u8, 6),
+                1 => (TaskClass::Understanding, 4, 1),
+                _ => (TaskClass::Other, 3, 3),
+            };
+            let prompt: Vec<i32> =
+                (0..rng.below(20) + 4).map(|_| rng.below(250) as i32).collect();
+            let req = Request::new(i, class, prompt)
+                .with_precision(Precision::of(m))
+                .with_max_new_tokens(max_new);
+            assert!(server.submit(req));
+        }
+        let t0 = std::time::Instant::now();
+        let mut responses = server.process_all()?;
+        let secs = t0.elapsed().as_secs_f64();
+        responses.sort_by_key(|r| r.id);
+        let stats = server.stats();
+        println!(
+            "threads={threads}: served {} requests / {} tokens in {:.3}s \
+             ({:.0} tok/s, {} decode steps, {} scheduled runs, widths {:?})",
+            stats.served,
+            stats.tokens_generated,
+            secs,
+            stats.tokens_generated as f64 / secs,
+            stats.decode_steps,
+            stats.batches,
+            stats.per_precision
+        );
+        Ok((responses.into_iter().map(|r| r.tokens).collect(), secs, stats.tokens_generated))
+    };
+
+    let (gen1, _, _) = run(1)?;
+    let (gen2, _, _) = run(2)?;
+    assert_eq!(
+        gen1, gen2,
+        "generations must be bit-identical regardless of matmul worker count"
+    );
+    println!("\n1-thread and 2-thread generations are bit-identical — real SEFP logits,");
+    println!("deterministic engine, thread count is purely a throughput knob.");
+    Ok(())
+}

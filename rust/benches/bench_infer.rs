@@ -1,5 +1,14 @@
-//! Table-2 micro benches: packed-SEFP matvec vs f32 dense matvec, plus
-//! the full decode-step comparison at several widths.
+//! Table-2 micro benches: packed-SEFP matvec vs f32 dense matvec, the
+//! batched matmul kernels vs per-row matvec loops (the bandwidth
+//! amortization the decode engine is built on), and the full decode-step
+//! comparison at several widths.
+//!
+//! Kernel-regression gates asserted here (run on every push via the CI
+//! bench-smoke step, `OTARO_BENCH_QUICK=1`):
+//! * `QuantLinear::matmul` at E5M4 with B=8 strictly beats 8 sequential
+//!   `matvec` calls;
+//! * batched results are bit-identical to per-row matvec and to every
+//!   worker-thread count.
 
 use otaro::benchutil::{black_box, group, Bench};
 use otaro::data::Rng;
@@ -16,7 +25,7 @@ fn dense(in_dim: usize, out_dim: usize) -> DenseLinear {
 }
 
 fn main() {
-    let mut b = Bench::new();
+    let mut b = Bench::from_env();
 
     group("matvec 1024x1024");
     let d = dense(1024, 1024);
@@ -29,6 +38,54 @@ fn main() {
         let q = QuantLinear::from_dense(&d, &SefpSpec::new(Precision::of(m)));
         b.run_elems(&format!("sefp_m{m}"), n, || q.matvec(black_box(&x), black_box(&mut y)));
     }
+
+    // 2048x2048 E5M4 = 4 MiB of significands: the weight stream exceeds
+    // per-core L2, so the per-row matvec loop pays the full re-read cost
+    // per sequence — the bandwidth-bound regime batched decode lives in
+    group("batched matmul 2048x2048, B=8 (E5M4): column reuse vs matvec loop");
+    const B: usize = 8;
+    const DIM: usize = 2048;
+    let d2 = dense(DIM, DIM);
+    let q4 = QuantLinear::from_dense(&d2, &SefpSpec::new(Precision::of(4)));
+    let xb: Vec<f32> = (0..B * DIM).map(|_| rng.normal() as f32).collect();
+    let mut yb = vec![0.0f32; B * DIM];
+    // correctness gate before timing: batched == per-row matvec
+    // bit-for-bit, at every worker count
+    let mut y_ref = vec![0.0f32; B * DIM];
+    for r in 0..B {
+        let (x_row, y_row) = (&xb[r * DIM..(r + 1) * DIM], &mut y_ref[r * DIM..(r + 1) * DIM]);
+        q4.matvec(x_row, y_row);
+    }
+    for threads in [1usize, 2, 4] {
+        q4.matmul(&xb, B, &mut yb, threads);
+        assert_eq!(yb, y_ref, "matmul(threads={threads}) diverged from per-row matvec");
+    }
+    let nb = (B * DIM * DIM) as u64;
+    b.run_elems("matvec_x8_loop", nb, || {
+        for r in 0..B {
+            let y_row = &mut yb[r * DIM..(r + 1) * DIM];
+            q4.matvec(black_box(&xb[r * DIM..(r + 1) * DIM]), black_box(y_row));
+        }
+    });
+    for threads in [1usize, 2, 4] {
+        b.run_elems(&format!("matmul_b8_t{threads}"), nb, || {
+            q4.matmul(black_box(&xb), B, black_box(&mut yb), threads)
+        });
+    }
+    let batched_speedup = b.ratio("matvec_x8_loop", "matmul_b8_t1").unwrap_or(f64::NAN);
+    println!(
+        "\nbatched speedup matmul(B=8, 1 thread) vs 8x matvec at E5M4: {batched_speedup:.2}x"
+    );
+    assert!(
+        batched_speedup > 1.0,
+        "kernel regression: matmul(B=8) must strictly beat 8 sequential matvecs \
+         (got {batched_speedup:.3}x)"
+    );
+    println!(
+        "thread scaling at B=8: t2 {:.2}x, t4 {:.2}x over t1",
+        b.ratio("matmul_b8_t1", "matmul_b8_t2").unwrap_or(f64::NAN),
+        b.ratio("matmul_b8_t1", "matmul_b8_t4").unwrap_or(f64::NAN)
+    );
 
     group("decode_step llama8b/16 sim");
     let cfg = SimConfig::llama8b_scaled(16);
@@ -54,5 +111,34 @@ fn main() {
         dense_sim.memory_bytes() as f64 / 1048576.0,
         sefp_sim.memory_bytes() as f64 / 1048576.0,
         100.0 * (1.0 - sefp_sim.memory_bytes() as f64 / dense_sim.memory_bytes() as f64)
+    );
+
+    group("batched decode: 4-row engine step vs 4 sequential single-row sims");
+    let bcfg = SimConfig::llama8b_scaled(32);
+    let mut singles: Vec<DecoderSim> = (0..4)
+        .map(|_| DecoderSim::new(bcfg, DecoderWeights::Sefp(Precision::of(4)), 2))
+        .collect();
+    let mut xs = vec![0.1f32; 4 * bcfg.d_model];
+    let mut x1 = vec![0.1f32; bcfg.d_model];
+    b.run("decode4_looped", || {
+        let mut c = 0.0f32;
+        for s in singles.iter_mut() {
+            c += s.decode_step(black_box(&mut x1));
+        }
+        c
+    });
+    for threads in [1usize, 2, 4] {
+        let mut batched =
+            DecoderSim::new_batched(bcfg, DecoderWeights::Sefp(Precision::of(4)), 2, 4)
+                .with_threads(threads);
+        b.run(&format!("decode4_batched_t{threads}"), || {
+            batched.decode_batch_step(black_box(&mut xs))
+        });
+    }
+    println!(
+        "\nbatched decode speedup (B=4): t1 {:.2}x, t2 {:.2}x, t4 {:.2}x vs looped singles",
+        b.ratio("decode4_looped", "decode4_batched_t1").unwrap_or(f64::NAN),
+        b.ratio("decode4_looped", "decode4_batched_t2").unwrap_or(f64::NAN),
+        b.ratio("decode4_looped", "decode4_batched_t4").unwrap_or(f64::NAN)
     );
 }

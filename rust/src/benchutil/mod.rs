@@ -86,9 +86,32 @@ impl Default for Bench {
     }
 }
 
+/// True when the `OTARO_BENCH_QUICK` env var requests the short CI
+/// smoke mode: iteration budgets collapse so a full bench binary runs in
+/// seconds while every kernel-regression `assert!` still executes on
+/// real (if noisier) medians.
+pub fn quick_mode() -> bool {
+    std::env::var("OTARO_BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
 impl Bench {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// `Bench::new()` honoring [`quick_mode`]: CI smoke runs cap warmup
+    /// and timed iterations instead of spending the full budget.
+    pub fn from_env() -> Self {
+        let mut b = Self::default();
+        if quick_mode() {
+            // enough timed iterations that the asserted-medians stay
+            // stable on noisy shared CI runners, while a full bench
+            // binary still finishes in seconds
+            b.warmup_iters = 1;
+            b.budget_ms = 60.0;
+            b.max_iters = 20;
+        }
+        b
     }
 
     /// Time `f`, auto-scaling iteration count to the budget.

@@ -361,6 +361,11 @@ pub struct ServeConfig {
     pub ladder: Vec<Precision>,
     /// adaptive control-plane knobs (`rust/src/policy/`)
     pub policy: PolicyConfig,
+    /// worker threads for the batched decode kernels
+    /// (`infer::QuantLinear::matmul` column split, used by
+    /// `serve::DecoderBackend`); 1 = serial.  Output is bit-identical
+    /// for every value — this is a throughput knob, never a numerics one.
+    pub decode_threads: usize,
     /// byte budget for derived-precision residency in the serving
     /// `PrecisionLadder` (the single SEFP master is always resident and
     /// not charged; cached truncated views are LRU-evicted past this)
@@ -390,6 +395,7 @@ impl Default for ServeConfig {
             understanding_precision: Precision::of(4),
             ladder: Precision::LADDER.to_vec(),
             policy: PolicyConfig::default(),
+            decode_threads: 1,
             max_wait_ms: 500,
             age_weight: 1.0,
             ladder_budget_bytes: 256 << 20,
@@ -408,6 +414,7 @@ impl ServeConfig {
             ("understanding_m", n(self.understanding_precision.m() as f64)),
             ("ladder_m", arr(self.ladder.iter().map(|&w| n(w.m() as f64)).collect())),
             ("policy", self.policy.to_json()),
+            ("decode_threads", n(self.decode_threads as f64)),
             ("max_wait_ms", n(self.max_wait_ms as f64)),
             ("age_weight", n(self.age_weight)),
             ("ladder_budget_bytes", n(self.ladder_budget_bytes as f64)),
@@ -424,6 +431,8 @@ impl ServeConfig {
     pub fn from_json(v: &Value) -> anyhow::Result<Self> {
         let mut c = ServeConfig::default();
         if let Some(x) = v.get("max_batch").and_then(Value::as_usize) {
+            // 0 rows would make the serve loop pop empty batches forever
+            anyhow::ensure!(x >= 1, "serve config max_batch must be at least 1");
             c.max_batch = x;
         }
         if let Some(x) = v.get("queue_cap").and_then(Value::as_usize) {
@@ -467,6 +476,10 @@ impl ServeConfig {
         }
         if let Some(p) = v.get("policy") {
             c.policy = PolicyConfig::from_json(p)?;
+        }
+        if let Some(x) = v.get("decode_threads").and_then(Value::as_usize) {
+            anyhow::ensure!(x >= 1, "serve config decode_threads must be at least 1");
+            c.decode_threads = x;
         }
         if let Some(x) = v.get("max_wait_ms").and_then(Value::as_usize) {
             c.max_wait_ms = x as u64;
@@ -671,6 +684,22 @@ mod tests {
         // probe_rate 0 stays legal for the static policy
         let v = crate::json::parse(r#"{"policy":{"probe_rate":0}}"#).unwrap();
         assert!(ServeConfig::from_json(&v).is_ok());
+    }
+
+    #[test]
+    fn serve_decode_threads_roundtrip_and_validated() {
+        let c = ServeConfig { decode_threads: 4, ..ServeConfig::default() };
+        let d = ServeConfig::from_json(&crate::json::parse(&c.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(d.decode_threads, 4);
+        // absent keeps the serial default; zero is a config error
+        let d = ServeConfig::from_json(&crate::json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d.decode_threads, 1);
+        let v = crate::json::parse(r#"{"decode_threads":0}"#).unwrap();
+        assert!(ServeConfig::from_json(&v).is_err());
+        // zero engine rows would hang the serve loop — config error
+        let v = crate::json::parse(r#"{"max_batch":0}"#).unwrap();
+        assert!(ServeConfig::from_json(&v).is_err());
     }
 
     #[test]

@@ -15,7 +15,8 @@ use crate::metrics::MetricsSink;
 use crate::runtime::{Engine, ParamStore, Width};
 use crate::sefp::Precision;
 use crate::serve::{
-    DynamicBatcher, PrecisionLadder, Request, Router, SchedPolicy, Server, TaskClass,
+    DecoderBackend, DynamicBatcher, LogitsBackend, PrecisionLadder, Request, Router, SchedPolicy,
+    Server, TaskClass,
 };
 
 /// Shared CLI context.
@@ -45,7 +46,19 @@ impl Ctx {
 
     /// Load params: explicit checkpoint > pretrained.bin > init.
     pub fn params(&self, engine: &Engine, checkpoint: Option<PathBuf>) -> anyhow::Result<ParamStore> {
-        let mut params = engine.init_params()?;
+        self.params_from_manifest(&engine.manifest, checkpoint)
+    }
+
+    /// Like [`params`](Self::params) but engine-free: resolves shapes
+    /// from the training manifest alone, so the PJRT-free serve path
+    /// (`serve-demo --backend decoder`) never constructs an engine.
+    pub fn params_from_manifest(
+        &self,
+        manifest: &crate::runtime::Manifest,
+        checkpoint: Option<PathBuf>,
+    ) -> anyhow::Result<ParamStore> {
+        let mut params =
+            ParamStore::from_manifest_bin(manifest, &self.artifacts.join("init_params.bin"))?;
         let path = checkpoint.unwrap_or_else(|| self.pretrained_path());
         if path.exists() {
             params.load_into(&path)?;
@@ -206,27 +219,26 @@ pub fn eval_checkpoint(ctx: &Ctx, checkpoint: Option<PathBuf>, mc_items: usize) 
     Ok(())
 }
 
-pub fn serve_demo(
+/// Resolve the serving master — packed `.sefp` artifact vs f32
+/// checkpoint — and build the serving [`PrecisionLadder`].
+///
+/// A packed master (config `sefp_artifact`, or recorded in the training
+/// manifest) skips the f32 parse + encode on startup.  An explicit
+/// `--checkpoint` always wins — the artifact may hold other weights; a
+/// config-specified artifact must exist (a typo is a config error, not a
+/// silent fallback), and a manifest-recorded one may be stale so it
+/// falls back with a warning.  When serving packed, `serve_cfg.ladder`
+/// is clamped to the artifact top so the router snaps every class to a
+/// servable rung instead of erroring at `view_at` time.  `manifest` is
+/// optional: the decoder backend can serve a config-specified artifact
+/// with no training manifest present at all (the container is
+/// self-describing); the f32 path requires one for shapes.
+fn build_serve_ladder(
     ctx: &Ctx,
-    n_requests: usize,
+    manifest: Option<&crate::runtime::Manifest>,
     checkpoint: Option<PathBuf>,
-    serve_config: Option<PathBuf>,
-) -> anyhow::Result<()> {
-    let engine = ctx.engine()?;
-    let mut serve_cfg = match &serve_config {
-        Some(p) => {
-            let text = std::fs::read_to_string(p)
-                .map_err(|e| anyhow::anyhow!("cannot read serve config {p:?}: {e}"))?;
-            crate::config::ServeConfig::from_json(&crate::json::parse(&text)?)?
-        }
-        None => crate::config::ServeConfig::default(),
-    };
-    // a packed .sefp master (config `sefp_artifact`, or recorded in the
-    // training manifest) skips the f32 parse + encode on startup.  An
-    // explicit --checkpoint always wins — the artifact may hold other
-    // weights; a config-specified artifact must exist (a typo is a
-    // config error, not a silent fallback), and a manifest-recorded one
-    // may be stale so it falls back with a warning.
+    serve_cfg: &mut crate::config::ServeConfig,
+) -> anyhow::Result<PrecisionLadder> {
     let artifact_path = if checkpoint.is_some() {
         None
     } else if let Some(p) = serve_cfg.sefp_artifact.clone() {
@@ -237,7 +249,10 @@ pub fn serve_demo(
         );
         Some(p)
     } else {
-        match engine.manifest.sefp_artifact().map(|p| ctx.artifacts.join(p)) {
+        match manifest
+            .and_then(|m| m.sefp_artifact())
+            .map(|p| ctx.artifacts.join(p))
+        {
             Some(p) if p.exists() => Some(p),
             Some(p) => {
                 eprintln!(
@@ -256,23 +271,25 @@ pub fn serve_demo(
             // the container is self-consistent, but it must also be THIS
             // model: a stale/mismatched artifact would otherwise surface
             // as a shape panic or garbage logits on the first request
-            anyhow::ensure!(
-                a.tensors().len() == engine.manifest.params.len(),
-                "artifact {} holds {} tensors, engine manifest lists {}",
-                p.display(),
-                a.tensors().len(),
-                engine.manifest.params.len()
-            );
-            for (tm, pe) in a.tensors().iter().zip(&engine.manifest.params) {
+            if let Some(manifest) = manifest {
                 anyhow::ensure!(
-                    tm.name == pe.name && tm.shape == pe.shape,
-                    "artifact tensor {:?} {:?} does not match the engine manifest \
-                     ({:?} {:?}) — wrong artifact for this model",
-                    tm.name,
-                    tm.shape,
-                    pe.name,
-                    pe.shape
+                    a.tensors().len() == manifest.params.len(),
+                    "artifact {} holds {} tensors, engine manifest lists {}",
+                    p.display(),
+                    a.tensors().len(),
+                    manifest.params.len()
                 );
+                for (tm, pe) in a.tensors().iter().zip(&manifest.params) {
+                    anyhow::ensure!(
+                        tm.name == pe.name && tm.shape == pe.shape,
+                        "artifact tensor {:?} {:?} does not match the engine manifest \
+                         ({:?} {:?}) — wrong artifact for this model",
+                        tm.name,
+                        tm.shape,
+                        pe.name,
+                        pe.shape
+                    );
+                }
             }
             let top = a.meta().top;
             println!(
@@ -280,9 +297,6 @@ pub fn serve_demo(
                 p.display(),
                 a.file_len() / 1024
             );
-            // the serve ladder cannot reach above the stored master —
-            // clamp it so the router snaps every class to a servable
-            // rung instead of erroring at view_at time
             serve_cfg.ladder.retain(|&w| w <= top);
             anyhow::ensure!(
                 !serve_cfg.ladder.is_empty(),
@@ -292,7 +306,14 @@ pub fn serve_demo(
         }
         None => {
             // f32 checkpoint startup: read + parse + encode the master
-            let params = ctx.params(&engine, checkpoint)?;
+            let manifest = manifest.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no training manifest in {} and no sefp_artifact configured — \
+                     nothing to serve",
+                    ctx.artifacts.display()
+                )
+            })?;
+            let params = ctx.params_from_manifest(manifest, checkpoint)?;
             PrecisionLadder::from_params(&params)
         }
     }
@@ -302,13 +323,92 @@ pub fn serve_demo(
         ladder.master_bytes() / 1024,
         ladder.zoo_bytes(&Precision::LADDER) / 1024
     );
-    // from_config honors serve_cfg.policy.adaptive (Router::new would
-    // pin StaticPolicy and silently ignore the config flag)
-    let router = Router::from_config(serve_cfg.clone());
-    let batcher = DynamicBatcher::new(engine.batch_size(), 256)
-        .with_policy(SchedPolicy::from_config(&serve_cfg));
-    let mut server = Server::new(engine.into_handle(), ladder, router, batcher);
+    Ok(ladder)
+}
 
+pub fn serve_demo(
+    ctx: &Ctx,
+    n_requests: usize,
+    checkpoint: Option<PathBuf>,
+    serve_config: Option<PathBuf>,
+    backend: &str,
+) -> anyhow::Result<()> {
+    let mut serve_cfg = match &serve_config {
+        Some(p) => {
+            let text = std::fs::read_to_string(p)
+                .map_err(|e| anyhow::anyhow!("cannot read serve config {p:?}: {e}"))?;
+            crate::config::ServeConfig::from_json(&crate::json::parse(&text)?)?
+        }
+        None => crate::config::ServeConfig::default(),
+    };
+    match backend {
+        // PJRT engine over AOT artifacts (requires a real PJRT plugin)
+        "engine" => {
+            let engine = ctx.engine()?;
+            let ladder =
+                build_serve_ladder(ctx, Some(&engine.manifest), checkpoint, &mut serve_cfg)?;
+            // from_config honors serve_cfg.policy.adaptive (Router::new
+            // would pin StaticPolicy and silently ignore the config flag)
+            let router = Router::from_config(serve_cfg.clone());
+            let batcher = DynamicBatcher::new(engine.batch_size(), 256)
+                .with_policy(SchedPolicy::from_config(&serve_cfg));
+            let server = Server::new(engine.into_handle(), ladder, router, batcher);
+            drive_serve(ctx, server, n_requests)
+        }
+        // pure-Rust batched SEFP decode engine: real logits end-to-end,
+        // no PJRT and no AOT artifacts needed (the default)
+        "decoder" => {
+            // a MISSING manifest is fine (a config-specified artifact is
+            // self-describing), but a present-yet-unloadable one is an
+            // error to surface, not to swallow — silently dropping it
+            // would also skip the artifact-vs-manifest cross-check
+            let manifest = match crate::runtime::Manifest::load(&ctx.artifacts) {
+                Ok(m) => Some(m),
+                Err(e) if ctx.artifacts.join("manifest.json").exists() => {
+                    anyhow::bail!(
+                        "manifest in {} exists but failed to load: {e}",
+                        ctx.artifacts.display()
+                    )
+                }
+                Err(_) => None,
+            };
+            let ladder =
+                build_serve_ladder(ctx, manifest.as_ref(), checkpoint, &mut serve_cfg)?;
+            let seq_len = manifest.as_ref().map_or(32, |m| m.config.max_seq);
+            let backend = DecoderBackend::from_ladder(
+                &ladder,
+                serve_cfg.max_batch,
+                seq_len,
+                serve_cfg.decode_threads,
+            )?;
+            let cfg = backend.sim_config();
+            println!(
+                "pure-Rust decode backend: {} layers, d={} ff={} V={} \
+                 ({} rows x {} window, {} matmul thread(s))",
+                cfg.n_layers,
+                cfg.d_model,
+                cfg.d_ff,
+                cfg.vocab,
+                serve_cfg.max_batch,
+                seq_len,
+                serve_cfg.decode_threads
+            );
+            let router = Router::from_config(serve_cfg.clone());
+            let batcher = DynamicBatcher::new(serve_cfg.max_batch, 256)
+                .with_policy(SchedPolicy::from_config(&serve_cfg));
+            let server = Server::new(backend, ladder, router, batcher);
+            drive_serve(ctx, server, n_requests)
+        }
+        other => anyhow::bail!("unknown serve backend {other:?} (decoder|engine)"),
+    }
+}
+
+/// Shared serve-demo traffic loop over any [`LogitsBackend`].
+fn drive_serve<B: LogitsBackend>(
+    ctx: &Ctx,
+    mut server: Server<B>,
+    n_requests: usize,
+) -> anyhow::Result<()> {
     let lang = ctx.lang();
     let tok = crate::data::Tokenizer::new();
     let mut rng = crate::data::Rng::new(ctx.seed ^ 0x53);

@@ -1,16 +1,37 @@
-//! Transformer-decode simulator for the table-2 benchmark.
+//! Transformer-decode simulator for the table-2 benchmark and the
+//! serve-layer [`DecoderBackend`](crate::serve::DecoderBackend).
 //!
 //! Replays autoregressive decoding faithfully: each decode step runs the
-//! seven projection matvecs of every layer (q, k, v, o, gate, up, down),
+//! seven projection matmuls of every layer (q, k, v, o, gate, up, down),
 //! REAL single-head attention over a growing KV cache (f32 for the FP
 //! baseline, SEFP-quantized for the quantized runs — the paper's table-2
 //! memory number includes the cache), and the LM head.
+//!
+//! The simulator is batched: it owns `batch` independent KV caches per
+//! layer and decodes all rows of a `(batch × d_model)` activation block
+//! per [`decode_batch_step`](DecoderSim::decode_batch_step), using the
+//! column-reusing [`QuantLinear::matmul`] kernels (optionally
+//! multi-threaded — see [`with_threads`](DecoderSim::with_threads)).
+//! Rows reset independently ([`reset_row`](DecoderSim::reset_row)), so a
+//! serving engine's FIFO row refill maps directly onto the sim.  All
+//! per-step buffers live in a persistent scratch: the measured decode
+//! hot loop performs no heap allocation.
 
 use crate::data::Rng;
-use crate::sefp::{Precision, SefpSpec};
+use crate::sefp::{Precision, SefpSpec, GROUP_SIZE};
 
 use super::kv_cache::KvCache;
 use super::{DenseLinear, QuantLinear};
+
+/// Shared-exponent group width of the simulator's SEFP KV caches.
+pub const KV_GROUP: usize = GROUP_SIZE;
+
+/// KV caches store i8 significands, so an m=8 weight ladder caches at
+/// m=7 — the single source of truth for cache precision, used by cache
+/// construction AND the config-based memory accounting.
+fn kv_precision(p: Precision) -> Precision {
+    Precision::of(p.m().min(7))
+}
 
 #[derive(Debug, Clone, Copy)]
 pub struct SimConfig {
@@ -25,12 +46,20 @@ pub struct SimConfig {
 impl SimConfig {
     /// LLaMA3-8B-shaped config (the paper's table-2 subject), scaled by
     /// `scale` so CPU runs finish (ratios are scale-invariant).
+    ///
+    /// Divided dimensions are rounded DOWN to the nearest multiple of
+    /// the SEFP group size (minimum one group): a non-power-of-two scale
+    /// such as 3 or 6 would otherwise yield `d_model`/`d_ff` that are
+    /// not group-aligned and trip the `QuantLinear::from_dense` /
+    /// `KvCache::sefp` alignment asserts at construction time.
     pub fn llama8b_scaled(scale: usize) -> Self {
+        let scale = scale.max(1);
+        let align = |x: usize| (x / KV_GROUP).max(1) * KV_GROUP;
         SimConfig {
-            d_model: 4096 / scale,
-            d_ff: 14336 / scale,
-            n_layers: 32 / scale.min(8),
-            vocab: 128_256 / scale,
+            d_model: align(4096 / scale),
+            d_ff: align(14336 / scale),
+            n_layers: (32 / scale.min(8)).max(1),
+            vocab: (128_256 / scale).max(KV_GROUP),
             context: 2000,
         }
     }
@@ -43,6 +72,17 @@ impl SimConfig {
     /// KV cache bytes for `context` tokens at `bytes_per_elem`.
     pub fn kv_cache_bytes(&self, bytes_per_elem: usize) -> usize {
         2 * self.n_layers * self.context * self.d_model * bytes_per_elem
+    }
+
+    /// Packed KV-cache bytes for `context` tokens at cache precision
+    /// `p`: the same `(1+m)` bits/element + 5 bits/group formula as
+    /// [`KvCache::bytes`], so config-based and measured accounting agree
+    /// (the seed billed the cache at the WEIGHT precision's whole-byte
+    /// footprint and the two disagreed).
+    pub fn kv_cache_packed_bytes(&self, p: Precision) -> usize {
+        let elems = 2 * self.n_layers * self.context * self.d_model;
+        let groups = elems / KV_GROUP;
+        (elems * p.bits_per_elem() + groups * 5).div_ceil(8)
     }
 }
 
@@ -58,13 +98,62 @@ pub enum DecoderWeights {
     Sefp(Precision),
 }
 
+/// (in_dim, out_dim) of the seven per-layer projections, in storage
+/// order: q, k, v, o, gate, up, down — THE single source of the layer
+/// shape contract, shared with `serve::DecoderBackend`'s tensor-name
+/// mapping.
+pub fn proj_dims(d_model: usize, d_ff: usize) -> [(usize, usize); 7] {
+    [
+        (d_model, d_model), // q
+        (d_model, d_model), // k
+        (d_model, d_model), // v
+        (d_model, d_model), // o
+        (d_model, d_ff),    // gate
+        (d_model, d_ff),    // up
+        (d_ff, d_model),    // down
+    ]
+}
+
+/// Persistent per-sim buffers for the decode hot loop — every slice the
+/// seed allocated per token (q/k/v/att, MLP buffers, logits) lives here
+/// instead, sized once for the full batch.
+struct Scratch {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    att: Vec<f32>,
+    buf_d: Vec<f32>,
+    buf_f: Vec<f32>,
+    up: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(cfg: &SimConfig, batch: usize) -> Self {
+        Scratch {
+            q: vec![0.0; batch * cfg.d_model],
+            k: vec![0.0; batch * cfg.d_model],
+            v: vec![0.0; batch * cfg.d_model],
+            att: vec![0.0; batch * cfg.d_model],
+            buf_d: vec![0.0; batch * cfg.d_model],
+            buf_f: vec![0.0; batch * cfg.d_ff],
+            up: vec![0.0; batch * cfg.d_ff],
+            logits: vec![0.0; batch * cfg.vocab],
+        }
+    }
+}
+
 /// The simulator itself.
 pub struct DecoderSim {
     pub cfg: SimConfig,
     layers: Vec<LayerWeights>,
     head: LayerWeights,
+    /// `n_layers × batch` caches, indexed `layer * batch + row`
     caches: Vec<KvCache>,
     quant_precision: Option<Precision>,
+    batch: usize,
+    threads: usize,
+    scratch: Scratch,
 }
 
 fn rand_dense(rng: &mut Rng, in_dim: usize, out_dim: usize) -> DenseLinear {
@@ -74,21 +163,19 @@ fn rand_dense(rng: &mut Rng, in_dim: usize, out_dim: usize) -> DenseLinear {
 
 impl DecoderSim {
     pub fn new(cfg: SimConfig, weights: DecoderWeights, seed: u64) -> Self {
+        Self::new_batched(cfg, weights, seed, 1)
+    }
+
+    /// Build a `batch`-row simulator with seeded random weights (each
+    /// row gets its own independent KV caches).
+    pub fn new_batched(cfg: SimConfig, weights: DecoderWeights, seed: u64, batch: usize) -> Self {
+        let batch = batch.max(1);
         let mut rng = Rng::new(seed);
-        let dims = |cfg: &SimConfig| -> Vec<(usize, usize)> {
-            vec![
-                (cfg.d_model, cfg.d_model), // q
-                (cfg.d_model, cfg.d_model), // k
-                (cfg.d_model, cfg.d_model), // v
-                (cfg.d_model, cfg.d_model), // o
-                (cfg.d_model, cfg.d_ff),    // gate
-                (cfg.d_model, cfg.d_ff),    // up
-                (cfg.d_ff, cfg.d_model),    // down
-            ]
-        };
         let build_layer = |rng: &mut Rng| -> LayerWeights {
-            let dense: Vec<DenseLinear> =
-                dims(&cfg).into_iter().map(|(i, o)| rand_dense(rng, i, o)).collect();
+            let dense: Vec<DenseLinear> = proj_dims(cfg.d_model, cfg.d_ff)
+                .into_iter()
+                .map(|(i, o)| rand_dense(rng, i, o))
+                .collect();
             match weights {
                 DecoderWeights::Dense => LayerWeights::Dense { proj: dense },
                 DecoderWeights::Sefp(p) => LayerWeights::Quant {
@@ -111,90 +198,278 @@ impl DecoderSim {
             DecoderWeights::Dense => None,
             DecoderWeights::Sefp(p) => Some(p),
         };
-        let caches = (0..cfg.n_layers)
-            .map(|_| match quant_precision {
-                None => KvCache::f32(cfg.d_model),
-                Some(p) => KvCache::sefp(cfg.d_model, Precision::of(p.m().min(7)), 64),
-            })
-            .collect();
-        DecoderSim { cfg, layers, head, caches, quant_precision }
+        let caches = Self::fresh_caches(&cfg, quant_precision, batch);
+        let scratch = Scratch::new(&cfg, batch);
+        DecoderSim { cfg, layers, head, caches, quant_precision, batch, threads: 1, scratch }
     }
 
-    /// Reset the KV caches (new sequence).
+    /// Build directly from already-quantized layers — the SEFP-native
+    /// consumption path for `serve::DecoderBackend`: each inner vec is
+    /// one layer's seven projections in q, k, v, o, gate, up, down
+    /// order (`proj_dims`), `head` maps `d_model -> vocab`.  No f32 weights
+    /// are ever touched.
+    pub fn from_quant(
+        cfg: SimConfig,
+        layers: Vec<Vec<QuantLinear>>,
+        head: QuantLinear,
+        batch: usize,
+    ) -> anyhow::Result<Self> {
+        let batch = batch.max(1);
+        anyhow::ensure!(
+            layers.len() == cfg.n_layers,
+            "expected {} layers, got {}",
+            cfg.n_layers,
+            layers.len()
+        );
+        anyhow::ensure!(
+            cfg.d_model % KV_GROUP == 0,
+            "d_model {} not aligned to the KV group size {KV_GROUP}",
+            cfg.d_model
+        );
+        let dims = proj_dims(cfg.d_model, cfg.d_ff);
+        for (li, projs) in layers.iter().enumerate() {
+            anyhow::ensure!(projs.len() == 7, "layer {li}: expected 7 projections");
+            for (pi, ((want_in, want_out), p)) in dims.iter().zip(projs).enumerate() {
+                anyhow::ensure!(
+                    p.in_dim == *want_in && p.out_dim == *want_out,
+                    "layer {li} proj {pi}: got {}x{}, want {want_in}x{want_out}",
+                    p.in_dim,
+                    p.out_dim
+                );
+            }
+        }
+        anyhow::ensure!(
+            head.in_dim == cfg.d_model && head.out_dim == cfg.vocab,
+            "head: got {}x{}, want {}x{}",
+            head.in_dim,
+            head.out_dim,
+            cfg.d_model,
+            cfg.vocab
+        );
+        let quant_precision = Some(head.precision);
+        let caches = Self::fresh_caches(&cfg, quant_precision, batch);
+        let scratch = Scratch::new(&cfg, batch);
+        Ok(DecoderSim {
+            cfg,
+            layers: layers
+                .into_iter()
+                .map(|proj| LayerWeights::Quant { proj })
+                .collect(),
+            head: LayerWeights::Quant { proj: vec![head] },
+            caches,
+            quant_precision,
+            batch,
+            threads: 1,
+            scratch,
+        })
+    }
+
+    /// Worker threads for the column-parallel matmul kernels (1 =
+    /// serial).  Output is bit-identical for every thread count.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Batch rows this sim decodes per step.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn fresh_cache(cfg: &SimConfig, qp: Option<Precision>) -> KvCache {
+        match qp {
+            None => KvCache::f32(cfg.d_model),
+            Some(p) => KvCache::sefp(cfg.d_model, kv_precision(p), KV_GROUP),
+        }
+    }
+
+    fn fresh_caches(cfg: &SimConfig, qp: Option<Precision>, batch: usize) -> Vec<KvCache> {
+        (0..cfg.n_layers * batch).map(|_| Self::fresh_cache(cfg, qp)).collect()
+    }
+
+    /// Reset every row's KV caches (all sequences restart).
     pub fn reset(&mut self) {
         let cfg = self.cfg;
         for c in &mut self.caches {
-            *c = match self.quant_precision {
-                None => KvCache::f32(cfg.d_model),
-                Some(p) => KvCache::sefp(cfg.d_model, Precision::of(p.m().min(7)), 64),
-            };
+            *c = Self::fresh_cache(&cfg, self.quant_precision);
+        }
+    }
+
+    /// Reset ONE batch row's caches — the hook the serve engine's FIFO
+    /// row refill uses when a finished request hands its row to the next
+    /// queued one.  Other rows' caches are untouched.
+    pub fn reset_row(&mut self, b: usize) {
+        assert!(b < self.batch, "row {b} out of range for batch {}", self.batch);
+        let cfg = self.cfg;
+        for li in 0..self.cfg.n_layers {
+            self.caches[li * self.batch + b] = Self::fresh_cache(&cfg, self.quant_precision);
         }
     }
 
     /// One decode step: q/k/v projections, attention over the KV cache,
     /// o-projection, SwiGLU-shaped MLP, LM head.  Returns a checksum so
-    /// the work cannot be optimized away.
+    /// the work cannot be optimized away.  Single-sequence entry point —
+    /// requires `batch == 1` (use [`decode_batch_step`](Self::decode_batch_step)
+    /// for multi-row sims).
     pub fn decode_step(&mut self, x: &mut [f32]) -> f32 {
-        self.decode_step_logits(x).0
+        assert_eq!(self.batch, 1, "decode_step drives a single-sequence sim");
+        self.step_rows(x, None)
     }
 
     /// One decode step that also yields the greedy next token from the
     /// LM-head logits — serving-style generation over the simulator.
     pub fn decode_step_token(&mut self, x: &mut [f32]) -> (f32, i32) {
-        let (checksum, logits) = self.decode_step_logits(x);
-        (checksum, super::sampling::argmax(&logits) as i32)
+        let checksum = self.decode_step(x);
+        (checksum, super::sampling::argmax(&self.scratch.logits[..self.cfg.vocab]) as i32)
     }
 
-    fn decode_step_logits(&mut self, x: &mut [f32]) -> (f32, Vec<f32>) {
+    /// Decode one token for EVERY batch row: `x` is the row-major
+    /// `(batch × d_model)` activation block, mutated in place.  Logits
+    /// land in the persistent scratch ([`logits`](Self::logits)).  Rows
+    /// are computed independently (per-row caches), so a B-row step is
+    /// bit-identical to B single-row sims stepping separately.
+    pub fn decode_batch_step(&mut self, x: &mut [f32]) -> f32 {
+        self.step_rows(x, None)
+    }
+
+    /// Like [`decode_batch_step`](Self::decode_batch_step) but rows with
+    /// `active[b] == false` skip cache append/attention (their caches do
+    /// not grow and their logits are meaningless) — the serve engine
+    /// decodes a partially-filled batch this way.
+    pub fn decode_batch_step_masked(&mut self, x: &mut [f32], active: &[bool]) -> f32 {
+        debug_assert_eq!(active.len(), self.batch);
+        self.step_rows(x, Some(active))
+    }
+
+    /// LM-head logits of the latest decode step, row-major
+    /// `(batch × vocab)`.
+    pub fn logits(&self) -> &[f32] {
+        &self.scratch.logits
+    }
+
+    /// Tied-embedding lookup: materialize head column `n` (`d_model`
+    /// values) into `out` — for a `from_quant` sim whose head is the
+    /// `tok_embed` matrix this IS token `n`'s embedding, dequantized on
+    /// demand from the same storage the head matmul computes with (no
+    /// second copy of the largest tensor).
+    pub fn tied_embed(&self, n: usize, out: &mut [f32]) {
+        match &self.head {
+            LayerWeights::Dense { proj } => {
+                let p = &proj[0];
+                out.copy_from_slice(&p.w[n * p.in_dim..(n + 1) * p.in_dim]);
+            }
+            LayerWeights::Quant { proj } => proj[0].decode_column(n, out),
+        }
+    }
+
+    fn step_rows(&mut self, x: &mut [f32], active: Option<&[bool]>) -> f32 {
+        let d = self.cfg.d_model;
+        let bsz = self.batch;
+        let threads = self.threads;
+        debug_assert_eq!(x.len(), bsz * d);
+        let Scratch { q, k, v, att, buf_d, buf_f, up, logits } = &mut self.scratch;
+        let is_active = |b: usize| active.is_none_or(|a| a[b]);
+        let mut checksum = 0.0f32;
+        for (li, layer) in self.layers.iter().enumerate() {
+            let mm = |i: usize, xin: &[f32], out: &mut [f32]| match layer {
+                LayerWeights::Dense { proj } => proj[i].matmul(xin, bsz, out, threads),
+                LayerWeights::Quant { proj } => proj[i].matmul(xin, bsz, out, threads),
+            };
+            // attention
+            mm(0, x, q);
+            mm(1, x, k);
+            mm(2, x, v);
+            for b in 0..bsz {
+                let (r0, r1) = (b * d, (b + 1) * d);
+                if is_active(b) {
+                    let cache = &mut self.caches[li * bsz + b];
+                    cache.append(&k[r0..r1], &v[r0..r1]);
+                    cache.attend(&q[r0..r1], &mut att[r0..r1]);
+                } else {
+                    att[r0..r1].fill(0.0);
+                }
+            }
+            mm(3, att, buf_d);
+            for b in 0..bsz {
+                if is_active(b) {
+                    checksum += buf_d[b * d];
+                }
+            }
+            for (xv, bv) in x.iter_mut().zip(buf_d.iter()) {
+                *xv += 0.1 * bv.tanh();
+            }
+            // MLP (gate * up -> down)
+            mm(4, x, buf_f);
+            mm(5, x, up);
+            for (g, u) in buf_f.iter_mut().zip(up.iter()) {
+                *g = (*g / (1.0 + (-*g).exp())) * u; // silu(g) * u
+            }
+            mm(6, buf_f, buf_d);
+            for b in 0..bsz {
+                if is_active(b) {
+                    checksum += buf_d[b * d];
+                }
+            }
+            for (xv, bv) in x.iter_mut().zip(buf_d.iter()) {
+                *xv = 0.9 * *xv + 0.1 * bv.tanh();
+            }
+        }
+        match &self.head {
+            LayerWeights::Dense { proj } => proj[0].matmul(x, bsz, logits, threads),
+            LayerWeights::Quant { proj } => proj[0].matmul(x, bsz, logits, threads),
+        }
+        for b in 0..bsz {
+            if is_active(b) {
+                checksum += logits[b * self.cfg.vocab];
+            }
+        }
+        checksum
+    }
+
+    /// Run the layer stack for ONE row only (single-row matvecs, no LM
+    /// head, no logits): the cache-prefill path the serve backend uses
+    /// to replay a refilled row's prompt without stepping the rest of
+    /// the batch.  Numerics are bit-identical to a batched step of the
+    /// same row (the kernels share accumulation order).
+    pub fn prefill_row_step(&mut self, b: usize, x: &mut [f32]) {
         let d = self.cfg.d_model;
         let f = self.cfg.d_ff;
-        let mut q = vec![0.0f32; d];
-        let mut k = vec![0.0f32; d];
-        let mut v = vec![0.0f32; d];
-        let mut att = vec![0.0f32; d];
-        let mut buf_d = vec![0.0f32; d];
-        let mut buf_f = vec![0.0f32; f];
-        let mut checksum = 0.0f32;
+        let bsz = self.batch;
+        assert!(b < bsz, "row {b} out of range for batch {bsz}");
+        debug_assert_eq!(x.len(), d);
+        let Scratch { q, k, v, att, buf_d, buf_f, up, .. } = &mut self.scratch;
+        let (r0, r1) = (b * d, (b + 1) * d);
+        let (f0, f1) = (b * f, (b + 1) * f);
         for (li, layer) in self.layers.iter().enumerate() {
             let mv = |i: usize, xin: &[f32], out: &mut [f32]| match layer {
                 LayerWeights::Dense { proj } => proj[i].matvec(xin, out),
                 LayerWeights::Quant { proj } => proj[i].matvec(xin, out),
             };
-            // attention
-            mv(0, x, &mut q);
-            mv(1, x, &mut k);
-            mv(2, x, &mut v);
-            let cache = &mut self.caches[li];
-            cache.append(&k, &v);
-            cache.attend(&q, &mut att);
-            mv(3, &att, &mut buf_d);
-            checksum += buf_d[0];
-            for (xv, bv) in x.iter_mut().zip(&buf_d) {
+            mv(0, x, &mut q[r0..r1]);
+            mv(1, x, &mut k[r0..r1]);
+            mv(2, x, &mut v[r0..r1]);
+            let cache = &mut self.caches[li * bsz + b];
+            cache.append(&k[r0..r1], &v[r0..r1]);
+            cache.attend(&q[r0..r1], &mut att[r0..r1]);
+            mv(3, &att[r0..r1], &mut buf_d[r0..r1]);
+            for (xv, bv) in x.iter_mut().zip(&buf_d[r0..r1]) {
                 *xv += 0.1 * bv.tanh();
             }
-            // MLP (gate * up -> down)
-            mv(4, x, &mut buf_f);
-            let mut up = vec![0.0f32; f];
-            mv(5, x, &mut up);
-            for (g, u) in buf_f.iter_mut().zip(&up) {
-                *g = (*g / (1.0 + (-*g).exp())) * u; // silu(g) * u
+            mv(4, x, &mut buf_f[f0..f1]);
+            mv(5, x, &mut up[f0..f1]);
+            for (g, u) in buf_f[f0..f1].iter_mut().zip(&up[f0..f1]) {
+                *g = (*g / (1.0 + (-*g).exp())) * u;
             }
-            mv(6, &buf_f, &mut buf_d);
-            checksum += buf_d[0];
-            for (xv, bv) in x.iter_mut().zip(&buf_d) {
+            mv(6, &buf_f[f0..f1], &mut buf_d[r0..r1]);
+            for (xv, bv) in x.iter_mut().zip(&buf_d[r0..r1]) {
                 *xv = 0.9 * *xv + 0.1 * bv.tanh();
             }
         }
-        let mut logits0 = vec![0.0f32; self.head_out()];
-        match &self.head {
-            LayerWeights::Dense { proj } => proj[0].matvec(x, &mut logits0),
-            LayerWeights::Quant { proj } => proj[0].matvec(x, &mut logits0),
-        }
-        (checksum + logits0[0], logits0)
     }
 
-    fn head_out(&self) -> usize {
-        self.cfg.vocab
+    /// Cache length (tokens) of one row's layer-0 cache.
+    pub fn row_len(&self, b: usize) -> usize {
+        self.caches[b].len()
     }
 
     /// Decode `n_tokens` tokens after pre-filling `prefill` cache entries
@@ -210,6 +485,7 @@ impl DecoderSim {
         prefill: usize,
         seed: u64,
     ) -> (f64, f32) {
+        assert_eq!(self.batch, 1, "throughput driver is single-sequence");
         self.reset();
         let mut rng = Rng::new(seed);
         let mut x: Vec<f32> = (0..self.cfg.d_model).map(|_| rng.normal() as f32 * 0.1).collect();
@@ -234,7 +510,7 @@ impl DecoderSim {
         (n_tokens as f64 / secs, checksum)
     }
 
-    /// Measured KV-cache bytes currently held.
+    /// Measured KV-cache bytes currently held (all rows).
     pub fn cache_bytes(&self) -> usize {
         self.caches.iter().map(|c| c.bytes()).sum()
     }
@@ -251,14 +527,19 @@ impl DecoderSim {
     }
 
     /// Total memory report (weights + KV cache), paper table-2 style.
-    /// FP16 baseline KV cache is fp16; SEFP runs quantize the KV cache to
-    /// the same width (the paper includes KV-cache savings in its 69%).
+    /// FP16 baseline KV cache is fp16; SEFP runs bill the cache with the
+    /// SAME packed-bits formula as `KvCache::bytes()` at the precision
+    /// the caches are actually built at (`min(m, 7)`, 5-bit group
+    /// exponents) — config-based and measured accounting agree.  Every
+    /// batch row owns independent caches, so the per-sequence KV
+    /// footprint is billed once per row (matching what `cache_bytes()`
+    /// measures on a batched sim).
     pub fn memory_bytes(&self) -> usize {
-        let kv_elem = match &self.layers[0] {
-            LayerWeights::Dense { .. } => 2,
-            LayerWeights::Quant { proj } => proj[0].precision.bits_per_elem().div_ceil(8),
+        let kv_per_row = match self.quant_precision {
+            None => self.cfg.kv_cache_bytes(2),
+            Some(p) => self.cfg.kv_cache_packed_bytes(kv_precision(p)),
         };
-        self.weight_bytes() + self.cfg.kv_cache_bytes(kv_elem.max(1))
+        self.weight_bytes() + kv_per_row * self.batch
     }
 }
 
@@ -310,6 +591,37 @@ mod tests {
     }
 
     #[test]
+    fn reset_row_is_independent() {
+        let cfg = small();
+        let mut sim =
+            DecoderSim::new_batched(cfg, DecoderWeights::Sefp(Precision::of(4)), 1, 3);
+        let mut x = vec![0.1f32; 3 * 128];
+        for _ in 0..4 {
+            let _ = sim.decode_batch_step(&mut x);
+        }
+        for b in 0..3 {
+            assert_eq!(sim.row_len(b), 4);
+        }
+        sim.reset_row(1);
+        // every layer of row 1 is cleared; rows 0 and 2 keep their caches
+        for li in 0..cfg.n_layers {
+            assert_eq!(sim.caches[li * 3 + 1].len(), 0, "layer {li} row 1");
+            assert_eq!(sim.caches[li * 3].len(), 4, "layer {li} row 0");
+            assert_eq!(sim.caches[li * 3 + 2].len(), 4, "layer {li} row 2");
+        }
+    }
+
+    #[test]
+    fn masked_rows_do_not_grow_caches() {
+        let mut sim =
+            DecoderSim::new_batched(small(), DecoderWeights::Sefp(Precision::of(4)), 1, 2);
+        let mut x = vec![0.1f32; 2 * 128];
+        let _ = sim.decode_batch_step_masked(&mut x, &[true, false]);
+        assert_eq!(sim.row_len(0), 1);
+        assert_eq!(sim.row_len(1), 0);
+    }
+
+    #[test]
     fn quant_uses_less_memory() {
         let d = DecoderSim::new(small(), DecoderWeights::Dense, 1);
         let q = DecoderSim::new(small(), DecoderWeights::Sefp(Precision::of(4)), 1);
@@ -319,11 +631,96 @@ mod tests {
 
     #[test]
     fn memory_reduction_near_paper_band() {
-        // E5M4 vs FP16 weights: expect ~68-69% reduction
+        // E5M4 vs FP16 weights+KV: expect ~68-69% reduction
         let d = DecoderSim::new(small(), DecoderWeights::Dense, 1);
         let q = DecoderSim::new(small(), DecoderWeights::Sefp(Precision::of(4)), 1);
         let red = 1.0 - q.memory_bytes() as f64 / d.memory_bytes() as f64;
         assert!((0.6..0.75).contains(&red), "reduction={red}");
+    }
+
+    #[test]
+    fn config_kv_accounting_matches_measured_cache_bytes() {
+        // fill the caches to exactly cfg.context tokens and compare the
+        // config-based packed formula with the measured per-cache sum:
+        // only div_ceil placement may differ (config rounds once,
+        // measurement rounds per cache), so the two are pinned within
+        // one byte per cache — far less than one group
+        for m in [8u8, 4, 3] {
+            let cfg = small();
+            let mut sim = DecoderSim::new(cfg, DecoderWeights::Sefp(Precision::of(m)), 2);
+            let mut x = vec![0.1f32; 128];
+            for _ in 0..cfg.context {
+                let _ = sim.decode_step(&mut x);
+            }
+            let measured = sim.cache_bytes();
+            let config = cfg.kv_cache_packed_bytes(kv_precision(Precision::of(m)));
+            let diff = measured.abs_diff(config);
+            assert!(
+                diff <= cfg.n_layers,
+                "m={m}: measured {measured} vs config {config} (diff {diff})"
+            );
+            // and the config formula is what memory_bytes bills
+            assert_eq!(sim.memory_bytes(), sim.weight_bytes() + config);
+        }
+        // a batched sim bills the per-row KV footprint once PER ROW —
+        // matching the measured sum over all n_layers * batch caches
+        let cfg = small();
+        let mut sim =
+            DecoderSim::new_batched(cfg, DecoderWeights::Sefp(Precision::of(4)), 2, 2);
+        let mut x = vec![0.1f32; 2 * 128];
+        for _ in 0..cfg.context {
+            let _ = sim.decode_batch_step(&mut x);
+        }
+        let measured = sim.cache_bytes();
+        let config = 2 * cfg.kv_cache_packed_bytes(kv_precision(Precision::of(4)));
+        assert!(
+            measured.abs_diff(config) <= 2 * cfg.n_layers,
+            "batched: measured {measured} vs config {config}"
+        );
+        assert_eq!(sim.memory_bytes(), sim.weight_bytes() + config);
+    }
+
+    #[test]
+    fn llama8b_scaled_is_group_aligned_for_every_scale() {
+        // non-power-of-two scales used to yield unaligned dims and trip
+        // the group-size asserts at construction; every scale must now
+        // produce a constructible config
+        for s in 1..=32usize {
+            let cfg = SimConfig::llama8b_scaled(s);
+            assert_eq!(cfg.d_model % KV_GROUP, 0, "scale {s}: d_model {}", cfg.d_model);
+            assert_eq!(cfg.d_ff % KV_GROUP, 0, "scale {s}: d_ff {}", cfg.d_ff);
+            assert!(cfg.d_model >= KV_GROUP, "scale {s}");
+            assert!(cfg.d_ff >= KV_GROUP, "scale {s}");
+            assert!(cfg.n_layers >= 1, "scale {s}");
+            assert!(cfg.vocab >= KV_GROUP, "scale {s}");
+        }
+        // power-of-two scales divide exactly — the original shapes are
+        // preserved where they were already aligned
+        assert_eq!(SimConfig::llama8b_scaled(16).d_model, 256);
+        assert_eq!(SimConfig::llama8b_scaled(16).d_ff, 896);
+    }
+
+    #[test]
+    fn llama8b_scaled_constructs_and_decodes_at_every_rung() {
+        // regression for the latent panic: build the sim and decode a
+        // step at ladder rungs for a sweep of non-power-of-two scales
+        // (kept to the larger scales so the test stays fast; the config
+        // arithmetic for ALL 1..=32 is covered above)
+        for (s, rungs) in [
+            (16usize, &[4u8][..]),
+            (23, &[8, 3][..]),
+            (29, &[8, 3][..]),
+            (32, &[8, 7, 6, 5, 4, 3][..]),
+        ] {
+            let cfg = SimConfig::llama8b_scaled(s);
+            for &m in rungs {
+                let mut sim =
+                    DecoderSim::new(cfg, DecoderWeights::Sefp(Precision::of(m)), 3);
+                let mut x = vec![0.1f32; cfg.d_model];
+                let c = sim.decode_step(&mut x);
+                assert!(c.is_finite(), "scale {s} m={m}");
+            }
+        }
     }
 
     #[test]

@@ -10,9 +10,19 @@
 
 use crate::sefp::{quantize_value, shared_exponent, step_for, Precision, Rounding};
 
-/// One layer's cache for one sequence (single-batch decode).
+/// One layer's cache for one sequence (one batch row of the decode
+/// engine; `DecoderSim` owns `n_layers × batch` of these).
 pub enum KvCache {
-    F32 { k: Vec<f32>, v: Vec<f32>, d: usize },
+    F32 {
+        k: Vec<f32>,
+        v: Vec<f32>,
+        d: usize,
+        /// attention-score scratch, reused across `attend` calls — the
+        /// decode hot loop must not allocate per token (its capacity
+        /// tracks the cache length; it is working state, not cache
+        /// memory, and is excluded from `bytes()`)
+        scores: Vec<f32>,
+    },
     Sefp(SefpKv),
 }
 
@@ -24,12 +34,14 @@ pub struct SefpKv {
     v_sigs: Vec<i8>,
     k_steps: Vec<f32>,
     v_steps: Vec<f32>,
+    /// reused attention-score scratch (see the `F32` variant)
+    scores: Vec<f32>,
     pub len: usize,
 }
 
 impl KvCache {
     pub fn f32(d: usize) -> Self {
-        KvCache::F32 { k: Vec::new(), v: Vec::new(), d }
+        KvCache::F32 { k: Vec::new(), v: Vec::new(), d, scores: Vec::new() }
     }
 
     pub fn sefp(d: usize, precision: Precision, group_size: usize) -> Self {
@@ -43,6 +55,7 @@ impl KvCache {
             v_sigs: Vec::new(),
             k_steps: Vec::new(),
             v_steps: Vec::new(),
+            scores: Vec::new(),
             len: 0,
         })
     }
@@ -61,7 +74,7 @@ impl KvCache {
     /// Append one position's K and V vectors (length d each).
     pub fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
         match self {
-            KvCache::F32 { k, v, d } => {
+            KvCache::F32 { k, v, d, .. } => {
                 debug_assert_eq!(k_row.len(), *d);
                 k.extend_from_slice(k_row);
                 v.extend_from_slice(v_row);
@@ -72,25 +85,27 @@ impl KvCache {
         }
     }
 
-    /// Attention for one query vector: softmax(q·K/√d)·V.
-    pub fn attend(&self, q: &[f32], out: &mut [f32]) {
+    /// Attention for one query vector: softmax(q·K/√d)·V.  Takes `&mut
+    /// self` only for the persistent score scratch — the cache contents
+    /// are not modified.
+    pub fn attend(&mut self, q: &[f32], out: &mut [f32]) {
         let t = self.len();
         if t == 0 {
             out.fill(0.0);
             return;
         }
         match self {
-            KvCache::F32 { k, v, d } => {
+            KvCache::F32 { k, v, d, scores } => {
                 let scale = (*d as f32).sqrt().recip();
-                let mut scores = Vec::with_capacity(t);
+                scores.clear();
                 for ti in 0..t {
-                    let row = &k[ti * d..(ti + 1) * d];
+                    let row = &k[ti * *d..(ti + 1) * *d];
                     scores.push(super::dot_f32(q, row) * scale);
                 }
-                softmax(&mut scores);
+                softmax(scores);
                 out.fill(0.0);
                 for (ti, &s) in scores.iter().enumerate() {
-                    let row = &v[ti * d..(ti + 1) * d];
+                    let row = &v[ti * *d..(ti + 1) * *d];
                     for (o, &x) in out.iter_mut().zip(row) {
                         *o += s * x;
                     }
@@ -147,11 +162,12 @@ impl SefpKv {
         self.len += 1;
     }
 
-    fn attend(&self, q: &[f32], out: &mut [f32]) {
+    fn attend(&mut self, q: &[f32], out: &mut [f32]) {
         let gs = self.group_size;
         let gpr = self.d / gs; // groups per row
         let scale = (self.d as f32).sqrt().recip();
-        let mut scores = Vec::with_capacity(self.len);
+        let scores = &mut self.scores;
+        scores.clear();
         for ti in 0..self.len {
             let mut acc = 0.0f32;
             for g in 0..gpr {
@@ -162,7 +178,7 @@ impl SefpKv {
             }
             scores.push(acc * scale);
         }
-        softmax(&mut scores);
+        softmax(scores);
         out.fill(0.0);
         for (ti, &s) in scores.iter().enumerate() {
             for g in 0..gpr {
@@ -249,6 +265,24 @@ mod tests {
     }
 
     #[test]
+    fn attend_scratch_reuse_is_idempotent() {
+        // the persistent score scratch must not leak state between
+        // calls: same query, same cache -> bit-identical output, and a
+        // shorter cache after reset never reads stale tail scores
+        let d = 64;
+        let mut c = KvCache::sefp(d, Precision::of(5), 64);
+        for (k, v) in rows(6, d, 8).iter().zip(rows(6, d, 9).iter()) {
+            c.append(k, v);
+        }
+        let q: Vec<f32> = rows(1, d, 10).remove(0);
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![1.0f32; d];
+        c.attend(&q, &mut a);
+        c.attend(&q, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
     fn memory_accounting() {
         let d = 128;
         let mut cf = KvCache::f32(d);
@@ -267,7 +301,7 @@ mod tests {
 
     #[test]
     fn empty_cache_attend_zeroes() {
-        let cache = KvCache::sefp(64, Precision::of(4), 64);
+        let mut cache = KvCache::sefp(64, Precision::of(4), 64);
         let mut out = vec![1.0f32; 64];
         cache.attend(&vec![0.5; 64], &mut out);
         assert!(out.iter().all(|&v| v == 0.0));

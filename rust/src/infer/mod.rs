@@ -8,18 +8,34 @@
 //! instead of a per-element scale:
 //!
 //! ```text
-//! y[n] += step_g * Σ_{k∈g} x[k] · sig[k]
+//! y[b][n] += step_g * Σ_{k∈g} x[b][k] · sig[k]
 //! ```
 //!
 //! `QuantLinear` stores significands contiguously per output column
 //! (groups along the reduction axis, same layout as the Pallas fused
 //! kernel) in i8 (m ≤ 7) or i16 (m = 8).
+//!
+//! Two kernel shapes share that storage:
+//!
+//! * [`QuantLinear::matvec`] — one activation row, the single-sequence
+//!   decode step.
+//! * [`QuantLinear::matmul`] — a `(B × in_dim)` activation block.  Each
+//!   weight column (and its per-group steps) is streamed from memory
+//!   once and reused across all B rows while it is cache-hot, which
+//!   amortizes the weight bandwidth that dominates SEFP decode — this is
+//!   what makes the batched decode engine ([`DecoderSim`] batch mode,
+//!   `serve::DecoderBackend`) beat B sequential `matvec` loops.
+//!   Columns are split across `threads` scoped worker threads
+//!   (`std::thread::scope`, no pool, no allocation); every output
+//!   element is a pure per-column function of the inputs, so results are
+//!   bit-identical to the per-row `matvec` and independent of the worker
+//!   count.
 
 pub mod decoder;
 pub mod kv_cache;
 pub mod sampling;
 
-pub use decoder::{DecoderSim, DecoderWeights, SimConfig};
+pub use decoder::{proj_dims, DecoderSim, DecoderWeights, SimConfig, KV_GROUP};
 pub use kv_cache::KvCache;
 
 use crate::sefp::{Precision, SefpSpec, SefpTensor};
@@ -47,6 +63,41 @@ impl DenseLinear {
             let col = &self.w[n * self.in_dim..(n + 1) * self.in_dim];
             y[n] = dot_f32(x, col);
         }
+    }
+
+    /// Blocked batched matvec: `x` is a row-major `(batch × in_dim)`
+    /// activation block, `y` the row-major `(batch × out_dim)` output.
+    /// Each weight column is streamed once per `ROW_BLOCK` rows and
+    /// columns are split across `threads` scoped workers; every output
+    /// element equals the corresponding [`matvec`](Self::matvec) result
+    /// bit-for-bit, independent of `threads`.
+    pub fn matmul(&self, x: &[f32], batch: usize, y: &mut [f32], threads: usize) {
+        // hard asserts (not debug): the workers write y through a raw
+        // pointer, so a mis-sized buffer must panic, never write OOB
+        assert_eq!(x.len(), batch * self.in_dim, "matmul: x is not batch x in_dim");
+        assert_eq!(y.len(), batch * self.out_dim, "matmul: y is not batch x out_dim");
+        let (in_dim, out_dim) = (self.in_dim, self.out_dim);
+        let yp = ColOut(y.as_mut_ptr());
+        par_columns(out_dim, threads, |cols| {
+            for n in cols {
+                let col = &self.w[n * in_dim..(n + 1) * in_dim];
+                let mut b0 = 0;
+                while b0 < batch {
+                    let bl = (batch - b0).min(ROW_BLOCK);
+                    let mut acc = [0.0f32; ROW_BLOCK];
+                    for (bi, a) in acc.iter_mut().take(bl).enumerate() {
+                        let row = &x[(b0 + bi) * in_dim..(b0 + bi + 1) * in_dim];
+                        *a = dot_f32(row, col);
+                    }
+                    for (bi, &a) in acc.iter().take(bl).enumerate() {
+                        // SAFETY: see `ColOut` — (b0+bi, n) is written by
+                        // exactly one worker, and the scope outlives us
+                        unsafe { yp.write((b0 + bi) * out_dim + n, a) };
+                    }
+                    b0 += bl;
+                }
+            }
+        });
     }
 
     pub fn bytes_f32(&self) -> usize {
@@ -125,6 +176,57 @@ fn dot_f32(x: &[f32], w: &[f32]) -> f32 {
         total += xv * wv;
     }
     total
+}
+
+/// Rows of the activation block accumulated together per column visit:
+/// the column chunk stays in registers/L1 while each of these rows dots
+/// against it, so the weight stream is read once per `ROW_BLOCK` rows.
+const ROW_BLOCK: usize = 8;
+
+/// Output pointer shared across the scoped column workers of `matmul`.
+///
+/// SAFETY contract (upheld by `par_columns` callers): workers receive
+/// disjoint column ranges and write only `y[b * out_dim + n]` for `n` in
+/// their own range, so no two threads ever touch the same element, and
+/// the scope joins all workers before `y` is observable again.  Writes
+/// go through [`write`](ColOut::write) so closures capture the `Sync`
+/// wrapper, never the bare (non-`Sync`) raw pointer field.
+struct ColOut(*mut f32);
+unsafe impl Sync for ColOut {}
+
+impl ColOut {
+    /// SAFETY: `idx` must be in bounds of the output slice and written
+    /// by exactly one worker (see the type docs).
+    #[inline]
+    unsafe fn write(&self, idx: usize, v: f32) {
+        unsafe { *self.0.add(idx) = v };
+    }
+}
+
+/// Run `work` over `0..out_dim` split into at most `threads` contiguous
+/// column ranges on scoped threads (serial when one range suffices).
+/// `work` must be deterministic per column for the thread-count
+/// independence contract of the batched kernels.
+fn par_columns<F: Fn(std::ops::Range<usize>) + Sync>(out_dim: usize, threads: usize, work: F) {
+    let threads = threads.clamp(1, out_dim.max(1));
+    if threads == 1 {
+        work(0..out_dim);
+        return;
+    }
+    let chunk = out_dim.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 1..threads {
+            let lo = t * chunk;
+            if lo >= out_dim {
+                break;
+            }
+            let hi = ((t + 1) * chunk).min(out_dim);
+            let work = &work;
+            s.spawn(move || work(lo..hi));
+        }
+        // the calling thread takes the first range instead of idling
+        work(0..chunk.min(out_dim));
+    });
 }
 
 /// SEFP-quantized linear layer with dequant-on-the-fly matvec.
@@ -261,6 +363,112 @@ impl QuantLinear {
         }
     }
 
+    /// Blocked batched matvec over a row-major `(batch × in_dim)`
+    /// activation block into row-major `(batch × out_dim)` `y`.
+    ///
+    /// The bandwidth-amortizing shape of SEFP decode: each quantized
+    /// column and its per-group steps are streamed from memory ONCE and
+    /// dotted against up to `ROW_BLOCK` activation rows while
+    /// cache-hot, instead of being re-read for every sequence as a
+    /// `matvec` loop would.  Columns split across `threads` scoped
+    /// workers; per-element math is identical to
+    /// [`matvec`](Self::matvec) (same group order, same accumulation
+    /// order), so the output is bit-for-bit equal to B independent
+    /// matvecs and independent of the worker count.
+    pub fn matmul(&self, x: &[f32], batch: usize, y: &mut [f32], threads: usize) {
+        // hard asserts (not debug): the workers write y through a raw
+        // pointer, so a mis-sized buffer must panic, never write OOB
+        assert_eq!(x.len(), batch * self.in_dim, "matmul: x is not batch x in_dim");
+        assert_eq!(y.len(), batch * self.out_dim, "matmul: y is not batch x out_dim");
+        let (in_dim, out_dim, gs) = (self.in_dim, self.out_dim, self.group_size);
+        let gpc = self.groups_per_col;
+        let yp = ColOut(y.as_mut_ptr());
+        match &self.sigs {
+            Sigs::I8(sigs) => par_columns(out_dim, threads, |cols| {
+                for n in cols {
+                    let col = &sigs[n * in_dim..(n + 1) * in_dim];
+                    let col_steps = &self.steps[n * gpc..(n + 1) * gpc];
+                    let mut b0 = 0;
+                    while b0 < batch {
+                        let bl = (batch - b0).min(ROW_BLOCK);
+                        let mut acc = [0.0f32; ROW_BLOCK];
+                        for (g, chunk) in col.chunks_exact(gs).enumerate() {
+                            let step = col_steps[g];
+                            for (bi, a) in acc.iter_mut().take(bl).enumerate() {
+                                let xs = &x[(b0 + bi) * in_dim + g * gs
+                                    ..(b0 + bi) * in_dim + (g + 1) * gs];
+                                *a += dot_i8(xs, chunk) * step;
+                            }
+                        }
+                        for (bi, &a) in acc.iter().take(bl).enumerate() {
+                            // SAFETY: see `ColOut` — disjoint columns per
+                            // worker, scope joins before `y` is read
+                            unsafe { yp.write((b0 + bi) * out_dim + n, a) };
+                        }
+                        b0 += bl;
+                    }
+                }
+            }),
+            Sigs::I16(sigs) => par_columns(out_dim, threads, |cols| {
+                for n in cols {
+                    let col = &sigs[n * in_dim..(n + 1) * in_dim];
+                    let col_steps = &self.steps[n * gpc..(n + 1) * gpc];
+                    let mut b0 = 0;
+                    while b0 < batch {
+                        let bl = (batch - b0).min(ROW_BLOCK);
+                        let mut acc = [0.0f32; ROW_BLOCK];
+                        for (g, chunk) in col.chunks_exact(gs).enumerate() {
+                            let step = col_steps[g];
+                            for (bi, a) in acc.iter_mut().take(bl).enumerate() {
+                                let xs = &x[(b0 + bi) * in_dim + g * gs
+                                    ..(b0 + bi) * in_dim + (g + 1) * gs];
+                                *a += dot_i16(xs, chunk) * step;
+                            }
+                        }
+                        for (bi, &a) in acc.iter().take(bl).enumerate() {
+                            // SAFETY: see `ColOut` — disjoint columns per
+                            // worker, scope joins before `y` is read
+                            unsafe { yp.write((b0 + bi) * out_dim + n, a) };
+                        }
+                        b0 += bl;
+                    }
+                }
+            }),
+        }
+    }
+
+    /// Dequantize ONE output column (`in_dim` values) into `out` — the
+    /// tied-embedding lookup path: token embeddings read the very same
+    /// quantized storage the LM-head matmul computes with (identical
+    /// per-group steps), so no separate f32 embedding table and no
+    /// second copy of the tensor ever exists.
+    pub fn decode_column(&self, n: usize, out: &mut [f32]) {
+        assert!(n < self.out_dim, "column {n} out of range for {}", self.out_dim);
+        assert_eq!(out.len(), self.in_dim, "decode_column: out is not in_dim long");
+        let gs = self.group_size;
+        let col_steps = &self.steps[n * self.groups_per_col..(n + 1) * self.groups_per_col];
+        match &self.sigs {
+            Sigs::I8(sigs) => {
+                let col = &sigs[n * self.in_dim..(n + 1) * self.in_dim];
+                for (g, chunk) in col.chunks_exact(gs).enumerate() {
+                    let step = col_steps[g];
+                    for (o, &s) in out[g * gs..(g + 1) * gs].iter_mut().zip(chunk) {
+                        *o = s as f32 * step;
+                    }
+                }
+            }
+            Sigs::I16(sigs) => {
+                let col = &sigs[n * self.in_dim..(n + 1) * self.in_dim];
+                for (g, chunk) in col.chunks_exact(gs).enumerate() {
+                    let step = col_steps[g];
+                    for (o, &s) in out[g * gs..(g + 1) * gs].iter_mut().zip(chunk) {
+                        *o = s as f32 * step;
+                    }
+                }
+            }
+        }
+    }
+
     /// Working-set bytes actually touched per matvec (what bounds CPU
     /// decode throughput): significand storage + steps.
     pub fn working_bytes(&self) -> usize {
@@ -345,6 +553,52 @@ mod tests {
         assert_eq!(q4.packed_bytes(), expect_bits / 8);
         assert!(q4.packed_bytes() * 3 < d.bytes_f16());
         assert!(q4.working_bytes() < d.bytes_f32() / 2);
+    }
+
+    #[test]
+    fn matmul_matches_per_row_matvec_bitwise() {
+        // remainder rows on purpose: 5 is not a ROW_BLOCK multiple, and
+        // 33 columns does not split evenly across 4 workers
+        let (in_dim, out_dim, batch) = (128, 33, 5);
+        let d = dense(in_dim, out_dim, 21);
+        let mut rng = Rng::new(22);
+        let x: Vec<f32> = (0..batch * in_dim).map(|_| rng.normal() as f32).collect();
+        for p in Precision::LADDER {
+            let q = QuantLinear::from_dense(&d, &SefpSpec::new(p));
+            let mut y_ref = vec![0.0f32; batch * out_dim];
+            for b in 0..batch {
+                let y_row = &mut y_ref[b * out_dim..(b + 1) * out_dim];
+                q.matvec(&x[b * in_dim..(b + 1) * in_dim], y_row);
+            }
+            for threads in [1, 2, 4] {
+                let mut y = vec![f32::NAN; batch * out_dim];
+                q.matmul(&x, batch, &mut y, threads);
+                assert_eq!(y, y_ref, "{p} threads={threads}");
+            }
+        }
+        // dense kernel obeys the same contract
+        let mut y_ref = vec![0.0f32; batch * out_dim];
+        for b in 0..batch {
+            d.matvec(&x[b * in_dim..(b + 1) * in_dim], &mut y_ref[b * out_dim..(b + 1) * out_dim]);
+        }
+        for threads in [1, 3] {
+            let mut y = vec![f32::NAN; batch * out_dim];
+            d.matmul(&x, batch, &mut y, threads);
+            assert_eq!(y, y_ref, "dense threads={threads}");
+        }
+    }
+
+    #[test]
+    fn matmul_handles_degenerate_shapes() {
+        // batch 1 (the matvec case) and more workers than columns
+        let d = dense(64, 2, 30);
+        let q = QuantLinear::from_dense(&d, &SefpSpec::new(Precision::of(4)));
+        let x: Vec<f32> = (0..64).map(|i| i as f32 * 0.01).collect();
+        let mut y1 = vec![0.0f32; 2];
+        let mut y2 = vec![0.0f32; 2];
+        q.matvec(&x, &mut y1);
+        q.matmul(&x, 1, &mut y2, 8);
+        assert_eq!(y1, y2);
     }
 
     #[test]

@@ -22,6 +22,9 @@ COMMANDS:
              (methods: none fp fixed uniform bps_only otaro)
   eval       [--checkpoint FILE] [--mc-items N]
   serve-demo [--requests N] [--checkpoint FILE] [--serve-config FILE.json]
+             [--backend decoder|engine]
+             (decoder = pure-Rust batched SEFP decode engine, default —
+             real logits, no PJRT; engine = PJRT AOT artifacts)
   pack       [--checkpoint FILE] [--out FILE] [--top M]
              (f32 checkpoint -> packed .sefp single-master container)
   inspect    FILE.sefp
@@ -132,8 +135,9 @@ fn main() -> anyhow::Result<()> {
             let requests = args.opt_parse("--requests", 64usize);
             let checkpoint = args.opt("--checkpoint").map(PathBuf::from);
             let serve_config = args.opt("--serve-config").map(PathBuf::from);
+            let backend = args.opt("--backend").unwrap_or_else(|| "decoder".into());
             args.finish();
-            experiments::serve_demo(&ctx, requests, checkpoint, serve_config)
+            experiments::serve_demo(&ctx, requests, checkpoint, serve_config, &backend)
         }
         "pack" => {
             let checkpoint = args.opt("--checkpoint").map(PathBuf::from);

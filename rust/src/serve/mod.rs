@@ -24,8 +24,12 @@
 //! * [`backend`] — [`LogitsBackend`]: `load_view` installs the SEFP view
 //!   for a precision run, `logits_step` is the one-step logits interface
 //!   the server generates through.  [`EngineHandle`] adapts the owned
-//!   PJRT engine; [`SimBackend`] is a deterministic in-process stand-in
-//!   for scheduler tests and serving benchmarks.
+//!   PJRT engine; [`DecoderBackend`] serves REAL SEFP logits from the
+//!   pure-Rust batched decode engine (`infer::DecoderSim` + ladder
+//!   views via the zero-float `QuantLinear::from_sefp` path — per-row KV
+//!   caches map onto the continuous-batching refill, no PJRT artifacts
+//!   needed); [`SimBackend`] is a deterministic hash stand-in for
+//!   scheduler tests that want precision-keyed but weightless logits.
 //! * [`server`]  — continuous-batching generation engine.  A scheduled
 //!   batch is decoded for up to `max_new_tokens` tokens via repeated
 //!   `logits_step` calls (greedy or temperature sampling); rows freed by
@@ -46,7 +50,7 @@ pub mod router;
 pub mod server;
 pub mod store;
 
-pub use backend::{EngineHandle, LogitsBackend, SimBackend};
+pub use backend::{demo_decoder_params, DecoderBackend, EngineHandle, LogitsBackend, SimBackend};
 pub use batcher::{DynamicBatcher, SchedPolicy};
 pub use router::{Router, TaskClass};
 pub use server::{Server, ServeStats};

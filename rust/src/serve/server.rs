@@ -169,11 +169,14 @@ impl<B: LogitsBackend> Server<B> {
     }
 
     /// Enqueue a request (routing decides the precision).  `false` =
-    /// rejected: empty prompts and precisions above the ladder master
-    /// are invalid (there is no position to read logits from / no
-    /// mantissa bits to invent), and a full queue sheds by backpressure.
+    /// rejected: empty prompts, prompts containing the reserved PAD id
+    /// (the padding sentinel of the engine's token matrix — a prompt
+    /// carrying it would desync every backend's window recovery), and
+    /// precisions above the ladder master are invalid (there is no
+    /// position to read logits from / no mantissa bits to invent), and
+    /// a full queue sheds by backpressure.
     pub fn submit(&mut self, req: Request) -> bool {
-        if req.prompt.is_empty() {
+        if req.prompt.is_empty() || req.prompt.contains(&PAD) {
             self.stats.invalid += 1;
             return false;
         }
@@ -255,7 +258,7 @@ impl<B: LogitsBackend> Server<B> {
             }
 
             let t0 = Instant::now();
-            let logits = self.backend.logits_step(&tokens)?;
+            let mut logits = self.backend.logits_step(&tokens)?;
             let step_ms = t0.elapsed().as_secs_f64() * 1e3;
             self.stats.decode_steps += 1;
 
@@ -264,6 +267,14 @@ impl<B: LogitsBackend> Server<B> {
                 let mut finished = false;
                 if let Some(r) = rows[ri].as_mut() {
                     let off = (ri * seq_len + last_pos[ri]) * vocab;
+                    // PAD is a reserved padding id, never a legal
+                    // emission: when the vocab is large enough to
+                    // contain it, mask it so a sampled PAD can never
+                    // enter a context window (backends recover each
+                    // row's window by stripping trailing PADs)
+                    if (PAD as usize) < vocab {
+                        logits[off + PAD as usize] = f32::NEG_INFINITY;
+                    }
                     let next = sampling::sample(
                         &logits[off..off + vocab],
                         r.temperature,

@@ -263,6 +263,14 @@ impl PrecisionLadder {
         self.master.precision
     }
 
+    /// The always-resident master view itself (top precision).  Unlike
+    /// [`view_at`](Self::view_at) this takes `&self` and touches no
+    /// cache state — backends use it to inspect tensor names/shapes at
+    /// construction time.
+    pub fn master_view(&self) -> Arc<LadderView> {
+        self.master.clone()
+    }
+
     pub fn budget_bytes(&self) -> usize {
         self.budget_bytes
     }

@@ -1,0 +1,173 @@
+//! Property tests for the batched SEFP decode kernels and the batched
+//! decode engine — the tentpole contracts of the infer rebuild:
+//!
+//! * `matmul` over a B-row block equals B independent `matvec`s
+//!   BIT-FOR-BIT at every `Precision::LADDER` rung, on both significand
+//!   storage paths (i8 for m ≤ 7, i16 for m = 8), including remainder
+//!   rows (batch not a multiple of the internal row block) and ragged
+//!   column splits;
+//! * results are identical for 1 vs N worker threads;
+//! * a B-row `DecoderSim` step is bit-identical to B independent
+//!   single-row sims stepping separately (per-row KV caches truly
+//!   independent).
+
+use otaro::data::Rng;
+use otaro::infer::{DecoderSim, DecoderWeights, DenseLinear, QuantLinear, SimConfig};
+use otaro::sefp::{Precision, SefpSpec};
+
+fn dense(in_dim: usize, out_dim: usize, seed: u64) -> DenseLinear {
+    let mut rng = Rng::new(seed);
+    DenseLinear::new(
+        in_dim,
+        out_dim,
+        (0..in_dim * out_dim).map(|_| rng.normal() as f32 * 0.1).collect(),
+    )
+}
+
+#[test]
+fn quant_matmul_equals_b_matvecs_at_every_rung() {
+    // shapes chosen to exercise: remainder rows (5, 17 vs the internal
+    // row block of 8), odd column counts (33, 7) that split raggedly
+    // across workers, and batch == 1
+    for &(in_dim, out_dim, batch) in
+        &[(128usize, 48usize, 8usize), (192, 33, 5), (64, 7, 1), (128, 96, 17)]
+    {
+        let d = dense(in_dim, out_dim, (in_dim + out_dim + batch) as u64);
+        let mut rng = Rng::new(99);
+        let x: Vec<f32> = (0..batch * in_dim).map(|_| rng.normal() as f32).collect();
+        for p in Precision::LADDER {
+            let q = QuantLinear::from_dense(&d, &SefpSpec::new(p));
+            let mut want = vec![0.0f32; batch * out_dim];
+            for b in 0..batch {
+                let y_row = &mut want[b * out_dim..(b + 1) * out_dim];
+                q.matvec(&x[b * in_dim..(b + 1) * in_dim], y_row);
+            }
+            for threads in [1usize, 2, 3, 8] {
+                let mut got = vec![f32::NAN; batch * out_dim];
+                q.matmul(&x, batch, &mut got, threads);
+                assert_eq!(got, want, "{in_dim}x{out_dim} B={batch} {p} threads={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_matmul_equals_b_matvecs() {
+    let (in_dim, out_dim, batch) = (96, 21, 6);
+    let d = dense(in_dim, out_dim, 4);
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> = (0..batch * in_dim).map(|_| rng.normal() as f32).collect();
+    let mut want = vec![0.0f32; batch * out_dim];
+    for b in 0..batch {
+        d.matvec(&x[b * in_dim..(b + 1) * in_dim], &mut want[b * out_dim..(b + 1) * out_dim]);
+    }
+    for threads in [1usize, 4] {
+        let mut got = vec![f32::NAN; batch * out_dim];
+        d.matmul(&x, batch, &mut got, threads);
+        assert_eq!(got, want, "threads={threads}");
+    }
+}
+
+#[test]
+fn batched_decode_equals_independent_single_row_sims() {
+    // the serve engine's core assumption: rows of one batched sim are
+    // bit-identical to separate single-sequence sims — same weights
+    // (same seed), distinct per-row activations, several steps deep, on
+    // both the i8 (m=4) and i16 (m=8) paths, threaded
+    let cfg = SimConfig { d_model: 64, d_ff: 128, n_layers: 2, vocab: 96, context: 16 };
+    for m in [8u8, 4] {
+        let batch = 3;
+        let mut big =
+            DecoderSim::new_batched(cfg, DecoderWeights::Sefp(Precision::of(m)), 7, batch)
+                .with_threads(2);
+        let mut singles: Vec<DecoderSim> = (0..batch)
+            .map(|_| DecoderSim::new(cfg, DecoderWeights::Sefp(Precision::of(m)), 7))
+            .collect();
+        let mut rng = Rng::new(11);
+        let mut xb: Vec<f32> =
+            (0..batch * cfg.d_model).map(|_| rng.normal() as f32 * 0.1).collect();
+        let mut xs: Vec<Vec<f32>> = (0..batch)
+            .map(|b| xb[b * cfg.d_model..(b + 1) * cfg.d_model].to_vec())
+            .collect();
+        for step in 0..4 {
+            let _ = big.decode_batch_step(&mut xb);
+            let big_logits = big.logits().to_vec();
+            for (b, x_single) in xs.iter_mut().enumerate() {
+                let _ = singles[b].decode_step(x_single);
+                assert_eq!(
+                    &xb[b * cfg.d_model..(b + 1) * cfg.d_model],
+                    &x_single[..],
+                    "activation row {b} step {step} m={m}"
+                );
+                assert_eq!(
+                    &big_logits[b * cfg.vocab..(b + 1) * cfg.vocab],
+                    &singles[b].logits()[..cfg.vocab],
+                    "logits row {b} step {step} m={m}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_decode_is_thread_count_invariant() {
+    let cfg = SimConfig { d_model: 64, d_ff: 128, n_layers: 2, vocab: 96, context: 16 };
+    let run = |threads: usize| {
+        let mut sim = DecoderSim::new_batched(cfg, DecoderWeights::Sefp(Precision::of(4)), 3, 4)
+            .with_threads(threads);
+        let mut x: Vec<f32> =
+            (0..4 * cfg.d_model).map(|i| ((i % 17) as f32 - 8.0) * 0.02).collect();
+        let mut checksums = Vec::new();
+        for _ in 0..3 {
+            checksums.push(sim.decode_batch_step(&mut x));
+        }
+        (x, checksums, sim.logits().to_vec())
+    };
+    assert_eq!(run(1), run(4));
+}
+
+#[test]
+fn dense_batched_decode_matches_single_rows() {
+    // the FP baseline path batches identically (DenseLinear::matmul)
+    let cfg = SimConfig { d_model: 64, d_ff: 128, n_layers: 1, vocab: 64, context: 8 };
+    let mut big = DecoderSim::new_batched(cfg, DecoderWeights::Dense, 13, 2);
+    let mut one = DecoderSim::new(cfg, DecoderWeights::Dense, 13);
+    let mut xb = vec![0.05f32; 2 * cfg.d_model];
+    let mut x1 = vec![0.05f32; cfg.d_model];
+    for _ in 0..2 {
+        let _ = big.decode_batch_step(&mut xb);
+        let _ = one.decode_step(&mut x1);
+    }
+    assert_eq!(&xb[..cfg.d_model], &x1[..]);
+    assert_eq!(&big.logits()[..cfg.vocab], &one.logits()[..cfg.vocab]);
+}
+
+#[test]
+fn row_reset_preserves_other_rows_bitwise() {
+    // reset one row mid-decode: the surviving rows must continue exactly
+    // as if the reset never happened (the FIFO-refill correctness story)
+    let cfg = SimConfig { d_model: 64, d_ff: 128, n_layers: 2, vocab: 96, context: 16 };
+    let mk = || DecoderSim::new_batched(cfg, DecoderWeights::Sefp(Precision::of(4)), 21, 2);
+    let mut with_reset = mk();
+    let mut without = mk();
+    let x0: Vec<f32> = (0..2 * cfg.d_model).map(|i| (i as f32 % 7.0) * 0.03).collect();
+    let (mut xa, mut xb) = (x0.clone(), x0);
+    for _ in 0..2 {
+        let _ = with_reset.decode_batch_step(&mut xa);
+        let _ = without.decode_batch_step(&mut xb);
+    }
+    with_reset.reset_row(1);
+    // row 1 diverges (fresh cache + fresh activation), row 0 must not
+    xa[cfg.d_model..].fill(0.1);
+    xb[cfg.d_model..].fill(0.1);
+    let _ = with_reset.decode_batch_step(&mut xa);
+    let _ = without.decode_batch_step(&mut xb);
+    assert_eq!(&xa[..cfg.d_model], &xb[..cfg.d_model], "row 0 activations diverged");
+    assert_eq!(
+        &with_reset.logits()[..cfg.vocab],
+        &without.logits()[..cfg.vocab],
+        "row 0 logits diverged"
+    );
+    assert_eq!(with_reset.row_len(1), 1, "row 1 restarted from an empty cache");
+    assert_eq!(without.row_len(1), 3);
+}
