@@ -7,6 +7,8 @@
 //! the `artifact` module docs; the byte-level freeze is enforced by
 //! `rust/tests/artifact_golden.rs`.
 
+use crate::sefp::Precision;
+
 /// File magic, bytes 0..8 of every `.sefp` artifact.
 pub const MAGIC: [u8; 8] = *b"OTARSEFP";
 /// Current (and only) format version.
@@ -23,21 +25,22 @@ pub fn align_up(x: usize) -> usize {
     x.div_ceil(ALIGN) * ALIGN
 }
 
-/// Byte length of a packed tensor blob: 5-bit shared exponents + sign
-/// plane + `m` mantissa bit-planes, each region starting on a fresh
-/// byte.  The single source of the blob-size arithmetic — the writer
-/// asserts against it and the reader rejects index entries that
-/// disagree with it.
-pub fn packed_blob_len(len: usize, n_groups: usize, m: u8) -> usize {
-    (n_groups * 5).div_ceil(8) + len.div_ceil(8) * (1 + m as usize)
+/// Byte length of a packed tensor blob at precision `p`: 5-bit shared
+/// exponents + sign plane + `p.m()` mantissa bit-planes, each region
+/// starting on a fresh byte.  The single source of the blob-size
+/// arithmetic — the writer asserts against it and the reader rejects
+/// index entries that disagree with it.  Taking [`Precision`] (not a
+/// raw `m: u8`) keeps the width validated end to end.
+pub fn packed_blob_len(len: usize, n_groups: usize, p: Precision) -> usize {
+    (n_groups * 5).div_ceil(8) + len.div_ceil(8) * (1 + p.m() as usize)
 }
 
 /// Overflow-checked twin of [`packed_blob_len`] for UNTRUSTED index
 /// fields: a crafted container with `len`/`n_groups` near `usize::MAX`
 /// must produce a validation error, not an arithmetic panic.
-pub fn checked_packed_blob_len(len: usize, n_groups: usize, m: u8) -> Option<usize> {
+pub fn checked_packed_blob_len(len: usize, n_groups: usize, p: Precision) -> Option<usize> {
     let exp = n_groups.checked_mul(5)?.div_ceil(8);
-    let planes = len.div_ceil(8).checked_mul(1 + m as usize)?;
+    let planes = len.div_ceil(8).checked_mul(1 + p.m() as usize)?;
     exp.checked_add(planes)
 }
 
@@ -252,8 +255,8 @@ mod tests {
     fn blob_len_arithmetic() {
         // 100 elems, 2 groups, m=4: exp = ceil(10/8) = 2, stride = 13,
         // planes = (1 sign + 4 mantissa) * 13
-        assert_eq!(packed_blob_len(100, 2, 4), 2 + 13 * 5);
-        assert_eq!(packed_blob_len(0, 0, 8), 0);
+        assert_eq!(packed_blob_len(100, 2, Precision::of(4)), 2 + 13 * 5);
+        assert_eq!(packed_blob_len(0, 0, Precision::of(8)), 0);
         assert_eq!(align_up(0), 0);
         assert_eq!(align_up(1), 8);
         assert_eq!(align_up(8), 8);

@@ -129,9 +129,13 @@ impl Artifact {
         );
 
         let mut index = Vec::with_capacity(count);
-        for (i, tm) in tensors.iter().enumerate() {
-            let at = idx_off + i * INDEX_ENTRY_LEN;
-            let e = IndexEntry::parse(&buf[at..at + INDEX_ENTRY_LEN])
+        // walk the index as fixed-size chunks of the checked
+        // [idx_off, idx_end) range — no per-record offset arithmetic on
+        // the untrusted header fields (chunks_exact yields exactly
+        // `count` records, matching `tensors` by the ensure above)
+        let records = buf[idx_off..idx_end].chunks_exact(INDEX_ENTRY_LEN);
+        for (tm, rec) in tensors.iter().zip(records) {
+            let e = IndexEntry::parse(rec)
                 .map_err(|err| anyhow::anyhow!("tensor {:?}: {err}", tm.name))?;
             let len = e.len as usize;
             // every arithmetic step below runs on untrusted fields:
@@ -174,7 +178,7 @@ impl Artifact {
                         e.n_groups
                     );
                     let expect =
-                        checked_packed_blob_len(len, n_groups, top.m()).ok_or_else(|| {
+                        checked_packed_blob_len(len, n_groups, top).ok_or_else(|| {
                             anyhow::anyhow!("tensor {:?}: plane layout size overflows", tm.name)
                         })?;
                     anyhow::ensure!(
@@ -257,6 +261,14 @@ impl Artifact {
         self.index.iter().map(|e| e.data_len as usize).sum()
     }
 
+    /// Slice tensor `e`'s blob out of the container buffer.  `e` comes
+    /// from `self.index`, so its range was bounds- and overflow-checked
+    /// against the file in `from_bytes`.
+    fn blob(&self, e: &IndexEntry) -> &[u8] {
+        // lint: allow(untrusted-checked-arith, reason = "blob bounds validated at open: from_bytes checked data_off + data_len against the file with checked_add")
+        &self.buf[e.data_off as usize..(e.data_off + e.data_len) as usize]
+    }
+
     /// THE truncate-at-load entry point: a borrowed view of quantized
     /// tensor `i` at rung `p`.  Pure pointer arithmetic — the view
     /// aliases the exponent plane, the sign plane, and the first
@@ -283,8 +295,9 @@ impl Artifact {
         let len = e.len as usize;
         let n_groups = e.n_groups as usize;
         let stride = len.div_ceil(8);
+        // lint: allow(untrusted-checked-arith, reason = "validated at open: from_bytes ran this exact arithmetic through checked_packed_blob_len")
         let exp_bytes = (n_groups * 5).div_ceil(8);
-        let blob = &self.buf[e.data_off as usize..(e.data_off + e.data_len) as usize];
+        let blob = self.blob(e);
         let (exp, rest) = blob.split_at(exp_bytes);
         let (sign, mant) = rest.split_at(stride);
         Ok(TensorView {
@@ -312,8 +325,8 @@ impl Artifact {
             "tensor {:?} is SEFP-packed — use view",
             self.tensors[i].name
         );
-        let blob = &self.buf[e.data_off as usize..(e.data_off + e.data_len) as usize];
-        Ok(blob
+        Ok(self
+            .blob(e)
             .chunks_exact(4)
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
             .collect())
@@ -330,7 +343,7 @@ impl Artifact {
                 // a view at rung p borrows exactly the blob a p-top
                 // master would occupy — exp + sign + p.m() planes
                 TensorKind::Packed => {
-                    packed_blob_len(e.len as usize, e.n_groups as usize, p.m())
+                    packed_blob_len(e.len as usize, e.n_groups as usize, p)
                 }
                 TensorKind::RawF32 => e.data_len as usize,
             })

@@ -124,7 +124,7 @@ fn pack_planes(t: &SefpTensor) -> Vec<u8> {
             }
         }
     }
-    debug_assert_eq!(blob.len(), packed_blob_len(t.len, t.n_groups(), t.precision.m()));
+    debug_assert_eq!(blob.len(), packed_blob_len(t.len, t.n_groups(), t.precision));
     blob
 }
 

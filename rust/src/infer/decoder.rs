@@ -363,6 +363,7 @@ impl DecoderSim {
     }
 
     fn step_rows(&mut self, x: &mut [f32], active: Option<&[bool]>) -> f32 {
+        // lint: region(no_alloc)
         let d = self.cfg.d_model;
         let bsz = self.batch;
         let threads = self.threads;
@@ -424,6 +425,7 @@ impl DecoderSim {
             }
         }
         checksum
+        // lint: end_region
     }
 
     /// Run the layer stack for ONE row only (single-row matvecs, no LM
@@ -432,6 +434,7 @@ impl DecoderSim {
     /// the batch.  Numerics are bit-identical to a batched step of the
     /// same row (the kernels share accumulation order).
     pub fn prefill_row_step(&mut self, b: usize, x: &mut [f32]) {
+        // lint: region(no_alloc)
         let d = self.cfg.d_model;
         let f = self.cfg.d_ff;
         let bsz = self.batch;
@@ -465,6 +468,7 @@ impl DecoderSim {
                 *xv = 0.9 * *xv + 0.1 * bv.tanh();
             }
         }
+        // lint: end_region
     }
 
     /// Cache length (tokens) of one row's layer-0 cache.

@@ -89,6 +89,7 @@ impl KvCache {
     /// self` only for the persistent score scratch — the cache contents
     /// are not modified.
     pub fn attend(&mut self, q: &[f32], out: &mut [f32]) {
+        // lint: region(no_alloc)
         let t = self.len();
         if t == 0 {
             out.fill(0.0);
@@ -113,6 +114,7 @@ impl KvCache {
             }
             KvCache::Sefp(c) => c.attend(q, out),
         }
+        // lint: end_region
     }
 
     /// Cache memory in bytes (packed accounting for SEFP).
@@ -163,6 +165,7 @@ impl SefpKv {
     }
 
     fn attend(&mut self, q: &[f32], out: &mut [f32]) {
+        // lint: region(no_alloc)
         let gs = self.group_size;
         let gpr = self.d / gs; // groups per row
         let scale = (self.d as f32).sqrt().recip();
@@ -191,6 +194,7 @@ impl SefpKv {
                 }
             }
         }
+        // lint: end_region
     }
 }
 

@@ -72,6 +72,7 @@ impl DenseLinear {
     /// element equals the corresponding [`matvec`](Self::matvec) result
     /// bit-for-bit, independent of `threads`.
     pub fn matmul(&self, x: &[f32], batch: usize, y: &mut [f32], threads: usize) {
+        // lint: region(no_alloc)
         // hard asserts (not debug): the workers write y through a raw
         // pointer, so a mis-sized buffer must panic, never write OOB
         assert_eq!(x.len(), batch * self.in_dim, "matmul: x is not batch x in_dim");
@@ -98,6 +99,7 @@ impl DenseLinear {
                 }
             }
         });
+        // lint: end_region
     }
 
     pub fn bytes_f32(&self) -> usize {
@@ -124,6 +126,7 @@ enum Sigs {
 /// this reaches within ~1.5x of the single-core bandwidth roofline.
 const LANES: usize = 16;
 
+// lint: region(no_alloc)
 #[inline]
 fn dot_i8(x: &[f32], s: &[i8]) -> f32 {
     debug_assert_eq!(x.len(), s.len());
@@ -177,6 +180,7 @@ fn dot_f32(x: &[f32], w: &[f32]) -> f32 {
     }
     total
 }
+// lint: end_region
 
 /// Rows of the activation block accumulated together per column visit:
 /// the column chunk stays in registers/L1 while each of these rows dots
@@ -192,6 +196,9 @@ const ROW_BLOCK: usize = 8;
 /// go through [`write`](ColOut::write) so closures capture the `Sync`
 /// wrapper, never the bare (non-`Sync`) raw pointer field.
 struct ColOut(*mut f32);
+// SAFETY: the wrapper is only shared across `par_columns` workers that
+// write disjoint elements (contract above), so concurrent `&ColOut`
+// access never races.
 unsafe impl Sync for ColOut {}
 
 impl ColOut {
@@ -199,6 +206,8 @@ impl ColOut {
     /// by exactly one worker (see the type docs).
     #[inline]
     unsafe fn write(&self, idx: usize, v: f32) {
+        // SAFETY: caller upholds in-bounds `idx` and single-writer
+        // disjointness (function contract above)
         unsafe { *self.0.add(idx) = v };
     }
 }
@@ -332,6 +341,7 @@ impl QuantLinear {
     /// Dequant-on-the-fly matvec: integer significands stream through the
     /// inner loop, one scale multiply per group.
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        // lint: region(no_alloc)
         debug_assert_eq!(x.len(), self.in_dim);
         debug_assert_eq!(y.len(), self.out_dim);
         let gs = self.group_size;
@@ -361,6 +371,7 @@ impl QuantLinear {
                 }
             }
         }
+        // lint: end_region
     }
 
     /// Blocked batched matvec over a row-major `(batch × in_dim)`
@@ -376,6 +387,7 @@ impl QuantLinear {
     /// order), so the output is bit-for-bit equal to B independent
     /// matvecs and independent of the worker count.
     pub fn matmul(&self, x: &[f32], batch: usize, y: &mut [f32], threads: usize) {
+        // lint: region(no_alloc)
         // hard asserts (not debug): the workers write y through a raw
         // pointer, so a mis-sized buffer must panic, never write OOB
         assert_eq!(x.len(), batch * self.in_dim, "matmul: x is not batch x in_dim");
@@ -435,6 +447,7 @@ impl QuantLinear {
                 }
             }),
         }
+        // lint: end_region
     }
 
     /// Dequantize ONE output column (`in_dim` values) into `out` — the
@@ -443,6 +456,7 @@ impl QuantLinear {
     /// per-group steps), so no separate f32 embedding table and no
     /// second copy of the tensor ever exists.
     pub fn decode_column(&self, n: usize, out: &mut [f32]) {
+        // lint: region(no_alloc)
         assert!(n < self.out_dim, "column {n} out of range for {}", self.out_dim);
         assert_eq!(out.len(), self.in_dim, "decode_column: out is not in_dim long");
         let gs = self.group_size;
@@ -467,6 +481,7 @@ impl QuantLinear {
                 }
             }
         }
+        // lint: end_region
     }
 
     /// Working-set bytes actually touched per matvec (what bounds CPU

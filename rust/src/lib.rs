@@ -24,6 +24,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod infer;
+pub mod lint;
 pub mod metrics;
 pub mod policy;
 pub mod runtime;

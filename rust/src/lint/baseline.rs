@@ -1,0 +1,85 @@
+//! Checked-in baseline: documented legacy debt the lint pass tolerates.
+//!
+//! Format — one entry per line, `#` comments and blank lines ignored:
+//!
+//! ```text
+//! <rule-name> <module-path>
+//! ```
+//!
+//! An entry waives every violation of `<rule-name>` in
+//! `<module-path>` (relative to the source root).  The waiver is
+//! file-granular on purpose: line numbers would churn on every edit,
+//! and per-file debt is what gets paid down as a unit.
+//!
+//! Two staleness guards keep the baseline honest:
+//!
+//! * an entry naming a module that no longer exists **fails** the pass
+//!   (no debt records for deleted files), and
+//! * an entry that matched no violation is reported as unused (the debt
+//!   was paid — delete the entry) without failing the pass.
+
+use std::collections::BTreeSet;
+
+/// Parsed baseline entries as `(rule, module)` pairs.
+#[derive(Debug, Clone, Default)]
+pub struct Baseline {
+    pub entries: BTreeSet<(String, String)>,
+}
+
+impl Baseline {
+    pub fn parse(text: &str, known_rules: &[&str]) -> anyhow::Result<Baseline> {
+        let mut entries = BTreeSet::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let (Some(rule), Some(module), None) =
+                (parts.next(), parts.next(), parts.next())
+            else {
+                anyhow::bail!(
+                    "baseline line {}: expected `<rule> <module>`, got {line:?}",
+                    ln + 1
+                );
+            };
+            anyhow::ensure!(
+                known_rules.contains(&rule),
+                "baseline line {}: unknown rule {rule:?}",
+                ln + 1
+            );
+            entries.insert((rule.to_string(), module.to_string()));
+        }
+        Ok(Baseline { entries })
+    }
+
+    pub fn covers(&self, rule: &str, module: &str) -> bool {
+        self.entries.contains(&(rule.to_string(), module.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RULES: &[&str] = &["raw-mantissa", "request-path-no-panic"];
+
+    #[test]
+    fn parses_entries_and_comments() {
+        let b = Baseline::parse(
+            "# debt ledger\n\nraw-mantissa coordinator/mod.rs\n",
+            RULES,
+        )
+        .unwrap();
+        assert!(b.covers("raw-mantissa", "coordinator/mod.rs"));
+        assert!(!b.covers("raw-mantissa", "serve/store.rs"));
+        assert!(!b.covers("request-path-no-panic", "coordinator/mod.rs"));
+    }
+
+    #[test]
+    fn rejects_malformed_and_unknown() {
+        assert!(Baseline::parse("just-one-field\n", RULES).is_err());
+        assert!(Baseline::parse("a b c\n", RULES).is_err());
+        assert!(Baseline::parse("no-such-rule serve/store.rs\n", RULES).is_err());
+    }
+}

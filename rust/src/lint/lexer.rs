@@ -1,0 +1,287 @@
+//! Comment/string/char-literal-aware line classification — the lexical
+//! substrate every rule stands on.
+//!
+//! [`classify`] splits a Rust source file into per-line (code, comment)
+//! channels: string and char literal *contents* are blanked out of the
+//! code channel (the delimiting quotes remain as placeholders), and
+//! comment text — line, doc, and nested block comments — lands in the
+//! comment channel.  Rules that scan for tokens like `unwrap` or
+//! `unsafe` therefore can never be fooled by a string literal or a
+//! comment that merely *mentions* them, and rules that look for
+//! `// SAFETY:` or `// lint:` directives read the comment channel
+//! without tripping over `"// not a comment"` inside a string.
+//!
+//! [`tokens`] then splits a code channel into identifier/punctuation
+//! tokens so rules match *exact* identifiers: `unwrap` does not match
+//! `unwrap_or_else`, `m` does not match `m_bits`.
+
+/// One source line split into its code and comment channels.
+#[derive(Debug, Clone, Default)]
+pub struct Line {
+    /// Code text with string/char-literal contents blanked (quotes kept).
+    pub code: String,
+    /// Comment text, including the `//` / `/*` markers.
+    pub comment: String,
+}
+
+/// A code-channel token: an identifier-like word (identifiers, keywords,
+/// numeric literals) or a single punctuation character.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tok<'a> {
+    Ident(&'a str),
+    Punct(char),
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize one line's code channel.
+pub fn tokens(code: &str) -> Vec<Tok<'_>> {
+    let mut out = Vec::new();
+    let mut chars = code.char_indices().peekable();
+    while let Some((i, c)) = chars.next() {
+        if c.is_whitespace() {
+            continue;
+        }
+        if is_ident_char(c) {
+            let mut end = i + c.len_utf8();
+            while let Some(&(j, d)) = chars.peek() {
+                if is_ident_char(d) {
+                    end = j + d.len_utf8();
+                    chars.next();
+                } else {
+                    break;
+                }
+            }
+            out.push(Tok::Ident(&code[i..end]));
+        } else {
+            out.push(Tok::Punct(c));
+        }
+    }
+    out
+}
+
+/// True when `toks` contains `pat` as a consecutive subsequence.
+pub fn has_seq(toks: &[Tok<'_>], pat: &[Tok<'_>]) -> bool {
+    !pat.is_empty() && toks.windows(pat.len()).any(|w| w == pat)
+}
+
+/// True when `toks` contains the exact identifier `name`.
+pub fn has_ident(toks: &[Tok<'_>], name: &str) -> bool {
+    toks.iter().any(|t| matches!(t, Tok::Ident(s) if *s == name))
+}
+
+/// Lexer state across lines.
+enum State {
+    Code,
+    LineComment,
+    /// nesting depth (Rust block comments nest)
+    BlockComment(u32),
+    Str,
+    /// number of `#`s delimiting the raw string
+    RawStr(usize),
+    CharLit,
+}
+
+/// Split a whole source file into per-line code/comment channels.
+pub fn classify(text: &str) -> Vec<Line> {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut state = State::Code;
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(state, State::LineComment) {
+                state = State::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    state = State::LineComment;
+                    cur.comment.push_str("//");
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment(1);
+                    cur.comment.push_str("/*");
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    cur.code.push('"');
+                    i += 1;
+                } else if c == 'r' && !prev_is_ident(&chars, i) {
+                    // raw string: r"..." or r#"..."# (any hash count)
+                    let mut j = i + 1;
+                    while chars.get(j) == Some(&'#') {
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        state = State::RawStr(j - (i + 1));
+                        cur.code.push('"');
+                        i = j + 1;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // char literal vs lifetime: 'x' / '\n' are literals,
+                    // 'a (no closing quote right after) is a lifetime
+                    if chars.get(i + 1) == Some(&'\\') {
+                        state = State::CharLit;
+                        cur.code.push_str("''");
+                        // skip quote, backslash AND the escaped char, so
+                        // '\'' and '\\' cannot terminate one char early
+                        i += 3;
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        cur.code.push_str("''");
+                        i += 3;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(d) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    cur.comment.push_str("*/");
+                    state = if d == 1 { State::Code } else { State::BlockComment(d - 1) };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    cur.comment.push_str("/*");
+                    state = State::BlockComment(d + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // escaped char, never a terminator — but leave a
+                    // line-continuation `\<newline>` for the top of the
+                    // loop, so reported line numbers stay exact
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    cur.code.push('"');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && (1..=hashes).all(|k| chars.get(i + k) == Some(&'#')) {
+                    cur.code.push('"');
+                    state = State::Code;
+                    i += hashes + 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::CharLit => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && is_ident_char(chars[i - 1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(text: &str) -> Vec<String> {
+        classify(text).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strings_are_blanked_from_code() {
+        let lines = classify("let x = \"unsafe { unwrap() }\";\n");
+        assert_eq!(lines[0].code, "let x = \"\";");
+        assert!(lines[0].comment.is_empty());
+    }
+
+    #[test]
+    fn comments_go_to_the_comment_channel() {
+        let lines = classify("foo(); // SAFETY: fine\n");
+        assert_eq!(lines[0].code, "foo(); ");
+        assert!(lines[0].comment.contains("SAFETY"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let lines = classify("a /* x /* y */ z */ b\n");
+        assert_eq!(lines[0].code.replace(' ', ""), "ab");
+        assert!(lines[0].comment.contains("y"));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let c = code_of("let s = r#\"no \"comment\" // here\"#; done\n");
+        assert_eq!(c[0], "let s = \"\"; done");
+        let c = code_of("let q = \"esc \\\" quote\"; after\n");
+        assert_eq!(c[0], "let q = \"\"; after");
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let c = code_of("let a: &'a str = x; let c = '\"'; let d = '\\'';\n");
+        // the quote char literal must not open a string
+        assert!(c[0].contains("&'a str"));
+        assert!(c[0].ends_with("let d = '';") || c[0].contains("let d = ''"));
+    }
+
+    #[test]
+    fn multi_line_strings_stay_blanked() {
+        let c = code_of("let s = \"line one\nunwrap() inside\";\nreal();\n");
+        assert_eq!(c[1], ";");
+        assert_eq!(c[2], "real();");
+    }
+
+    #[test]
+    fn string_line_continuation_keeps_line_count() {
+        // `\<newline>` inside a string must still yield one Line per
+        // source line, or every later line number would drift
+        let lines = classify("let s = \"one \\\ntwo\";\nafter();\n");
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[2].code, "after();");
+    }
+
+    #[test]
+    fn exact_identifier_tokens() {
+        let toks = tokens("x.unwrap_or_else(|| y.unwrap())");
+        assert!(has_ident(&toks, "unwrap_or_else"));
+        assert!(has_ident(&toks, "unwrap"));
+        assert!(!has_ident(&toks, "unwrap_or"));
+        assert!(has_seq(&toks, &[Tok::Ident("unwrap"), Tok::Punct('(')]));
+        assert!(!has_seq(&toks, &[Tok::Ident("unwrap_or_else"), Tok::Punct('.')]));
+    }
+}

@@ -1,0 +1,321 @@
+//! The six invariant rules, each encoding a contract a prior PR
+//! promised in prose.  Rules are pure functions over a parsed
+//! [`SourceFile`]; scoping is by module path relative to the source
+//! root, matching is by exact code-channel token so strings, comments,
+//! and longer identifiers (`unwrap_or_else`) can never trip a rule.
+
+use super::lexer::{has_ident, has_seq, tokens, Tok};
+use super::source::SourceFile;
+use super::Violation;
+
+/// One registered rule.
+pub struct RuleDef {
+    pub name: &'static str,
+    /// one-line contract statement (shown by `otaro lint --rules`)
+    pub summary: &'static str,
+    pub check: fn(&SourceFile, &mut Vec<Violation>),
+}
+
+/// The rule registry, in documentation order.
+pub const RULES: &[RuleDef] = &[
+    RuleDef {
+        name: "raw-mantissa",
+        summary: "raw `m: u8` bit-widths are confined to sefp/ — everywhere \
+                  else precision is the `Precision` type",
+        check: raw_mantissa,
+    },
+    RuleDef {
+        name: "unsafe-needs-safety",
+        summary: "every `unsafe` block/impl/fn carries a `// SAFETY:` comment \
+                  on or contiguously above it",
+        check: unsafe_needs_safety,
+    },
+    RuleDef {
+        name: "hot-loop-no-alloc",
+        summary: "no allocation inside `// lint: region(no_alloc)` spans \
+                  (decode/matmul/attend hot loops)",
+        check: hot_loop_no_alloc,
+    },
+    RuleDef {
+        name: "request-path-no-panic",
+        summary: "no unwrap()/expect()/panic! in non-test serve/ and policy/ \
+                  code — request-path failures propagate as Results",
+        check: request_path_no_panic,
+    },
+    RuleDef {
+        name: "decision-path-determinism",
+        summary: "no HashMap/HashSet in serve/ and policy/ — scheduling and \
+                  eviction decisions must not depend on iteration order",
+        check: decision_path_determinism,
+    },
+    RuleDef {
+        name: "untrusted-checked-arith",
+        summary: "artifact/reader.rs may not do unchecked `+`/`*` on \
+                  untrusted length/offset fields",
+        check: untrusted_checked_arith,
+    },
+];
+
+/// Names of all registered rules (for directive validation).
+pub fn rule_names() -> Vec<&'static str> {
+    RULES.iter().map(|r| r.name).collect()
+}
+
+fn in_dirs(module: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| module.starts_with(d))
+}
+
+fn push(
+    out: &mut Vec<Violation>,
+    f: &SourceFile,
+    rule: &'static str,
+    i: usize,
+    message: String,
+) {
+    if !f.allowed(rule, i) {
+        out.push(Violation { rule, module: f.module.clone(), line: i + 1, message });
+    }
+}
+
+/// PR 2 contract: `Precision` is the only way a mantissa width moves
+/// through the system.  A raw `m: u8` parameter or field outside
+/// `sefp/` reintroduces the unvalidated-width bugs the newtype killed.
+fn raw_mantissa(f: &SourceFile, out: &mut Vec<Violation>) {
+    if f.module == "sefp.rs" || in_dirs(&f.module, &["sefp/"]) {
+        return;
+    }
+    const PAT: [Tok<'_>; 3] = [Tok::Ident("m"), Tok::Punct(':'), Tok::Ident("u8")];
+    for (i, line) in f.lines.iter().enumerate() {
+        if f.is_code(i) && has_seq(&tokens(&line.code), &PAT) {
+            push(
+                out,
+                f,
+                "raw-mantissa",
+                i,
+                "raw mantissa width `m: u8` outside sefp/ — take a \
+                 `Precision` and call `.m()` at the byte boundary"
+                    .into(),
+            );
+        }
+    }
+}
+
+/// Every `unsafe` site must state its safety argument where the
+/// reviewer reads it: a comment containing `SAFETY` on the same line or
+/// on the contiguous comment block directly above (attribute lines like
+/// `#[inline]` are looked through; a blank line breaks contiguity).
+fn unsafe_needs_safety(f: &SourceFile, out: &mut Vec<Violation>) {
+    for (i, line) in f.lines.iter().enumerate() {
+        if !has_ident(&tokens(&line.code), "unsafe") {
+            continue;
+        }
+        if has_safety_comment(f, i) {
+            continue;
+        }
+        push(
+            out,
+            f,
+            "unsafe-needs-safety",
+            i,
+            "`unsafe` without a `// SAFETY:` comment on or directly above it".into(),
+        );
+    }
+}
+
+fn has_safety_comment(f: &SourceFile, i: usize) -> bool {
+    if f.lines[i].comment.contains("SAFETY") {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let l = &f.lines[j];
+        let code = l.code.trim();
+        if code.is_empty() {
+            if l.comment.contains("SAFETY") {
+                return true;
+            }
+            if l.comment.trim().is_empty() {
+                return false; // blank line breaks the comment block
+            }
+            // a comment line without SAFETY: keep walking up the block
+        } else if code.starts_with("#[") || code.starts_with("#!") {
+            // attributes sit between an item and its docs; look through
+            if l.comment.contains("SAFETY") {
+                return true;
+            }
+        } else {
+            return false; // a code line ends the search
+        }
+    }
+    false
+}
+
+/// PR 5 contract: the decode/matmul/attend hot loops are allocation
+/// free — all scratch is persistent.  Inside a `no_alloc` region the
+/// allocating idioms are banned outright.
+fn hot_loop_no_alloc(f: &SourceFile, out: &mut Vec<Violation>) {
+    const BANNED_IDENTS: &[&str] = &["clone", "collect", "to_vec", "to_owned", "to_string"];
+    const BANNED_MACROS: &[&str] = &["format", "vec"];
+    const BANNED_PATHS: &[&str] = &["Vec", "Box", "String", "BTreeMap", "HashMap", "VecDeque"];
+    for region in f.regions.iter().filter(|r| r.kind == "no_alloc") {
+        for i in region.start..=region.end.min(f.lines.len().saturating_sub(1)) {
+            let toks = tokens(&f.lines[i].code);
+            let hit = BANNED_IDENTS
+                .iter()
+                .find(|&&id| has_ident(&toks, id))
+                .copied()
+                .or_else(|| {
+                    BANNED_MACROS
+                        .iter()
+                        .find(|&&mc| has_seq(&toks, &[Tok::Ident(mc), Tok::Punct('!')]))
+                        .copied()
+                })
+                .or_else(|| {
+                    // `Vec::…` / `Box::…` constructor paths (a bare
+                    // `Vec<f32>` type mention does not allocate)
+                    BANNED_PATHS
+                        .iter()
+                        .find(|&&p| {
+                            has_seq(&toks, &[Tok::Ident(p), Tok::Punct(':'), Tok::Punct(':')])
+                        })
+                        .copied()
+                });
+            if let Some(tok) = hit {
+                push(
+                    out,
+                    f,
+                    "hot-loop-no-alloc",
+                    i,
+                    format!("`{tok}` allocates inside a no_alloc hot-loop region"),
+                );
+            }
+        }
+    }
+}
+
+/// Request-path modules return `Result`; a panic in serve/ or policy/
+/// kills every in-flight generation on the box.  Test modules are
+/// exempt; hard `assert!`s are not banned (they guard memory safety in
+/// the kernels and are part of the contract).
+fn request_path_no_panic(f: &SourceFile, out: &mut Vec<Violation>) {
+    if !in_dirs(&f.module, &["serve/", "policy/"]) {
+        return;
+    }
+    const CALLS: &[&str] = &["unwrap", "expect"];
+    const MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+    for (i, line) in f.lines.iter().enumerate() {
+        if !f.is_code(i) {
+            continue;
+        }
+        let toks = tokens(&line.code);
+        let hit = CALLS
+            .iter()
+            .find(|&&c| has_seq(&toks, &[Tok::Ident(c), Tok::Punct('(')]))
+            .copied()
+            .or_else(|| {
+                MACROS
+                    .iter()
+                    .find(|&&m| has_seq(&toks, &[Tok::Ident(m), Tok::Punct('!')]))
+                    .copied()
+            });
+        if let Some(tok) = hit {
+            push(
+                out,
+                f,
+                "request-path-no-panic",
+                i,
+                format!("`{tok}` on the request path — propagate an error instead"),
+            );
+        }
+    }
+}
+
+/// The batcher/router/controller determinism contract: identical
+/// queue/cache states must produce identical decisions, bit for bit.
+/// `HashMap`/`HashSet` iteration order varies per process, so the types
+/// are banned from serve/ and policy/ wholesale — `BTreeMap` keyed on
+/// `Precision`/`TaskClass` is the house idiom.
+fn decision_path_determinism(f: &SourceFile, out: &mut Vec<Violation>) {
+    if !in_dirs(&f.module, &["serve/", "policy/"]) {
+        return;
+    }
+    for (i, line) in f.lines.iter().enumerate() {
+        if !f.is_code(i) {
+            continue;
+        }
+        let toks = tokens(&line.code);
+        for ty in ["HashMap", "HashSet"] {
+            if has_ident(&toks, ty) {
+                push(
+                    out,
+                    f,
+                    "decision-path-determinism",
+                    i,
+                    format!(
+                        "`{ty}` in a decision-path module — iteration order is \
+                         nondeterministic; use BTreeMap/BTreeSet"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Index/header fields a `.sefp` reader must treat as hostile.
+const UNTRUSTED: &[&str] = &[
+    "m_off",
+    "m_len",
+    "m_end",
+    "idx_off",
+    "idx_end",
+    "manifest_off",
+    "manifest_len",
+    "index_off",
+    "data_off",
+    "data_len",
+    "n_groups",
+    "tensor_count",
+    "file_len",
+];
+
+/// PR 4 hardening, made permanent: in `artifact/reader.rs`, `+`/`*` on
+/// an untrusted length/offset field must go through `checked_*` (or a
+/// reviewed `allow` stating why overflow is impossible) — a crafted
+/// container must produce a validation error, never an arithmetic
+/// panic or a wrapped offset.
+fn untrusted_checked_arith(f: &SourceFile, out: &mut Vec<Violation>) {
+    if f.module != "artifact/reader.rs" {
+        return;
+    }
+    for (i, line) in f.lines.iter().enumerate() {
+        if !f.is_code(i) {
+            continue;
+        }
+        let toks = tokens(&line.code);
+        let has_op =
+            toks.iter().any(|t| matches!(t, Tok::Punct('+') | Tok::Punct('*')));
+        if !has_op {
+            continue;
+        }
+        let untrusted = UNTRUSTED.iter().find(|&&u| has_ident(&toks, u));
+        let Some(&field) = untrusted else { continue };
+        let checked = toks.iter().any(|t| {
+            matches!(t, Tok::Ident(s)
+                if s.starts_with("checked_") || s.starts_with("saturating_"))
+        });
+        if checked {
+            continue;
+        }
+        push(
+            out,
+            f,
+            "untrusted-checked-arith",
+            i,
+            format!(
+                "unchecked `+`/`*` on untrusted field `{field}` — use checked \
+                 arithmetic (or an allow stating why overflow is impossible)"
+            ),
+        );
+    }
+}

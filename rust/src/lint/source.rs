@@ -1,0 +1,295 @@
+//! Parsed view of one source file: classified lines, `#[cfg(test)]`
+//! spans, `// lint: region(...)` spans, and `// lint: allow(...)`
+//! suppressions.
+//!
+//! Directive grammar (all inside ordinary `//` comments):
+//!
+//! ```text
+//! // lint: allow(<rule>, reason = "<non-empty text>")
+//! // lint: region(no_alloc)
+//! // lint: end_region
+//! ```
+//!
+//! An `allow` on a code line suppresses that line; on a comment-only
+//! line it suppresses the next code line.  The reason is **mandatory**
+//! — an allow without one is a hard parse error, as are unknown rule
+//! names, unknown directives, nested regions, `end_region` without an
+//! open region, and a region left open at end of file.  Malformed
+//! suppressions failing loudly is the point: a typo must never silently
+//! disable a rule.
+
+use super::lexer::{self, Line};
+
+/// A `// lint: region(<kind>)` … `// lint: end_region` span.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Region {
+    pub kind: String,
+    /// first line index inside the region (0-based)
+    pub start: usize,
+    /// last line index inside the region (0-based, inclusive)
+    pub end: usize,
+}
+
+/// One `allow` suppression, resolved to the line it covers.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub rule: String,
+    /// 0-based line index this allow suppresses
+    pub target: usize,
+    /// line the directive itself sits on (0-based), for diagnostics
+    pub at: usize,
+}
+
+/// Region kinds the engine understands.
+pub const REGION_KINDS: &[&str] = &["no_alloc"];
+
+#[derive(Debug)]
+pub struct SourceFile {
+    /// path relative to the source root, `/`-separated
+    /// (e.g. `serve/store.rs`)
+    pub module: String,
+    pub lines: Vec<Line>,
+    /// per-line: inside a `#[cfg(test)]` module
+    pub is_test: Vec<bool>,
+    pub regions: Vec<Region>,
+    pub allows: Vec<Allow>,
+}
+
+impl SourceFile {
+    /// Classify and parse `text`.  `rule_names` is the set of known rule
+    /// names, used to reject `allow` directives for rules that do not
+    /// exist.
+    pub fn parse(module: &str, text: &str, rule_names: &[&str]) -> anyhow::Result<SourceFile> {
+        let lines = lexer::classify(text);
+        let is_test = test_spans(&lines);
+        let (regions, allows) = parse_directives(module, &lines, rule_names)?;
+        Ok(SourceFile { module: module.to_string(), lines, is_test, regions, allows })
+    }
+
+    /// True when line `i` (0-based) is non-test code.
+    pub fn is_code(&self, i: usize) -> bool {
+        !self.is_test[i]
+    }
+
+    /// True when an `allow(rule)` covers line `i`.
+    pub fn allowed(&self, rule: &str, i: usize) -> bool {
+        self.allows.iter().any(|a| a.rule == rule && a.target == i)
+    }
+}
+
+/// Mark every line inside a `#[cfg(test)] mod …` span.  Brace counting
+/// runs over the code channel, so braces in strings or comments cannot
+/// skew the depth.
+fn test_spans(lines: &[Line]) -> Vec<bool> {
+    let n = lines.len();
+    let mut is_test = vec![false; n];
+    let mut i = 0;
+    while i < n {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        // find the `mod` item this attribute gates (attributes and
+        // blank lines may sit between)
+        let mut m = None;
+        for (j, l) in lines.iter().enumerate().skip(i).take(8) {
+            if lexer::has_ident(&lexer::tokens(&l.code), "mod") {
+                m = Some(j);
+                break;
+            }
+        }
+        let Some(ms) = m else {
+            // `#[cfg(test)]` gating a non-mod item: treat the single
+            // following item line as test code and move on
+            i += 1;
+            continue;
+        };
+        let mut depth: i64 = 0;
+        let mut entered = false;
+        let mut k = ms;
+        while k < n {
+            for c in lines[k].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        entered = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            is_test[k] = true;
+            if entered && depth <= 0 {
+                break;
+            }
+            k += 1;
+        }
+        is_test[i..ms].iter_mut().for_each(|t| *t = true);
+        i = k + 1;
+    }
+    is_test
+}
+
+fn parse_directives(
+    module: &str,
+    lines: &[Line],
+    rule_names: &[&str],
+) -> anyhow::Result<(Vec<Region>, Vec<Allow>)> {
+    let mut regions = Vec::new();
+    let mut allows = Vec::new();
+    let mut open: Option<(String, usize)> = None;
+    for (i, line) in lines.iter().enumerate() {
+        // a directive is a whole `//` comment of the form `// lint: …` —
+        // doc comments (`//! // lint: …`) and prose that merely quote
+        // the syntax do not parse as directives
+        let body = line.comment.trim_start_matches('/').trim_start();
+        let Some(directive) = body.strip_prefix("lint:") else { continue };
+        let directive = directive.trim();
+        let lineno = i + 1;
+        if let Some(rest) = directive.strip_prefix("allow(") {
+            let close = rest.rfind(')').ok_or_else(|| {
+                anyhow::anyhow!("{module}:{lineno}: malformed lint allow: missing ')'")
+            })?;
+            let body = &rest[..close];
+            let (rule, reason) = body.split_once(',').ok_or_else(|| {
+                anyhow::anyhow!(
+                    "{module}:{lineno}: lint allow without a reason — write \
+                     `lint: allow(<rule>, reason = \"why\")`; the reason is mandatory"
+                )
+            })?;
+            let rule = rule.trim();
+            anyhow::ensure!(
+                rule_names.contains(&rule),
+                "{module}:{lineno}: lint allow names unknown rule {rule:?}"
+            );
+            let reason = reason.trim();
+            let quoted = reason
+                .strip_prefix("reason")
+                .map(|r| r.trim_start())
+                .and_then(|r| r.strip_prefix('='))
+                .map(|r| r.trim())
+                .and_then(|r| r.strip_prefix('"'))
+                .and_then(|r| r.rfind('"').map(|q| &r[..q]));
+            let text = quoted.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "{module}:{lineno}: lint allow reason must be `reason = \"...\"`"
+                )
+            })?;
+            anyhow::ensure!(
+                !text.trim().is_empty(),
+                "{module}:{lineno}: lint allow reason must not be empty"
+            );
+            // a trailing allow covers its own line; a comment-only allow
+            // covers the next code line
+            let target = if !line.code.trim().is_empty() {
+                i
+            } else {
+                let mut t = i + 1;
+                while t < lines.len() && lines[t].code.trim().is_empty() {
+                    t += 1;
+                }
+                anyhow::ensure!(
+                    t < lines.len(),
+                    "{module}:{lineno}: lint allow suppresses nothing (no code follows)"
+                );
+                t
+            };
+            allows.push(Allow { rule: rule.to_string(), target, at: i });
+        } else if let Some(rest) = directive.strip_prefix("region(") {
+            let kind = rest.split(')').next().unwrap_or("").trim();
+            anyhow::ensure!(
+                REGION_KINDS.contains(&kind),
+                "{module}:{lineno}: unknown lint region kind {kind:?} \
+                 (known: {REGION_KINDS:?})"
+            );
+            anyhow::ensure!(
+                open.is_none(),
+                "{module}:{lineno}: nested lint region (previous region still open)"
+            );
+            open = Some((kind.to_string(), i + 1));
+        } else if directive.starts_with("end_region") {
+            let (kind, start) = open.take().ok_or_else(|| {
+                anyhow::anyhow!("{module}:{lineno}: lint end_region without an open region")
+            })?;
+            regions.push(Region { kind, start, end: i.saturating_sub(1) });
+        } else {
+            anyhow::bail!(
+                "{module}:{lineno}: unknown lint directive {directive:?} \
+                 (known: allow(rule, reason = \"...\"), region(kind), end_region)"
+            );
+        }
+    }
+    if let Some((kind, start)) = open {
+        anyhow::bail!(
+            "{module}:{start}: lint region({kind}) opened here is never closed — \
+             add `// lint: end_region`"
+        );
+    }
+    Ok((regions, allows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RULES: &[&str] = &["request-path-no-panic", "hot-loop-no-alloc"];
+
+    #[test]
+    fn test_mod_span_is_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let f = SourceFile::parse("x.rs", src, RULES).unwrap();
+        assert!(!f.is_test[0]);
+        assert!(f.is_test[1] && f.is_test[2] && f.is_test[3] && f.is_test[4]);
+        assert!(!f.is_test[5]);
+    }
+
+    #[test]
+    fn region_and_allow_parse() {
+        let src = "\
+// lint: region(no_alloc)
+fn hot() {}
+// lint: end_region
+x(); // lint: allow(request-path-no-panic, reason = \"startup only\")
+// lint: allow(hot-loop-no-alloc, reason = \"scratch reuse\")
+y();
+";
+        let f = SourceFile::parse("x.rs", src, RULES).unwrap();
+        assert_eq!(f.regions, vec![Region { kind: "no_alloc".into(), start: 1, end: 1 }]);
+        assert!(f.allowed("request-path-no-panic", 3));
+        assert!(f.allowed("hot-loop-no-alloc", 5));
+        assert!(!f.allowed("hot-loop-no-alloc", 4));
+    }
+
+    #[test]
+    fn allow_without_reason_is_rejected() {
+        let src = "x(); // lint: allow(request-path-no-panic)\n";
+        let err = SourceFile::parse("x.rs", src, RULES).unwrap_err().to_string();
+        assert!(err.contains("reason"), "{err}");
+        let src = "x(); // lint: allow(request-path-no-panic, reason = \"\")\n";
+        assert!(SourceFile::parse("x.rs", src, RULES).is_err());
+    }
+
+    #[test]
+    fn unknown_rule_and_directive_are_rejected() {
+        let src = "x(); // lint: allow(no-such-rule, reason = \"hm\")\n";
+        assert!(SourceFile::parse("x.rs", src, RULES).is_err());
+        let src = "x(); // lint: frobnicate\n";
+        assert!(SourceFile::parse("x.rs", src, RULES).is_err());
+    }
+
+    #[test]
+    fn unclosed_region_is_a_hard_error() {
+        let src = "// lint: region(no_alloc)\nfn hot() {}\n";
+        let err = SourceFile::parse("x.rs", src, RULES).unwrap_err().to_string();
+        assert!(err.contains("never closed"), "{err}");
+        let src = "fn f() {}\n// lint: end_region\n";
+        assert!(SourceFile::parse("x.rs", src, RULES).is_err());
+    }
+
+    #[test]
+    fn directive_in_string_is_ignored() {
+        let src = "let s = \"// lint: region(no_alloc)\";\n";
+        let f = SourceFile::parse("x.rs", src, RULES).unwrap();
+        assert!(f.regions.is_empty());
+    }
+}

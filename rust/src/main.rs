@@ -29,6 +29,9 @@ COMMANDS:
              (f32 checkpoint -> packed .sefp single-master container)
   inspect    FILE.sefp
              (header / tensor index / per-rung footprint report)
+  lint       [--src DIR] [--baseline FILE]
+             (invariant lint pass over the crate sources; defaults to
+             rust/src and rust/lint.baseline)
   bench      <table1|table2|table8|fig3|fig4|fig5|fig6|fig8|fig9|all> [--quick]
 ";
 
@@ -158,6 +161,12 @@ fn main() -> anyhow::Result<()> {
             });
             args.finish();
             experiments::inspect_artifact(std::path::Path::new(&file))
+        }
+        "lint" => {
+            let src = args.opt("--src").map(PathBuf::from);
+            let baseline = args.opt("--baseline").map(PathBuf::from);
+            args.finish();
+            otaro::lint::run_cli(src, baseline)
         }
         "bench" => {
             let quick = args.flag("--quick");

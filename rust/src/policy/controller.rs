@@ -116,12 +116,11 @@ impl SloController {
     }
 
     fn nearest_rung(&self, p: Precision) -> usize {
-        // the shared snap rule, then its index in the canonical ladder
+        // the shared snap rule, then its index in the canonical ladder;
+        // snap always returns a member, so the fallback (top rung) is
+        // unreachable — it exists to keep this path panic-free
         let snapped = Precision::snap_to_ladder(&self.ladder, p);
-        self.ladder
-            .iter()
-            .position(|&w| w == snapped)
-            .expect("snap returns a ladder rung")
+        self.ladder.iter().position(|&w| w == snapped).unwrap_or(0)
     }
 
     /// The precision this class currently serves at.
@@ -134,15 +133,15 @@ impl SloController {
     /// loss `L_b` is replaced by the serve-time SLO cost — the lane's
     /// over-SLO window fraction plus a heavily-weighted quality
     /// shortfall.
-    fn score(&self, st: &ClassState, rung: usize, signal: LaneSignal) -> f64 {
+    fn score(cfg: &PolicyConfig, st: &ClassState, rung: usize, signal: LaneSignal) -> f64 {
         let visits = st.visits[rung];
         if visits == 0 {
             return f64::INFINITY;
         }
         let t = st.ticks.max(1) as f64;
-        let explore = self.cfg.lambda * (t.ln().max(0.0) / visits as f64).sqrt();
+        let explore = cfg.lambda * (t.ln().max(0.0) / visits as f64).sqrt();
         let latency = signal.frac_over_slo * LATENCY_COST_WEIGHT;
-        let quality = (self.cfg.quality_floor - signal.agreement.unwrap_or(1.0)).max(0.0);
+        let quality = (cfg.quality_floor - signal.agreement.unwrap_or(1.0)).max(0.0);
         // a quality shortfall must dominate any latency win: the floor
         // is a constraint, not a term to trade against
         explore - (latency + quality * QUALITY_COST_WEIGHT)
@@ -157,9 +156,11 @@ impl SloController {
         current: LaneSignal,
         candidate: LaneSignal,
     ) -> Decision {
-        let n = self.ladder.len();
-        let st = self
-            .classes
+        // destructured so the single `st` borrow of `classes` serves the
+        // whole tick — no panicking re-lookups on the decision path
+        let SloController { ladder, cfg, classes, demotions, promotions } = self;
+        let n = ladder.len();
+        let st = classes
             .entry(class)
             .or_insert_with(|| ClassState { rung: 0, cooldown: 0, ticks: 0, visits: vec![0; n] });
         st.ticks += 1;
@@ -171,41 +172,38 @@ impl SloController {
 
         // safety first: probe agreement under the floor promotes
         // unconditionally (no minimum window, no scoring)
-        let quality_collapsed =
-            current.agreement.is_some_and(|a| a < self.cfg.quality_floor);
+        let quality_collapsed = current.agreement.is_some_and(|a| a < cfg.quality_floor);
         if quality_collapsed && st.rung > 0 {
-            let from = self.ladder[st.rung];
+            let from = ladder[st.rung];
             st.rung -= 1;
-            st.cooldown = self.cfg.cooldown;
-            let to = self.ladder[st.rung];
-            self.promotions += 1;
+            st.cooldown = cfg.cooldown;
+            let to = ladder[st.rung];
+            *promotions += 1;
             return Decision::Promote { from, to };
         }
 
-        if current.samples < self.cfg.min_samples || st.rung + 1 >= n {
+        if current.samples < cfg.min_samples || st.rung + 1 >= n {
             return Decision::Hold;
         }
         let slo_violated = current.frac_over_slo > SLO_VIOLATION_FRACTION;
         let headroom = current
             .agreement
-            .is_none_or(|a| a >= self.cfg.quality_floor + self.cfg.quality_headroom);
+            .is_none_or(|a| a >= cfg.quality_floor + cfg.quality_headroom);
         if !(slo_violated && headroom) {
             return Decision::Hold;
         }
         // exploitation–exploration: demote only when the rung below
         // outscores the current one (an unvisited rung always does)
-        let st_ref = self.classes.get(&class).expect("state just inserted");
-        let cur_score = self.score(st_ref, st_ref.rung, current);
-        let cand_score = self.score(st_ref, st_ref.rung + 1, candidate);
+        let cur_score = Self::score(cfg, st, st.rung, current);
+        let cand_score = Self::score(cfg, st, st.rung + 1, candidate);
         if cand_score <= cur_score {
             return Decision::Hold;
         }
-        let st = self.classes.get_mut(&class).expect("state just inserted");
-        let from = self.ladder[st.rung];
+        let from = ladder[st.rung];
         st.rung += 1;
-        st.cooldown = self.cfg.cooldown;
-        let to = self.ladder[st.rung];
-        self.demotions += 1;
+        st.cooldown = cfg.cooldown;
+        let to = ladder[st.rung];
+        *demotions += 1;
         Decision::Demote { from, to }
     }
 }

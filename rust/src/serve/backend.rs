@@ -477,7 +477,6 @@ impl LogitsBackend for DecoderBackend {
     }
 
     fn logits_step(&mut self, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
-        anyhow::ensure!(self.loaded.is_some(), "logits_step before load_view");
         anyhow::ensure!(
             tokens.len() == self.bsz * self.seq_len,
             "DecoderBackend: batch is {} tokens, shape is {}x{}",
@@ -488,7 +487,9 @@ impl LogitsBackend for DecoderBackend {
         self.calls += 1;
         let d = self.cfg.d_model;
         let vocab = self.cfg.vocab;
-        let sim = self.sim.as_mut().expect("loaded implies sim");
+        let Some(sim) = self.sim.as_mut() else {
+            anyhow::bail!("logits_step before load_view");
+        };
         for ri in 0..self.bsz {
             let win = &tokens[ri * self.seq_len..(ri + 1) * self.seq_len];
             let wlen = win.iter().rposition(|&t| t != PAD).map_or(0, |p| p + 1);
@@ -516,7 +517,12 @@ impl LogitsBackend for DecoderBackend {
                     self.row_ctx[ri].push(t);
                 }
             }
-            let t = *win.last().expect("wlen > 0");
+            // wlen > 0 here (the empty-row arm continues above), so this
+            // bail is unreachable in practice but keeps the request path
+            // panic-free
+            let Some(&t) = win.last() else {
+                anyhow::bail!("empty window on an active row");
+            };
             self.pending[ri] = t;
             sim.tied_embed(token_col(t, vocab), &mut self.xbuf[ri * d..(ri + 1) * d]);
         }

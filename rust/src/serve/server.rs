@@ -287,8 +287,11 @@ impl<B: LogitsBackend> Server<B> {
                     finished = r.generated.len() >= r.max_new_tokens || next == EOS;
                 }
                 if finished {
-                    let r = rows[ri].take().expect("row just borrowed");
-                    self.finalize(p, r, &mut out);
+                    // `finished` is only set while the row is Some, so
+                    // take() always yields here
+                    if let Some(r) = rows[ri].take() {
+                        self.finalize(p, r, &mut out);
+                    }
                 }
             }
 

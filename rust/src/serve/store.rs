@@ -19,7 +19,7 @@
 //! budget with LRU eviction; per-switch hit/miss/evict/latency stats are
 //! kept in [`LadderStats`] and surfaced through `serve::ServeStats`.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -160,8 +160,10 @@ static LADDER_IDS: AtomicU64 = AtomicU64::new(0);
 pub struct PrecisionLadder {
     master: Arc<LadderView>,
     budget_bytes: usize,
-    /// derived views with their last-use tick (LRU)
-    cache: HashMap<Precision, (Arc<LadderView>, u64)>,
+    /// derived views with their last-use tick (LRU); BTreeMap so every
+    /// traversal — eviction scans, resident listings — runs in
+    /// precision order and decisions never depend on hash iteration
+    cache: BTreeMap<Precision, (Arc<LadderView>, u64)>,
     tick: u64,
     pub stats: LadderStats,
 }
@@ -201,7 +203,7 @@ impl PrecisionLadder {
                 quantized: Arc::new(params.quantized.clone()),
             }),
             budget_bytes: usize::MAX,
-            cache: HashMap::new(),
+            cache: BTreeMap::new(),
             tick: 0,
             stats: LadderStats::default(),
         }
@@ -245,7 +247,7 @@ impl PrecisionLadder {
                 quantized: Arc::new(metas.iter().map(|t| t.quantized).collect()),
             }),
             budget_bytes: usize::MAX,
-            cache: HashMap::new(),
+            cache: BTreeMap::new(),
             tick: 0,
             stats: LadderStats::default(),
         })
@@ -315,13 +317,18 @@ impl PrecisionLadder {
     /// when it alone exceeds the budget it is simply not retained (the
     /// budget is a hard cap, not advisory; the caller still gets its
     /// `Arc`, it just re-derives next time).
+    ///
+    /// Victim selection is total-ordered on `(last_used, precision)`:
+    /// when two views share a last-use tick the LOWER precision goes
+    /// first (cheapest to re-derive), so identical cache states always
+    /// evict the identical victim regardless of insertion history.
     fn evict_to_budget(&mut self, keep: Precision) {
         while self.resident_bytes() > self.budget_bytes {
             let victim = self
                 .cache
                 .iter()
                 .filter(|(&p, _)| p != keep)
-                .min_by_key(|(_, (_, last_used))| *last_used)
+                .min_by_key(|(&p, &(_, last_used))| (last_used, p))
                 .map(|(&p, _)| p);
             let victim = victim.unwrap_or(keep);
             if self.cache.remove(&victim).is_some() {
@@ -399,11 +406,10 @@ impl PrecisionLadder {
     }
 
     /// Precisions currently resident in the derived-view cache (sorted
-    /// ascending; the master's own precision is not listed).
+    /// ascending — the map is ordered; the master's own precision is not
+    /// listed).
     pub fn cached_precisions(&self) -> Vec<Precision> {
-        let mut v: Vec<Precision> = self.cache.keys().copied().collect();
-        v.sort_unstable();
-        v
+        self.cache.keys().copied().collect()
     }
 }
 
@@ -543,6 +549,37 @@ mod tests {
             vec![Precision::of(3), Precision::of(5)]
         );
         assert_eq!(ladder.stats.evictions, 1);
+    }
+
+    #[test]
+    fn eviction_tie_break_is_insertion_order_independent() {
+        // two derived views with EQUAL last-used ticks: the victim must
+        // come from the explicit (last_used, precision) ordering — the
+        // lower precision — not from map iteration order, so both
+        // insertion orders leave the same survivor
+        let p = params();
+        for flip in [false, true] {
+            let base = PrecisionLadder::from_params(&p);
+            let v4 = Arc::new(base.master.truncate(Precision::of(4)));
+            let v5 = Arc::new(base.master.truncate(Precision::of(5)));
+            // budget holds exactly one of the two resident views
+            let mut ladder = base.with_budget(v5.sefp_bytes());
+            if flip {
+                ladder.cache.insert(Precision::of(5), (v5, 7));
+                ladder.cache.insert(Precision::of(4), (v4, 7));
+            } else {
+                ladder.cache.insert(Precision::of(4), (v4, 7));
+                ladder.cache.insert(Precision::of(5), (v5, 7));
+            }
+            // keep = a precision not in the cache, so both views compete
+            ladder.evict_to_budget(Precision::of(3));
+            assert_eq!(
+                ladder.cached_precisions(),
+                vec![Precision::of(5)],
+                "flip={flip}: tie must evict the lower precision"
+            );
+            assert_eq!(ladder.stats.evictions, 1, "flip={flip}");
+        }
     }
 
     #[test]

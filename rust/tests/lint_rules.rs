@@ -1,0 +1,210 @@
+//! Per-rule fixtures for the invariant lint engine: every rule gets a
+//! positive fixture (the violation fires) and negative fixtures (the
+//! house idiom, an out-of-scope module, test code, strings/comments),
+//! all driven through [`otaro::lint::check_source`] — the same per-file
+//! path `otaro lint` and the tier-1 source gate use.
+
+use otaro::lint::baseline::Baseline;
+use otaro::lint::check_source;
+use otaro::lint::rules::rule_names;
+
+/// Names of the rules that fire on `src` when linted as `module`.
+fn rules_hit(module: &str, src: &str) -> Vec<&'static str> {
+    check_source(module, src)
+        .expect("fixture must parse")
+        .into_iter()
+        .map(|v| v.rule)
+        .collect()
+}
+
+#[test]
+fn raw_mantissa_confined_to_sefp() {
+    let src = "pub fn truncate(m: u8) -> u8 { m }\n";
+    assert_eq!(rules_hit("infer/x.rs", src), ["raw-mantissa"]);
+    // the codec layer is the one place a raw width is legitimate
+    assert!(rules_hit("sefp/spec.rs", src).is_empty());
+    assert!(rules_hit("sefp.rs", src).is_empty());
+    // the house idiom never fires
+    assert!(rules_hit("infer/x.rs", "pub fn truncate(p: Precision) {}\n").is_empty());
+    // test-only helpers are exempt
+    let test_src = "#[cfg(test)]\nmod tests {\n    fn w(m: u8) -> u8 { m }\n}\n";
+    assert!(rules_hit("infer/x.rs", test_src).is_empty());
+    // `m: u8` inside a string or comment is not code
+    assert!(rules_hit("infer/x.rs", "let s = \"m: u8\"; // m: u8\n").is_empty());
+}
+
+#[test]
+fn unsafe_requires_safety_comment() {
+    assert_eq!(
+        rules_hit("infer/x.rs", "unsafe { ptr.write(0.0) }\n"),
+        ["unsafe-needs-safety"]
+    );
+    // same line, directly above, and above with attributes between all count
+    let trailing = "unsafe { ptr.write(0.0) } // SAFETY: disjoint indices\n";
+    assert!(rules_hit("infer/x.rs", trailing).is_empty());
+    let above = "// SAFETY: caller upholds in-bounds idx\nunsafe fn w() {}\n";
+    assert!(rules_hit("infer/x.rs", above).is_empty());
+    let through_attr = "// SAFETY: single writer\n#[inline]\nunsafe fn w() {}\n";
+    assert!(rules_hit("infer/x.rs", through_attr).is_empty());
+    // a blank line breaks the comment block
+    let broken = "// SAFETY: stale argument\n\nunsafe fn w() {}\n";
+    assert_eq!(rules_hit("infer/x.rs", broken), ["unsafe-needs-safety"]);
+    // the word in strings/comments is not an unsafe site
+    assert!(rules_hit("infer/x.rs", "let s = \"unsafe\"; // unsafe-ish\n").is_empty());
+    // unlike the panic rule, tests are NOT exempt: test unsafe needs an
+    // argument too
+    let in_test = "#[cfg(test)]\nmod tests {\n    fn t() { unsafe { q() } }\n}\n";
+    assert_eq!(rules_hit("infer/x.rs", in_test), ["unsafe-needs-safety"]);
+}
+
+#[test]
+fn no_alloc_region_bans_allocation() {
+    let src = "\
+// lint: region(no_alloc)
+let y = x.clone();
+// lint: end_region
+let z = x.clone();
+";
+    let v = check_source("infer/x.rs", src).unwrap();
+    assert_eq!(v.len(), 1, "only the in-region clone fires: {v:?}");
+    assert_eq!(v[0].rule, "hot-loop-no-alloc");
+    assert_eq!(v[0].line, 2);
+
+    // constructor paths and allocating macros fire too
+    let ctor = "// lint: region(no_alloc)\nlet v = Vec::with_capacity(8);\n// lint: end_region\n";
+    assert_eq!(rules_hit("infer/x.rs", ctor), ["hot-loop-no-alloc"]);
+    let mac = "// lint: region(no_alloc)\nlet v = vec![0u8; 8];\n// lint: end_region\n";
+    assert_eq!(rules_hit("infer/x.rs", mac), ["hot-loop-no-alloc"]);
+    // reusing persistent scratch does not: push/clear and a bare type
+    // mention are fine
+    let reuse = "\
+// lint: region(no_alloc)
+scratch.clear();
+scratch.push(1.0);
+let v: Vec<f32> = take(scratch);
+// lint: end_region
+";
+    assert!(rules_hit("infer/x.rs", reuse).is_empty());
+}
+
+#[test]
+fn request_path_rejects_panics() {
+    assert_eq!(rules_hit("serve/x.rs", "x.unwrap();\n"), ["request-path-no-panic"]);
+    assert_eq!(rules_hit("serve/x.rs", "x.expect(\"loaded\");\n"), ["request-path-no-panic"]);
+    assert_eq!(rules_hit("policy/x.rs", "panic!(\"boom\");\n"), ["request-path-no-panic"]);
+    assert_eq!(rules_hit("policy/x.rs", "unreachable!();\n"), ["request-path-no-panic"]);
+    // scoped to the request path: kernels may assert, other layers may
+    // unwrap (their own contracts apply)
+    assert!(rules_hit("infer/x.rs", "x.unwrap();\n").is_empty());
+    assert!(rules_hit("serve/x.rs", "assert!(ok, \"bounds\");\n").is_empty());
+    // exact-token matching: the non-panicking combinators are fine
+    assert!(rules_hit("serve/x.rs", "x.unwrap_or_else(default);\n").is_empty());
+    assert!(rules_hit("serve/x.rs", "x.unwrap_or(0);\n").is_empty());
+    // tests may unwrap
+    let in_test = "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+    assert!(rules_hit("serve/x.rs", in_test).is_empty());
+    // strings and comments never fire
+    assert!(rules_hit("serve/x.rs", "let s = \"unwrap()\"; // unwrap()\n").is_empty());
+}
+
+#[test]
+fn decision_path_rejects_hash_collections() {
+    assert_eq!(
+        rules_hit("serve/x.rs", "use std::collections::HashMap;\n"),
+        ["decision-path-determinism"]
+    );
+    assert_eq!(
+        rules_hit("policy/x.rs", "let s: HashSet<u32> = HashSet::new();\n"),
+        // one violation per line, not per occurrence
+        ["decision-path-determinism"]
+    );
+    assert!(rules_hit("serve/x.rs", "use std::collections::BTreeMap;\n").is_empty());
+    // the ban is scoped to decision-path modules
+    assert!(rules_hit("runtime/x.rs", "use std::collections::HashMap;\n").is_empty());
+}
+
+#[test]
+fn reader_arithmetic_must_be_checked() {
+    let src = "let end = data_off + data_len;\n";
+    assert_eq!(rules_hit("artifact/reader.rs", src), ["untrusted-checked-arith"]);
+    // a checked_* call on the line exempts it — that IS the idiom
+    let checked = "let idx_end = idx_off.checked_add(count * INDEX_ENTRY_LEN);\n";
+    assert!(rules_hit("artifact/reader.rs", checked).is_empty());
+    // trusted locals may use plain arithmetic
+    assert!(rules_hit("artifact/reader.rs", "let hi = lo + 8;\n").is_empty());
+    // the rule is scoped to the reader: the writer builds these fields
+    assert!(rules_hit("artifact/writer.rs", src).is_empty());
+    assert!(rules_hit("artifact/format.rs", src).is_empty());
+    // field names in strings (error messages) never fire
+    let msg = "let s = \"manifest {m_off}+{m_len} bad\";\n";
+    assert!(rules_hit("artifact/reader.rs", msg).is_empty());
+    // test fixtures may do plain arithmetic
+    let in_test = "#[cfg(test)]\nmod tests {\n    fn t() { let x = data_off + 1; }\n}\n";
+    assert!(rules_hit("artifact/reader.rs", in_test).is_empty());
+}
+
+#[test]
+fn allow_with_reason_suppresses_one_rule_on_one_line() {
+    let trailing =
+        "x.unwrap(); // lint: allow(request-path-no-panic, reason = \"startup only\")\n";
+    assert!(rules_hit("serve/x.rs", trailing).is_empty());
+    let above = "\
+// lint: allow(request-path-no-panic, reason = \"config parse happens before serving\")
+x.unwrap();
+";
+    assert!(rules_hit("serve/x.rs", above).is_empty());
+    // an allow names ONE rule — others on the line still fire
+    let wrong_rule =
+        "use std::collections::HashMap; // lint: allow(request-path-no-panic, reason = \"x\")\n";
+    assert_eq!(rules_hit("serve/x.rs", wrong_rule), ["decision-path-determinism"]);
+    // and ONE line — the next line is not covered
+    let next_line = "\
+x.unwrap(); // lint: allow(request-path-no-panic, reason = \"startup\")
+y.unwrap();
+";
+    let v = check_source("serve/x.rs", next_line).unwrap();
+    assert_eq!(v.len(), 1);
+    assert_eq!(v[0].line, 2);
+}
+
+#[test]
+fn malformed_directives_are_hard_errors() {
+    // missing reason
+    assert!(check_source("serve/x.rs", "x.unwrap(); // lint: allow(request-path-no-panic)\n")
+        .is_err());
+    // empty reason
+    assert!(check_source(
+        "serve/x.rs",
+        "x.unwrap(); // lint: allow(request-path-no-panic, reason = \"\")\n"
+    )
+    .is_err());
+    // unknown rule
+    assert!(check_source("serve/x.rs", "// lint: allow(no-such-rule, reason = \"x\")\nf();\n")
+        .is_err());
+    // unknown directive
+    assert!(check_source("serve/x.rs", "// lint: frobnicate\nf();\n").is_err());
+    // unclosed region / orphan end
+    assert!(check_source("infer/x.rs", "// lint: region(no_alloc)\nf();\n").is_err());
+    assert!(check_source("infer/x.rs", "f();\n// lint: end_region\n").is_err());
+    // an allow that suppresses nothing is a stale directive
+    assert!(check_source("serve/x.rs", "// lint: allow(request-path-no-panic, reason = \"x\")\n")
+        .is_err());
+    // but a directive quoted in a string is prose, not a directive
+    assert!(check_source("serve/x.rs", "let s = \"// lint: frobnicate\";\n").is_ok());
+}
+
+#[test]
+fn baseline_waives_per_file_and_rejects_junk() {
+    let names = rule_names();
+    let b = Baseline::parse(
+        "# debt ledger\n\nraw-mantissa coordinator/mod.rs\n",
+        &names,
+    )
+    .unwrap();
+    assert!(b.covers("raw-mantissa", "coordinator/mod.rs"));
+    assert!(!b.covers("raw-mantissa", "serve/store.rs"));
+    assert!(!b.covers("request-path-no-panic", "coordinator/mod.rs"));
+    assert!(Baseline::parse("no-such-rule serve/x.rs\n", &names).is_err());
+    assert!(Baseline::parse("one-field-only\n", &names).is_err());
+    assert!(Baseline::parse("too many fields here\n", &names).is_err());
+}

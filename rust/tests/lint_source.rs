@@ -1,0 +1,44 @@
+//! Tier-1 gate: the invariant lint pass must be clean over the crate's
+//! own sources.  This is the same pass `otaro lint` and CI run — any
+//! non-baselined violation, malformed directive, or stale baseline
+//! entry fails `cargo test`.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+#[test]
+fn crate_sources_pass_invariant_lints() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let baseline = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/lint.baseline");
+    let t0 = Instant::now();
+    let report = match otaro::lint::run(&root, Some(&baseline)) {
+        Ok(r) => r,
+        Err(e) => panic!("lint pass errored (malformed directive or baseline): {e}"),
+    };
+    let elapsed = t0.elapsed();
+    assert!(report.is_clean(), "\n{}", report.render());
+    assert!(report.files > 20, "walk found only {} files — wrong root?", report.files);
+    assert!(
+        elapsed < Duration::from_secs(2),
+        "lint pass took {elapsed:?} — the gate must stay fast enough to run on every test invocation"
+    );
+}
+
+#[test]
+fn baseline_carries_no_forbidden_rules() {
+    // policy: missing safety comments and request-path panics are fixed,
+    // never recorded as debt
+    let baseline = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/lint.baseline");
+    let text = std::fs::read_to_string(&baseline).expect("baseline readable");
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let rule = line.split_whitespace().next().unwrap_or("");
+        assert!(
+            rule != "unsafe-needs-safety" && rule != "request-path-no-panic",
+            "baseline entry for non-baselinable rule: {line}"
+        );
+    }
+}
