@@ -10,7 +10,7 @@
 //! * batched results are bit-identical to per-row matvec and to every
 //!   worker-thread count.
 
-use otaro::benchutil::{black_box, group, Bench};
+use otaro::benchutil::{black_box, group, maybe_write_json, Bench};
 use otaro::data::Rng;
 use otaro::infer::{DecoderSim, DecoderWeights, DenseLinear, QuantLinear, SimConfig};
 use otaro::sefp::{Precision, SefpSpec};
@@ -141,4 +141,8 @@ fn main() {
         b.ratio("decode4_looped", "decode4_batched_t2").unwrap_or(f64::NAN),
         b.ratio("decode4_looped", "decode4_batched_t4").unwrap_or(f64::NAN)
     );
+
+    // OTARO_BENCH_JSON=<dir> drops BENCH_infer.json for trend tooling;
+    // unset leaves the default run console-only
+    maybe_write_json(&b, "infer");
 }

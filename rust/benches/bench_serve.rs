@@ -7,7 +7,7 @@
 
 use std::time::Instant;
 
-use otaro::benchutil::{black_box, group, quick_mode, rate, Bench};
+use otaro::benchutil::{black_box, group, maybe_write_json, quick_mode, rate, Bench};
 use otaro::config::ServeConfig;
 use otaro::data::Rng;
 use otaro::infer::SimConfig;
@@ -166,4 +166,8 @@ fn main() {
         stats.throughput_tps(),
         stats.wall_secs
     );
+
+    // OTARO_BENCH_JSON=<dir> drops BENCH_serve.json for trend tooling;
+    // unset leaves the default run console-only
+    maybe_write_json(&b, "serve");
 }

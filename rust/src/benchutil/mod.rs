@@ -6,7 +6,10 @@
 //! and regenerate the perf rows in EXPERIMENTS.md.
 
 use std::hint::black_box as bb;
+use std::path::PathBuf;
 use std::time::Instant;
+
+use crate::json::{self, Value};
 
 pub use std::hint::black_box;
 
@@ -27,6 +30,19 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// One machine-readable record, mirroring the console report line.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("name", json::s(self.name.clone())),
+            ("iters", json::n(self.iters as f64)),
+            ("mean_ns", json::n(self.mean_ns)),
+            ("median_ns", json::n(self.median_ns)),
+            ("p95_ns", json::n(self.p95_ns)),
+            ("min_ns", json::n(self.min_ns)),
+            ("elements", json::n(self.elements as f64)),
+        ])
+    }
+
     pub fn report(&self) {
         let t = fmt_ns(self.median_ns);
         if self.elements > 0 {
@@ -159,6 +175,12 @@ impl Bench {
         &self.results
     }
 
+    /// All results as a JSON array — the `records` payload of a
+    /// [`bench_file`].
+    pub fn to_records(&self) -> Value {
+        Value::Arr(self.results.iter().map(BenchResult::to_json).collect())
+    }
+
     /// Ratio of two named results (a/b, by median) — speedup lines.
     pub fn ratio(&self, a: &str, b: &str) -> Option<f64> {
         let fa = self.results.iter().find(|r| r.name == a)?;
@@ -179,6 +201,58 @@ pub fn rate(name: &str, count: u64, secs: f64) {
     println!("{name:<44} {per_sec:>12.1}/s  ({count} in {secs:.3} s)");
 }
 
+// ---------------------------------------------------------------------------
+// machine-readable perf trajectory (BENCH_*.json)
+// ---------------------------------------------------------------------------
+
+/// Wrap bench records in the shared `otaro.bench.v1` envelope — the one
+/// record shape every `BENCH_*.json` in the repo uses (kernel benches and
+/// the `workload` scenario harness alike), so trend tooling parses them
+/// uniformly.
+pub fn bench_file(bench: &str, records: Value) -> Value {
+    json::obj(vec![
+        ("schema", json::s("otaro.bench.v1")),
+        ("bench", json::s(bench)),
+        ("records", records),
+    ])
+}
+
+/// Output directory requested via the `OTARO_BENCH_JSON` env var
+/// (non-empty, not `"0"`).  Unset means console-only: default bench runs
+/// never touch the filesystem.
+pub fn json_out_dir() -> Option<PathBuf> {
+    match std::env::var("OTARO_BENCH_JSON") {
+        Ok(v) if !v.is_empty() && v != "0" => Some(PathBuf::from(v)),
+        _ => None,
+    }
+}
+
+/// Serialize `records` into `path` under the [`bench_file`] envelope.
+/// Object keys sort on `Display`, so a run is byte-reproducible modulo
+/// the timing fields inside the records themselves.
+pub fn write_bench_file(path: &std::path::Path, bench: &str, records: Value) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, format!("{}\n", bench_file(bench, records)))?;
+    Ok(())
+}
+
+/// End-of-binary hook for bench targets: when `OTARO_BENCH_JSON` names a
+/// directory, drop `BENCH_<bench>.json` there; otherwise do nothing.  A
+/// write failure is reported on stderr but never fails the bench run —
+/// the console report already happened.
+pub fn maybe_write_json(b: &Bench, bench: &str) {
+    let Some(dir) = json_out_dir() else { return };
+    let path = dir.join(format!("BENCH_{bench}.json"));
+    match write_bench_file(&path, bench, b.to_records()) {
+        Ok(()) => println!("bench json: wrote {}", path.display()),
+        Err(e) => eprintln!("bench json: failed to write {}: {e}", path.display()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,5 +266,30 @@ mod tests {
         assert!(b.results()[0].median_ns >= 0.0);
         assert!(b.ratio("vec", "noop").is_some());
         assert!(b.ratio("missing", "noop").is_none());
+    }
+
+    #[test]
+    fn json_records_roundtrip() {
+        let mut b = Bench { warmup_iters: 1, budget_ms: 2.0, max_iters: 10, results: vec![] };
+        b.run_elems("elems", 7, || 1 + 1);
+        let file = bench_file("unit", b.to_records());
+        let text = file.to_string();
+        let back = crate::json::parse(&text).unwrap();
+        assert_eq!(back.req_str("schema").unwrap(), "otaro.bench.v1");
+        assert_eq!(back.req_str("bench").unwrap(), "unit");
+        let rec = back.get("records").unwrap().idx(0).unwrap();
+        assert_eq!(rec.req_str("name").unwrap(), "elems");
+        assert_eq!(rec.get("elements").unwrap().as_f64(), Some(7.0));
+        assert!(rec.get("median_ns").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn json_out_dir_honors_env_shape() {
+        // can't mutate the process env safely under the parallel test
+        // runner; just pin the gating contract on the raw var value
+        let gate = |v: &str| !v.is_empty() && v != "0";
+        assert!(!gate(""));
+        assert!(!gate("0"));
+        assert!(gate("target/bench-json"));
     }
 }

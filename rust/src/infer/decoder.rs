@@ -154,6 +154,11 @@ pub struct DecoderSim {
     batch: usize,
     threads: usize,
     scratch: Scratch,
+    /// batched decode steps executed (obs gauge: `backend.sim_steps`)
+    pub steps: u64,
+    /// single-row prompt prefill steps executed (obs gauge:
+    /// `backend.sim_prefill_steps`)
+    pub prefill_steps: u64,
 }
 
 fn rand_dense(rng: &mut Rng, in_dim: usize, out_dim: usize) -> DenseLinear {
@@ -200,7 +205,18 @@ impl DecoderSim {
         };
         let caches = Self::fresh_caches(&cfg, quant_precision, batch);
         let scratch = Scratch::new(&cfg, batch);
-        DecoderSim { cfg, layers, head, caches, quant_precision, batch, threads: 1, scratch }
+        DecoderSim {
+            cfg,
+            layers,
+            head,
+            caches,
+            quant_precision,
+            batch,
+            threads: 1,
+            scratch,
+            steps: 0,
+            prefill_steps: 0,
+        }
     }
 
     /// Build directly from already-quantized layers — the SEFP-native
@@ -261,6 +277,8 @@ impl DecoderSim {
             batch,
             threads: 1,
             scratch,
+            steps: 0,
+            prefill_steps: 0,
         })
     }
 
@@ -364,6 +382,7 @@ impl DecoderSim {
 
     fn step_rows(&mut self, x: &mut [f32], active: Option<&[bool]>) -> f32 {
         // lint: region(no_alloc)
+        self.steps += 1;
         let d = self.cfg.d_model;
         let bsz = self.batch;
         let threads = self.threads;
@@ -435,6 +454,7 @@ impl DecoderSim {
     /// same row (the kernels share accumulation order).
     pub fn prefill_row_step(&mut self, b: usize, x: &mut [f32]) {
         // lint: region(no_alloc)
+        self.prefill_steps += 1;
         let d = self.cfg.d_model;
         let f = self.cfg.d_ff;
         let bsz = self.batch;

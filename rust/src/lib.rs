@@ -26,7 +26,9 @@ pub mod eval;
 pub mod infer;
 pub mod lint;
 pub mod metrics;
+pub mod obs;
 pub mod policy;
 pub mod runtime;
 pub mod sefp;
 pub mod serve;
+pub mod workload;

@@ -32,6 +32,13 @@ COMMANDS:
   lint       [--src DIR] [--baseline FILE]
              (invariant lint pass over the crate sources; defaults to
              rust/src and rust/lint.baseline)
+  loadgen    [--scenario NAME] [--out FILE]
+             (trace-driven load harness: replay the named scenario — or
+             the whole catalog — through the real serving stack,
+             asserting per-scenario SLO/accounting invariants; writes
+             BENCH_serve_scenarios.json unless --out overrides.
+             scenarios: steady-mix diurnal-ramp burst-storm
+             adversarial-precision)
   bench      <table1|table2|table8|fig3|fig4|fig5|fig6|fig8|fig9|all> [--quick]
 ";
 
@@ -167,6 +174,12 @@ fn main() -> anyhow::Result<()> {
             let baseline = args.opt("--baseline").map(PathBuf::from);
             args.finish();
             otaro::lint::run_cli(src, baseline)
+        }
+        "loadgen" => {
+            let scenario = args.opt("--scenario");
+            let out = args.opt("--out").map(PathBuf::from);
+            args.finish();
+            otaro::workload::run_cli(scenario, out)
         }
         "bench" => {
             let quick = args.flag("--quick");

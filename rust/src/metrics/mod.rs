@@ -98,6 +98,17 @@ impl Summary {
         }
     }
 
+    /// Like [`Summary::new`], but the percentile ring is reserved up
+    /// front at [`SUMMARY_SAMPLE_CAP`], so no [`push`](Summary::push)
+    /// will ever reallocate.  The obs registry's histograms use this so
+    /// the metric record path stays allocation-free from the first
+    /// sample.
+    pub fn preallocated() -> Self {
+        let mut s = Summary::new();
+        s.samples.reserve_exact(SUMMARY_SAMPLE_CAP);
+        s
+    }
+
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -215,6 +226,59 @@ mod tests {
         // value is the 1000th push, not the 0th
         assert_eq!(s.percentile(0.0), 1000.0);
         assert_eq!(s.percentile(100.0), (SUMMARY_SAMPLE_CAP + 999) as f64);
+    }
+
+    #[test]
+    fn empty_window_is_all_zeros_except_minmax_sentinels() {
+        let s = Summary::new();
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.p50(), 0.0);
+        assert_eq!(s.p95(), 0.0);
+        assert_eq!(s.p99(), 0.0);
+        // min/max are the identity elements; consumers that serialize
+        // them (obs snapshot) must clamp the empty case themselves
+        assert_eq!(s.min, f64::INFINITY);
+        assert_eq!(s.max, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn single_sample_pins_every_statistic() {
+        let mut s = Summary::new();
+        s.push(3.25);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.mean(), 3.25);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!((s.min, s.max), (3.25, 3.25));
+        for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(s.percentile(q), 3.25);
+        }
+    }
+
+    #[test]
+    fn identical_samples_have_zero_spread() {
+        let mut s = Summary::new();
+        for _ in 0..1000 {
+            s.push(42.0);
+        }
+        assert_eq!(s.mean(), 42.0);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.p50(), 42.0);
+        assert_eq!(s.p99(), 42.0);
+        assert_eq!((s.min, s.max), (42.0, 42.0));
+    }
+
+    #[test]
+    fn preallocated_ring_never_regrows() {
+        let mut s = Summary::preallocated();
+        let cap = s.samples.capacity();
+        assert!(cap >= SUMMARY_SAMPLE_CAP);
+        for x in 0..(SUMMARY_SAMPLE_CAP * 2) {
+            s.push(x as f64);
+        }
+        assert_eq!(s.samples.capacity(), cap, "push reallocated the ring");
+        assert_eq!(s.samples.len(), SUMMARY_SAMPLE_CAP);
     }
 
     #[test]

@@ -1,0 +1,39 @@
+//! Observability plane: a typed, first-class metrics registry.
+//!
+//! PRs 1–6 grew an ad-hoc pile of counters (`ServeStats` fields, pub
+//! `calls`/`loads` on backends) that could only be read by whoever held
+//! the owning struct.  This module makes metrics a subsystem of their
+//! own:
+//!
+//! * [`Registry`] — named counters, gauges, and fixed-bucket histograms.
+//!   Metrics are **pre-registered**: registration returns a typed handle
+//!   ([`Counter`], [`Gauge`], [`Histo`]) that is a plain index, so the
+//!   record path is handle-indexed arithmetic — no name hashing, no map
+//!   lookup, no allocation per event (the `hot-loop-no-alloc` lint
+//!   guards the record impl, and `decision-path-determinism` bans hash
+//!   collections from the module wholesale).
+//! * [`MetricSink`] — the emit interface ([`inc`](MetricSink::inc) /
+//!   [`add`](MetricSink::add) / [`set`](MetricSink::set) /
+//!   [`observe`](MetricSink::observe)).  Serve, policy, and infer code
+//!   take `&mut dyn MetricSink` (or a concrete [`Registry`]) so tests
+//!   can swap in [`NullSink`].
+//! * [`Registry::snapshot`] — serializes every metric deterministically
+//!   through the in-repo `json` module (`json::Value::Obj` is a
+//!   `BTreeMap`, so keys come out sorted; identical metric states
+//!   produce byte-identical snapshots).
+//!
+//! Histograms carry fixed, registration-time bucket bounds *and* an
+//! embedded [`metrics::Summary`](crate::metrics::Summary) (pre-allocated
+//! ring, so `observe` never allocates) — buckets feed dashboards and
+//! snapshots, the summary feeds exact p50/p95/p99 for SLO checks.
+//!
+//! The serve stack's concrete handle set lives in
+//! [`serve::ServeMetrics`](crate::serve::ServeMetrics); the trace-driven
+//! load harness that reads these snapshots lives in [`crate::workload`].
+
+pub mod registry;
+
+pub use registry::{
+    Counter, Gauge, Histo, MetricSink, NullSink, Registry, AGREEMENT_BUCKETS, LATENCY_MS_BUCKETS,
+    RATIO_BUCKETS,
+};

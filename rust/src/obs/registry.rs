@@ -1,0 +1,403 @@
+//! The metrics registry: pre-registered handles, allocation-free
+//! recording, deterministic JSON snapshots.
+//!
+//! Registration (startup path, allocates): [`Registry::counter`] /
+//! [`Registry::gauge`] / [`Registry::histogram`] validate the name and
+//! bucket bounds and return a typed index handle.  Recording (hot path,
+//! never allocates): [`MetricSink::add`] / [`MetricSink::set`] /
+//! [`MetricSink::observe`] resolve the handle by direct `Vec` index.
+//! A handle from one registry used against another is a harmless no-op
+//! (out-of-range index) rather than a panic — this module sits on the
+//! request path.
+
+use crate::json::{arr, n, obj, s, Value};
+use crate::metrics::Summary;
+
+/// Handle to a registered monotonic counter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Counter(u32);
+
+/// Handle to a registered gauge (last-write-wins f64).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Gauge(u32);
+
+/// Handle to a registered fixed-bucket histogram.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Histo(u32);
+
+/// Default latency buckets, milliseconds (upper bounds; values above
+/// the last bound land in the overflow bucket).
+pub const LATENCY_MS_BUCKETS: &[f64] = &[
+    0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0,
+];
+
+/// Buckets for ratios in [0, 1] (batch fill, agreement fractions).
+pub const RATIO_BUCKETS: &[f64] = &[0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0];
+
+/// Buckets for probe token-agreement in [0, 1], finer near the top
+/// where the quality floor lives.
+pub const AGREEMENT_BUCKETS: &[f64] = &[0.25, 0.5, 0.7, 0.8, 0.9, 0.95, 0.99, 1.0];
+
+/// The emit interface serve/policy/infer record through.  All methods
+/// are infallible and allocation-free; implementors other than
+/// [`Registry`] (e.g. [`NullSink`]) let tests and benches drop the
+/// overhead entirely.
+pub trait MetricSink {
+    /// Add `by` to a counter.
+    fn add(&mut self, c: Counter, by: u64);
+    /// Set a gauge to `x`.
+    fn set(&mut self, g: Gauge, x: f64);
+    /// Record one histogram sample.
+    fn observe(&mut self, h: Histo, x: f64);
+    /// Increment a counter by one.
+    fn inc(&mut self, c: Counter) {
+        self.add(c, 1);
+    }
+}
+
+/// A sink that discards every event.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl MetricSink for NullSink {
+    fn add(&mut self, _c: Counter, _by: u64) {}
+    fn set(&mut self, _g: Gauge, _x: f64) {}
+    fn observe(&mut self, _h: Histo, _x: f64) {}
+}
+
+#[derive(Debug, Clone)]
+struct CounterSlot {
+    name: String,
+    value: u64,
+}
+
+#[derive(Debug, Clone)]
+struct GaugeSlot {
+    name: String,
+    value: f64,
+}
+
+#[derive(Debug, Clone)]
+struct HistoSlot {
+    name: String,
+    /// strictly increasing upper bounds; `counts[i]` holds samples with
+    /// `x <= bounds[i]` (first matching bucket — NOT cumulative)
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    /// samples above the last bound (and non-finite samples)
+    overflow: u64,
+    sum: f64,
+    /// exact-percentile window over the same stream (pre-allocated ring)
+    summary: Summary,
+}
+
+impl HistoSlot {
+    /// Bucket index for `x`: the first bound with `x <= bound`.  A
+    /// value exactly on a bound lands in that bound's bucket,
+    /// deterministically; values above every bound (or NaN, which
+    /// compares false) return `None` → overflow.
+    fn bucket_of(&self, x: f64) -> Option<usize> {
+        self.bounds.iter().position(|&b| x <= b)
+    }
+}
+
+/// The typed metrics registry.  See the module docs for the
+/// registration/record split.
+#[derive(Debug, Default, Clone)]
+pub struct Registry {
+    counters: Vec<CounterSlot>,
+    gauges: Vec<GaugeSlot>,
+    histos: Vec<HistoSlot>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    fn check_name(&self, name: &str) {
+        assert!(!name.is_empty(), "metric name must be non-empty");
+        let taken = self.counters.iter().any(|c| c.name == name)
+            || self.gauges.iter().any(|g| g.name == name)
+            || self.histos.iter().any(|h| h.name == name);
+        assert!(!taken, "metric name {name:?} registered twice");
+    }
+
+    /// Register a monotonic counter; the returned handle is the only
+    /// way to record into it.
+    pub fn counter(&mut self, name: &str) -> Counter {
+        self.check_name(name);
+        self.counters.push(CounterSlot { name: String::from(name), value: 0 });
+        Counter((self.counters.len() - 1) as u32)
+    }
+
+    /// Register a gauge (last-write-wins).
+    pub fn gauge(&mut self, name: &str) -> Gauge {
+        self.check_name(name);
+        self.gauges.push(GaugeSlot { name: String::from(name), value: 0.0 });
+        Gauge((self.gauges.len() - 1) as u32)
+    }
+
+    /// Register a fixed-bucket histogram.  `bounds` are upper bucket
+    /// bounds and must be finite, non-empty, and strictly increasing
+    /// (validated here, at registration, so the record path never has
+    /// to).
+    pub fn histogram(&mut self, name: &str, bounds: &[f64]) -> Histo {
+        self.check_name(name);
+        assert!(!bounds.is_empty(), "histogram {name:?} needs at least one bucket bound");
+        for w in bounds.windows(2) {
+            assert!(w[0] < w[1], "histogram {name:?} bounds must be strictly increasing");
+        }
+        assert!(bounds.iter().all(|b| b.is_finite()), "histogram {name:?} bounds must be finite");
+        self.histos.push(HistoSlot {
+            name: String::from(name),
+            bounds: bounds.into(),
+            counts: bounds.iter().map(|_| 0).collect(),
+            overflow: 0,
+            sum: 0.0,
+            summary: Summary::preallocated(),
+        });
+        Histo((self.histos.len() - 1) as u32)
+    }
+
+    /// Current value of a counter (0 for a foreign handle).
+    pub fn counter_value(&self, c: Counter) -> u64 {
+        self.counters.get(c.0 as usize).map_or(0, |slot| slot.value)
+    }
+
+    /// Current value of a gauge (0.0 for a foreign handle).
+    pub fn gauge_value(&self, g: Gauge) -> f64 {
+        self.gauges.get(g.0 as usize).map_or(0.0, |slot| slot.value)
+    }
+
+    /// Total samples a histogram has recorded (buckets + overflow).
+    pub fn histo_count(&self, h: Histo) -> u64 {
+        self.histos
+            .get(h.0 as usize)
+            .map_or(0, |slot| slot.overflow + slot.counts.iter().sum::<u64>())
+    }
+
+    /// Clone of the exact-percentile [`Summary`] a histogram keeps
+    /// alongside its buckets (empty for a foreign handle).  Reporting
+    /// path — the clone allocates, `observe` does not.
+    pub fn histo_summary(&self, h: Histo) -> Summary {
+        self.histos.get(h.0 as usize).map_or_else(Summary::new, |slot| slot.summary.clone())
+    }
+
+    /// Serialize every registered metric, deterministically: the JSON
+    /// object sorts keys (`json::Value::Obj` is a `BTreeMap`), so two
+    /// registries in identical states snapshot to identical bytes.
+    pub fn snapshot(&self) -> Value {
+        let counters: Vec<(&str, Value)> =
+            self.counters.iter().map(|c| (c.name.as_str(), n(c.value as f64))).collect();
+        let gauges: Vec<(&str, Value)> =
+            self.gauges.iter().map(|g| (g.name.as_str(), n(g.value))).collect();
+        let histos: Vec<(&str, Value)> =
+            self.histos.iter().map(|h| (h.name.as_str(), histo_json(h))).collect();
+        obj(vec![
+            ("counters", obj(counters)),
+            ("gauges", obj(gauges)),
+            ("histograms", obj(histos)),
+            ("schema", s("otaro.metrics.v1")),
+        ])
+    }
+}
+
+fn histo_json(h: &HistoSlot) -> Value {
+    let count = h.overflow + h.counts.iter().sum::<u64>();
+    // an empty summary reports ±inf min/max, which is not valid JSON —
+    // clamp the empty case to zeros
+    let (min, max) = if count == 0 { (0.0, 0.0) } else { (h.summary.min, h.summary.max) };
+    obj(vec![
+        ("bounds", arr(h.bounds.iter().map(|&b| n(b)).collect())),
+        ("counts", arr(h.counts.iter().map(|&c| n(c as f64)).collect())),
+        ("overflow", n(h.overflow as f64)),
+        ("count", n(count as f64)),
+        ("sum", n(h.sum)),
+        ("min", n(min)),
+        ("max", n(max)),
+        ("mean", n(h.summary.mean())),
+        ("p50", n(h.summary.p50())),
+        ("p95", n(h.summary.p95())),
+        ("p99", n(h.summary.p99())),
+    ])
+}
+
+// The record path: handle-indexed, branch-light, and allocation-free —
+// `Summary::push` writes into its pre-allocated ring, bucket search is
+// a linear scan over a handful of registration-frozen bounds.
+// lint: region(no_alloc)
+impl MetricSink for Registry {
+    fn add(&mut self, c: Counter, by: u64) {
+        if let Some(slot) = self.counters.get_mut(c.0 as usize) {
+            slot.value = slot.value.wrapping_add(by);
+        }
+    }
+
+    fn set(&mut self, g: Gauge, x: f64) {
+        if let Some(slot) = self.gauges.get_mut(g.0 as usize) {
+            slot.value = x;
+        }
+    }
+
+    fn observe(&mut self, h: Histo, x: f64) {
+        if let Some(slot) = self.histos.get_mut(h.0 as usize) {
+            match slot.bucket_of(x) {
+                Some(i) => slot.counts[i] += 1,
+                None => slot.overflow += 1,
+            }
+            // non-finite samples are counted (overflow) but kept out of
+            // sum/summary — one NaN must not poison the aggregates or
+            // make the snapshot unserializable
+            if x.is_finite() {
+                slot.sum += x;
+                slot.summary.push(x);
+            }
+        }
+    }
+}
+// lint: end_region
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_record_through_handles() {
+        let mut r = Registry::new();
+        let c = r.counter("serve.served");
+        let g = r.gauge("queue.depth");
+        r.inc(c);
+        r.add(c, 4);
+        r.set(g, 7.0);
+        r.set(g, 3.0);
+        assert_eq!(r.counter_value(c), 5);
+        assert_eq!(r.gauge_value(g), 3.0);
+    }
+
+    #[test]
+    fn foreign_handles_are_harmless_noops() {
+        let mut a = Registry::new();
+        let mut b = Registry::new();
+        let c = a.counter("only.in.a");
+        // b never registered anything: the handle is out of range there
+        b.add(c, 100);
+        assert_eq!(b.counter_value(c), 0);
+        assert_eq!(a.counter_value(c), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "registered twice")]
+    fn duplicate_names_are_a_registration_error() {
+        let mut r = Registry::new();
+        let _ = r.counter("x");
+        let _ = r.gauge("x");
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn histogram_bounds_must_increase() {
+        let mut r = Registry::new();
+        let _ = r.histogram("h", &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn histogram_empty_window() {
+        let mut r = Registry::new();
+        let h = r.histogram("lat", LATENCY_MS_BUCKETS);
+        assert_eq!(r.histo_count(h), 0);
+        let sum = r.histo_summary(h);
+        assert_eq!(sum.n, 0);
+        assert_eq!(sum.p95(), 0.0);
+        // empty min/max must serialize as zeros, not ±inf
+        let snap = r.snapshot().to_string();
+        assert!(!snap.contains("inf"), "{snap}");
+        assert!(crate::json::parse(&snap).is_ok());
+    }
+
+    #[test]
+    fn histogram_single_and_identical_samples() {
+        let mut r = Registry::new();
+        let h = r.histogram("lat", &[1.0, 2.0, 4.0]);
+        r.observe(h, 1.5);
+        assert_eq!(r.histo_count(h), 1);
+        let one = r.histo_summary(h);
+        assert_eq!(one.p50(), 1.5);
+        assert_eq!(one.p99(), 1.5);
+        assert_eq!((one.min, one.max), (1.5, 1.5));
+        for _ in 0..9 {
+            r.observe(h, 1.5);
+        }
+        let same = r.histo_summary(h);
+        assert_eq!(same.n, 10);
+        assert_eq!(same.std(), 0.0);
+        assert_eq!(same.p95(), 1.5);
+    }
+
+    #[test]
+    fn bucket_boundaries_are_deterministic() {
+        // a value exactly on a bound lands in THAT bound's bucket
+        // (x <= bound, first match), never split or rounded across
+        let mut r = Registry::new();
+        let h = r.histogram("b", &[1.0, 2.0, 4.0]);
+        for x in [1.0, 2.0, 4.0] {
+            r.observe(h, x);
+        }
+        r.observe(h, 0.5); // below the first bound -> bucket 0
+        r.observe(h, 1.0000001); // just past a bound -> next bucket
+        r.observe(h, 4.0000001); // past the last bound -> overflow
+        r.observe(h, f64::NAN); // NaN compares false everywhere -> overflow
+        let snap = r.snapshot();
+        let counts = snap
+            .get("histograms")
+            .and_then(|h| h.get("b"))
+            .and_then(|b| b.get("counts"))
+            .and_then(|c| c.as_arr())
+            .unwrap();
+        let counts: Vec<u64> = counts.iter().map(|v| v.as_f64().unwrap() as u64).collect();
+        assert_eq!(counts, vec![2, 2, 1]);
+        let overflow = snap
+            .get("histograms")
+            .and_then(|h| h.get("b"))
+            .and_then(|b| b.get("overflow"))
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert_eq!(overflow as u64, 2);
+    }
+
+    #[test]
+    fn snapshots_are_deterministic_bytes() {
+        let build = || {
+            let mut r = Registry::new();
+            let c = r.counter("a.count");
+            let g = r.gauge("z.gauge");
+            let h = r.histogram("m.hist", RATIO_BUCKETS);
+            r.add(c, 3);
+            r.set(g, 0.25);
+            for x in [0.1, 0.5, 0.5, 0.875, 1.0] {
+                r.observe(h, x);
+            }
+            r.snapshot().to_string()
+        };
+        let a = build();
+        assert_eq!(a, build());
+        // and the snapshot round-trips through the in-repo parser
+        let v = crate::json::parse(&a).unwrap();
+        assert_eq!(v.get("schema").and_then(|x| x.as_str()), Some("otaro.metrics.v1"));
+    }
+
+    #[test]
+    fn null_sink_and_trait_objects() {
+        let mut r = Registry::new();
+        let c = r.counter("c");
+        {
+            let sink: &mut dyn MetricSink = &mut r;
+            sink.inc(c);
+        }
+        assert_eq!(r.counter_value(c), 1);
+        let mut null = NullSink;
+        null.inc(c);
+        null.set(Gauge(0), 1.0);
+        null.observe(Histo(0), 1.0);
+    }
+}

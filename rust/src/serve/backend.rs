@@ -35,6 +35,12 @@ pub trait LogitsBackend {
     fn load_view(&mut self, view: &LadderView) -> anyhow::Result<()>;
     /// One decode step at the loaded precision.
     fn logits_step(&mut self, tokens: &[i32]) -> anyhow::Result<Vec<f32>>;
+    /// Backend-specific gauges for the obs registry, as (name, value)
+    /// pairs; the server surfaces each as `backend.<name>`.  Called at
+    /// reporting cadence, never inside the decode loop.
+    fn obs_gauges(&self) -> Vec<(&'static str, f64)> {
+        Vec::new()
+    }
 }
 
 /// Owned handle over the PJRT [`Engine`] — the production backend.
@@ -226,6 +232,10 @@ impl LogitsBackend for SimBackend {
             }
         }
         Ok(out)
+    }
+
+    fn obs_gauges(&self) -> Vec<(&'static str, f64)> {
+        vec![("calls", self.calls as f64), ("loads", self.loads as f64)]
     }
 }
 
@@ -538,6 +548,15 @@ impl LogitsBackend for DecoderBackend {
             self.row_ctx[ri].push(self.pending[ri]);
         }
         Ok(out)
+    }
+
+    fn obs_gauges(&self) -> Vec<(&'static str, f64)> {
+        let mut g = vec![("calls", self.calls as f64), ("loads", self.loads as f64)];
+        if let Some(sim) = &self.sim {
+            g.push(("sim_steps", sim.steps as f64));
+            g.push(("sim_prefill_steps", sim.prefill_steps as f64));
+        }
+        g
     }
 }
 

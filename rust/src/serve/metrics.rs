@@ -1,0 +1,388 @@
+//! The serve stack's concrete metric handle set over
+//! [`obs::Registry`](crate::obs::Registry).
+//!
+//! Every counter the server used to keep as an ad-hoc `ServeStats`
+//! field is now a pre-registered metric: the server emits through the
+//! typed handles here (allocation-free — handle-indexed, no name
+//! lookups per event), and [`ServeStats`](super::ServeStats) is
+//! *re-derived* from the registry by [`ServeMetrics::stats`].  The
+//! registry snapshot ([`ServeMetrics::snapshot`]) is the same data in
+//! deterministic JSON, which is what the `workload` replay driver and
+//! `otaro loadgen` consume.
+//!
+//! Per-rung metrics (served / shed / decode step latency) are
+//! registered once per configured ladder rung at construction, so the
+//! paper's per-precision serving split is visible without any dynamic
+//! registration on the request path.
+
+use crate::metrics::Summary;
+use crate::obs::{
+    Counter, Gauge, Histo, MetricSink, Registry, AGREEMENT_BUCKETS, LATENCY_MS_BUCKETS,
+    RATIO_BUCKETS,
+};
+use crate::sefp::Precision;
+
+use super::server::ServeStats;
+
+/// Handles for one ladder rung's per-precision metrics.
+#[derive(Debug, Clone, Copy)]
+struct RungMetrics {
+    precision: Precision,
+    served: Counter,
+    shed: Counter,
+    step_ms: Histo,
+}
+
+/// The serving plane's registered metric handles plus the registry they
+/// index into.  Construction registers everything; recording is pure
+/// handle arithmetic.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    reg: Registry,
+    c_served: Counter,
+    c_shed: Counter,
+    c_invalid: Counter,
+    c_batches: Counter,
+    c_decode_steps: Counter,
+    c_tokens: Counter,
+    c_probes: Counter,
+    h_queue_ms: Histo,
+    h_compute_ms: Histo,
+    h_step_ms: Histo,
+    h_batch_fill: Histo,
+    h_probe_agreement: Histo,
+    g_queue_depth: Gauge,
+    g_queue_peak: Gauge,
+    g_switch_hits: Gauge,
+    g_switch_misses: Gauge,
+    g_switch_evictions: Gauge,
+    g_ladder_resident: Gauge,
+    g_promotions: Gauge,
+    g_demotions: Gauge,
+    g_forced_clamps: Gauge,
+    /// per configured ladder rung, ascending by precision
+    rungs: Vec<RungMetrics>,
+    /// backend-reported gauges, registered lazily on first sight
+    /// (reporting path, not the record path)
+    backend_gauges: Vec<(String, Gauge)>,
+    /// wall time from first dispatched work to the end of the last
+    /// working `process_all` (same semantics as the old `ServeStats`
+    /// field — idle time before traffic is not counted)
+    pub wall_secs: f64,
+    /// high-water mark of the batcher queue depth
+    peak_depth: u64,
+}
+
+impl ServeMetrics {
+    /// Register the full serve metric set, with per-rung metrics for
+    /// every rung of the configured router ladder.
+    pub fn for_ladder(ladder: &[Precision]) -> Self {
+        let mut reg = Registry::new();
+        let c_served = reg.counter("serve.served");
+        let c_shed = reg.counter("serve.shed");
+        let c_invalid = reg.counter("serve.invalid");
+        let c_batches = reg.counter("serve.batches");
+        let c_decode_steps = reg.counter("serve.decode_steps");
+        let c_tokens = reg.counter("serve.tokens");
+        let c_probes = reg.counter("policy.probes_run");
+        let h_queue_ms = reg.histogram("serve.queue_ms", LATENCY_MS_BUCKETS);
+        let h_compute_ms = reg.histogram("serve.compute_ms", LATENCY_MS_BUCKETS);
+        let h_step_ms = reg.histogram("serve.step_ms", LATENCY_MS_BUCKETS);
+        let h_batch_fill = reg.histogram("serve.batch_fill", RATIO_BUCKETS);
+        let h_probe_agreement = reg.histogram("policy.probe_agreement", AGREEMENT_BUCKETS);
+        let g_queue_depth = reg.gauge("serve.queue_depth");
+        let g_queue_peak = reg.gauge("serve.queue_depth_peak");
+        let g_switch_hits = reg.gauge("ladder.switch_hits");
+        let g_switch_misses = reg.gauge("ladder.switch_misses");
+        let g_switch_evictions = reg.gauge("ladder.switch_evictions");
+        let g_ladder_resident = reg.gauge("ladder.resident_bytes");
+        let g_promotions = reg.gauge("policy.promotions");
+        let g_demotions = reg.gauge("policy.demotions");
+        let g_forced_clamps = reg.gauge("policy.forced_clamps");
+        let mut rung_ps: Vec<Precision> = ladder.to_vec();
+        rung_ps.sort();
+        let rungs = rung_ps
+            .into_iter()
+            .map(|p| RungMetrics {
+                precision: p,
+                served: reg.counter(&format!("serve.rung.e5m{}.served", p.m())),
+                shed: reg.counter(&format!("serve.rung.e5m{}.shed", p.m())),
+                step_ms: reg
+                    .histogram(&format!("serve.rung.e5m{}.step_ms", p.m()), LATENCY_MS_BUCKETS),
+            })
+            .collect();
+        ServeMetrics {
+            reg,
+            c_served,
+            c_shed,
+            c_invalid,
+            c_batches,
+            c_decode_steps,
+            c_tokens,
+            c_probes,
+            h_queue_ms,
+            h_compute_ms,
+            h_step_ms,
+            h_batch_fill,
+            h_probe_agreement,
+            g_queue_depth,
+            g_queue_peak,
+            g_switch_hits,
+            g_switch_misses,
+            g_switch_evictions,
+            g_ladder_resident,
+            g_promotions,
+            g_demotions,
+            g_forced_clamps,
+            rungs,
+            backend_gauges: Vec::new(),
+            wall_secs: 0.0,
+            peak_depth: 0,
+        }
+    }
+
+    fn rung(&self, p: Precision) -> Option<RungMetrics> {
+        self.rungs.iter().find(|r| r.precision == p).copied()
+    }
+
+    // ------------------------------------------------------------------
+    // The record path.  Everything below runs per request / per decode
+    // step, so it is held to the hot-loop contract: handle-indexed
+    // registry writes only, no allocation.
+    // lint: region(no_alloc)
+
+    /// A request refused by validation (empty prompt, PAD in prompt,
+    /// precision above the ladder master).
+    pub fn record_invalid(&mut self) {
+        self.reg.inc(self.c_invalid);
+    }
+
+    /// A request shed by queue backpressure at precision `p`.
+    pub fn record_shed(&mut self, p: Precision) {
+        self.reg.inc(self.c_shed);
+        if let Some(r) = self.rung(p) {
+            self.reg.inc(r.shed);
+        }
+    }
+
+    /// Queue depth after an admission or dispatch, tracking the peak.
+    pub fn record_queue_depth(&mut self, depth: usize) {
+        self.reg.set(self.g_queue_depth, depth as f64);
+        if depth as u64 > self.peak_depth {
+            self.peak_depth = depth as u64;
+            self.reg.set(self.g_queue_peak, depth as f64);
+        }
+    }
+
+    /// A scheduled precision run dispatched with `fill` = admitted rows
+    /// over engine rows.
+    pub fn record_dispatch(&mut self, fill: f64, depth_after: usize) {
+        self.reg.inc(self.c_batches);
+        self.reg.observe(self.h_batch_fill, fill);
+        self.record_queue_depth(depth_after);
+    }
+
+    /// One engine forward call at precision `p` that produced `tokens`
+    /// tokens across the active rows.
+    pub fn record_step(&mut self, p: Precision, step_ms: f64, tokens: u64) {
+        self.reg.inc(self.c_decode_steps);
+        self.reg.add(self.c_tokens, tokens);
+        self.reg.observe(self.h_step_ms, step_ms);
+        if let Some(r) = self.rung(p) {
+            self.reg.observe(r.step_ms, step_ms);
+        }
+    }
+
+    /// A request served to completion at precision `p`.
+    pub fn record_served(&mut self, p: Precision, queue_ms: f64, compute_ms: f64) {
+        self.reg.inc(self.c_served);
+        self.reg.observe(self.h_queue_ms, queue_ms);
+        self.reg.observe(self.h_compute_ms, compute_ms);
+        if let Some(r) = self.rung(p) {
+            self.reg.inc(r.served);
+        }
+    }
+
+    /// One shadow probe scored with token-agreement `agreement`.
+    pub fn record_probe(&mut self, agreement: f64) {
+        self.reg.inc(self.c_probes);
+        self.reg.observe(self.h_probe_agreement, agreement);
+    }
+
+    /// Mirror the ladder's switch statistics into the gauge set.
+    pub fn sync_ladder(&mut self, hits: u64, misses: u64, evictions: u64, resident_bytes: usize) {
+        self.reg.set(self.g_switch_hits, hits as f64);
+        self.reg.set(self.g_switch_misses, misses as f64);
+        self.reg.set(self.g_switch_evictions, evictions as f64);
+        self.reg.set(self.g_ladder_resident, resident_bytes as f64);
+    }
+
+    /// Mirror the policy's decision counters into the gauge set.
+    pub fn sync_policy(&mut self, promotions: u64, demotions: u64, forced_clamps: u64) {
+        self.reg.set(self.g_promotions, promotions as f64);
+        self.reg.set(self.g_demotions, demotions as f64);
+        self.reg.set(self.g_forced_clamps, forced_clamps as f64);
+    }
+
+    // lint: end_region
+    // ------------------------------------------------------------------
+
+    /// Set backend-reported gauges (engine call/load counters), each
+    /// surfaced as `backend.<name>`.  Names are registered lazily on
+    /// first sight — this is a reporting-cadence path, not the record
+    /// path, so the registration allocation is fine.
+    pub fn set_backend_gauges(&mut self, pairs: &[(&'static str, f64)]) {
+        for &(name, value) in pairs {
+            let g = match self.backend_gauges.iter().find(|(n, _)| n == name) {
+                Some(&(_, g)) => g,
+                None => {
+                    let g = self.reg.gauge(&format!("backend.{name}"));
+                    self.backend_gauges.push((String::from(name), g));
+                    g
+                }
+            };
+            self.reg.set(g, value);
+        }
+    }
+
+    /// The underlying registry (read access for callers that want raw
+    /// metric values).
+    pub fn registry(&self) -> &Registry {
+        &self.reg
+    }
+
+    /// Deterministic JSON snapshot of every registered metric.
+    pub fn snapshot(&self) -> crate::json::Value {
+        self.reg.snapshot()
+    }
+
+    /// Per-rung served counts (ascending precision, zero rungs elided)
+    /// — the registry-derived replacement for the old upsert Vec.
+    pub fn per_precision(&self) -> Vec<(Precision, u64)> {
+        self.rungs
+            .iter()
+            .map(|r| (r.precision, self.reg.counter_value(r.served)))
+            .filter(|&(_, n)| n > 0)
+            .collect()
+    }
+
+    /// Per-rung shed (backpressure) counts, same shape.
+    pub fn shed_per_precision(&self) -> Vec<(Precision, u64)> {
+        self.rungs
+            .iter()
+            .map(|r| (r.precision, self.reg.counter_value(r.shed)))
+            .filter(|&(_, n)| n > 0)
+            .collect()
+    }
+
+    /// Re-derive a [`ServeStats`] from the registry.  The ladder switch
+    /// and policy decision fields are left zeroed — the server overlays
+    /// those from the live ladder/router (they own that state; the
+    /// gauges here are sync-cadence mirrors for the JSON snapshot).
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            served: self.reg.counter_value(self.c_served),
+            rejected: self.reg.counter_value(self.c_shed),
+            invalid: self.reg.counter_value(self.c_invalid),
+            batches: self.reg.counter_value(self.c_batches),
+            decode_steps: self.reg.counter_value(self.c_decode_steps),
+            tokens_generated: self.reg.counter_value(self.c_tokens),
+            queue_ms: self.reg.histo_summary(self.h_queue_ms),
+            compute_ms: self.reg.histo_summary(self.h_compute_ms),
+            per_precision: self.per_precision(),
+            shed_per_precision: self.shed_per_precision(),
+            queue_peak_depth: self.peak_depth,
+            switch_hits: 0,
+            switch_misses: 0,
+            switch_evictions: 0,
+            switch_ms: Summary::new(),
+            ladder_resident_bytes: 0,
+            probes_run: self.reg.counter_value(self.c_probes),
+            probe_agreement: self.reg.histo_summary(self.h_probe_agreement),
+            promotions: 0,
+            demotions: 0,
+            forced_clamps: 0,
+            wall_secs: self.wall_secs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ladder() -> Vec<Precision> {
+        vec![Precision::of(8), Precision::of(4), Precision::of(3)]
+    }
+
+    #[test]
+    fn per_rung_accounting_is_ascending_and_elides_zeros() {
+        let mut m = ServeMetrics::for_ladder(&ladder());
+        m.record_served(Precision::of(4), 0.1, 1.0);
+        m.record_served(Precision::of(4), 0.1, 1.0);
+        m.record_served(Precision::of(8), 0.1, 1.0);
+        m.record_shed(Precision::of(3));
+        assert_eq!(
+            m.per_precision(),
+            vec![(Precision::of(4), 2), (Precision::of(8), 1)]
+        );
+        assert_eq!(m.shed_per_precision(), vec![(Precision::of(3), 1)]);
+        let st = m.stats();
+        assert_eq!(st.served, 3);
+        assert_eq!(st.rejected, 1);
+        assert_eq!(st.queue_ms.n, 3);
+    }
+
+    #[test]
+    fn unknown_rung_still_counts_the_totals() {
+        // a precision outside the registered ladder can't happen through
+        // the router, but the metrics layer must degrade to totals-only
+        // rather than panic (request path)
+        let mut m = ServeMetrics::for_ladder(&ladder());
+        m.record_shed(Precision::of(6));
+        m.record_step(Precision::of(6), 0.5, 2);
+        assert_eq!(m.stats().rejected, 1);
+        assert_eq!(m.stats().decode_steps, 1);
+        assert_eq!(m.stats().tokens_generated, 2);
+        assert!(m.shed_per_precision().is_empty());
+    }
+
+    #[test]
+    fn queue_peak_tracks_the_high_water_mark() {
+        let mut m = ServeMetrics::for_ladder(&ladder());
+        m.record_queue_depth(3);
+        m.record_queue_depth(9);
+        m.record_queue_depth(1);
+        assert_eq!(m.stats().queue_peak_depth, 9);
+        let snap = m.snapshot().to_string();
+        assert!(snap.contains("\"serve.queue_depth_peak\":9"), "{snap}");
+        assert!(snap.contains("\"serve.queue_depth\":1"), "{snap}");
+    }
+
+    #[test]
+    fn backend_gauges_register_once_and_update() {
+        let mut m = ServeMetrics::for_ladder(&ladder());
+        m.set_backend_gauges(&[("calls", 1.0), ("loads", 2.0)]);
+        m.set_backend_gauges(&[("calls", 5.0)]);
+        let snap = m.snapshot().to_string();
+        assert!(snap.contains("\"backend.calls\":5"), "{snap}");
+        assert!(snap.contains("\"backend.loads\":2"), "{snap}");
+    }
+
+    #[test]
+    fn snapshot_is_deterministic_and_parseable() {
+        let build = || {
+            let mut m = ServeMetrics::for_ladder(&ladder());
+            m.record_dispatch(0.75, 4);
+            m.record_step(Precision::of(4), 1.25, 4);
+            m.record_served(Precision::of(4), 0.5, 1.25);
+            m.record_probe(0.95);
+            m.sync_ladder(2, 1, 0, 4096);
+            m.sync_policy(0, 1, 2);
+            m.snapshot().to_string()
+        };
+        let a = build();
+        assert_eq!(a, build());
+        assert!(crate::json::parse(&a).is_ok());
+    }
+}

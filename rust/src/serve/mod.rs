@@ -43,15 +43,24 @@
 //!   stats (hit/miss/evict/latency) and policy decision counters
 //!   (promotions/demotions/probe agreement/forced clamps) surface
 //!   through [`ServeStats`].
+//! * [`metrics`] — [`ServeMetrics`]: the serve stack's pre-registered
+//!   handle set over the [`obs`](crate::obs) registry.  Every serving
+//!   event (admission, shed, dispatch, decode step, completion, probe)
+//!   records through typed handles with no allocation; [`ServeStats`]
+//!   is re-derived from the registry, and
+//!   [`Server::metrics_snapshot`] serializes the whole metric plane as
+//!   deterministic JSON for the [`workload`](crate::workload) harness.
 
 pub mod backend;
 pub mod batcher;
+pub mod metrics;
 pub mod router;
 pub mod server;
 pub mod store;
 
 pub use backend::{demo_decoder_params, DecoderBackend, EngineHandle, LogitsBackend, SimBackend};
 pub use batcher::{DynamicBatcher, SchedPolicy};
+pub use metrics::ServeMetrics;
 pub use router::{Router, TaskClass};
 pub use server::{Server, ServeStats};
 pub use store::{LadderStats, LadderTensor, LadderView, PrecisionLadder};

@@ -28,11 +28,22 @@ use crate::sefp::Precision;
 
 use super::backend::{EngineHandle, LogitsBackend};
 use super::batcher::QueuedRequest;
+use super::metrics::ServeMetrics;
 use super::{DynamicBatcher, PrecisionLadder, Request, Response, Router, TaskClass};
 
+/// Aggregated serving statistics.
+///
+/// Since the obs refactor this is a *derived view*: the server records
+/// every event into a [`ServeMetrics`](super::ServeMetrics) registry,
+/// and [`Server::stats`] re-derives this struct from the registry (plus
+/// the live ladder/router state) on demand.  The flat-struct shape is
+/// kept for callers; the registry snapshot
+/// ([`Server::metrics_snapshot`]) carries the same data as
+/// deterministic JSON with bucketed histograms.
 #[derive(Debug, Default, Clone)]
 pub struct ServeStats {
     pub served: u64,
+    /// requests shed by queue backpressure (bounded-queue overflow)
     pub rejected: u64,
     /// requests refused by validation (empty prompt)
     pub invalid: u64,
@@ -44,6 +55,10 @@ pub struct ServeStats {
     pub queue_ms: Summary,
     pub compute_ms: Summary,
     pub per_precision: Vec<(Precision, u64)>,
+    /// per-rung backpressure sheds (ascending precision, zeros elided)
+    pub shed_per_precision: Vec<(Precision, u64)>,
+    /// high-water mark of the batcher queue depth
+    pub queue_peak_depth: u64,
     /// precision switches answered from the ladder cache (or the master)
     pub switch_hits: u64,
     /// precision switches that derived a new view by truncation
@@ -123,7 +138,8 @@ pub struct Server<B: LogitsBackend = EngineHandle> {
     pub ladder: PrecisionLadder,
     pub router: Router,
     pub batcher: DynamicBatcher,
-    stats: ServeStats,
+    /// the obs registry every serving event records into
+    metrics: ServeMetrics,
     /// set when the first batch is dispatched (NOT at construction —
     /// measuring from `Server::new` would deflate throughput whenever
     /// the server idled before traffic arrived)
@@ -142,12 +158,13 @@ impl<B: LogitsBackend> Server<B> {
         router: Router,
         batcher: DynamicBatcher,
     ) -> Self {
+        let metrics = ServeMetrics::for_ladder(router.ladder());
         Server {
             backend,
             ladder,
             router,
             batcher,
-            stats: ServeStats::default(),
+            metrics,
             first_work: None,
             pending_probes: Vec::new(),
             rng: Rng::new(0x5EED),
@@ -177,20 +194,23 @@ impl<B: LogitsBackend> Server<B> {
     /// a full queue sheds by backpressure.
     pub fn submit(&mut self, req: Request) -> bool {
         if req.prompt.is_empty() || req.prompt.contains(&PAD) {
-            self.stats.invalid += 1;
+            self.metrics.record_invalid();
             return false;
         }
         let p = self.router.route(req.class, req.precision);
         if p > self.ladder.top() {
             // reject here so one bad request cannot poison a whole
             // popped batch when view_at errors mid-run
-            self.stats.invalid += 1;
+            self.metrics.record_invalid();
             return false;
         }
         match self.batcher.push(req, p) {
-            Ok(()) => true,
+            Ok(()) => {
+                self.metrics.record_queue_depth(self.batcher.len());
+                true
+            }
             Err(_) => {
-                self.stats.rejected += 1;
+                self.metrics.record_shed(p);
                 false
             }
         }
@@ -213,7 +233,7 @@ impl<B: LogitsBackend> Server<B> {
         // throughput (the same bug class as measuring from `new`)
         if dispatched {
             if let Some(t) = self.first_work {
-                self.stats.wall_secs = t.elapsed().as_secs_f64();
+                self.metrics.wall_secs = t.elapsed().as_secs_f64();
             }
             self.sync_policy_stats();
         }
@@ -235,7 +255,7 @@ impl<B: LogitsBackend> Server<B> {
         self.backend.load_view(&view)?;
         drop(view);
         self.sync_ladder_stats();
-        self.stats.batches += 1;
+        self.metrics.record_dispatch(batch.len() as f64 / bsz as f64, self.batcher.len());
 
         let mut rows: Vec<Option<ActiveRow>> = Vec::with_capacity(bsz);
         for q in batch {
@@ -260,7 +280,7 @@ impl<B: LogitsBackend> Server<B> {
             let t0 = Instant::now();
             let mut logits = self.backend.logits_step(&tokens)?;
             let step_ms = t0.elapsed().as_secs_f64() * 1e3;
-            self.stats.decode_steps += 1;
+            let mut step_tokens = 0u64;
 
             // sample one token per active row; finalize finished rows
             for ri in 0..bsz {
@@ -283,7 +303,7 @@ impl<B: LogitsBackend> Server<B> {
                     r.context.push(next);
                     r.generated.push(next);
                     r.compute_ms += step_ms;
-                    self.stats.tokens_generated += 1;
+                    step_tokens += 1;
                     finished = r.generated.len() >= r.max_new_tokens || next == EOS;
                 }
                 if finished {
@@ -294,6 +314,8 @@ impl<B: LogitsBackend> Server<B> {
                     }
                 }
             }
+
+            self.metrics.record_step(p, step_ms, step_tokens);
 
             // continuous batching: refill freed rows FIFO from the same
             // precision queue — unless another precision is overdue, then
@@ -325,8 +347,7 @@ impl<B: LogitsBackend> Server<B> {
         }
         for task in std::mem::take(&mut self.pending_probes) {
             let result = shadow_probe(&mut self.backend, &mut self.ladder, &task)?;
-            self.stats.probes_run += 1;
-            self.stats.probe_agreement.push(result.agreement);
+            self.metrics.record_probe(result.agreement);
             self.router.policy_mut().observe_probe(task.class, task.precision, &result);
         }
         // probe replays go through the ladder cache like any switch
@@ -334,33 +355,22 @@ impl<B: LogitsBackend> Server<B> {
         Ok(())
     }
 
-    /// Mirror the policy's decision counters into the serving stats.
+    /// Mirror the policy's decision counters into the registry gauges
+    /// (the derived [`ServeStats`] reads these live from the router).
     fn sync_policy_stats(&mut self) {
         let snap = self.router.policy().snapshot();
-        self.stats.promotions = snap.promotions;
-        self.stats.demotions = snap.demotions;
-        self.stats.forced_clamps = self.router.forced_clamps();
+        self.metrics.sync_policy(snap.promotions, snap.demotions, self.router.forced_clamps());
+        self.metrics.set_backend_gauges(&self.backend.obs_gauges());
     }
 
-    /// Mirror the ladder's switch statistics into the serving stats.
+    /// Mirror the ladder's switch statistics into the registry gauges.
     fn sync_ladder_stats(&mut self) {
         let ls = &self.ladder.stats;
-        self.stats.switch_hits = ls.hits;
-        self.stats.switch_misses = ls.misses;
-        self.stats.switch_evictions = ls.evictions;
-        self.stats.switch_ms = ls.switch_ms.clone();
-        self.stats.ladder_resident_bytes = self.ladder.resident_bytes();
+        self.metrics.sync_ladder(ls.hits, ls.misses, ls.evictions, self.ladder.resident_bytes());
     }
 
     fn finalize(&mut self, p: Precision, mut row: ActiveRow, out: &mut Vec<Response>) {
-        self.stats.served += 1;
-        self.stats.queue_ms.push(row.queue_ms.max(0.0));
-        self.stats.compute_ms.push(row.compute_ms);
-        if let Some(e) = self.stats.per_precision.iter_mut().find(|e| e.0 == p) {
-            e.1 += 1;
-        } else {
-            self.stats.per_precision.push((p, 1));
-        }
+        self.metrics.record_served(p, row.queue_ms.max(0.0), row.compute_ms);
         // close the control loop: every completion is an observation,
         // and a sampled fraction below the master is queued for shadow
         // probing (run after this precision run winds down)
@@ -393,7 +403,35 @@ impl<B: LogitsBackend> Server<B> {
         });
     }
 
-    pub fn stats(&self) -> &ServeStats {
-        &self.stats
+    /// Serving statistics, re-derived on demand: the counter/histogram
+    /// fields come from the obs registry, the ladder-switch and policy
+    /// decision fields straight from the live ladder/router (which own
+    /// that state — the registry carries sync-cadence gauge mirrors).
+    pub fn stats(&self) -> ServeStats {
+        let mut st = self.metrics.stats();
+        let ls = &self.ladder.stats;
+        st.switch_hits = ls.hits;
+        st.switch_misses = ls.misses;
+        st.switch_evictions = ls.evictions;
+        st.switch_ms = ls.switch_ms.clone();
+        st.ladder_resident_bytes = self.ladder.resident_bytes();
+        let snap = self.router.policy().snapshot();
+        st.promotions = snap.promotions;
+        st.demotions = snap.demotions;
+        st.forced_clamps = self.router.forced_clamps();
+        st
+    }
+
+    /// The obs metric set the server records into.
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    /// Deterministic JSON snapshot of the full metric registry, with
+    /// the ladder/policy/backend gauges freshly synced first.
+    pub fn metrics_snapshot(&mut self) -> crate::json::Value {
+        self.sync_ladder_stats();
+        self.sync_policy_stats();
+        self.metrics.snapshot()
     }
 }

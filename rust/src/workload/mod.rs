@@ -1,0 +1,82 @@
+//! Trace-driven load harness: seeded scenarios replayed through the real
+//! serving stack, with per-scenario invariant assertions and a
+//! machine-readable perf trajectory.
+//!
+//! The paper's deployment claim (fig. 1) is an *operational* one — one
+//! stored model serving many precisions under real traffic — so the repo
+//! needs a way to exercise the serve/policy planes under traffic shapes
+//! that actually stress them, not just unit fixtures.  This module is
+//! that harness:
+//!
+//! * [`scenario`] — the named scenario catalog: steady heterogeneous
+//!   task-class mix, a diurnal arrival ramp, burst storms that overrun
+//!   the admission queue, and an adversarial client pinning off-ladder
+//!   precisions and malformed prompts.  Each scenario carries its own
+//!   SLO/quality bounds ([`SloChecks`]).
+//! * [`trace`]   — deterministic trace generation: a scenario + seed
+//!   expands to the exact same request sequence on every run (seeded
+//!   [`Rng`](crate::data::Rng), no wall clock), which is what makes the
+//!   accounting invariants exactly assertable.
+//! * [`replay`]  — the driver: builds a real [`Server`](crate::serve::Server)
+//!   over [`DecoderBackend`](crate::serve::DecoderBackend) (actual SEFP
+//!   logits, not a hash stub), submits the trace tick by tick, and
+//!   cross-checks the obs registry against expectations computed from
+//!   the trace alone — served/shed/invalid conservation, forced-clamp
+//!   accounting, token totals, queue bounds, p95 SLOs, starvation and
+//!   probe-agreement floors.
+//!
+//! Every run emits one record per scenario into
+//! `BENCH_serve_scenarios.json` (the shared `otaro.bench.v1` envelope
+//! from [`benchutil`](crate::benchutil)).  Records split into a `det`
+//! section that is byte-identical run to run and a `wall` section for
+//! timing-dependent fields, so trend tooling can diff the deterministic
+//! part exactly.
+//!
+//! CLI: `otaro loadgen [--scenario <name>] [--out FILE]`.
+
+pub mod replay;
+pub mod scenario;
+pub mod trace;
+
+pub use replay::{run_scenario, ReplayReport};
+pub use scenario::{catalog, Kind, Scenario, SloChecks};
+pub use trace::{generate, TraceEvent};
+
+use std::path::PathBuf;
+
+use crate::json::Value;
+
+/// `otaro loadgen` entry point: run one named scenario (or the whole
+/// catalog), assert every per-scenario invariant, and write the bench
+/// records (default `BENCH_serve_scenarios.json`).
+pub fn run_cli(scenario: Option<String>, out: Option<PathBuf>) -> anyhow::Result<()> {
+    let all = catalog();
+    let selected: Vec<Scenario> = match &scenario {
+        Some(name) => {
+            let Some(sc) = all.iter().find(|s| s.name == name.as_str()).cloned() else {
+                let known: Vec<&str> = all.iter().map(|s| s.name).collect();
+                anyhow::bail!("unknown scenario {name:?}; known: {}", known.join(", "));
+            };
+            vec![sc]
+        }
+        None => all,
+    };
+    let mut records = Vec::new();
+    for sc in &selected {
+        println!("scenario {:<24} {}", sc.name, sc.description);
+        let rep = run_scenario(sc)?;
+        println!(
+            "  served {} / shed {} / invalid {} / clamps {} — {} invariants held",
+            rep.served,
+            rep.shed,
+            rep.invalid,
+            rep.clamps,
+            rep.checks.len()
+        );
+        records.push(rep.record);
+    }
+    let path = out.unwrap_or_else(|| PathBuf::from("BENCH_serve_scenarios.json"));
+    crate::benchutil::write_bench_file(&path, "serve_scenarios", Value::Arr(records))?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,171 @@
+//! The scenario catalog: named traffic shapes with per-scenario
+//! SLO/quality bounds.
+//!
+//! Bounds are deliberately generous — they are *sanity rails* a healthy
+//! serve stack clears with an order of magnitude of headroom on any
+//! machine (including noisy shared CI runners), not tuned perf targets.
+//! The exact-accounting invariants in [`replay`](super::replay) carry
+//! the precision; these catch gross regressions (a starved queue, a
+//! probe plane scoring garbage, an SLO blown by 100x).
+
+use crate::benchutil::quick_mode;
+
+/// Arrival-pattern family a scenario draws from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// constant-rate heterogeneous task-class mix
+    SteadyMix,
+    /// triangle ramp up to a midday peak and back down
+    DiurnalRamp,
+    /// quiet baseline punctured by bursts that overrun the queue cap
+    BurstStorm,
+    /// precision-forcing clients (off-ladder widths) + malformed prompts
+    Adversarial,
+}
+
+impl Kind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kind::SteadyMix => "steady_mix",
+            Kind::DiurnalRamp => "diurnal_ramp",
+            Kind::BurstStorm => "burst_storm",
+            Kind::Adversarial => "adversarial",
+        }
+    }
+}
+
+/// Per-scenario invariant bounds, asserted by the replay driver.
+#[derive(Debug, Clone)]
+pub struct SloChecks {
+    /// p95 queue wait must stay under this (milliseconds)
+    pub queue_p95_ms: f64,
+    /// p95 per-request compute must stay under this (milliseconds)
+    pub compute_p95_ms: f64,
+    /// no request may wait longer than this — the starvation rail
+    pub starvation_ms: f64,
+    /// when shadow probes ran, mean token-agreement must clear this
+    pub probe_agreement_floor: f64,
+    /// the scenario must actually serve at least this many requests
+    pub min_served: u64,
+    /// the trace is built to overrun the queue: shed must be non-zero
+    pub expect_shed: bool,
+    /// the trace forces off-ladder widths: clamps must be non-zero
+    pub expect_clamps: bool,
+}
+
+impl Default for SloChecks {
+    fn default() -> Self {
+        SloChecks {
+            queue_p95_ms: 2_000.0,
+            compute_p95_ms: 2_000.0,
+            starvation_ms: 10_000.0,
+            probe_agreement_floor: 0.05,
+            min_served: 1,
+            expect_shed: false,
+            expect_clamps: false,
+        }
+    }
+}
+
+/// One named load scenario: a traffic shape, a seed, the serve knobs it
+/// runs under, and the invariants it must uphold.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub kind: Kind,
+    /// arrival ticks; each tick submits a batch of requests then drains
+    pub ticks: usize,
+    /// seeds the trace generator AND the server's sampling rng
+    pub seed: u64,
+    pub max_batch: usize,
+    pub queue_cap: usize,
+    /// route through `AdaptivePolicy` (telemetry + shadow probes)
+    pub adaptive: bool,
+    pub slo: SloChecks,
+}
+
+/// The named scenario catalog the CLI and the tier-1 smoke test run.
+/// Under `OTARO_BENCH_QUICK` tick counts collapse so the whole catalog
+/// replays in seconds; every invariant still executes.
+pub fn catalog() -> Vec<Scenario> {
+    let quick = quick_mode();
+    let t = |full: usize, q: usize| if quick { q } else { full };
+    vec![
+        Scenario {
+            name: "steady-mix",
+            description: "constant heterogeneous class mix, static routing",
+            kind: Kind::SteadyMix,
+            ticks: t(24, 8),
+            seed: 101,
+            max_batch: 8,
+            queue_cap: 64,
+            adaptive: false,
+            slo: SloChecks { min_served: 40, ..SloChecks::default() },
+        },
+        Scenario {
+            name: "diurnal-ramp",
+            description: "triangle arrival ramp to a midday peak, adaptive routing",
+            kind: Kind::DiurnalRamp,
+            ticks: t(30, 10),
+            seed: 202,
+            max_batch: 8,
+            queue_cap: 48,
+            adaptive: true,
+            slo: SloChecks { min_served: 30, ..SloChecks::default() },
+        },
+        Scenario {
+            name: "burst-storm",
+            description: "quiet baseline with queue-overrunning bursts (backpressure)",
+            kind: Kind::BurstStorm,
+            ticks: t(20, 8),
+            seed: 303,
+            max_batch: 8,
+            queue_cap: 16,
+            adaptive: false,
+            slo: SloChecks { min_served: 20, expect_shed: true, ..SloChecks::default() },
+        },
+        Scenario {
+            name: "adversarial-precision",
+            description: "clients forcing off-ladder widths + malformed prompts",
+            kind: Kind::Adversarial,
+            ticks: t(16, 6),
+            seed: 404,
+            max_batch: 8,
+            queue_cap: 64,
+            adaptive: true,
+            slo: SloChecks { min_served: 30, expect_clamps: true, ..SloChecks::default() },
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_names_are_unique_and_cover_every_kind() {
+        let all = catalog();
+        assert_eq!(all.len(), 4);
+        for kind in [Kind::SteadyMix, Kind::DiurnalRamp, Kind::BurstStorm, Kind::Adversarial] {
+            assert_eq!(all.iter().filter(|s| s.kind == kind).count(), 1, "{kind:?}");
+        }
+        for (i, a) in all.iter().enumerate() {
+            for b in &all[i + 1..] {
+                assert_ne!(a.name, b.name);
+                assert_ne!(a.seed, b.seed, "seeds must differ so traces do");
+            }
+        }
+    }
+
+    #[test]
+    fn stress_scenarios_declare_their_expectations() {
+        let all = catalog();
+        let storm = all.iter().find(|s| s.kind == Kind::BurstStorm).unwrap();
+        assert!(storm.slo.expect_shed, "the storm exists to exercise backpressure");
+        let adv = all.iter().find(|s| s.kind == Kind::Adversarial).unwrap();
+        assert!(adv.slo.expect_clamps, "the adversary exists to exercise clamping");
+        // queue cap small enough that a burst actually overruns it
+        assert!(storm.queue_cap < 64);
+    }
+}

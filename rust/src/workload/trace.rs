@@ -1,0 +1,229 @@
+//! Deterministic trace expansion: a [`Scenario`] + seed becomes the
+//! exact same per-tick request sequence on every run.
+//!
+//! Nothing here reads a clock or the environment — arrivals come from
+//! integer arithmetic over the tick index and a seeded
+//! [`Rng`](crate::data::Rng) — so the replay driver can compute
+//! served/shed/invalid/clamp expectations from the trace alone and
+//! assert them *exactly* against the obs registry.
+//!
+//! Token hygiene: prompt ids stay in `[1, 200]`, strictly below the
+//! decoder vocab (256) and far from the reserved EOS/PAD sentinels, so
+//! EOS is unreachable and every admitted request decodes its full
+//! `max_new_tokens` budget — which is what makes token totals exactly
+//! predictable.
+
+use crate::data::tokenizer::PAD;
+use crate::data::Rng;
+use crate::sefp::Precision;
+use crate::serve::{Request, TaskClass};
+
+use super::scenario::{Kind, Scenario};
+
+/// Rungs of the default serve ladder a well-behaved client may pin.
+const ON_LADDER: [u8; 4] = [8, 6, 4, 3];
+/// Widths outside the default ladder (below the bottom rung or above the
+/// master) an adversarial client pins — the router must snap AND count
+/// every one.
+const OFF_LADDER: [u8; 4] = [1, 2, 9, 12];
+
+/// One trace entry: the request plus what the generator KNOWS the serve
+/// stack must do with it (ground truth for the replay assertions).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub req: Request,
+    /// malformed on purpose (empty prompt / reserved PAD id): `submit`
+    /// must refuse it as invalid, before routing
+    pub expect_invalid: bool,
+    /// forces an off-ladder width: the router must snap it into the
+    /// ladder and count the clamp
+    pub expect_clamp: bool,
+}
+
+/// Expand a scenario into its per-tick arrival batches.
+pub fn generate(sc: &Scenario) -> Vec<Vec<TraceEvent>> {
+    let mut rng = Rng::new(sc.seed);
+    let mut next_id = 0u64;
+    let mut trace = Vec::with_capacity(sc.ticks);
+    for tick in 0..sc.ticks {
+        let n = arrivals_at(sc, tick);
+        let mut events = Vec::with_capacity(n);
+        for slot in 0..n {
+            let id = next_id;
+            next_id += 1;
+            events.push(event(sc, &mut rng, id, slot));
+        }
+        trace.push(events);
+    }
+    trace
+}
+
+/// Arrivals for one tick — pure integer arithmetic over the tick index.
+fn arrivals_at(sc: &Scenario, tick: usize) -> usize {
+    match sc.kind {
+        Kind::SteadyMix => 6,
+        Kind::DiurnalRamp => {
+            // triangle ramp: low overnight, peak at mid-trace, back down;
+            // the peak stays at or under the queue cap so the ramp tests
+            // scheduling pressure, not backpressure
+            let mid = (sc.ticks / 2).max(1);
+            let lo = 2usize;
+            let hi = sc.queue_cap.min(24).max(lo);
+            lo + (hi - lo) * mid.saturating_sub(tick.abs_diff(mid)) / mid
+        }
+        Kind::BurstStorm => {
+            // every 4th tick a storm overruns the admission queue by
+            // construction; the quiet baseline keeps latency stats sane
+            if tick % 4 == 0 {
+                sc.queue_cap + sc.queue_cap / 2 + 8
+            } else {
+                2
+            }
+        }
+        Kind::Adversarial => 8,
+    }
+}
+
+fn event(sc: &Scenario, rng: &mut Rng, id: u64, slot: usize) -> TraceEvent {
+    if sc.kind == Kind::Adversarial {
+        return adversarial_event(rng, id, slot);
+    }
+    let mut req = Request::new(id, mixed_class(rng), prompt(rng))
+        .with_max_new_tokens(2 + rng.below(3));
+    // a slice of steady traffic pins explicit (legal) rungs, so the
+    // forced-precision path sees load without tripping the clamp counter
+    if sc.kind == Kind::SteadyMix && id % 7 == 0 {
+        req = req.with_precision(Precision::of(ON_LADDER[rng.below(ON_LADDER.len())]));
+    }
+    TraceEvent { req, expect_invalid: false, expect_clamp: false }
+}
+
+/// The adversarial tick layout, by slot: two off-ladder precision
+/// forcers, one legal pin, one malformed request, and normal traffic in
+/// the remaining slots.
+fn adversarial_event(rng: &mut Rng, id: u64, slot: usize) -> TraceEvent {
+    match slot {
+        0 | 1 => {
+            let w = OFF_LADDER[(id as usize) % OFF_LADDER.len()];
+            let req = Request::new(id, mixed_class(rng), prompt(rng))
+                .with_precision(Precision::of(w))
+                .with_max_new_tokens(2 + rng.below(3));
+            TraceEvent { req, expect_invalid: false, expect_clamp: true }
+        }
+        2 => {
+            let req = Request::new(id, mixed_class(rng), prompt(rng))
+                .with_precision(Precision::of(ON_LADDER[rng.below(ON_LADDER.len())]))
+                .with_max_new_tokens(2 + rng.below(3));
+            TraceEvent { req, expect_invalid: false, expect_clamp: false }
+        }
+        4 => {
+            // malformed: alternate the two rejection reasons `submit`
+            // validates (empty prompt / reserved PAD id in the prompt)
+            let bad = if id % 2 == 0 { Vec::new() } else { vec![5, PAD, 7] };
+            let req = Request::new(id, TaskClass::Other, bad);
+            TraceEvent { req, expect_invalid: true, expect_clamp: false }
+        }
+        _ => {
+            let req = Request::new(id, mixed_class(rng), prompt(rng))
+                .with_max_new_tokens(2 + rng.below(3));
+            TraceEvent { req, expect_invalid: false, expect_clamp: false }
+        }
+    }
+}
+
+/// The heterogeneous task-class mix every scenario draws from:
+/// understanding-heavy with a generation tail (the paper's motivating
+/// split — latency-sensitive vs quality-sensitive traffic).
+fn mixed_class(rng: &mut Rng) -> TaskClass {
+    match rng.below(10) {
+        0..=3 => TaskClass::Understanding,
+        4..=6 => TaskClass::Other,
+        _ => TaskClass::Generation,
+    }
+}
+
+/// 3–8 tokens, ids in `[1, 200]` (inside the decoder vocab, never a
+/// reserved sentinel).
+fn prompt(rng: &mut Rng) -> Vec<i32> {
+    (0..3 + rng.below(6)).map(|_| (1 + rng.below(200)) as i32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::catalog;
+
+    /// Flatten a trace to a comparable shape (Request has no PartialEq).
+    fn fingerprint(trace: &[Vec<TraceEvent>]) -> Vec<(u64, Vec<i32>, usize, Option<u8>, bool, bool)> {
+        trace
+            .iter()
+            .flatten()
+            .map(|ev| {
+                (
+                    ev.req.id,
+                    ev.req.prompt.clone(),
+                    ev.req.max_new_tokens,
+                    ev.req.precision.map(|p| p.m()),
+                    ev.expect_invalid,
+                    ev.expect_clamp,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn same_seed_same_trace_different_seed_differs() {
+        for sc in catalog() {
+            let a = fingerprint(&generate(&sc));
+            let b = fingerprint(&generate(&sc));
+            assert_eq!(a, b, "{}: trace must be a pure function of the scenario", sc.name);
+            let mut other = sc.clone();
+            other.seed ^= 0xDEAD;
+            assert_ne!(a, fingerprint(&generate(&other)), "{}: seed must matter", sc.name);
+        }
+    }
+
+    #[test]
+    fn ids_are_sequential_across_the_whole_trace() {
+        for sc in catalog() {
+            for (i, ev) in generate(&sc).iter().flatten().enumerate() {
+                assert_eq!(ev.req.id, i as u64, "{}", sc.name);
+            }
+        }
+    }
+
+    #[test]
+    fn prompts_stay_inside_the_decoder_vocab() {
+        for sc in catalog() {
+            for ev in generate(&sc).iter().flatten() {
+                if ev.expect_invalid {
+                    continue;
+                }
+                assert!(!ev.req.prompt.is_empty());
+                assert!(ev.req.prompt.iter().all(|&t| (1..=200).contains(&t)), "{}", sc.name);
+                assert!((2..=4).contains(&ev.req.max_new_tokens));
+            }
+        }
+    }
+
+    #[test]
+    fn storm_ticks_overrun_the_queue_and_adversary_misbehaves() {
+        let all = catalog();
+        let storm = all.iter().find(|s| s.kind == Kind::BurstStorm).unwrap();
+        let trace = generate(storm);
+        let overruns = trace.iter().filter(|t| t.len() > storm.queue_cap).count();
+        assert!(overruns >= 2, "storm must overrun the cap repeatedly");
+
+        let adv = all.iter().find(|s| s.kind == Kind::Adversarial).unwrap();
+        let trace = generate(adv);
+        let clamps: usize = trace.iter().flatten().filter(|e| e.expect_clamp).count();
+        let invalid: usize = trace.iter().flatten().filter(|e| e.expect_invalid).count();
+        assert_eq!(clamps, 2 * adv.ticks);
+        assert_eq!(invalid, adv.ticks);
+        // clamp targets really are off the default ladder
+        for ev in trace.iter().flatten().filter(|e| e.expect_clamp) {
+            let w = ev.req.precision.unwrap().m();
+            assert!(!(3..=8).contains(&w), "width {w} is a legal rung");
+        }
+    }
+}

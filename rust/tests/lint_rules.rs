@@ -124,6 +124,29 @@ fn decision_path_rejects_hash_collections() {
 }
 
 #[test]
+fn obs_and_workload_are_request_path_scoped() {
+    // the obs registry records on the request path and the workload
+    // harness drives real traffic: both inherit the panic ban...
+    assert_eq!(rules_hit("obs/registry.rs", "x.unwrap();\n"), ["request-path-no-panic"]);
+    assert_eq!(rules_hit("workload/replay.rs", "x.expect(\"trace\");\n"), ["request-path-no-panic"]);
+    assert_eq!(rules_hit("workload/trace.rs", "panic!(\"bad slot\");\n"), ["request-path-no-panic"]);
+    // ...and the hash-collection determinism ban (snapshot key order /
+    // byte-identical det sections are the contract)
+    assert_eq!(
+        rules_hit("obs/registry.rs", "use std::collections::HashMap;\n"),
+        ["decision-path-determinism"]
+    );
+    assert_eq!(
+        rules_hit("workload/scenario.rs", "let s: HashSet<u64> = HashSet::new();\n"),
+        ["decision-path-determinism"]
+    );
+    // in-module tests stay exempt, and BTree collections stay legal
+    let in_test = "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+    assert!(rules_hit("obs/registry.rs", in_test).is_empty());
+    assert!(rules_hit("workload/replay.rs", "use std::collections::BTreeMap;\n").is_empty());
+}
+
+#[test]
 fn reader_arithmetic_must_be_checked() {
     let src = "let end = data_off + data_len;\n";
     assert_eq!(rules_hit("artifact/reader.rs", src), ["untrusted-checked-arith"]);

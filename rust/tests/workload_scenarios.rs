@@ -1,0 +1,110 @@
+//! Tier-1 smoke for the trace-driven load harness (`rust/src/workload/`):
+//! every catalog scenario replays clean through the real serving stack,
+//! the `det` half of each bench record is byte-identical run to run, and
+//! the `loadgen` CLI path writes a parseable `otaro.bench.v1` file with
+//! one record per scenario.
+
+use otaro::json;
+use otaro::workload::{catalog, generate, run_cli, run_scenario, Kind};
+
+#[test]
+fn every_scenario_upholds_its_invariants() {
+    let all = catalog();
+    assert_eq!(all.len(), 4, "the catalog is the four named traffic shapes");
+    for sc in &all {
+        let rep = run_scenario(sc).unwrap_or_else(|e| panic!("{}: {e:#}", sc.name));
+        // run_scenario bails on any violated invariant, so reaching here
+        // means all of them held; pin the count so silently dropping a
+        // check is itself a failure
+        assert_eq!(rep.checks.len(), 12, "{}: {:?}", sc.name, rep.checks);
+        assert!(rep.served >= sc.slo.min_served, "{}", sc.name);
+        match sc.kind {
+            Kind::BurstStorm => assert!(rep.shed > 0, "storm must shed"),
+            Kind::Adversarial => {
+                assert!(rep.clamps > 0, "adversary must be clamped");
+                assert!(rep.invalid > 0, "malformed requests must be refused");
+            }
+            _ => assert_eq!(rep.shed, 0, "{}: no shed under nominal load", sc.name),
+        }
+    }
+}
+
+#[test]
+fn det_sections_are_byte_identical_across_runs() {
+    for sc in catalog() {
+        let a = run_scenario(&sc).unwrap();
+        let b = run_scenario(&sc).unwrap();
+        let det_a = a.record.get("det").unwrap().to_string();
+        let det_b = b.record.get("det").unwrap().to_string();
+        assert_eq!(det_a, det_b, "{}: det section must be reproducible", sc.name);
+        assert_eq!(a.checks, b.checks, "{}", sc.name);
+        // and the wall section, while timing-dependent, stays well-formed
+        let wall = a.record.get("wall").unwrap();
+        assert!(wall.get("metrics").unwrap().get("schema").is_some());
+        assert!(json::parse(&a.record.to_string()).is_ok(), "{}: record must serialize", sc.name);
+    }
+}
+
+#[test]
+fn static_scenarios_pin_per_precision_in_det() {
+    for sc in catalog() {
+        let rep = run_scenario(&sc).unwrap();
+        let det_pp = rep.record.get("det").unwrap().get("per_precision");
+        let wall_pp = rep.record.get("wall").unwrap().get("per_precision");
+        if sc.adaptive {
+            assert!(det_pp.is_none(), "{}: adaptive routing is wall-clock-driven", sc.name);
+            assert!(wall_pp.is_some(), "{}", sc.name);
+        } else {
+            assert!(det_pp.is_some(), "{}: static routing is deterministic", sc.name);
+            assert!(wall_pp.is_none(), "{}", sc.name);
+        }
+    }
+}
+
+#[test]
+fn traces_are_pure_functions_of_the_scenario() {
+    // the property the whole det contract rests on, checked at the
+    // integration level: expanding twice yields identical shapes
+    for sc in catalog() {
+        let a = generate(&sc);
+        let b = generate(&sc);
+        assert_eq!(a.len(), sc.ticks);
+        let flat = |t: &Vec<Vec<otaro::workload::TraceEvent>>| {
+            t.iter()
+                .flatten()
+                .map(|e| (e.req.id, e.req.prompt.clone(), e.req.max_new_tokens))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(flat(&a), flat(&b), "{}", sc.name);
+    }
+}
+
+#[test]
+fn loadgen_cli_writes_a_parseable_bench_file() {
+    let path = std::env::temp_dir().join(format!("otaro_scenarios_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    // unknown scenario is a named error, not a silent empty run
+    let err = run_cli(Some("no-such-scenario".into()), Some(path.clone())).unwrap_err();
+    assert!(format!("{err:#}").contains("steady-mix"), "error must list known scenarios");
+    assert!(!path.exists());
+
+    run_cli(None, Some(path.clone())).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let v = json::parse(&text).unwrap();
+    assert_eq!(v.req_str("schema").unwrap(), "otaro.bench.v1");
+    assert_eq!(v.req_str("bench").unwrap(), "serve_scenarios");
+    let records = v.get("records").unwrap().as_arr().unwrap();
+    assert_eq!(records.len(), 4, "one record per catalog scenario");
+    for rec in records {
+        assert!(rec.get("det").is_some() && rec.get("wall").is_some());
+        assert!(!rec.get("checks").unwrap().as_arr().unwrap().is_empty());
+    }
+    // single-scenario selection emits exactly that record
+    run_cli(Some("burst-storm".into()), Some(path.clone())).unwrap();
+    let v = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let records = v.get("records").unwrap().as_arr().unwrap();
+    assert_eq!(records.len(), 1);
+    assert_eq!(records[0].req_str("name").unwrap(), "burst-storm");
+    let _ = std::fs::remove_file(&path);
+}
