@@ -46,7 +46,7 @@ fn main() {
     for i in 0..256 {
         let class = CLASSES[i % 3];
         let at = adaptive.decide(class);
-        adaptive.observe(&obs(class, at, 1.0 + (i % 7) as f64));
+        let _ = adaptive.observe(&obs(class, at, 1.0 + (i % 7) as f64));
     }
     let mut i = 0u64;
     let adaptive_res = b
@@ -54,7 +54,7 @@ fn main() {
             i += 1;
             let class = CLASSES[(i % 3) as usize];
             let at = adaptive.decide(class);
-            adaptive.observe(&obs(class, at, 1.0 + (i % 7) as f64));
+            let _ = adaptive.observe(&obs(class, at, 1.0 + (i % 7) as f64));
             at
         })
         .median_ns;

@@ -1,0 +1,307 @@
+//! `otaro bench-diff`: the cross-run perf trend gate.
+//!
+//! Compares two `otaro.bench.v1` files (baseline first, candidate
+//! second), matching records by `name`:
+//!
+//! * `det` sections must be **byte-identical** — they are designed to be
+//!   reproducible run to run, so any difference is a behavior change,
+//!   not noise.
+//! * the wall-side headline metric (`median_ns` for kernel benches,
+//!   `wall.wall_secs` for scenario records) is compared within a
+//!   tolerance: with `--fail-on-regression PCT`, a candidate slower than
+//!   `baseline * (1 + PCT/100)` fails.
+//!
+//! Without `--fail-on-regression` the command is a pure report (exit 0):
+//! safe for local inspection of intentional changes.  With it, det
+//! mismatches and over-tolerance slowdowns are fatal — that mode is what
+//! CI runs against the previous run's artifact.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::json::Value;
+
+/// One record whose headline wall metric slowed past the tolerance.
+#[derive(Debug, Clone)]
+pub struct Regression {
+    pub name: String,
+    /// which metric was compared (`median_ns` or `wall_secs`)
+    pub metric: &'static str,
+    pub baseline: f64,
+    pub candidate: f64,
+    /// signed percent change, `+` = slower
+    pub delta_pct: f64,
+}
+
+/// Everything a comparison found; [`gate`](DiffReport::gate) turns it
+/// into pass/fail under a tolerance.
+#[derive(Debug, Default)]
+pub struct DiffReport {
+    /// bench name shared by both files
+    pub bench: String,
+    /// records present in both files and compared
+    pub compared: usize,
+    /// record names whose `det` sections differ byte-for-byte
+    pub det_mismatches: Vec<String>,
+    /// every wall-metric slowdown, regardless of size (the tolerance is
+    /// applied at gate time, not collection time)
+    pub slowdowns: Vec<Regression>,
+    /// records in the baseline only — a bench silently disappeared
+    pub missing: Vec<String>,
+    /// records in the candidate only — new coverage, never an error
+    pub added: Vec<String>,
+}
+
+impl DiffReport {
+    /// Slowdowns beyond `pct` percent.
+    pub fn regressions_over(&self, pct: f64) -> Vec<&Regression> {
+        self.slowdowns.iter().filter(|r| r.delta_pct > pct).collect()
+    }
+
+    /// Gate verdict: `Err` when a det section changed, a record
+    /// vanished, or a slowdown exceeds `pct`.
+    pub fn gate(&self, pct: f64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.det_mismatches.is_empty(),
+            "deterministic sections changed for: {}",
+            self.det_mismatches.join(", ")
+        );
+        anyhow::ensure!(
+            self.missing.is_empty(),
+            "baseline records vanished: {}",
+            self.missing.join(", ")
+        );
+        let over = self.regressions_over(pct);
+        anyhow::ensure!(
+            over.is_empty(),
+            "{} record(s) regressed past {pct}%: {}",
+            over.len(),
+            over.iter()
+                .map(|r| format!("{} ({} {:+.1}%)", r.name, r.metric, r.delta_pct))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+        Ok(())
+    }
+}
+
+/// The headline wall metric of one record: kernel benches carry a flat
+/// `median_ns`; scenario records carry `wall.wall_secs`.
+fn wall_metric(rec: &Value) -> Option<(&'static str, f64)> {
+    if let Some(v) = rec.get("median_ns").and_then(|v| v.as_f64()) {
+        return Some(("median_ns", v));
+    }
+    rec.get("wall")
+        .and_then(|w| w.get("wall_secs"))
+        .and_then(|v| v.as_f64())
+        .map(|v| ("wall_secs", v))
+}
+
+fn records_by_name(file: &Value) -> anyhow::Result<BTreeMap<String, &Value>> {
+    let records = file
+        .get("records")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("bench file has no records array"))?;
+    let mut by_name = BTreeMap::new();
+    for rec in records {
+        let name = rec.req_str("name")?;
+        anyhow::ensure!(
+            by_name.insert(name.clone(), rec).is_none(),
+            "duplicate record name {name:?}"
+        );
+    }
+    Ok(by_name)
+}
+
+fn validate_envelope(file: &Value, label: &str) -> anyhow::Result<String> {
+    let schema = file.req_str("schema")?;
+    anyhow::ensure!(
+        schema == "otaro.bench.v1",
+        "{label}: unsupported schema {schema:?} (want otaro.bench.v1)"
+    );
+    file.req_str("bench")
+}
+
+/// Compare two parsed `otaro.bench.v1` values (baseline, candidate).
+pub fn diff(baseline: &Value, candidate: &Value) -> anyhow::Result<DiffReport> {
+    let bench_a = validate_envelope(baseline, "baseline")?;
+    let bench_b = validate_envelope(candidate, "candidate")?;
+    anyhow::ensure!(
+        bench_a == bench_b,
+        "bench mismatch: baseline is {bench_a:?}, candidate is {bench_b:?}"
+    );
+    let old = records_by_name(baseline)?;
+    let new = records_by_name(candidate)?;
+
+    let mut rep = DiffReport { bench: bench_a, ..DiffReport::default() };
+    for (name, rec_old) in &old {
+        let Some(rec_new) = new.get(name) else {
+            rep.missing.push(name.clone());
+            continue;
+        };
+        rep.compared += 1;
+        // det sections serialize with sorted keys — byte equality IS
+        // semantic equality here
+        let det_old = rec_old.get("det").map(Value::to_string);
+        let det_new = rec_new.get("det").map(Value::to_string);
+        if det_old != det_new {
+            rep.det_mismatches.push(name.clone());
+        }
+        if let (Some((metric, a)), Some((_, b))) = (wall_metric(rec_old), wall_metric(rec_new)) {
+            if b > a && a > 0.0 {
+                rep.slowdowns.push(Regression {
+                    name: name.clone(),
+                    metric,
+                    baseline: a,
+                    candidate: b,
+                    delta_pct: (b / a - 1.0) * 100.0,
+                });
+            }
+        }
+    }
+    for name in new.keys() {
+        if !old.contains_key(name) {
+            rep.added.push(name.clone());
+        }
+    }
+    Ok(rep)
+}
+
+fn load(path: &Path) -> anyhow::Result<Value> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    crate::json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+}
+
+/// `otaro bench-diff` entry point.
+pub fn run_cli(baseline: PathBuf, candidate: PathBuf, fail_pct: Option<f64>) -> anyhow::Result<()> {
+    let rep = diff(&load(&baseline)?, &load(&candidate)?)?;
+    println!(
+        "bench-diff [{}]: {} compared, {} det mismatch(es), {} slowdown(s), {} missing, {} added",
+        rep.bench,
+        rep.compared,
+        rep.det_mismatches.len(),
+        rep.slowdowns.len(),
+        rep.missing.len(),
+        rep.added.len()
+    );
+    for name in &rep.det_mismatches {
+        println!("  det changed: {name}");
+    }
+    for r in &rep.slowdowns {
+        println!(
+            "  slower: {:<44} {} {:.0} -> {:.0} ({:+.1}%)",
+            r.name, r.metric, r.baseline, r.candidate, r.delta_pct
+        );
+    }
+    for name in &rep.missing {
+        println!("  missing in candidate: {name}");
+    }
+    for name in &rep.added {
+        println!("  new in candidate: {name}");
+    }
+    if let Some(pct) = fail_pct {
+        rep.gate(pct)?;
+        println!("gate passed at {pct}% tolerance");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::{self};
+
+    fn kernel_file(median: f64) -> Value {
+        json::obj(vec![
+            ("schema", json::s("otaro.bench.v1")),
+            ("bench", json::s("kernels")),
+            (
+                "records",
+                Value::Arr(vec![json::obj(vec![
+                    ("name", json::s("matmul")),
+                    ("median_ns", json::n(median)),
+                ])]),
+            ),
+        ])
+    }
+
+    fn scenario_file(shed: f64, wall_secs: f64) -> Value {
+        json::obj(vec![
+            ("schema", json::s("otaro.bench.v1")),
+            ("bench", json::s("serve_scenarios")),
+            (
+                "records",
+                Value::Arr(vec![json::obj(vec![
+                    ("name", json::s("burst-storm")),
+                    ("det", json::obj(vec![("shed", json::n(shed))])),
+                    ("wall", json::obj(vec![("wall_secs", json::n(wall_secs))])),
+                ])]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn identical_files_pass_any_gate() {
+        let rep = diff(&kernel_file(100.0), &kernel_file(100.0)).unwrap();
+        assert_eq!(rep.compared, 1);
+        assert!(rep.slowdowns.is_empty() && rep.det_mismatches.is_empty());
+        rep.gate(0.0).unwrap();
+    }
+
+    #[test]
+    fn wall_regression_trips_only_past_tolerance() {
+        let rep = diff(&kernel_file(100.0), &kernel_file(130.0)).unwrap();
+        assert_eq!(rep.slowdowns.len(), 1);
+        assert!((rep.slowdowns[0].delta_pct - 30.0).abs() < 1e-9);
+        rep.gate(50.0).unwrap();
+        assert!(rep.gate(10.0).is_err(), "30% slowdown must fail a 10% gate");
+        // faster is never a regression
+        let rep = diff(&kernel_file(100.0), &kernel_file(80.0)).unwrap();
+        assert!(rep.slowdowns.is_empty());
+    }
+
+    #[test]
+    fn det_sections_gate_byte_exact_but_wall_jitter_does_not() {
+        // wall differs (jitter) but det identical: passes a generous gate
+        let rep = diff(&scenario_file(16.0, 1.0), &scenario_file(16.0, 1.4)).unwrap();
+        assert!(rep.det_mismatches.is_empty());
+        assert_eq!(rep.slowdowns[0].metric, "wall_secs");
+        rep.gate(50.0).unwrap();
+        // det differs by one count: fails even with infinite tolerance
+        let rep = diff(&scenario_file(16.0, 1.0), &scenario_file(17.0, 1.0)).unwrap();
+        assert_eq!(rep.det_mismatches, vec!["burst-storm".to_string()]);
+        assert!(rep.gate(f64::INFINITY).is_err());
+    }
+
+    #[test]
+    fn missing_records_fail_and_added_records_pass() {
+        let empty = json::obj(vec![
+            ("schema", json::s("otaro.bench.v1")),
+            ("bench", json::s("kernels")),
+            ("records", Value::Arr(vec![])),
+        ]);
+        let rep = diff(&kernel_file(100.0), &empty).unwrap();
+        assert_eq!(rep.missing, vec!["matmul".to_string()]);
+        assert!(rep.gate(f64::INFINITY).is_err(), "vanished benches must fail the gate");
+        let rep = diff(&empty, &kernel_file(100.0)).unwrap();
+        assert_eq!(rep.added, vec!["matmul".to_string()]);
+        rep.gate(0.0).unwrap();
+    }
+
+    #[test]
+    fn mismatched_envelopes_are_usage_errors() {
+        let wrong_schema = json::obj(vec![
+            ("schema", json::s("otaro.bench.v2")),
+            ("bench", json::s("kernels")),
+            ("records", Value::Arr(vec![])),
+        ]);
+        assert!(diff(&wrong_schema, &kernel_file(1.0)).is_err());
+        let other_bench = json::obj(vec![
+            ("schema", json::s("otaro.bench.v1")),
+            ("bench", json::s("other")),
+            ("records", Value::Arr(vec![])),
+        ]);
+        assert!(diff(&kernel_file(1.0), &other_bench).is_err());
+    }
+}

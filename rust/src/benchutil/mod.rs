@@ -4,6 +4,12 @@
 //! module: warmup, N timed iterations, median/mean/min reporting, and
 //! element-throughput lines — enough to drive the §Perf iteration loop
 //! and regenerate the perf rows in EXPERIMENTS.md.
+//!
+//! [`diff`] compares two emitted `otaro.bench.v1` files across runs —
+//! the `otaro bench-diff` trend gate CI runs against the previous
+//! artifact.
+
+pub mod diff;
 
 use std::hint::black_box as bb;
 use std::path::PathBuf;

@@ -39,15 +39,15 @@ pub const RULES: &[RuleDef] = &[
     RuleDef {
         name: "request-path-no-panic",
         summary: "no unwrap()/expect()/panic! in non-test serve/, policy/, \
-                  obs/ and workload/ code — request-path failures propagate \
-                  as Results",
+                  obs/, workload/ and benchutil/diff code — request-path \
+                  failures propagate as Results",
         check: request_path_no_panic,
     },
     RuleDef {
         name: "decision-path-determinism",
-        summary: "no HashMap/HashSet in serve/, policy/, obs/ and workload/ — \
-                  scheduling, eviction and replay decisions must not depend \
-                  on iteration order",
+        summary: "no HashMap/HashSet in serve/, policy/, obs/, workload/ and \
+                  benchutil/diff — scheduling, eviction, replay and trend-gate \
+                  decisions must not depend on iteration order",
         check: decision_path_determinism,
     },
     RuleDef {
@@ -200,11 +200,12 @@ fn hot_loop_no_alloc(f: &SourceFile, out: &mut Vec<Violation>) {
 /// kills every in-flight generation on the box.  The obs registry and
 /// the workload replay driver sit on the same paths (every serving
 /// event records; the harness drives real traffic), so they carry the
-/// same contract.  Test modules are exempt; hard `assert!`s are not
+/// same contract — as does the `bench-diff` trend gate, whose verdict
+/// CI acts on.  Test modules are exempt; hard `assert!`s are not
 /// banned (they guard memory safety in the kernels and are part of the
 /// contract).
 fn request_path_no_panic(f: &SourceFile, out: &mut Vec<Violation>) {
-    if !in_dirs(&f.module, &["serve/", "policy/", "obs/", "workload/"]) {
+    if !in_dirs(&f.module, &["serve/", "policy/", "obs/", "workload/", "benchutil/diff"]) {
         return;
     }
     const CALLS: &[&str] = &["unwrap", "expect"];
@@ -241,10 +242,11 @@ fn request_path_no_panic(f: &SourceFile, out: &mut Vec<Violation>) {
 /// `HashMap`/`HashSet` iteration order varies per process, so the types
 /// are banned from serve/ and policy/ wholesale — `BTreeMap` keyed on
 /// `Precision`/`TaskClass` is the house idiom.  obs/ (snapshot key
-/// order is the determinism promise of the metric plane) and workload/
-/// (byte-identical `det` sections run to run) inherit the ban.
+/// order is the determinism promise of the metric plane), workload/
+/// (byte-identical `det` sections run to run) and `benchutil/diff`
+/// (the trend gate compares those det sections) inherit the ban.
 fn decision_path_determinism(f: &SourceFile, out: &mut Vec<Violation>) {
-    if !in_dirs(&f.module, &["serve/", "policy/", "obs/", "workload/"]) {
+    if !in_dirs(&f.module, &["serve/", "policy/", "obs/", "workload/", "benchutil/diff"]) {
         return;
     }
     for (i, line) in f.lines.iter().enumerate() {

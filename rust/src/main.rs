@@ -39,6 +39,16 @@ COMMANDS:
              BENCH_serve_scenarios.json unless --out overrides.
              scenarios: steady-mix diurnal-ramp burst-storm
              adversarial-precision)
+  trace      [--scenario NAME] [--out FILE] [--dashboard FILE]
+             (traced replay: one scenario through the serving stack with
+             request-lifecycle tracing ON and the deterministic latency
+             injection plan; prints per-request waterfalls and per-rung
+             decode histograms, optionally writes the otaro.trace.v1
+             snapshot and the otaro.dashboard.v1 spec)
+  bench-diff BASELINE.json CANDIDATE.json [--fail-on-regression PCT]
+             (compare two otaro.bench.v1 files: det sections must be
+             byte-identical, wall medians within PCT; without the flag
+             the comparison is report-only)
   bench      <table1|table2|table8|fig3|fig4|fig5|fig6|fig8|fig9|all> [--quick]
 ";
 
@@ -180,6 +190,30 @@ fn main() -> anyhow::Result<()> {
             let out = args.opt("--out").map(PathBuf::from);
             args.finish();
             otaro::workload::run_cli(scenario, out)
+        }
+        "trace" => {
+            let scenario = args.opt("--scenario");
+            let out = args.opt("--out").map(PathBuf::from);
+            let dashboard = args.opt("--dashboard").map(PathBuf::from);
+            args.finish();
+            otaro::workload::trace_cli(scenario, out, dashboard)
+        }
+        "bench-diff" => {
+            let fail_pct = args.opt("--fail-on-regression").map(|v| {
+                v.parse::<f64>().unwrap_or_else(|e| {
+                    eprintln!("bad value for --fail-on-regression: {e}");
+                    std::process::exit(2);
+                })
+            });
+            let (baseline, candidate) = match (args.positional(), args.positional()) {
+                (Some(a), Some(b)) => (PathBuf::from(a), PathBuf::from(b)),
+                _ => {
+                    eprintln!("bench-diff requires BASELINE and CANDIDATE files\n\n{USAGE}");
+                    std::process::exit(2);
+                }
+            };
+            args.finish();
+            otaro::benchutil::diff::run_cli(baseline, candidate, fail_pct)
         }
         "bench" => {
             let quick = args.flag("--quick");

@@ -1,0 +1,174 @@
+//! Generated dashboard definitions over a registry snapshot.
+//!
+//! [`dashboard`] turns an `otaro.metrics.v1` snapshot (from
+//! [`Registry::snapshot`](super::Registry::snapshot)) into a
+//! deterministic `otaro.dashboard.v1` JSON spec: rows of panels keyed by
+//! registry metric names, with one row per serve rung (its latency
+//! histogram + served/shed counters side by side) plus serving, policy
+//! (probe-agreement), ladder, and backend rows.  The spec depends only
+//! on the *metric set* — two snapshots of the same registered metrics
+//! produce byte-identical specs, so a golden-file test can pin the
+//! output and any rename/addition shows up as a review-visible diff.
+//!
+//! The pattern follows the sequencer-style `dashboard_definitions`
+//! approach named in the ROADMAP: dashboards are build artifacts derived
+//! from the code's own metric registrations, never hand-synced.
+
+use crate::json::{arr, n, obj, s, Value};
+
+/// Row a metric lands in, in display order.
+fn row_for(name: &str) -> String {
+    if let Some(rest) = name.strip_prefix("serve.rung.") {
+        let rung = rest.split('.').next().unwrap_or(rest);
+        return format!("rung {rung}");
+    }
+    for prefix in ["serve", "policy", "ladder", "backend"] {
+        if name.starts_with(prefix) && name[prefix.len()..].starts_with('.') {
+            return prefix.to_string();
+        }
+    }
+    "other".to_string()
+}
+
+/// Short panel title: the last dotted segment of the metric name.
+fn panel_title(name: &str) -> &str {
+    name.rsplit('.').next().unwrap_or(name)
+}
+
+/// Build a deterministic `otaro.dashboard.v1` spec from an
+/// `otaro.metrics.v1` snapshot.  Unknown or missing sections are
+/// skipped; an empty snapshot yields an empty `rows` array.
+pub fn dashboard(snapshot: &Value) -> Value {
+    // (row, metric, panel type) for every registered metric
+    let mut panels: Vec<(String, String, &'static str)> = Vec::new();
+    for (section, ty) in
+        [("counters", "counter"), ("gauges", "gauge"), ("histograms", "histogram")]
+    {
+        if let Some(map) = snapshot.get(section).and_then(|v| v.as_obj()) {
+            // Value::Obj is a BTreeMap: keys arrive sorted
+            for name in map.keys() {
+                panels.push((row_for(name), name.clone(), ty));
+            }
+        }
+    }
+    panels.sort_by(|a, b| (&a.0, &a.1).cmp(&(&b.0, &b.1)));
+
+    let mut rung_rows: Vec<String> =
+        panels.iter().map(|(row, _, _)| row.clone()).filter(|r| r.starts_with("rung ")).collect();
+    rung_rows.sort();
+    rung_rows.dedup();
+    let mut order: Vec<String> = vec!["serve".to_string()];
+    order.extend(rung_rows);
+    order.extend(
+        ["policy", "ladder", "backend", "other"].into_iter().map(str::to_string),
+    );
+
+    let rows: Vec<Value> = order
+        .iter()
+        .filter_map(|row| {
+            let row_panels: Vec<Value> = panels
+                .iter()
+                .filter(|(r, _, _)| r == row)
+                .map(|(_, metric, ty)| {
+                    obj(vec![
+                        ("metric", s(metric.as_str())),
+                        ("title", s(panel_title(metric))),
+                        ("type", s(*ty)),
+                    ])
+                })
+                .collect();
+            if row_panels.is_empty() {
+                return None;
+            }
+            Some(obj(vec![
+                ("panels", arr(row_panels)),
+                ("title", s(row.as_str())),
+            ]))
+        })
+        .collect();
+
+    obj(vec![
+        ("rows", arr(rows)),
+        ("schema", s("otaro.dashboard.v1")),
+        ("title", s("otaro serve")),
+        ("panels_total", n(panels.len() as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::{MetricSink, Registry, LATENCY_MS_BUCKETS};
+
+    #[test]
+    fn golden_spec_for_a_small_registry() {
+        let mut reg = Registry::new();
+        let _ = reg.counter("serve.rung.e5m4.served");
+        let _ = reg.counter("serve.rung.e5m8.served");
+        let _ = reg.counter("serve.served");
+        let _ = reg.gauge("policy.demotions");
+        let _ = reg.histogram("serve.rung.e5m4.step_ms", LATENCY_MS_BUCKETS);
+        let spec = dashboard(&reg.snapshot()).to_string();
+        // the golden string: any metric rename or row reshuffle must be
+        // an intentional, review-visible diff
+        let want = concat!(
+            "{\"panels_total\":5,",
+            "\"rows\":[",
+            "{\"panels\":[{\"metric\":\"serve.served\",\"title\":\"served\",\"type\":\"counter\"}],\"title\":\"serve\"},",
+            "{\"panels\":[",
+            "{\"metric\":\"serve.rung.e5m4.served\",\"title\":\"served\",\"type\":\"counter\"},",
+            "{\"metric\":\"serve.rung.e5m4.step_ms\",\"title\":\"step_ms\",\"type\":\"histogram\"}",
+            "],\"title\":\"rung e5m4\"},",
+            "{\"panels\":[{\"metric\":\"serve.rung.e5m8.served\",\"title\":\"served\",\"type\":\"counter\"}],\"title\":\"rung e5m8\"},",
+            "{\"panels\":[{\"metric\":\"policy.demotions\",\"title\":\"demotions\",\"type\":\"gauge\"}],\"title\":\"policy\"}",
+            "],",
+            "\"schema\":\"otaro.dashboard.v1\",",
+            "\"title\":\"otaro serve\"}"
+        );
+        assert_eq!(spec, want);
+
+        // the spec depends on the metric SET, not the values
+        let mut reg2 = Registry::new();
+        let c2 = reg2.counter("serve.rung.e5m4.served");
+        let _ = reg2.counter("serve.rung.e5m8.served");
+        let _ = reg2.counter("serve.served");
+        let _ = reg2.gauge("policy.demotions");
+        let _ = reg2.histogram("serve.rung.e5m4.step_ms", LATENCY_MS_BUCKETS);
+        reg2.add(c2, 17);
+        assert_eq!(dashboard(&reg2.snapshot()).to_string(), want);
+    }
+
+    #[test]
+    fn full_serve_metric_set_builds_per_rung_rows() {
+        use crate::sefp::Precision;
+        use crate::serve::ServeMetrics;
+        let m = ServeMetrics::for_ladder(&[Precision::of(8), Precision::of(4)]);
+        let spec = dashboard(&m.snapshot());
+        let rows = spec.get("rows").and_then(|v| v.as_arr()).unwrap();
+        let titles: Vec<&str> =
+            rows.iter().filter_map(|r| r.get("title").and_then(|t| t.as_str())).collect();
+        assert_eq!(titles, ["serve", "rung e5m4", "rung e5m8", "policy", "ladder"]);
+        // each rung row carries its latency histogram and shed counter
+        for row in rows {
+            let title = row.get("title").and_then(|t| t.as_str()).unwrap();
+            if !title.starts_with("rung ") {
+                continue;
+            }
+            let metrics: Vec<&str> = row
+                .get("panels")
+                .and_then(|p| p.as_arr())
+                .unwrap()
+                .iter()
+                .filter_map(|p| p.get("metric").and_then(|m| m.as_str()))
+                .collect();
+            assert!(metrics.iter().any(|m| m.ends_with(".step_ms")), "{metrics:?}");
+            assert!(metrics.iter().any(|m| m.ends_with(".shed")), "{metrics:?}");
+        }
+    }
+
+    #[test]
+    fn empty_snapshot_yields_empty_rows() {
+        let spec = dashboard(&Registry::new().snapshot());
+        assert_eq!(spec.get("rows").and_then(|v| v.as_arr()).unwrap().len(), 0);
+    }
+}

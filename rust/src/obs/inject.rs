@@ -1,0 +1,294 @@
+//! Deterministic latency/fault injection for any [`LogitsBackend`].
+//!
+//! SLO scenarios over [`SimBackend`](crate::serve::SimBackend) finish in
+//! microseconds, so the adaptive controller never sees a p95 violation
+//! and never demotes — the feedback loop goes untested.  This module
+//! wraps a backend in an [`InjectedBackend`] driven by a declarative
+//! [`LatencyPlan`]:
+//!
+//! * **Delay rules** — per-(precision, step-range) schedules.  A rule
+//!   `{precision: Some(E5M4), from_step: 0, to_step: MAX, delay_ms: 40}`
+//!   sleeps 40 ms on every E5M4 decode step, which is unambiguously over
+//!   a 25 ms SLO while un-injected steps stay unambiguously under —
+//!   over/under-SLO classification is deterministic even though the
+//!   sleep itself is wall time.
+//! * **Fault rules** — `fault_every: k` raises a transient backend error
+//!   on every k-th matching step.  The wrapper retries internally up to
+//!   [`LatencyPlan::max_retries`] times (the retry deterministically
+//!   succeeds — the fault is transient by construction); with retries
+//!   exhausted the error surfaces to the caller.
+//!
+//! Every injection is **trace-visible**: the wrapper queues an
+//! [`InjectEvent`] per affected step, the server drains them via
+//! [`LogitsBackend::take_injected`] and records them as
+//! `injected{width, step, delay_ms, fault}` trace events — so a traced
+//! demotion can be matched to the exact injected violations that forced
+//! it.  Step counters are kept per precision in a `BTreeMap` (iteration
+//! order and therefore event order is deterministic).
+
+use std::collections::BTreeMap;
+
+use crate::sefp::Precision;
+use crate::serve::{LadderView, LogitsBackend};
+
+/// One injection occurrence, drained by the server for tracing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectEvent {
+    pub precision: Precision,
+    /// per-precision decode-step index the injection hit
+    pub step: u64,
+    pub delay_ms: u64,
+    pub fault: bool,
+}
+
+/// A delay/fault schedule matching (precision, step-range).
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyRule {
+    /// `None` matches every precision
+    pub precision: Option<Precision>,
+    /// first matching per-precision step (inclusive)
+    pub from_step: u64,
+    /// end of the matching range (exclusive; `u64::MAX` = open-ended)
+    pub to_step: u64,
+    /// synthetic latency added to each matching step
+    pub delay_ms: u64,
+    /// raise a transient fault on every k-th matching step (0 = never)
+    pub fault_every: u64,
+}
+
+impl LatencyRule {
+    fn matches(&self, p: Precision, step: u64) -> bool {
+        let precision_ok = match self.precision {
+            Some(rp) => rp == p,
+            None => true,
+        };
+        precision_ok && step >= self.from_step && step < self.to_step
+    }
+
+    fn faults_at(&self, step: u64) -> bool {
+        self.fault_every > 0 && (step - self.from_step) % self.fault_every == 0
+    }
+}
+
+/// The full injection schedule for a run.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyPlan {
+    pub rules: Vec<LatencyRule>,
+    /// transient-fault retries absorbed internally before the error
+    /// surfaces (0 = every injected fault fails the step)
+    pub max_retries: usize,
+}
+
+impl LatencyPlan {
+    /// A plan with no rules: the wrapper is transparent.
+    pub fn none() -> Self {
+        LatencyPlan::default()
+    }
+
+    /// Constant `delay_ms` on every step of `precision`, open-ended,
+    /// with a transient fault every `fault_every` steps (0 = never).
+    pub fn flat(precision: Precision, delay_ms: u64, fault_every: u64) -> Self {
+        LatencyPlan {
+            rules: vec![LatencyRule {
+                precision: Some(precision),
+                from_step: 0,
+                to_step: u64::MAX,
+                delay_ms,
+                fault_every,
+            }],
+            max_retries: 2,
+        }
+    }
+}
+
+/// A [`LogitsBackend`] decorator applying a [`LatencyPlan`].
+#[derive(Debug)]
+pub struct InjectedBackend<B: LogitsBackend> {
+    inner: B,
+    plan: LatencyPlan,
+    loaded: Option<Precision>,
+    /// per-precision decode-step counters (deterministic order)
+    steps: BTreeMap<Precision, u64>,
+    /// injections since the last `take_injected` drain
+    pending: Vec<InjectEvent>,
+    delays: u64,
+    faults: u64,
+}
+
+impl<B: LogitsBackend> InjectedBackend<B> {
+    pub fn new(inner: B, plan: LatencyPlan) -> Self {
+        InjectedBackend {
+            inner,
+            plan,
+            loaded: None,
+            steps: BTreeMap::new(),
+            pending: Vec::new(),
+            delays: 0,
+            faults: 0,
+        }
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    /// Total injected delay occurrences so far.
+    pub fn delays(&self) -> u64 {
+        self.delays
+    }
+
+    /// Total injected transient faults so far (absorbed or surfaced).
+    pub fn faults(&self) -> u64 {
+        self.faults
+    }
+}
+
+impl<B: LogitsBackend> LogitsBackend for InjectedBackend<B> {
+    fn batch_shape(&self) -> (usize, usize) {
+        self.inner.batch_shape()
+    }
+
+    fn vocab_size(&self) -> usize {
+        self.inner.vocab_size()
+    }
+
+    fn load_view(&mut self, view: &LadderView) -> anyhow::Result<()> {
+        self.loaded = Some(view.precision);
+        self.inner.load_view(view)
+    }
+
+    fn logits_step(&mut self, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+        let p = self
+            .loaded
+            .ok_or_else(|| anyhow::anyhow!("injected logits_step before load_view"))?;
+        let counter = self.steps.entry(p).or_insert(0);
+        let step = *counter;
+        *counter += 1;
+
+        let mut delay_ms = 0u64;
+        let mut fault = false;
+        for rule in &self.plan.rules {
+            if rule.matches(p, step) {
+                delay_ms += rule.delay_ms;
+                fault = fault || rule.faults_at(step);
+            }
+        }
+        if delay_ms > 0 || fault {
+            if delay_ms > 0 {
+                self.delays += 1;
+                std::thread::sleep(std::time::Duration::from_millis(delay_ms));
+            }
+            if fault {
+                self.faults += 1;
+            }
+            self.pending.push(InjectEvent { precision: p, step, delay_ms, fault });
+            if fault && self.plan.max_retries == 0 {
+                anyhow::bail!(
+                    "injected transient fault at {p} step {step} (retries exhausted)"
+                );
+            }
+            // with retries available the transient fault is absorbed:
+            // the retry deterministically succeeds on the same step
+        }
+        self.inner.logits_step(tokens)
+    }
+
+    fn obs_gauges(&self) -> Vec<(&'static str, f64)> {
+        let mut g = self.inner.obs_gauges();
+        g.push(("injected_delays", self.delays as f64));
+        g.push(("injected_faults", self.faults as f64));
+        g
+    }
+
+    fn take_injected(&mut self) -> Vec<InjectEvent> {
+        std::mem::take(&mut self.pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ParamStore;
+    use crate::serve::{PrecisionLadder, SimBackend};
+
+    fn ladder() -> PrecisionLadder {
+        let params = ParamStore {
+            tensors: vec![vec![0.25; 64]],
+            names: vec!["w".into()],
+            shapes: vec![vec![8, 8]],
+            quantized: vec![true],
+        };
+        PrecisionLadder::from_params(&params)
+    }
+
+    fn step_at(b: &mut InjectedBackend<SimBackend>, l: &mut PrecisionLadder, m: u8) {
+        let view = l.view_at(Precision::of(m)).unwrap();
+        b.load_view(&view).unwrap();
+        let (bsz, seq) = b.batch_shape();
+        b.logits_step(&vec![1; bsz * seq]).unwrap();
+    }
+
+    #[test]
+    fn plan_matches_precision_and_step_range() {
+        let mut l = ladder();
+        let plan = LatencyPlan {
+            rules: vec![LatencyRule {
+                precision: Some(Precision::of(4)),
+                from_step: 1,
+                to_step: 3,
+                delay_ms: 1,
+                fault_every: 0,
+            }],
+            max_retries: 0,
+        };
+        let mut b = InjectedBackend::new(SimBackend::new(2, 4, 16), plan);
+        // e5m8 never matches
+        step_at(&mut b, &mut l, 8);
+        assert!(b.take_injected().is_empty());
+        // e5m4 steps 0..4: only steps 1 and 2 are in range
+        for _ in 0..4 {
+            step_at(&mut b, &mut l, 4);
+        }
+        let evs = b.take_injected();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0], InjectEvent { precision: Precision::of(4), step: 1, delay_ms: 1, fault: false });
+        assert_eq!(evs[1].step, 2);
+        assert_eq!(b.delays(), 2);
+        // drained: a second take is empty
+        assert!(b.take_injected().is_empty());
+    }
+
+    #[test]
+    fn faults_are_absorbed_with_retries_and_surface_without() {
+        let mut l = ladder();
+        let mut plan = LatencyPlan::flat(Precision::of(4), 0, 2);
+        let mut absorbed = InjectedBackend::new(SimBackend::new(1, 4, 16), plan.clone());
+        for _ in 0..4 {
+            step_at(&mut absorbed, &mut l, 4); // faults at steps 0, 2 — absorbed
+        }
+        assert_eq!(absorbed.faults(), 2);
+        let evs = absorbed.take_injected();
+        assert!(evs.iter().all(|e| e.fault));
+
+        plan.max_retries = 0;
+        let mut surfacing = InjectedBackend::new(SimBackend::new(1, 4, 16), plan);
+        let view = l.view_at(Precision::of(4)).unwrap();
+        surfacing.load_view(&view).unwrap();
+        let (bsz, seq) = surfacing.batch_shape();
+        let err = surfacing.logits_step(&vec![1; bsz * seq]);
+        assert!(err.is_err(), "max_retries = 0 surfaces the injected fault");
+    }
+
+    #[test]
+    fn empty_plan_is_transparent_and_deterministic() {
+        let mut l = ladder();
+        let mut run = || {
+            let mut b = InjectedBackend::new(SimBackend::new(1, 4, 16), LatencyPlan::none());
+            let view = l.view_at(Precision::of(8)).unwrap();
+            b.load_view(&view).unwrap();
+            let (bsz, seq) = b.batch_shape();
+            b.logits_step(&vec![1; bsz * seq]).unwrap()
+        };
+        assert_eq!(run(), run());
+    }
+}

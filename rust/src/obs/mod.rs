@@ -27,13 +27,33 @@
 //! ring, so `observe` never allocates) — buckets feed dashboards and
 //! snapshots, the summary feeds exact p50/p95/p99 for SLO checks.
 //!
+//! Alongside the aggregate registry, this plane now carries the
+//! per-request causal view and the means to stress it:
+//!
+//! * [`trace`] — ring-buffered span/event tracing ([`Tracer`] behind
+//!   [`TraceSink`]): every request's `admitted → queued → scheduled →
+//!   decode_step* → delivered/shed` chain with monotone logical ticks,
+//!   serialized to deterministic `otaro.trace.v1` snapshots.
+//! * [`inject`] — [`LatencyPlan`]-driven latency/fault injection
+//!   ([`InjectedBackend`] wraps any `LogitsBackend`) so SLO scenarios
+//!   can force p95 violations and every controller demotion is
+//!   explained by a traced violation.
+//! * [`dashboard`] — deterministic JSON dashboard definitions generated
+//!   from a registry snapshot.
+//!
 //! The serve stack's concrete handle set lives in
 //! [`serve::ServeMetrics`](crate::serve::ServeMetrics); the trace-driven
 //! load harness that reads these snapshots lives in [`crate::workload`].
 
+pub mod dashboard;
+pub mod inject;
 pub mod registry;
+pub mod trace;
 
+pub use dashboard::dashboard;
+pub use inject::{InjectEvent, InjectedBackend, LatencyPlan, LatencyRule};
 pub use registry::{
     Counter, Gauge, Histo, MetricSink, NullSink, Registry, AGREEMENT_BUCKETS, LATENCY_MS_BUCKETS,
     RATIO_BUCKETS,
 };
+pub use trace::{permille, EventKind, EventRec, NullTrace, ShedReason, TraceSink, Tracer};

@@ -1,0 +1,477 @@
+//! Per-request span/event tracing with a pre-allocated ring buffer.
+//!
+//! Where [`registry`](super::registry) answers "how many / how fast in
+//! aggregate", this module answers "where did *this* request's time go":
+//! every request admitted by [`Server`](crate::serve::Server) leaves a
+//! causal chain of typed events — `admitted → queued → scheduled →
+//! decode_step* → delivered` (or `shed{reason}`), with `probe` and
+//! `policy_decision` events attached when the adaptive controller acts —
+//! so an SLO demotion can be audited span-by-span back to the latency
+//! violation that caused it.
+//!
+//! Design rules, same discipline as the metrics registry:
+//!
+//! * **Allocation-free record path.**  [`Tracer`] pre-allocates a ring
+//!   of [`MAX_TRACES`-ish] trace slots, each with a fixed event budget;
+//!   recording is index arithmetic plus a bounded `push` into reserved
+//!   capacity, inside a `no_alloc` lint region.  Ring overflow evicts
+//!   the **oldest whole trace** (never a partial one) and counts the
+//!   drop; per-trace overflow drops the event and marks the trace
+//!   `truncated`.
+//! * **Deterministic timestamps.**  Events carry a monotone logical
+//!   tick (one global counter, +1 per event), never wall time.  Under
+//!   [`SimBackend`](crate::serve::SimBackend) a trace is a pure function
+//!   of (seed, config): two runs produce byte-identical
+//!   `otaro.trace.v1` snapshots.
+//! * **Swappable sink.**  The serve stack records through
+//!   `Box<dyn TraceSink>`; the default [`NullTrace`] makes tracing
+//!   zero-cost when off.
+//!
+//! Snapshots serialize through the in-repo [`json`](crate::json) module
+//! (`Value::Obj` is a `BTreeMap`, so keys come out sorted).  The
+//! injection side that gives traces something worth looking at lives in
+//! [`super::inject`]; the CLI that prints waterfalls from these
+//! snapshots is `otaro trace` (see [`crate::workload`]).
+
+use crate::json::{arr, n, obj, s, Value};
+use crate::sefp::Precision;
+use crate::serve::TaskClass;
+
+/// Why a request was shed instead of served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// empty prompt or PAD in the prompt
+    InvalidPrompt,
+    /// forced precision above the ladder master
+    PrecisionAboveMaster,
+    /// admission queue at capacity
+    QueueFull,
+}
+
+impl ShedReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedReason::InvalidPrompt => "invalid_prompt",
+            ShedReason::PrecisionAboveMaster => "precision_above_master",
+            ShedReason::QueueFull => "queue_full",
+        }
+    }
+}
+
+/// One typed trace event.  Everything is `Copy` and fixed-size so the
+/// record path never touches the allocator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// request entered `submit` (opens the trace)
+    Admitted { class: TaskClass },
+    /// request accepted into the admission queue at `depth`
+    Queued { precision: Precision, depth: u32 },
+    /// request rejected (closes the trace)
+    Shed { reason: ShedReason, precision: Option<Precision> },
+    /// request placed into a decode batch row
+    Scheduled { batch_row: u32 },
+    /// request produced its `n`-th token at `precision`
+    DecodeStep { n: u32, precision: Precision },
+    /// shadow probe scored this request's completion (agreement in
+    /// permille — integers keep the snapshot byte-stable)
+    Probe { agreement_pm: i32 },
+    /// the policy moved a rung in response to this request's
+    /// observation or probe (`score_pm`: the signal that justified it,
+    /// in permille — frac-over-SLO for demotes, agreement for promotes)
+    PolicyDecision { demote: bool, from: Precision, to: Precision, score_pm: i32 },
+    /// response returned to the caller (closes the trace)
+    Delivered { tokens: u32 },
+    /// synthetic latency/fault from [`super::inject`] (global event:
+    /// injection hits a batch, not one request)
+    Injected { precision: Precision, step: u64, delay_ms: u64, fault: bool },
+}
+
+/// Scale a `[0, 1]`-ish signal to integer permille for trace fields.
+pub fn permille(x: f64) -> i32 {
+    (x * 1000.0).round() as i32
+}
+
+/// A timestamped event record.
+#[derive(Debug, Clone, Copy)]
+pub struct EventRec {
+    pub tick: u64,
+    pub kind: EventKind,
+}
+
+/// The emit interface the serve stack records through.
+pub trait TraceSink: std::fmt::Debug + Send {
+    /// False for [`NullTrace`]: callers may skip building event data.
+    fn enabled(&self) -> bool;
+    /// Record a per-request event.  `Admitted` opens a trace; other
+    /// kinds for an unknown/evicted `req` are silently dropped.
+    fn event(&mut self, req: u64, kind: EventKind);
+    /// Record a global (not-per-request) event, e.g. injected latency.
+    fn global(&mut self, kind: EventKind);
+    /// Deterministic `otaro.trace.v1` snapshot; `None` when disabled.
+    fn snapshot(&self) -> Option<Value>;
+}
+
+/// The default sink: tracing off, every record a no-op.
+#[derive(Debug, Default)]
+pub struct NullTrace;
+
+impl TraceSink for NullTrace {
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    fn event(&mut self, _req: u64, _kind: EventKind) {}
+
+    fn global(&mut self, _kind: EventKind) {}
+
+    fn snapshot(&self) -> Option<Value> {
+        None
+    }
+}
+
+/// One ring slot holding one request's whole trace.
+#[derive(Debug)]
+struct TraceSlot {
+    req: u64,
+    start_tick: u64,
+    used: bool,
+    /// per-trace event budget hit: later events were dropped
+    truncated: bool,
+    /// saw a terminal event (`Delivered` or `Shed`)
+    complete: bool,
+    /// pre-reserved to `events_per_trace`; never grows past it
+    events: Vec<EventRec>,
+}
+
+/// Ring-buffered tracer: fixed trace slots, fixed per-trace event
+/// budget, monotone logical tick, deterministic snapshots.
+#[derive(Debug)]
+pub struct Tracer {
+    slots: Vec<TraceSlot>,
+    /// next ring slot an `Admitted` claims (round-robin ⇒ the claimed
+    /// slot always holds the oldest live trace)
+    next: usize,
+    /// global logical clock: +1 per recorded event
+    tick: u64,
+    events_per_trace: usize,
+    /// whole traces evicted by ring overflow
+    dropped: u64,
+    /// events dropped by the per-trace budget
+    truncated_events: u64,
+    /// global (injected) events, bounded by `injected_cap`
+    injected: Vec<EventRec>,
+    injected_cap: usize,
+    injected_dropped: u64,
+}
+
+impl Tracer {
+    /// `traces` ring slots, `events_per_trace` events each (both
+    /// clamped to ≥ 1).  All capacity is allocated here, up front.
+    pub fn new(traces: usize, events_per_trace: usize) -> Self {
+        let traces = traces.max(1);
+        let events_per_trace = events_per_trace.max(1);
+        let injected_cap = traces * 4;
+        Tracer {
+            slots: (0..traces)
+                .map(|_| TraceSlot {
+                    req: 0,
+                    start_tick: 0,
+                    used: false,
+                    truncated: false,
+                    complete: false,
+                    events: Vec::with_capacity(events_per_trace),
+                })
+                .collect(),
+            next: 0,
+            tick: 0,
+            events_per_trace,
+            dropped: 0,
+            truncated_events: 0,
+            injected: Vec::with_capacity(injected_cap),
+            injected_cap,
+            injected_dropped: 0,
+        }
+    }
+
+    /// Whole traces evicted by ring overflow so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Events dropped by the per-trace budget so far.
+    pub fn truncated_events(&self) -> u64 {
+        self.truncated_events
+    }
+
+    /// Current logical tick (the timestamp of the last event).
+    pub fn tick(&self) -> u64 {
+        self.tick
+    }
+
+    /// Live (non-evicted) traces currently in the ring.
+    pub fn live_traces(&self) -> usize {
+        self.slots.iter().filter(|slot| slot.used).count()
+    }
+
+    /// Deterministic `otaro.trace.v1` snapshot: traces sorted by start
+    /// tick, events in record order, sorted keys throughout.  This is
+    /// the reporting path — allocation is fine here.
+    pub fn snapshot_value(&self) -> Value {
+        let mut live: Vec<&TraceSlot> = self.slots.iter().filter(|slot| slot.used).collect();
+        live.sort_by_key(|slot| slot.start_tick);
+        let traces = live
+            .iter()
+            .map(|slot| {
+                obj(vec![
+                    ("req", n(slot.req as f64)),
+                    ("complete", Value::Bool(slot.complete)),
+                    ("truncated", Value::Bool(slot.truncated)),
+                    ("events", arr(slot.events.iter().map(event_json).collect())),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("schema", s("otaro.trace.v1")),
+            ("dropped", n(self.dropped as f64)),
+            ("truncated_events", n(self.truncated_events as f64)),
+            ("injected", arr(self.injected.iter().map(event_json).collect())),
+            ("injected_dropped", n(self.injected_dropped as f64)),
+            ("traces", arr(traces)),
+        ])
+    }
+}
+
+impl TraceSink for Tracer {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn event(&mut self, req: u64, kind: EventKind) {
+        // lint: region(no_alloc)
+        self.tick += 1;
+        let rec = EventRec { tick: self.tick, kind };
+        if matches!(kind, EventKind::Admitted { .. }) {
+            // claim the next ring slot; evicting a live trace drops it
+            // WHOLE (events are cleared, the drop is counted) — a
+            // snapshot never shows a partial suffix of an old trace
+            let i = self.next;
+            self.next = (self.next + 1) % self.slots.len();
+            let slot = &mut self.slots[i];
+            if slot.used {
+                self.dropped += 1;
+            }
+            slot.req = req;
+            slot.start_tick = self.tick;
+            slot.used = true;
+            slot.truncated = false;
+            slot.complete = false;
+            slot.events.clear();
+            slot.events.push(rec);
+            return;
+        }
+        let cap = self.events_per_trace;
+        if let Some(slot) = self.slots.iter_mut().find(|slot| slot.used && slot.req == req) {
+            if slot.events.len() < cap {
+                slot.events.push(rec);
+            } else {
+                slot.truncated = true;
+                self.truncated_events += 1;
+            }
+            if matches!(kind, EventKind::Delivered { .. } | EventKind::Shed { .. }) {
+                slot.complete = true;
+            }
+        }
+        // lint: end_region
+    }
+
+    fn global(&mut self, kind: EventKind) {
+        // lint: region(no_alloc)
+        self.tick += 1;
+        if self.injected.len() < self.injected_cap {
+            self.injected.push(EventRec { tick: self.tick, kind });
+        } else {
+            self.injected_dropped += 1;
+        }
+        // lint: end_region
+    }
+
+    fn snapshot(&self) -> Option<Value> {
+        Some(self.snapshot_value())
+    }
+}
+
+fn class_name(c: TaskClass) -> &'static str {
+    match c {
+        TaskClass::Generation => "generation",
+        TaskClass::Understanding => "understanding",
+        TaskClass::Other => "other",
+    }
+}
+
+fn width_json(p: Option<Precision>) -> Value {
+    match p {
+        Some(p) => n(p.m() as f64),
+        None => Value::Null,
+    }
+}
+
+fn event_json(rec: &EventRec) -> Value {
+    let mut pairs = vec![("tick", n(rec.tick as f64))];
+    match rec.kind {
+        EventKind::Admitted { class } => {
+            pairs.push(("kind", s("admitted")));
+            pairs.push(("class", s(class_name(class))));
+        }
+        EventKind::Queued { precision, depth } => {
+            pairs.push(("kind", s("queued")));
+            pairs.push(("width", n(precision.m() as f64)));
+            pairs.push(("depth", n(depth as f64)));
+        }
+        EventKind::Shed { reason, precision } => {
+            pairs.push(("kind", s("shed")));
+            pairs.push(("reason", s(reason.name())));
+            pairs.push(("width", width_json(precision)));
+        }
+        EventKind::Scheduled { batch_row } => {
+            pairs.push(("kind", s("scheduled")));
+            pairs.push(("row", n(batch_row as f64)));
+        }
+        EventKind::DecodeStep { n: step_n, precision } => {
+            pairs.push(("kind", s("decode_step")));
+            pairs.push(("n", n(step_n as f64)));
+            pairs.push(("width", n(precision.m() as f64)));
+        }
+        EventKind::Probe { agreement_pm } => {
+            pairs.push(("kind", s("probe")));
+            pairs.push(("agreement_pm", n(agreement_pm as f64)));
+        }
+        EventKind::PolicyDecision { demote, from, to, score_pm } => {
+            pairs.push(("kind", s("policy_decision")));
+            pairs.push(("move", s(if demote { "demote" } else { "promote" })));
+            pairs.push(("from", n(from.m() as f64)));
+            pairs.push(("to", n(to.m() as f64)));
+            pairs.push(("score_pm", n(score_pm as f64)));
+        }
+        EventKind::Delivered { tokens } => {
+            pairs.push(("kind", s("delivered")));
+            pairs.push(("tokens", n(tokens as f64)));
+        }
+        EventKind::Injected { precision, step, delay_ms, fault } => {
+            pairs.push(("kind", s("injected")));
+            pairs.push(("width", n(precision.m() as f64)));
+            pairs.push(("step", n(step as f64)));
+            pairs.push(("delay_ms", n(delay_ms as f64)));
+            pairs.push(("fault", Value::Bool(fault)));
+        }
+    }
+    obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn deliver(t: &mut Tracer, req: u64) {
+        t.event(req, EventKind::Admitted { class: TaskClass::Other });
+        t.event(req, EventKind::Queued { precision: Precision::of(6), depth: 1 });
+        t.event(req, EventKind::Delivered { tokens: 2 });
+    }
+
+    #[test]
+    fn ticks_are_monotone_and_traces_complete() {
+        let mut t = Tracer::new(4, 8);
+        deliver(&mut t, 7);
+        deliver(&mut t, 8);
+        assert_eq!(t.tick(), 6);
+        assert_eq!(t.live_traces(), 2);
+        assert_eq!(t.dropped(), 0);
+        let snap = t.snapshot_value();
+        let traces = snap.get("traces").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(traces.len(), 2);
+        let mut last = 0.0;
+        for tr in traces {
+            assert_eq!(tr.get("complete").and_then(|v| v.as_bool()), Some(true));
+            for ev in tr.get("events").and_then(|v| v.as_arr()).unwrap() {
+                let tick = ev.get("tick").and_then(|v| v.as_f64()).unwrap();
+                assert!(tick > last, "ticks strictly increase across a snapshot");
+                last = tick;
+            }
+        }
+    }
+
+    #[test]
+    fn ring_overflow_evicts_oldest_whole_trace() {
+        let mut t = Tracer::new(2, 8);
+        deliver(&mut t, 1);
+        deliver(&mut t, 2);
+        deliver(&mut t, 3); // evicts req 1 wholesale
+        assert_eq!(t.dropped(), 1);
+        assert_eq!(t.live_traces(), 2);
+        let snap = t.snapshot_value();
+        let traces = snap.get("traces").and_then(|v| v.as_arr()).unwrap();
+        let reqs: Vec<f64> =
+            traces.iter().map(|tr| tr.get("req").and_then(|v| v.as_f64()).unwrap()).collect();
+        assert_eq!(reqs, [2.0, 3.0], "oldest trace gone, survivors whole");
+        for tr in traces {
+            assert_eq!(tr.get("events").and_then(|v| v.as_arr()).unwrap().len(), 3);
+        }
+        // events for the evicted request are silently dropped
+        t.event(1, EventKind::Delivered { tokens: 1 });
+        assert_eq!(t.live_traces(), 2);
+    }
+
+    #[test]
+    fn per_trace_budget_truncates_and_counts() {
+        let mut t = Tracer::new(2, 2);
+        t.event(5, EventKind::Admitted { class: TaskClass::Generation });
+        t.event(5, EventKind::Queued { precision: Precision::of(8), depth: 1 });
+        t.event(5, EventKind::Scheduled { batch_row: 0 }); // over budget
+        assert_eq!(t.truncated_events(), 1);
+        let snap = t.snapshot_value();
+        let tr = &snap.get("traces").and_then(|v| v.as_arr()).unwrap()[0];
+        assert_eq!(tr.get("truncated").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(tr.get("events").and_then(|v| v.as_arr()).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn snapshot_is_deterministic() {
+        let run = || {
+            let mut t = Tracer::new(4, 8);
+            deliver(&mut t, 1);
+            t.event(2, EventKind::Admitted { class: TaskClass::Understanding });
+            t.event(
+                2,
+                EventKind::Shed { reason: ShedReason::QueueFull, precision: Some(Precision::of(4)) },
+            );
+            t.global(EventKind::Injected {
+                precision: Precision::of(4),
+                step: 3,
+                delay_ms: 40,
+                fault: false,
+            });
+            t.snapshot_value().to_string()
+        };
+        let a = run();
+        assert_eq!(a, run());
+        assert!(a.starts_with("{\"dropped\":0"), "sorted keys: {a}");
+        assert!(a.contains("\"schema\":\"otaro.trace.v1\""));
+        assert!(a.contains("\"reason\":\"queue_full\""));
+        assert!(a.contains("\"kind\":\"injected\""));
+    }
+
+    #[test]
+    fn null_trace_is_inert() {
+        let mut t = NullTrace;
+        assert!(!t.enabled());
+        t.event(1, EventKind::Delivered { tokens: 1 });
+        t.global(EventKind::Probe { agreement_pm: 990 });
+        assert!(t.snapshot().is_none());
+    }
+
+    #[test]
+    fn permille_rounds() {
+        assert_eq!(permille(0.95), 950);
+        assert_eq!(permille(1.0), 1000);
+        assert_eq!(permille(0.0515), 52);
+    }
+}

@@ -65,6 +65,19 @@ impl Observation {
     }
 }
 
+/// One rung move the controller just made, surfaced so the server can
+/// attach a `policy_decision` trace event to the request whose
+/// observation (or probe) triggered it.  `score_pm` is the signal that
+/// justified the move, in permille: the over-SLO fraction for demotes,
+/// the probe agreement for promotes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PolicyMove {
+    pub demote: bool,
+    pub from: Precision,
+    pub to: Precision,
+    pub score_pm: i32,
+}
+
 /// Decision counters a policy exposes to `ServeStats`.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PolicySnapshot {
@@ -86,11 +99,19 @@ pub trait PrecisionPolicy: std::fmt::Debug + Send {
     /// Precision this request class should be served at, right now.
     fn decide(&mut self, class: TaskClass) -> Precision;
 
-    /// Feed one completed request back into the policy.
-    fn observe(&mut self, obs: &Observation);
+    /// Feed one completed request back into the policy.  Returns the
+    /// rung move this observation triggered, if any, so the caller can
+    /// trace cause → effect.
+    fn observe(&mut self, obs: &Observation) -> Option<PolicyMove>;
 
-    /// Feed one shadow-probe result back into the policy.
-    fn observe_probe(&mut self, class: TaskClass, precision: Precision, probe: &ProbeResult);
+    /// Feed one shadow-probe result back into the policy.  Returns the
+    /// rung move this probe triggered, if any.
+    fn observe_probe(
+        &mut self,
+        class: TaskClass,
+        precision: Precision,
+        probe: &ProbeResult,
+    ) -> Option<PolicyMove>;
 
     /// Should the server shadow-probe this completion?  Stateful (the
     /// sampler advances its cadence counter on every call).
@@ -132,9 +153,18 @@ impl PrecisionPolicy for StaticPolicy {
         }
     }
 
-    fn observe(&mut self, _obs: &Observation) {}
+    fn observe(&mut self, _obs: &Observation) -> Option<PolicyMove> {
+        None
+    }
 
-    fn observe_probe(&mut self, _class: TaskClass, _precision: Precision, _probe: &ProbeResult) {}
+    fn observe_probe(
+        &mut self,
+        _class: TaskClass,
+        _precision: Precision,
+        _probe: &ProbeResult,
+    ) -> Option<PolicyMove> {
+        None
+    }
 
     fn wants_probe(&mut self, _class: TaskClass, _precision: Precision) -> bool {
         false
@@ -203,8 +233,9 @@ impl AdaptivePolicy {
         }
     }
 
-    /// Run one controller decision for `class` at its current rung.
-    fn tick(&mut self, class: TaskClass) {
+    /// Run one controller decision for `class` at its current rung,
+    /// reporting the move (if any) with the signal that justified it.
+    fn tick(&mut self, class: TaskClass) -> Option<PolicyMove> {
         let current = self.controller.current(class);
         let ladder = self.controller.ladder();
         let below = ladder
@@ -214,7 +245,21 @@ impl AdaptivePolicy {
             .copied();
         let cur_signal = self.signal(class, current);
         let cand_signal = below.map(|p| self.signal(class, p)).unwrap_or_default();
-        self.controller.tick(class, cur_signal, cand_signal);
+        match self.controller.tick(class, cur_signal, cand_signal) {
+            Decision::Hold => None,
+            Decision::Demote { from, to } => Some(PolicyMove {
+                demote: true,
+                from,
+                to,
+                score_pm: crate::obs::permille(cur_signal.frac_over_slo),
+            }),
+            Decision::Promote { from, to } => Some(PolicyMove {
+                demote: false,
+                from,
+                to,
+                score_pm: crate::obs::permille(cur_signal.agreement.unwrap_or(0.0)),
+            }),
+        }
     }
 }
 
@@ -224,7 +269,7 @@ impl PrecisionPolicy for AdaptivePolicy {
         self.controller.current(class)
     }
 
-    fn observe(&mut self, obs: &Observation) {
+    fn observe(&mut self, obs: &Observation) -> Option<PolicyMove> {
         self.telemetry.observe(
             obs.class,
             obs.precision,
@@ -235,15 +280,20 @@ impl PrecisionPolicy for AdaptivePolicy {
         // decide-by-observation: every completion is a controller tick
         // for its class (cooldown inside the controller spaces out the
         // actual switches)
-        self.tick(obs.class);
+        self.tick(obs.class)
     }
 
-    fn observe_probe(&mut self, class: TaskClass, precision: Precision, probe: &ProbeResult) {
+    fn observe_probe(
+        &mut self,
+        class: TaskClass,
+        precision: Precision,
+        probe: &ProbeResult,
+    ) -> Option<PolicyMove> {
         self.probes += 1;
         self.telemetry.observe_probe(class, precision, probe);
         // quality reacts immediately — a collapsed probe must not wait
         // for the next latency observation to promote
-        self.tick(class);
+        self.tick(class)
     }
 
     fn wants_probe(&mut self, class: TaskClass, precision: Precision) -> bool {
@@ -317,7 +367,7 @@ mod tests {
         let start = p.decide(TaskClass::Understanding);
         for _ in 0..16 {
             let at = p.decide(TaskClass::Understanding);
-            p.observe(&obs(TaskClass::Understanding, at, 40.0));
+            let _ = p.observe(&obs(TaskClass::Understanding, at, 40.0));
         }
         let now = p.decide(TaskClass::Understanding);
         assert!(now < start, "sustained SLO violation must demote ({start} -> {now})");
@@ -337,8 +387,9 @@ mod tests {
             divergence_amplitude: 0.5,
             positions: 4,
         };
-        p.observe_probe(TaskClass::Understanding, start, &bad);
+        let mv = p.observe_probe(TaskClass::Understanding, start, &bad);
         let now = p.decide(TaskClass::Understanding);
+        assert_eq!(mv, Some(PolicyMove { demote: false, from: start, to: now, score_pm: 100 }));
         assert!(now > start, "collapsed agreement must promote ({start} -> {now})");
         assert_eq!(p.snapshot().promotions, 1);
         assert_eq!(p.snapshot().probes, 1);

@@ -33,6 +33,9 @@ use crate::serve::{LogitsBackend, PrecisionLadder, TaskClass};
 /// A completed request queued for shadow re-scoring.
 #[derive(Debug, Clone)]
 pub struct ProbeTask {
+    /// id of the request whose completion is being re-scored, so probe
+    /// and policy-decision trace events land on the right trace
+    pub id: u64,
     pub class: TaskClass,
     /// precision the request was served at
     pub precision: Precision,
@@ -210,7 +213,7 @@ mod tests {
     }
 
     fn task(m: u8, context: Vec<i32>, n_gen: usize) -> ProbeTask {
-        ProbeTask { class: TaskClass::Understanding, precision: Precision::of(m), context, n_gen }
+        ProbeTask { id: 0, class: TaskClass::Understanding, precision: Precision::of(m), context, n_gen }
     }
 
     #[test]

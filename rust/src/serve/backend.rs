@@ -41,6 +41,14 @@ pub trait LogitsBackend {
     fn obs_gauges(&self) -> Vec<(&'static str, f64)> {
         Vec::new()
     }
+    /// Drain synthetic latency/fault events queued since the last call.
+    /// Only [`InjectedBackend`](crate::obs::inject::InjectedBackend)
+    /// produces any; real backends inherit this empty default.  The
+    /// server drains after each `logits_step` and records the events
+    /// into the request trace.
+    fn take_injected(&mut self) -> Vec<crate::obs::inject::InjectEvent> {
+        Vec::new()
+    }
 }
 
 /// Owned handle over the PJRT [`Engine`] — the production backend.

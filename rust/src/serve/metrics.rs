@@ -30,6 +30,11 @@ struct RungMetrics {
     precision: Precision,
     served: Counter,
     shed: Counter,
+    /// tokens produced by generation-loop decode steps at this rung
+    /// (probe re-scoring steps do NOT count — this counter is the
+    /// registry side of the span/counter cross-check: per-rung
+    /// `decode_step` trace events must sum to exactly this)
+    tokens: Counter,
     step_ms: Histo,
 }
 
@@ -107,6 +112,7 @@ impl ServeMetrics {
                 precision: p,
                 served: reg.counter(&format!("serve.rung.e5m{}.served", p.m())),
                 shed: reg.counter(&format!("serve.rung.e5m{}.shed", p.m())),
+                tokens: reg.counter(&format!("serve.rung.e5m{}.tokens", p.m())),
                 step_ms: reg
                     .histogram(&format!("serve.rung.e5m{}.step_ms", p.m()), LATENCY_MS_BUCKETS),
             })
@@ -190,6 +196,7 @@ impl ServeMetrics {
         self.reg.observe(self.h_step_ms, step_ms);
         if let Some(r) = self.rung(p) {
             self.reg.observe(r.step_ms, step_ms);
+            self.reg.add(r.tokens, tokens);
         }
     }
 
@@ -262,6 +269,16 @@ impl ServeMetrics {
         self.rungs
             .iter()
             .map(|r| (r.precision, self.reg.counter_value(r.served)))
+            .filter(|&(_, n)| n > 0)
+            .collect()
+    }
+
+    /// Per-rung generation-loop token counts, same shape — the exact
+    /// registry counterpart of per-rung `decode_step` trace events.
+    pub fn tokens_per_precision(&self) -> Vec<(Precision, u64)> {
+        self.rungs
+            .iter()
+            .map(|r| (r.precision, self.reg.counter_value(r.tokens)))
             .filter(|&(_, n)| n > 0)
             .collect()
     }
@@ -345,6 +362,21 @@ mod tests {
         assert_eq!(m.stats().decode_steps, 1);
         assert_eq!(m.stats().tokens_generated, 2);
         assert!(m.shed_per_precision().is_empty());
+    }
+
+    #[test]
+    fn rung_tokens_follow_decode_steps() {
+        let mut m = ServeMetrics::for_ladder(&ladder());
+        m.record_step(Precision::of(4), 0.5, 3);
+        m.record_step(Precision::of(4), 0.5, 2);
+        m.record_step(Precision::of(8), 0.5, 1);
+        assert_eq!(
+            m.tokens_per_precision(),
+            vec![(Precision::of(4), 5), (Precision::of(8), 1)]
+        );
+        let snap = m.snapshot().to_string();
+        assert!(snap.contains("\"serve.rung.e5m4.tokens\":5"), "{snap}");
+        assert!(snap.contains("\"serve.rung.e5m3.tokens\":0"), "{snap}");
     }
 
     #[test]

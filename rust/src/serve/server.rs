@@ -23,7 +23,8 @@ use crate::data::tokenizer::{EOS, PAD};
 use crate::data::Rng;
 use crate::infer::sampling;
 use crate::metrics::Summary;
-use crate::policy::{shadow_probe, Observation, ProbeTask};
+use crate::obs::trace::{permille, EventKind, NullTrace, ShedReason, TraceSink, Tracer};
+use crate::policy::{shadow_probe, Observation, PolicyMove, ProbeTask};
 use crate::sefp::Precision;
 
 use super::backend::{EngineHandle, LogitsBackend};
@@ -148,6 +149,8 @@ pub struct Server<B: LogitsBackend = EngineHandle> {
     /// runs (a probe swaps the backend's loaded view, so it can never
     /// run while rows are still decoding at the serving precision)
     pending_probes: Vec<ProbeTask>,
+    /// per-request span sink ([`NullTrace`] unless [`Server::with_tracer`])
+    trace: Box<dyn TraceSink>,
     rng: Rng,
 }
 
@@ -167,6 +170,7 @@ impl<B: LogitsBackend> Server<B> {
             metrics,
             first_work: None,
             pending_probes: Vec::new(),
+            trace: Box::new(NullTrace),
             rng: Rng::new(0x5EED),
         }
     }
@@ -175,6 +179,19 @@ impl<B: LogitsBackend> Server<B> {
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.rng = Rng::new(seed);
         self
+    }
+
+    /// Record every request's span chain into `tracer` (the default is
+    /// the inert [`NullTrace`]).
+    pub fn with_tracer(mut self, tracer: Tracer) -> Self {
+        self.trace = Box::new(tracer);
+        self
+    }
+
+    /// Deterministic `otaro.trace.v1` snapshot of the recorded traces;
+    /// `None` when tracing is off.
+    pub fn trace_snapshot(&self) -> Option<crate::json::Value> {
+        self.trace.snapshot()
     }
 
     pub fn backend(&self) -> &B {
@@ -193,8 +210,13 @@ impl<B: LogitsBackend> Server<B> {
     /// position to read logits from / no mantissa bits to invent), and
     /// a full queue sheds by backpressure.
     pub fn submit(&mut self, req: Request) -> bool {
+        self.trace.event(req.id, EventKind::Admitted { class: req.class });
         if req.prompt.is_empty() || req.prompt.contains(&PAD) {
             self.metrics.record_invalid();
+            self.trace.event(
+                req.id,
+                EventKind::Shed { reason: ShedReason::InvalidPrompt, precision: None },
+            );
             return false;
         }
         let p = self.router.route(req.class, req.precision);
@@ -202,15 +224,33 @@ impl<B: LogitsBackend> Server<B> {
             // reject here so one bad request cannot poison a whole
             // popped batch when view_at errors mid-run
             self.metrics.record_invalid();
+            self.trace.event(
+                req.id,
+                EventKind::Shed { reason: ShedReason::PrecisionAboveMaster, precision: Some(p) },
+            );
             return false;
         }
+        let id = req.id;
         match self.batcher.push(req, p) {
             Ok(()) => {
                 self.metrics.record_queue_depth(self.batcher.len());
+                self.trace.event(
+                    id,
+                    EventKind::Queued { precision: p, depth: self.batcher.len() as u32 },
+                );
                 true
             }
             Err(_) => {
                 self.metrics.record_shed(p);
+                // a shed is an admission-time depth sample too: the
+                // burst that filled the queue inside one decode
+                // iteration must show in the peak gauge, not just in
+                // between-iteration samples
+                self.metrics.record_queue_depth(self.batcher.len());
+                self.trace.event(
+                    id,
+                    EventKind::Shed { reason: ShedReason::QueueFull, precision: Some(p) },
+                );
                 false
             }
         }
@@ -258,7 +298,8 @@ impl<B: LogitsBackend> Server<B> {
         self.metrics.record_dispatch(batch.len() as f64 / bsz as f64, self.batcher.len());
 
         let mut rows: Vec<Option<ActiveRow>> = Vec::with_capacity(bsz);
-        for q in batch {
+        for (ri, q) in batch.into_iter().enumerate() {
+            self.trace.event(q.req.id, EventKind::Scheduled { batch_row: ri as u32 });
             rows.push(Some(ActiveRow::admit(q)));
         }
         rows.resize_with(bsz, || None);
@@ -280,6 +321,17 @@ impl<B: LogitsBackend> Server<B> {
             let t0 = Instant::now();
             let mut logits = self.backend.logits_step(&tokens)?;
             let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+            // synthetic latency/faults the backend wrapper injected into
+            // that step become trace-visible global events, so an SLO
+            // violation seen below is attributable to its injection
+            for ev in self.backend.take_injected() {
+                self.trace.global(EventKind::Injected {
+                    precision: ev.precision,
+                    step: ev.step,
+                    delay_ms: ev.delay_ms,
+                    fault: ev.fault,
+                });
+            }
             let mut step_tokens = 0u64;
 
             // sample one token per active row; finalize finished rows
@@ -305,6 +357,9 @@ impl<B: LogitsBackend> Server<B> {
                     r.compute_ms += step_ms;
                     step_tokens += 1;
                     finished = r.generated.len() >= r.max_new_tokens || next == EOS;
+                    let row_id = r.id;
+                    let n_gen = r.generated.len() as u32;
+                    self.trace.event(row_id, EventKind::DecodeStep { n: n_gen, precision: p });
                 }
                 if finished {
                     // `finished` is only set while the row is Some, so
@@ -324,12 +379,22 @@ impl<B: LogitsBackend> Server<B> {
             let yield_to_other =
                 self.batcher.starving_width(now).is_some_and(|w| w != p);
             if !yield_to_other {
+                let mut refilled = false;
                 for ri in 0..bsz {
                     if rows[ri].is_none() {
                         if let Some(q) = self.batcher.pop_for_width(p, 1).pop() {
+                            self.trace
+                                .event(q.req.id, EventKind::Scheduled { batch_row: ri as u32 });
                             rows[ri] = Some(ActiveRow::admit(q));
+                            refilled = true;
                         }
                     }
+                }
+                if refilled {
+                    // the drained depth is a sample in its own right —
+                    // without it the gauge would hold the pre-refill
+                    // value until the next dispatch
+                    self.metrics.record_queue_depth(self.batcher.len());
                 }
             }
         }
@@ -347,12 +412,40 @@ impl<B: LogitsBackend> Server<B> {
         }
         for task in std::mem::take(&mut self.pending_probes) {
             let result = shadow_probe(&mut self.backend, &mut self.ladder, &task)?;
+            // probe re-scoring steps can be injected too
+            for ev in self.backend.take_injected() {
+                self.trace.global(EventKind::Injected {
+                    precision: ev.precision,
+                    step: ev.step,
+                    delay_ms: ev.delay_ms,
+                    fault: ev.fault,
+                });
+            }
             self.metrics.record_probe(result.agreement);
-            self.router.policy_mut().observe_probe(task.class, task.precision, &result);
+            self.trace
+                .event(task.id, EventKind::Probe { agreement_pm: permille(result.agreement) });
+            let mv = self.router.policy_mut().observe_probe(task.class, task.precision, &result);
+            self.trace_policy_move(task.id, mv);
         }
         // probe replays go through the ladder cache like any switch
         self.sync_ladder_stats();
         Ok(())
+    }
+
+    /// Attach a `policy_decision` span to the request whose observation
+    /// or probe triggered the move (no-op on `Hold`).
+    fn trace_policy_move(&mut self, req: u64, mv: Option<PolicyMove>) {
+        if let Some(mv) = mv {
+            self.trace.event(
+                req,
+                EventKind::PolicyDecision {
+                    demote: mv.demote,
+                    from: mv.from,
+                    to: mv.to,
+                    score_pm: mv.score_pm,
+                },
+            );
+        }
     }
 
     /// Mirror the policy's decision counters into the registry gauges
@@ -382,17 +475,20 @@ impl<B: LogitsBackend> Server<B> {
             tokens: row.generated.len(),
             queue_depth: self.batcher.len(),
         };
-        self.router.policy_mut().observe(&obs);
+        let mv = self.router.policy_mut().observe(&obs);
+        self.trace_policy_move(row.id, mv);
         if p < self.ladder.top() && self.router.policy_mut().wants_probe(row.class, p) {
             // the context is dead after finalize (the Response only
             // keeps the generation), so the probe task takes it by move
             self.pending_probes.push(ProbeTask {
+                id: row.id,
                 class: row.class,
                 precision: p,
                 context: std::mem::take(&mut row.context),
                 n_gen: row.generated.len(),
             });
         }
+        self.trace.event(row.id, EventKind::Delivered { tokens: row.generated.len() as u32 });
         out.push(Response {
             id: row.id,
             precision: p,

@@ -24,6 +24,12 @@
 //!   the trace alone — served/shed/invalid conservation, forced-clamp
 //!   accounting, token totals, queue bounds, p95 SLOs, starvation and
 //!   probe-agreement floors.
+//! * [`traced`]  — the same stack with request-lifecycle tracing ON and
+//!   a deterministic latency-injection plan
+//!   ([`LatencyPlan`](crate::obs::inject::LatencyPlan)) over
+//!   [`SimBackend`](crate::serve::SimBackend): byte-identical
+//!   `otaro.trace.v1` snapshots, per-request waterfalls, and
+//!   span-vs-registry cross-checks.  CLI: `otaro trace`.
 //!
 //! Every run emits one record per scenario into
 //! `BENCH_serve_scenarios.json` (the shared `otaro.bench.v1` envelope
@@ -37,10 +43,12 @@
 pub mod replay;
 pub mod scenario;
 pub mod trace;
+pub mod traced;
 
 pub use replay::{run_scenario, ReplayReport};
 pub use scenario::{catalog, Kind, Scenario, SloChecks};
 pub use trace::{generate, TraceEvent};
+pub use traced::{default_plan, run_traced, trace_cli, TracedReport};
 
 use std::path::PathBuf;
 

@@ -198,6 +198,13 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ReplayReport> {
     check!("token-accounting", stats.tokens_generated == exp.tokens);
     check!("forced-clamp-accounting", stats.forced_clamps == exp.clamps);
     check!("queue-bounded", stats.queue_peak_depth <= sc.queue_cap as u64);
+    // the depth gauge samples at admission AND shed time, so a burst
+    // that overruns the queue must pin the peak exactly at the cap —
+    // this is the regression rail for the shed-path gauge sample
+    check!(
+        "storm-peak-pins-the-cap",
+        !sc.slo.expect_shed || stats.queue_peak_depth == sc.queue_cap as u64
+    );
     check!("min-served", stats.served >= sc.slo.min_served);
     check!("queue-p95-slo", stats.queue_ms.p95() <= sc.slo.queue_p95_ms);
     check!("compute-p95-slo", stats.compute_ms.p95() <= sc.slo.compute_p95_ms);

@@ -1,0 +1,484 @@
+//! The traced replay driver behind `otaro trace`: a scenario through the
+//! real serve/policy stack with per-request span tracing ON and a
+//! deterministic latency-injection plan making the SLO loop fire.
+//!
+//! Differences from [`replay`](super::replay):
+//!
+//! * The backend is [`SimBackend`] wrapped in an [`InjectedBackend`] —
+//!   pure logical decode (microseconds) plus *synthetic*, plan-declared
+//!   latency.  Injected steps sleep 40 ms against a 25 ms SLO while
+//!   un-injected steps finish in well under a millisecond, so every
+//!   latency sample classifies the same way on every run and the
+//!   resulting `otaro.trace.v1` snapshot is **byte-identical** across
+//!   runs of the same (scenario, seed, plan).
+//! * Routing is always adaptive: the point of the exercise is watching
+//!   the controller demote the injected rung, with the trace carrying
+//!   the whole causal chain — `injected` events, over-SLO completions,
+//!   then a `policy_decision{demote}` on the triggering request.
+//! * The anti-starvation yield is effectively disabled
+//!   (`max_wait_ms = 600_000`): with real sleeps in the loop a 500 ms
+//!   bound would trip wall-dependently and re-order scheduling between
+//!   runs, breaking byte-identity.
+//!
+//! [`run_traced`] asserts the span invariants (no drops, well-nested
+//! delivered spans, span-derived per-rung decode totals exactly equal to
+//! the registry's `serve.rung.*.tokens` counters, demotes at injected
+//! rungs preceded by an injected event on the same rung) and returns the
+//! snapshot; `trace_cli` prints per-request waterfalls and writes the
+//! snapshot/dashboard artifacts.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::config::{PolicyConfig, ServeConfig};
+use crate::json::{self, Value};
+use crate::obs::inject::{InjectedBackend, LatencyPlan, LatencyRule};
+use crate::obs::Tracer;
+use crate::runtime::ParamStore;
+use crate::sefp::Precision;
+use crate::serve::{
+    DynamicBatcher, PrecisionLadder, Router, SchedPolicy, Server, SimBackend,
+};
+
+use super::scenario::{catalog, Kind, Scenario};
+use super::trace::generate;
+
+/// One traced run's outcome.
+#[derive(Debug)]
+pub struct TracedReport {
+    pub name: &'static str,
+    pub served: u64,
+    pub shed: u64,
+    pub invalid: u64,
+    pub demotions: u64,
+    pub promotions: u64,
+    /// byte-identical across runs: the `otaro.trace.v1` snapshot
+    pub trace: Value,
+    /// wall-side registry snapshot (latencies, gauges — NOT byte-stable)
+    pub metrics: Value,
+}
+
+/// The default injection plan: every decode step at E5M4 (the
+/// understanding class's starting rung) sleeps 40 ms — unambiguously
+/// over the default 25 ms SLO — with a transient fault every 5th step
+/// absorbed by 2 retries.
+pub fn default_plan() -> LatencyPlan {
+    LatencyPlan {
+        rules: vec![LatencyRule {
+            precision: Some(Precision::of(4)),
+            from_step: 0,
+            to_step: u64::MAX,
+            delay_ms: 40,
+            fault_every: 5,
+        }],
+        max_retries: 2,
+    }
+}
+
+fn traced_config(sc: &Scenario) -> ServeConfig {
+    ServeConfig {
+        max_batch: sc.max_batch,
+        queue_cap: sc.queue_cap,
+        // injected sleeps are real wall time: the anti-starvation yield
+        // must never trip mid-run or scheduling order would depend on
+        // the wall clock (see module docs)
+        max_wait_ms: 600_000,
+        policy: PolicyConfig {
+            // always adaptive — the injected violations exist to be
+            // acted on, even in scenarios that replay statically
+            adaptive: true,
+            window: 64,
+            min_samples: 8,
+            cooldown: 8,
+            ..PolicyConfig::default()
+        },
+        ..ServeConfig::default()
+    }
+}
+
+/// The tiny ladder the sim decodes against (SimBackend scores logits
+/// from (tokens, precision), not from weights — the ladder only feeds
+/// the view-switch machinery).
+fn sim_ladder() -> PrecisionLadder {
+    let params = ParamStore {
+        tensors: vec![vec![0.25; 64]],
+        names: vec!["w".into()],
+        shapes: vec![vec![8, 8]],
+        quantized: vec![true],
+    };
+    PrecisionLadder::from_params(&params)
+}
+
+/// One request's span chain, flattened for waterfall math.  All times
+/// are logical ticks from the trace, never wall time.
+#[derive(Debug, Default, Clone)]
+pub struct Waterfall {
+    pub req: u64,
+    pub complete: bool,
+    pub admitted: u64,
+    pub queued: Option<u64>,
+    pub scheduled: Option<u64>,
+    pub first_decode: Option<u64>,
+    pub delivered: Option<u64>,
+    pub shed_reason: Option<String>,
+    pub decode_steps: u64,
+}
+
+impl Waterfall {
+    /// admitted → delivered/shed span, in ticks.
+    pub fn total_ticks(&self) -> u64 {
+        self.delivered.unwrap_or(self.admitted).saturating_sub(self.admitted)
+    }
+
+    /// queued → scheduled wait, in ticks.
+    pub fn queue_ticks(&self) -> u64 {
+        match (self.queued, self.scheduled) {
+            (Some(q), Some(s)) => s.saturating_sub(q),
+            _ => 0,
+        }
+    }
+
+    /// scheduled → delivered decode span, in ticks.
+    pub fn decode_ticks(&self) -> u64 {
+        match (self.scheduled, self.delivered) {
+            (Some(s), Some(d)) => d.saturating_sub(s),
+            _ => 0,
+        }
+    }
+}
+
+fn field_u64(ev: &Value, key: &str) -> anyhow::Result<u64> {
+    ev.get(key)
+        .and_then(|v| v.as_f64())
+        .map(|x| x as u64)
+        .ok_or_else(|| anyhow::anyhow!("trace event missing numeric field {key:?}"))
+}
+
+fn field_str(ev: &Value, key: &str) -> anyhow::Result<String> {
+    ev.get(key)
+        .and_then(|v| v.as_str())
+        .map(str::to_string)
+        .ok_or_else(|| anyhow::anyhow!("trace event missing string field {key:?}"))
+}
+
+/// Flatten every trace in an `otaro.trace.v1` snapshot to waterfalls.
+pub fn waterfalls(snapshot: &Value) -> anyhow::Result<Vec<Waterfall>> {
+    let traces = snapshot
+        .get("traces")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("snapshot has no traces array"))?;
+    let mut out = Vec::with_capacity(traces.len());
+    for tr in traces {
+        let mut w = Waterfall {
+            req: field_u64(tr, "req")?,
+            complete: tr.get("complete").and_then(|v| v.as_bool()).unwrap_or(false),
+            ..Waterfall::default()
+        };
+        let events = tr
+            .get("events")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("trace has no events array"))?;
+        for ev in events {
+            let tick = field_u64(ev, "tick")?;
+            match field_str(ev, "kind")?.as_str() {
+                "admitted" => w.admitted = tick,
+                "queued" => w.queued = w.queued.or(Some(tick)),
+                "scheduled" => w.scheduled = w.scheduled.or(Some(tick)),
+                "decode_step" => {
+                    w.first_decode = w.first_decode.or(Some(tick));
+                    w.decode_steps += 1;
+                }
+                "delivered" => w.delivered = w.delivered.or(Some(tick)),
+                "shed" => w.shed_reason = Some(field_str(ev, "reason")?),
+                _ => {}
+            }
+        }
+        out.push(w);
+    }
+    Ok(out)
+}
+
+/// Span-derived per-rung decode-step totals: how many `decode_step`
+/// events each width carries across the whole snapshot.
+pub fn span_rung_tokens(snapshot: &Value) -> anyhow::Result<BTreeMap<u8, u64>> {
+    let traces = snapshot
+        .get("traces")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("snapshot has no traces array"))?;
+    let mut by_width: BTreeMap<u8, u64> = BTreeMap::new();
+    for tr in traces {
+        let events = tr
+            .get("events")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("trace has no events array"))?;
+        for ev in events {
+            if ev.get("kind").and_then(|v| v.as_str()) == Some("decode_step") {
+                let width = field_u64(ev, "width")? as u8;
+                *by_width.entry(width).or_insert(0) += 1;
+            }
+        }
+    }
+    Ok(by_width)
+}
+
+/// `(tick, demote?, from-width)` for every policy decision in the
+/// snapshot, plus `(tick, width)` for every injected event.
+fn decision_and_injection_ticks(
+    snapshot: &Value,
+) -> anyhow::Result<(Vec<(u64, bool, u8)>, Vec<(u64, u8)>)> {
+    let mut decisions = Vec::new();
+    let traces = snapshot
+        .get("traces")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("snapshot has no traces array"))?;
+    for tr in traces {
+        let events = tr
+            .get("events")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("trace has no events array"))?;
+        for ev in events {
+            if ev.get("kind").and_then(|v| v.as_str()) == Some("policy_decision") {
+                decisions.push((
+                    field_u64(ev, "tick")?,
+                    field_str(ev, "move")? == "demote",
+                    field_u64(ev, "from")? as u8,
+                ));
+            }
+        }
+    }
+    let mut injections = Vec::new();
+    let injected = snapshot
+        .get("injected")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("snapshot has no injected array"))?;
+    for ev in injected {
+        injections.push((field_u64(ev, "tick")?, field_u64(ev, "width")? as u8));
+    }
+    Ok((decisions, injections))
+}
+
+/// Replay `sc` with tracing + injection, asserting the span invariants.
+pub fn run_traced(sc: &Scenario, plan: LatencyPlan) -> anyhow::Result<TracedReport> {
+    let cfg = traced_config(sc);
+    let injected_rungs: Vec<u8> =
+        plan.rules.iter().filter_map(|r| r.precision.map(|p| p.m())).collect();
+    let backend =
+        InjectedBackend::new(SimBackend::new(cfg.max_batch, 16, 256).with_quality_model(1e-4), plan);
+    let batcher = DynamicBatcher::new(cfg.max_batch, cfg.queue_cap)
+        .with_policy(SchedPolicy::from_config(&cfg));
+    let router = Router::from_config(cfg.clone());
+    let mut server = Server::new(backend, sim_ladder(), router, batcher)
+        .with_seed(sc.seed)
+        .with_tracer(Tracer::new(1024, 32));
+
+    let trace_in = generate(sc);
+    let total: u64 = trace_in.iter().map(|t| t.len() as u64).sum();
+    for events in &trace_in {
+        for ev in events {
+            let ok = server.submit(ev.req.clone());
+            // valid requests may still shed under backpressure; only the
+            // malformed ones have a fixed expected outcome
+            anyhow::ensure!(
+                !(ok && ev.expect_invalid),
+                "scenario {}: malformed request {} was admitted",
+                sc.name,
+                ev.req.id
+            );
+        }
+        server.process_all()?;
+    }
+
+    let metrics = server.metrics_snapshot();
+    let stats = server.stats();
+    let snap = server
+        .trace_snapshot()
+        .ok_or_else(|| anyhow::anyhow!("tracing was on; snapshot must exist"))?;
+
+    macro_rules! check {
+        ($name:literal, $cond:expr) => {
+            anyhow::ensure!(
+                $cond,
+                "scenario {}: traced invariant {} violated ({})",
+                sc.name,
+                $name,
+                stringify!($cond)
+            );
+        };
+    }
+
+    check!("conservation", stats.served + stats.rejected + stats.invalid == total);
+    // the ring must hold the whole run — a dropped or truncated trace
+    // would silently break the span/counter cross-checks below
+    let dropped = snap.get("dropped").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+    let truncated = snap.get("truncated_events").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+    check!("no-dropped-traces", dropped == 0.0 && truncated == 0.0);
+
+    let falls = waterfalls(&snap)?;
+    check!("one-trace-per-request", falls.len() as u64 == total);
+    let delivered = falls.iter().filter(|w| w.delivered.is_some()).count() as u64;
+    let shed = falls.iter().filter(|w| w.shed_reason.is_some()).count() as u64;
+    check!("delivered-spans-match-served", delivered == stats.served);
+    check!("shed-spans-carry-reasons", shed == stats.rejected + stats.invalid);
+    for w in &falls {
+        check!("all-spans-terminal", w.complete);
+        if let Some(d) = w.delivered {
+            let q = w.queued.unwrap_or(0);
+            let s = w.scheduled.unwrap_or(0);
+            let f = w.first_decode.unwrap_or(0);
+            check!(
+                "delivered-spans-well-nested",
+                w.admitted <= q && q <= s && s <= f && f <= d
+            );
+        }
+    }
+
+    // spans vs registry: per-rung decode_step events must equal the
+    // serve.rung.*.tokens counters EXACTLY (probe re-scoring steps
+    // appear in neither)
+    let from_spans = span_rung_tokens(&snap)?;
+    let from_registry: BTreeMap<u8, u64> =
+        server.metrics().tokens_per_precision().iter().map(|&(p, n)| (p.m(), n)).collect();
+    check!("span-rung-tokens-match-registry", from_spans == from_registry);
+
+    // every demotion of an injected rung must be *explained*: an
+    // injected latency event on that rung strictly before the decision
+    let (decisions, injections) = decision_and_injection_ticks(&snap)?;
+    for &(tick, demote, from) in &decisions {
+        if demote && injected_rungs.contains(&from) {
+            check!(
+                "demotes-explained-by-injection",
+                injections.iter().any(|&(it, iw)| iw == from && it < tick)
+            );
+        }
+    }
+
+    Ok(TracedReport {
+        name: sc.name,
+        served: stats.served,
+        shed: stats.rejected,
+        invalid: stats.invalid,
+        demotions: stats.demotions,
+        promotions: stats.promotions,
+        trace: snap,
+        metrics,
+    })
+}
+
+/// `otaro trace` entry point: traced replay of one scenario (default
+/// burst-storm), waterfall summaries on stdout, optional snapshot and
+/// dashboard artifacts.
+pub fn trace_cli(
+    scenario: Option<String>,
+    out: Option<PathBuf>,
+    dashboard_out: Option<PathBuf>,
+) -> anyhow::Result<()> {
+    let all = catalog();
+    let name = scenario.unwrap_or_else(|| "burst-storm".to_string());
+    let Some(sc) = all.iter().find(|s| s.name == name.as_str()).cloned() else {
+        let known: Vec<&str> = all.iter().map(|s| s.name).collect();
+        anyhow::bail!("unknown scenario {name:?}; known: {}", known.join(", "));
+    };
+
+    println!("tracing {:<24} {}", sc.name, sc.description);
+    let rep = run_traced(&sc, default_plan())?;
+    println!(
+        "  served {} / shed {} / invalid {} — demotions {} promotions {}",
+        rep.served, rep.shed, rep.invalid, rep.demotions, rep.promotions
+    );
+    if sc.kind == Kind::BurstStorm {
+        // the acceptance contract: the injected E5M4 latency must force
+        // at least one traced, explained demotion under the storm
+        anyhow::ensure!(
+            rep.demotions >= 1,
+            "burst-storm with the default plan must demote at least once"
+        );
+    }
+
+    let falls = waterfalls(&rep.trace)?;
+    let served: Vec<&Waterfall> = falls.iter().filter(|w| w.delivered.is_some()).collect();
+
+    // per-request waterfall: slowest-N by admitted → delivered ticks
+    let mut slowest = served.clone();
+    slowest.sort_by_key(|w| (std::cmp::Reverse(w.total_ticks()), w.req));
+    println!("  slowest requests (logical ticks):");
+    println!("    {:>6} {:>7} {:>7} {:>7} {:>6}", "req", "total", "queue", "decode", "steps");
+    for w in slowest.iter().take(5) {
+        println!(
+            "    {:>6} {:>7} {:>7} {:>7} {:>6}",
+            w.req,
+            w.total_ticks(),
+            w.queue_ticks(),
+            w.decode_ticks(),
+            w.decode_steps
+        );
+    }
+
+    // per-rung decode-step histogram from spans, cross-checked exactly
+    // against the registry counters inside run_traced
+    let by_rung = span_rung_tokens(&rep.trace)?;
+    println!("  per-rung decode steps (spans == registry):");
+    for (width, steps) in &by_rung {
+        println!("    e5m{width}: {steps}");
+    }
+    let sheds: BTreeMap<String, u64> =
+        falls.iter().filter_map(|w| w.shed_reason.clone()).fold(BTreeMap::new(), |mut m, r| {
+            *m.entry(r).or_insert(0) += 1;
+            m
+        });
+    for (reason, count) in &sheds {
+        println!("  shed[{reason}]: {count}");
+    }
+
+    if let Some(path) = out {
+        std::fs::write(&path, format!("{}\n", rep.trace))?;
+        println!("wrote trace snapshot {}", path.display());
+    }
+    if let Some(path) = dashboard_out {
+        let spec = crate::obs::dashboard(&rep.metrics);
+        std::fs::write(&path, format!("{spec}\n"))?;
+        println!("wrote dashboard spec {}", path.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn storm(ticks: usize) -> Scenario {
+        let sc = catalog()
+            .into_iter()
+            .find(|s| s.kind == Kind::BurstStorm)
+            .unwrap_or_else(|| unreachable!("catalog always has a storm"));
+        Scenario { ticks, ..sc }
+    }
+
+    #[test]
+    fn traced_storm_holds_span_invariants() {
+        let rep = run_traced(&storm(5), default_plan()).unwrap();
+        assert!(rep.served > 0);
+        assert!(rep.shed > 0, "a storm tick must overrun the queue");
+        // shed spans carry machine-readable reasons
+        let falls = waterfalls(&rep.trace).unwrap();
+        assert!(falls
+            .iter()
+            .filter_map(|w| w.shed_reason.as_deref())
+            .all(|r| r == "queue_full"));
+    }
+
+    #[test]
+    fn empty_plan_still_traces() {
+        let rep = run_traced(&storm(5), LatencyPlan::none()).unwrap();
+        let injected = rep.trace.get("injected").and_then(|v| v.as_arr()).unwrap();
+        assert!(injected.is_empty(), "no plan, no injected events");
+    }
+
+    #[test]
+    fn default_plan_targets_the_understanding_rung() {
+        let plan = default_plan();
+        assert_eq!(plan.rules.len(), 1);
+        assert_eq!(plan.rules[0].precision, Some(Precision::of(4)));
+        assert!(plan.rules[0].delay_ms as f64 > ServeConfig::default().policy.slo_p95_ms);
+        assert!(plan.max_retries > 0, "storm faults must be absorbed, not surfaced");
+    }
+}

@@ -147,6 +147,51 @@ fn obs_and_workload_are_request_path_scoped() {
 }
 
 #[test]
+fn tracing_and_trend_gate_modules_inherit_the_path_rules() {
+    // the tracer, the injector and the traced replay driver all sit on
+    // the request path (PR 8): panics and hash collections are banned
+    for module in ["obs/trace.rs", "obs/inject.rs", "obs/dashboard.rs", "workload/traced.rs"] {
+        assert_eq!(rules_hit(module, "x.unwrap();\n"), ["request-path-no-panic"], "{module}");
+        assert_eq!(
+            rules_hit(module, "use std::collections::HashMap;\n"),
+            ["decision-path-determinism"],
+            "{module}"
+        );
+    }
+    // the bench-diff gate decides CI pass/fail: same contract, scoped to
+    // the diff module alone — the bench RUNNER may keep its own idioms
+    assert_eq!(rules_hit("benchutil/diff.rs", "x.expect(\"file\");\n"), ["request-path-no-panic"]);
+    assert_eq!(
+        rules_hit("benchutil/diff.rs", "let m: HashMap<String, f64> = HashMap::new();\n"),
+        ["decision-path-determinism"]
+    );
+    assert!(rules_hit("benchutil/mod.rs", "x.unwrap();\n").is_empty());
+    assert!(rules_hit("benchutil/mod.rs", "use std::collections::HashMap;\n").is_empty());
+}
+
+#[test]
+fn tracer_record_path_fits_a_no_alloc_region() {
+    // the shape of Tracer's record path: ring-index arithmetic, a linear
+    // scan, and pushes into pre-reserved buffers — all legal in-region
+    let record = "\
+// lint: region(no_alloc)
+self.tick += 1;
+self.next = (self.next + 1) % self.slots.len();
+let slot = self.slots.iter_mut().find(|s| s.used && s.req == req);
+slot.events.push(rec);
+// lint: end_region
+";
+    assert!(rules_hit("obs/trace.rs", record).is_empty());
+    // ...but snapshot-style allocation inside the region would fire
+    let alloc = "\
+// lint: region(no_alloc)
+let events = slot.events.to_vec();
+// lint: end_region
+";
+    assert_eq!(rules_hit("obs/trace.rs", alloc), ["hot-loop-no-alloc"]);
+}
+
+#[test]
 fn reader_arithmetic_must_be_checked() {
     let src = "let end = data_off + data_len;\n";
     assert_eq!(rules_hit("artifact/reader.rs", src), ["untrusted-checked-arith"]);

@@ -1,0 +1,213 @@
+//! Integration tests for the request-lifecycle tracing plane (PR 8):
+//! byte-identical traced runs under injection, well-nested spans with
+//! machine-readable shed reasons, span-vs-registry decode accounting,
+//! and ring-overflow semantics — the contracts ISSUE acceptance pins.
+
+use otaro::config::ServeConfig;
+use otaro::json::Value;
+use otaro::obs::{EventKind, ShedReason, TraceSink, Tracer};
+use otaro::runtime::ParamStore;
+use otaro::sefp::Precision;
+use otaro::serve::{
+    DynamicBatcher, PrecisionLadder, Request, Router, SchedPolicy, Server, SimBackend, TaskClass,
+};
+use otaro::workload::traced::{span_rung_tokens, waterfalls};
+use otaro::workload::{catalog, default_plan, run_traced, Kind, Scenario};
+
+fn storm() -> Scenario {
+    catalog().into_iter().find(|s| s.kind == Kind::BurstStorm).expect("catalog has a storm")
+}
+
+/// Every `policy_decision` in the snapshot as `(tick, demote?, from-width)`.
+fn decisions(snap: &Value) -> Vec<(u64, bool, u8)> {
+    let mut out = Vec::new();
+    for tr in snap.get("traces").and_then(|v| v.as_arr()).expect("traces") {
+        for ev in tr.get("events").and_then(|v| v.as_arr()).expect("events") {
+            if ev.get("kind").and_then(|v| v.as_str()) == Some("policy_decision") {
+                out.push((
+                    ev.get("tick").and_then(|v| v.as_f64()).expect("tick") as u64,
+                    ev.get("move").and_then(|v| v.as_str()) == Some("demote"),
+                    ev.get("from").and_then(|v| v.as_f64()).expect("from") as u8,
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Every global injected event as `(tick, width)`.
+fn injections(snap: &Value) -> Vec<(u64, u8)> {
+    snap.get("injected")
+        .and_then(|v| v.as_arr())
+        .expect("injected")
+        .iter()
+        .map(|ev| {
+            (
+                ev.get("tick").and_then(|v| v.as_f64()).expect("tick") as u64,
+                ev.get("width").and_then(|v| v.as_f64()).expect("width") as u8,
+            )
+        })
+        .collect()
+}
+
+/// The ISSUE acceptance run: burst-storm under the default injection
+/// plan, twice — snapshots byte-identical, at least one demotion, and
+/// the first E5M4 demote strictly preceded by an injected E5M4
+/// violation in the same trace timeline.
+#[test]
+fn storm_traces_are_byte_identical_and_demotes_are_explained() {
+    let sc = storm();
+    let a = run_traced(&sc, default_plan()).expect("first traced run");
+    let b = run_traced(&sc, default_plan()).expect("second traced run");
+    assert_eq!(
+        a.trace.to_string(),
+        b.trace.to_string(),
+        "same (scenario, seed, plan) must produce byte-identical otaro.trace.v1 snapshots"
+    );
+    assert_eq!(a.trace.get("dropped").and_then(|v| v.as_f64()), Some(0.0));
+    assert!(a.demotions >= 1, "injected E5M4 latency must force at least one demotion");
+
+    let demotes: Vec<(u64, u8)> =
+        decisions(&a.trace).into_iter().filter(|&(_, d, _)| d).map(|(t, _, w)| (t, w)).collect();
+    assert!(!demotes.is_empty(), "stats.demotions >= 1 implies traced demote events");
+    let injected = injections(&a.trace);
+    for &(tick, width) in demotes.iter().filter(|&&(_, w)| w == 4) {
+        assert!(
+            injected.iter().any(|&(it, iw)| iw == 4 && it < tick),
+            "E5M4 demote at tick {tick} (width {width}) has no earlier injected violation"
+        );
+    }
+}
+
+/// Span-derived per-rung decode-step totals must equal the registry's
+/// `serve.rung.*.tokens` counters EXACTLY — checked here against the
+/// raw metrics snapshot, independently of run_traced's internal check.
+#[test]
+fn span_decode_totals_match_registry_counters_exactly() {
+    let sc = Scenario { ticks: 8, ..storm() };
+    let rep = run_traced(&sc, default_plan()).expect("traced run");
+    let by_width = span_rung_tokens(&rep.trace).expect("span totals");
+    assert!(!by_width.is_empty(), "a storm serves tokens at some rung");
+    let counters = rep
+        .metrics
+        .get("counters")
+        .and_then(|v| v.as_obj())
+        .expect("metrics snapshot has counters");
+    for (&width, &steps) in &by_width {
+        let name = format!("serve.rung.e5m{width}.tokens");
+        let counted = counters.get(&name).and_then(|v| v.as_f64());
+        assert_eq!(counted, Some(steps as f64), "{name} disagrees with the spans");
+    }
+    // and no rung counter carries tokens the spans never saw
+    for (name, v) in counters {
+        if let Some(width) = name.strip_prefix("serve.rung.e5m").and_then(|r| {
+            r.strip_suffix(".tokens").and_then(|w| w.parse::<u8>().ok())
+        }) {
+            let spans = by_width.get(&width).copied().unwrap_or(0) as f64;
+            assert_eq!(v.as_f64(), Some(spans), "{name} has tokens with no decode_step spans");
+        }
+    }
+}
+
+fn tiny_ladder() -> PrecisionLadder {
+    let params = ParamStore {
+        tensors: vec![vec![0.25; 64]],
+        names: vec!["w".into()],
+        shapes: vec![vec![8, 8]],
+        quantized: vec![true],
+    };
+    PrecisionLadder::from_params(&params)
+}
+
+fn tiny_server(queue_cap: usize) -> Server<SimBackend> {
+    // the ladder carries a rung ABOVE the E5M8 master: a forced E5M10
+    // passes routing as an exact rung and must hit the submit-time
+    // above-master guard (with the default ladder it would just snap
+    // down to 8 and be admitted)
+    let cfg = ServeConfig {
+        max_batch: 2,
+        queue_cap,
+        ladder: vec![Precision::of(10), Precision::of(8), Precision::of(6), Precision::of(4)],
+        ..ServeConfig::default()
+    };
+    let batcher =
+        DynamicBatcher::new(cfg.max_batch, cfg.queue_cap).with_policy(SchedPolicy::from_config(&cfg));
+    Server::new(SimBackend::new(2, 8, 64), tiny_ladder(), Router::from_config(cfg), batcher)
+        .with_seed(11)
+        .with_tracer(Tracer::new(8, 16))
+}
+
+/// Each admission failure mode leaves a distinct machine-readable shed
+/// reason, and delivered requests leave well-nested span chains.
+#[test]
+fn shed_reasons_and_span_nesting_on_a_real_server() {
+    let mut server = tiny_server(2);
+    // invalid: empty prompt
+    assert!(!server.submit(Request::new(1, TaskClass::Generation, vec![])));
+    // invalid: forced precision above the E5M8 master
+    assert!(!server.submit(
+        Request::new(2, TaskClass::Generation, vec![5, 6]).with_precision(Precision::of(10))
+    ));
+    // two valid fill the cap-2 queue; the third sheds by backpressure
+    assert!(server.submit(Request::new(3, TaskClass::Generation, vec![5, 6])));
+    assert!(server.submit(Request::new(4, TaskClass::Understanding, vec![7])));
+    assert!(!server.submit(Request::new(5, TaskClass::Other, vec![8])));
+    let responses = server.process_all().expect("decode");
+    assert_eq!(responses.len(), 2);
+
+    let snap = server.trace_snapshot().expect("tracing is on");
+    let falls = waterfalls(&snap).expect("waterfalls");
+    assert_eq!(falls.len(), 5, "one trace per submitted request");
+    let reason = |id: u64| {
+        falls
+            .iter()
+            .find(|w| w.req == id)
+            .and_then(|w| w.shed_reason.clone())
+            .unwrap_or_else(|| panic!("request {id} has no shed reason"))
+    };
+    assert_eq!(reason(1), "invalid_prompt");
+    assert_eq!(reason(2), "precision_above_master");
+    assert_eq!(reason(5), "queue_full");
+    for id in [3u64, 4] {
+        let w = falls.iter().find(|w| w.req == id).expect("delivered trace");
+        assert!(w.complete, "delivered trace {id} is terminal");
+        let (q, s) = (w.queued.expect("queued"), w.scheduled.expect("scheduled"));
+        let (f, d) = (w.first_decode.expect("decode"), w.delivered.expect("delivered"));
+        assert!(
+            w.admitted <= q && q < s && s < f && f <= d,
+            "request {id}: admitted {} / queued {q} / scheduled {s} / decode {f} / delivered {d}",
+            w.admitted
+        );
+    }
+    // every shed trace is terminal too
+    for w in &falls {
+        assert!(w.complete, "request {} left a dangling span", w.req);
+    }
+}
+
+/// Ring overflow evicts the OLDEST trace as a whole — a snapshot never
+/// shows a partial suffix of an evicted request — and counts the drop.
+#[test]
+fn ring_overflow_drops_oldest_whole_traces_and_counts() {
+    let mut t = Tracer::new(2, 8);
+    for req in 1u64..=4 {
+        t.event(req, EventKind::Admitted { class: TaskClass::Other });
+        t.event(req, EventKind::Queued { precision: Precision::of(6), depth: 1 });
+        t.event(req, EventKind::Delivered { tokens: 1 });
+    }
+    assert_eq!(t.dropped(), 2, "two of four traces evicted from a 2-slot ring");
+    let snap = t.snapshot_value();
+    assert_eq!(snap.get("dropped").and_then(|v| v.as_f64()), Some(2.0));
+    let traces = snap.get("traces").and_then(|v| v.as_arr()).expect("traces");
+    let reqs: Vec<f64> =
+        traces.iter().map(|tr| tr.get("req").and_then(|v| v.as_f64()).expect("req")).collect();
+    assert_eq!(reqs, [3.0, 4.0], "survivors are the newest traces, oldest-first");
+    for tr in traces {
+        let events = tr.get("events").and_then(|v| v.as_arr()).expect("events");
+        assert_eq!(events.len(), 3, "surviving traces are whole, never truncated by eviction");
+        assert_eq!(tr.get("complete").and_then(|v| v.as_bool()), Some(true));
+    }
+    // late events for an evicted request are silently dropped
+    t.event(1, EventKind::Shed { reason: ShedReason::QueueFull, precision: None });
+    assert_eq!(t.live_traces(), 2);
+}

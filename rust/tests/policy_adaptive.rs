@@ -221,24 +221,28 @@ fn adaptive_policy_stays_within_ladder_for_any_observation_sequence() {
         let class = *rng.choose(&classes);
         let precision = Precision::of(rng.below(14) as u8 + 1);
         match rng.below(3) {
-            0 => p.observe(&Observation {
-                class,
-                precision,
-                queue_ms: rng.f64() * 100.0,
-                compute_ms: rng.f64() * 100.0,
-                tokens: rng.below(8),
-                queue_depth: rng.below(100),
-            }),
-            1 => p.observe_probe(
-                class,
-                precision,
-                &ProbeResult {
-                    agreement: rng.f64(),
-                    mean_divergence: rng.f64(),
-                    divergence_amplitude: rng.f64(),
-                    positions: rng.below(8),
-                },
-            ),
+            0 => {
+                let _ = p.observe(&Observation {
+                    class,
+                    precision,
+                    queue_ms: rng.f64() * 100.0,
+                    compute_ms: rng.f64() * 100.0,
+                    tokens: rng.below(8),
+                    queue_depth: rng.below(100),
+                });
+            }
+            1 => {
+                let _ = p.observe_probe(
+                    class,
+                    precision,
+                    &ProbeResult {
+                        agreement: rng.f64(),
+                        mean_divergence: rng.f64(),
+                        divergence_amplitude: rng.f64(),
+                        positions: rng.below(8),
+                    },
+                );
+            }
             _ => {
                 let _ = p.decide(class);
             }

@@ -123,6 +123,7 @@ fn shadow_probes_score_real_quantized_logits() {
         let mut l = ladder();
         let mut b = DecoderBackend::from_ladder(&l, 2, 8, 1).unwrap();
         let task = ProbeTask {
+            id: 0,
             class: TaskClass::Understanding,
             precision: Precision::of(4),
             context: vec![1, 2, 3, 4, 5, 6],
