@@ -274,6 +274,60 @@ mod tests {
         assert!(rep.gate(f64::INFINITY).is_err());
     }
 
+    /// A soak record as `run_soak` emits it: `det` embedding the flight
+    /// recorder's deterministic timeline, `wall` carrying `wall_secs`.
+    fn soak_file(demotions_gauge: f64, wall_secs: f64) -> Value {
+        let timeline = json::obj(vec![
+            ("counters", Value::Arr(vec![json::s("serve.served")])),
+            (
+                "frames",
+                Value::Arr(vec![json::obj(vec![
+                    ("c", Value::Arr(vec![json::n(7.0)])),
+                    ("g", Value::Arr(vec![json::n(demotions_gauge)])),
+                    ("tick", json::n(3.0)),
+                ])]),
+            ),
+            ("frames_dropped", json::n(0.0)),
+            ("gauges", Value::Arr(vec![json::s("policy.demotions")])),
+            (
+                "marks",
+                Value::Arr(vec![json::obj(vec![
+                    ("label", json::s("flip: policy_toggle")),
+                    ("tick", json::n(2.0)),
+                ])]),
+            ),
+            ("schema", json::s("otaro.flight.v1")),
+        ]);
+        json::obj(vec![
+            ("schema", json::s("otaro.bench.v1")),
+            ("bench", json::s("soak")),
+            (
+                "records",
+                Value::Arr(vec![json::obj(vec![
+                    ("name", json::s("soak-storm-flips")),
+                    ("det", json::obj(vec![("served", json::n(7.0)), ("timeline", timeline)])),
+                    ("wall", json::obj(vec![("wall_secs", json::n(wall_secs))])),
+                ])]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn soak_records_gate_their_embedded_timeline_byte_exact() {
+        // identical timelines, wall jitter only: passes a generous gate
+        let rep = diff(&soak_file(2.0, 1.0), &soak_file(2.0, 1.3)).unwrap();
+        assert!(rep.det_mismatches.is_empty());
+        assert_eq!(rep.slowdowns.len(), 1);
+        assert_eq!(rep.slowdowns[0].metric, "wall_secs");
+        rep.gate(50.0).unwrap();
+        // one gauge value inside one frame differs: det gate trips even
+        // with infinite wall tolerance — timeline drift is a behavior
+        // change, not noise
+        let rep = diff(&soak_file(2.0, 1.0), &soak_file(3.0, 1.0)).unwrap();
+        assert_eq!(rep.det_mismatches, vec!["soak-storm-flips".to_string()]);
+        assert!(rep.gate(f64::INFINITY).is_err());
+    }
+
     #[test]
     fn missing_records_fail_and_added_records_pass() {
         let empty = json::obj(vec![

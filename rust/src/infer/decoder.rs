@@ -18,6 +18,7 @@
 //! hot loop performs no heap allocation.
 
 use crate::data::Rng;
+use crate::obs::profile::{Stage, StageRecorder};
 use crate::sefp::{Precision, SefpSpec, GROUP_SIZE};
 
 use super::kv_cache::KvCache;
@@ -159,6 +160,9 @@ pub struct DecoderSim {
     /// single-row prompt prefill steps executed (obs gauge:
     /// `backend.sim_prefill_steps`)
     pub prefill_steps: u64,
+    /// stage timer sink (disabled by default — zero timestamps taken);
+    /// the serve backend drains it via `LogitsBackend::take_profile`
+    pub profile: StageRecorder,
 }
 
 fn rand_dense(rng: &mut Rng, in_dim: usize, out_dim: usize) -> DenseLinear {
@@ -216,6 +220,7 @@ impl DecoderSim {
             scratch,
             steps: 0,
             prefill_steps: 0,
+            profile: StageRecorder::disabled(),
         }
     }
 
@@ -279,6 +284,7 @@ impl DecoderSim {
             scratch,
             steps: 0,
             prefill_steps: 0,
+            profile: StageRecorder::disabled(),
         })
     }
 
@@ -383,6 +389,7 @@ impl DecoderSim {
     fn step_rows(&mut self, x: &mut [f32], active: Option<&[bool]>) -> f32 {
         // lint: region(no_alloc)
         self.steps += 1;
+        let t0 = if self.profile.enabled() { Some(std::time::Instant::now()) } else { None };
         let d = self.cfg.d_model;
         let bsz = self.batch;
         let threads = self.threads;
@@ -443,6 +450,9 @@ impl DecoderSim {
                 checksum += logits[b * self.cfg.vocab];
             }
         }
+        if let (Some(t0), Some(p)) = (t0, self.quant_precision) {
+            self.profile.record(Stage::Matmul, p, t0.elapsed().as_secs_f64() * 1e3);
+        }
         checksum
         // lint: end_region
     }
@@ -455,6 +465,7 @@ impl DecoderSim {
     pub fn prefill_row_step(&mut self, b: usize, x: &mut [f32]) {
         // lint: region(no_alloc)
         self.prefill_steps += 1;
+        let t0 = if self.profile.enabled() { Some(std::time::Instant::now()) } else { None };
         let d = self.cfg.d_model;
         let f = self.cfg.d_ff;
         let bsz = self.batch;
@@ -487,6 +498,9 @@ impl DecoderSim {
             for (xv, bv) in x.iter_mut().zip(&buf_d[r0..r1]) {
                 *xv = 0.9 * *xv + 0.1 * bv.tanh();
             }
+        }
+        if let (Some(t0), Some(p)) = (t0, self.quant_precision) {
+            self.profile.record(Stage::Prefill, p, t0.elapsed().as_secs_f64() * 1e3);
         }
         // lint: end_region
     }

@@ -45,6 +45,13 @@ COMMANDS:
              injection plan; prints per-request waterfalls and per-rung
              decode histograms, optionally writes the otaro.trace.v1
              snapshot and the otaro.dashboard.v1 spec)
+  soak       [--scenario NAME] [--config FILE.json] [--out FILE]
+             (long-horizon soak: a catalog scenario stretched ~10x with
+             mid-trace config flips — ladder budget re-cap, SLO tighten,
+             policy toggle — and latency injection, sampled into a
+             flight-recorder timeline whose drift invariants are
+             asserted; --config replaces the built-in soak with a JSON
+             spec; writes BENCH_soak.json unless --out overrides)
   bench-diff BASELINE.json CANDIDATE.json [--fail-on-regression PCT]
              (compare two otaro.bench.v1 files: det sections must be
              byte-identical, wall medians within PCT; without the flag
@@ -197,6 +204,13 @@ fn main() -> anyhow::Result<()> {
             let dashboard = args.opt("--dashboard").map(PathBuf::from);
             args.finish();
             otaro::workload::trace_cli(scenario, out, dashboard)
+        }
+        "soak" => {
+            let scenario = args.opt("--scenario");
+            let config = args.opt("--config").map(PathBuf::from);
+            let out = args.opt("--out").map(PathBuf::from);
+            args.finish();
+            otaro::workload::soak_cli(scenario, config, out)
         }
         "bench-diff" => {
             let fail_pct = args.opt("--fail-on-regression").map(|v| {

@@ -13,6 +13,14 @@
 //! The pattern follows the sequencer-style `dashboard_definitions`
 //! approach named in the ROADMAP: dashboards are build artifacts derived
 //! from the code's own metric registrations, never hand-synced.
+//!
+//! [`timeline_dashboard`] is the time-axis counterpart: it takes an
+//! `otaro.flight.v1` timeline (from
+//! [`FlightRecorder`](super::FlightRecorder)) instead of a point-in-time
+//! snapshot and emits per-frame series panels — queue depth, per-rung
+//! tokens per frame, and per-rung stage p95s estimated from the frame's
+//! histogram bucket deltas — with the timeline's marks passed through so
+//! a renderer can pin config flips onto the time axis.
 
 use crate::json::{arr, n, obj, s, Value};
 
@@ -22,7 +30,7 @@ fn row_for(name: &str) -> String {
         let rung = rest.split('.').next().unwrap_or(rest);
         return format!("rung {rung}");
     }
-    for prefix in ["serve", "policy", "ladder", "backend"] {
+    for prefix in ["serve", "profile", "policy", "ladder", "backend"] {
         if name.starts_with(prefix) && name[prefix.len()..].starts_with('.') {
             return prefix.to_string();
         }
@@ -60,7 +68,7 @@ pub fn dashboard(snapshot: &Value) -> Value {
     let mut order: Vec<String> = vec!["serve".to_string()];
     order.extend(rung_rows);
     order.extend(
-        ["policy", "ladder", "backend", "other"].into_iter().map(str::to_string),
+        ["profile", "policy", "ladder", "backend", "other"].into_iter().map(str::to_string),
     );
 
     let rows: Vec<Value> = order
@@ -92,6 +100,127 @@ pub fn dashboard(snapshot: &Value) -> Value {
         ("schema", s("otaro.dashboard.v1")),
         ("title", s("otaro serve")),
         ("panels_total", n(panels.len() as f64)),
+    ])
+}
+
+/// Estimated p95 of one frame's observations: the smallest bucket bound
+/// covering 95% of the frame's count deltas.  The overflow bucket
+/// reports the top bound — the histogram cannot resolve beyond it — and
+/// an empty frame reports 0.
+fn p95_from_deltas(bounds: &[f64], buckets: &[u64]) -> f64 {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let need = (total * 95).div_ceil(100);
+    let mut cum = 0u64;
+    for (i, &b) in buckets.iter().enumerate() {
+        cum += b;
+        if cum >= need {
+            return bounds.get(i).or(bounds.last()).copied().unwrap_or(0.0);
+        }
+    }
+    bounds.last().copied().unwrap_or(0.0)
+}
+
+fn index_of(names: &[Value], want: &str) -> Option<usize> {
+    names.iter().position(|v| v.as_str() == Some(want))
+}
+
+/// Build a deterministic `otaro.timeline_dashboard.v1` spec from an
+/// `otaro.flight.v1` timeline: one tick axis, per-frame series panels
+/// (queue depth, per-rung tokens/frame from counter deltas, per-rung
+/// stage p95s from histogram bucket deltas — the latter only when the
+/// timeline carries its histogram planes, i.e. the full timeline, not
+/// the det subset), and the timeline's marks passed through verbatim.
+pub fn timeline_dashboard(timeline: &Value) -> Value {
+    let frames = timeline.get("frames").and_then(|v| v.as_arr()).unwrap_or(&[]);
+    let gauges = timeline.get("gauges").and_then(|v| v.as_arr()).unwrap_or(&[]);
+    let counters = timeline.get("counters").and_then(|v| v.as_arr()).unwrap_or(&[]);
+    let histos = timeline.get("histograms").and_then(|v| v.as_arr()).unwrap_or(&[]);
+
+    let ticks: Vec<Value> = frames
+        .iter()
+        .map(|f| n(f.get("tick").and_then(|t| t.as_f64()).unwrap_or(0.0)))
+        .collect();
+    // one point per frame out of the named plane ("c" counter deltas,
+    // "g" gauge values), zero-filled where a frame is malformed
+    let series_from = |plane: &str, idx: usize| -> Vec<Value> {
+        frames
+            .iter()
+            .map(|f| {
+                let v = f
+                    .get(plane)
+                    .and_then(|p| p.as_arr())
+                    .and_then(|p| p.get(idx))
+                    .and_then(|x| x.as_f64())
+                    .unwrap_or(0.0);
+                n(v)
+            })
+            .collect()
+    };
+
+    let mut panels: Vec<Value> = Vec::new();
+    for (name, title) in
+        [("serve.queue_depth", "queue depth"), ("serve.queue_depth_peak", "queue depth peak")]
+    {
+        if let Some(gi) = index_of(gauges, name) {
+            panels.push(obj(vec![
+                ("metric", s(name)),
+                ("series", arr(series_from("g", gi))),
+                ("title", s(title)),
+                ("type", s("timeseries")),
+            ]));
+        }
+    }
+    // counter frames already carry deltas, so the series IS tokens/frame
+    for (ci, cname) in counters.iter().enumerate() {
+        let Some(name) = cname.as_str() else { continue };
+        let Some(rest) = name.strip_prefix("serve.rung.") else { continue };
+        let Some(rung) = rest.strip_suffix(".tokens") else { continue };
+        panels.push(obj(vec![
+            ("metric", s(name)),
+            ("series", arr(series_from("c", ci))),
+            ("title", s(format!("{rung} tokens/frame"))),
+            ("type", s("timeseries")),
+        ]));
+    }
+    for (hi, h) in histos.iter().enumerate() {
+        let Some(name) = h.get("name").and_then(|x| x.as_str()) else { continue };
+        let Some(rest) = name.strip_prefix("profile.rung.") else { continue };
+        let bounds: Vec<f64> = h
+            .get("bounds")
+            .and_then(|b| b.as_arr())
+            .map(|b| b.iter().filter_map(|x| x.as_f64()).collect())
+            .unwrap_or_default();
+        let series: Vec<Value> = frames
+            .iter()
+            .map(|f| {
+                let buckets: Vec<u64> = f
+                    .get("h")
+                    .and_then(|p| p.as_arr())
+                    .and_then(|p| p.get(hi))
+                    .and_then(|b| b.as_arr())
+                    .map(|b| b.iter().filter_map(|x| x.as_f64()).map(|x| x as u64).collect())
+                    .unwrap_or_default();
+                n(p95_from_deltas(&bounds, &buckets))
+            })
+            .collect();
+        panels.push(obj(vec![
+            ("metric", s(name)),
+            ("series", arr(series)),
+            ("title", s(format!("{} p95", rest.replace('.', " ")))),
+            ("type", s("timeseries")),
+        ]));
+    }
+
+    let marks = timeline.get("marks").cloned().unwrap_or_else(|| Value::Arr(Vec::new()));
+    obj(vec![
+        ("marks", marks),
+        ("panels", arr(panels)),
+        ("schema", s("otaro.timeline_dashboard.v1")),
+        ("ticks", arr(ticks)),
+        ("title", s("otaro soak timeline")),
     ])
 }
 
@@ -147,7 +276,21 @@ mod tests {
         let rows = spec.get("rows").and_then(|v| v.as_arr()).unwrap();
         let titles: Vec<&str> =
             rows.iter().filter_map(|r| r.get("title").and_then(|t| t.as_str())).collect();
-        assert_eq!(titles, ["serve", "rung e5m4", "rung e5m8", "policy", "ladder"]);
+        assert_eq!(titles, ["serve", "rung e5m4", "rung e5m8", "profile", "policy", "ladder"]);
+        // the profile row carries every stage histogram for every rung
+        let profile = rows.iter().find(|r| {
+            r.get("title").and_then(|t| t.as_str()) == Some("profile")
+        });
+        let stage_metrics: Vec<&str> = profile
+            .and_then(|r| r.get("panels"))
+            .and_then(|p| p.as_arr())
+            .unwrap()
+            .iter()
+            .filter_map(|p| p.get("metric").and_then(|m| m.as_str()))
+            .collect();
+        assert_eq!(stage_metrics.len(), 10, "{stage_metrics:?}");
+        assert!(stage_metrics.contains(&"profile.rung.e5m4.matmul_ms"), "{stage_metrics:?}");
+        assert!(stage_metrics.contains(&"profile.rung.e5m8.probe_ms"), "{stage_metrics:?}");
         // each rung row carries its latency histogram and shed counter
         for row in rows {
             let title = row.get("title").and_then(|t| t.as_str()).unwrap();
@@ -170,5 +313,56 @@ mod tests {
     fn empty_snapshot_yields_empty_rows() {
         let spec = dashboard(&Registry::new().snapshot());
         assert_eq!(spec.get("rows").and_then(|v| v.as_arr()).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn golden_timeline_spec_from_a_flight_timeline() {
+        use crate::obs::FlightRecorder;
+        let mut reg = Registry::new();
+        let c = reg.counter("serve.rung.e5m4.tokens");
+        let g = reg.gauge("serve.queue_depth");
+        let h = reg.histogram("profile.rung.e5m4.matmul_ms", &[1.0, 10.0]);
+        let mut fr = FlightRecorder::attach(&reg, 8);
+        fr.mark(0, "flip: policy_toggle");
+        reg.add(c, 3);
+        reg.set(g, 2.0);
+        reg.observe(h, 0.5);
+        reg.observe(h, 0.5);
+        fr.sample(0, &reg);
+        reg.add(c, 4);
+        reg.set(g, 1.0);
+        reg.observe(h, 5.0);
+        fr.sample(1, &reg);
+
+        let spec = timeline_dashboard(&fr.timeline()).to_string();
+        // frame p95s: two sub-1ms observations pin bucket bound 1; the
+        // single 5ms observation pins bound 10
+        let want = concat!(
+            "{\"marks\":[{\"label\":\"flip: policy_toggle\",\"tick\":0}],",
+            "\"panels\":[",
+            "{\"metric\":\"serve.queue_depth\",\"series\":[2,1],\"title\":\"queue depth\",\"type\":\"timeseries\"},",
+            "{\"metric\":\"serve.rung.e5m4.tokens\",\"series\":[3,4],\"title\":\"e5m4 tokens/frame\",\"type\":\"timeseries\"},",
+            "{\"metric\":\"profile.rung.e5m4.matmul_ms\",\"series\":[1,10],\"title\":\"e5m4 matmul_ms p95\",\"type\":\"timeseries\"}",
+            "],",
+            "\"schema\":\"otaro.timeline_dashboard.v1\",",
+            "\"ticks\":[0,1],",
+            "\"title\":\"otaro soak timeline\"}"
+        );
+        assert_eq!(spec, want);
+
+        // the det timeline has no histogram planes: stage panels drop
+        // out, the counter/gauge panels and marks survive
+        let det_spec = timeline_dashboard(&fr.det_timeline());
+        let panels = det_spec.get("panels").and_then(|v| v.as_arr()).unwrap();
+        let metrics: Vec<&str> =
+            panels.iter().filter_map(|p| p.get("metric").and_then(|m| m.as_str())).collect();
+        assert_eq!(metrics, ["serve.queue_depth", "serve.rung.e5m4.tokens"]);
+    }
+
+    #[test]
+    fn empty_timeline_yields_empty_panels() {
+        let spec = timeline_dashboard(&obj(vec![]));
+        assert_eq!(spec.get("panels").and_then(|v| v.as_arr()).unwrap().len(), 0);
+        assert_eq!(spec.get("ticks").and_then(|v| v.as_arr()).unwrap().len(), 0);
     }
 }

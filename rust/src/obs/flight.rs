@@ -1,0 +1,432 @@
+//! The flight recorder: a fixed-capacity ring of periodic delta frames
+//! sampled from a [`Registry`], serializing to a deterministic
+//! `otaro.flight.v1` JSON timeline.
+//!
+//! Point-in-time snapshots (`otaro.metrics.v1`) answer "what is the
+//! state now"; drift — creeping queue depth, ladder-cache churn, slow
+//! agreement decay after a demote — only shows up *over time*.  The
+//! recorder attaches to a registry, freezes the registered metric set,
+//! and on every [`FlightRecorder::sample`] call writes one **delta
+//! frame**:
+//!
+//! * counter deltas since the previous frame (wrapping subtraction —
+//!   counters are monotonic, so a frame's deltas sum back to the final
+//!   counter values when no frames were evicted),
+//! * gauge values at sample time (gauges are last-write-wins levels,
+//!   not rates — deltas would destroy the signal),
+//! * histogram bucket deltas (buckets plus the overflow slot) and the
+//!   delta of the running sum, so per-frame means and tail mass are
+//!   recoverable without storing samples.
+//!
+//! The sampling loop is handle-indexed over the attach-time metric
+//! set inside a `no_alloc` lint region: every frame buffer and every
+//! previous-value array is pre-allocated at attach, so a sample is
+//! pure index arithmetic.  Metrics registered *after* attach are not
+//! sampled (the index range is frozen) — attach after the registry is
+//! fully populated.  When the ring is full the oldest frame is evicted
+//! and counted in `frames_dropped`: the recorder is safe to leave
+//! running for arbitrarily long soaks.
+//!
+//! [`FlightRecorder::mark`] pins a labeled logical tick into the
+//! timeline (config flips, phase boundaries) without consuming a
+//! frame; marks are how the soak harness correlates an applied flip
+//! with the frame-delta inflection it must cause.
+//!
+//! Two serializations: [`FlightRecorder::timeline`] is the full
+//! record; [`FlightRecorder::det_timeline`] drops the histogram planes
+//! (latency histograms carry wall time) and keeps counters + gauges +
+//! marks — the byte-identical-across-seeded-runs artifact the bench
+//! diff gate compares.
+
+use crate::json::{arr, n, obj, s, Value};
+use crate::obs::Registry;
+
+/// Labeled ticks kept per recorder; later marks are counted, not kept.
+pub const MARK_CAP: usize = 64;
+
+/// One sampled delta frame (pre-allocated; rewritten in place when the
+/// ring wraps).
+#[derive(Debug, Clone)]
+struct Frame {
+    tick: u64,
+    /// per-counter delta since the previous frame
+    counters: Vec<u64>,
+    /// per-gauge value at sample time
+    gauges: Vec<f64>,
+    /// per-histogram bucket deltas; the last slot is the overflow bucket
+    histos: Vec<Vec<u64>>,
+    /// per-histogram delta of the running sum of finite samples
+    histo_sums: Vec<f64>,
+}
+
+/// See the module docs.
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    counter_names: Vec<String>,
+    gauge_names: Vec<String>,
+    histo_names: Vec<String>,
+    histo_bounds: Vec<Vec<f64>>,
+    /// cumulative values at the previous sample (deltas are computed
+    /// against these, then they are advanced)
+    prev_counters: Vec<u64>,
+    prev_histos: Vec<Vec<u64>>,
+    prev_histo_sums: Vec<f64>,
+    /// the frame ring, fully pre-allocated at attach
+    frames: Vec<Frame>,
+    /// ring index of the oldest live frame
+    head: usize,
+    /// live frames (≤ ring capacity)
+    len: usize,
+    frames_dropped: u64,
+    marks: Vec<(u64, String)>,
+    marks_dropped: u64,
+}
+
+impl FlightRecorder {
+    /// Attach to `reg`, freezing its current metric set, with room for
+    /// `capacity` frames before the ring starts evicting.
+    pub fn attach(reg: &Registry, capacity: usize) -> Self {
+        assert!(capacity > 0, "flight recorder needs at least one frame");
+        let n_c = reg.n_counters();
+        let n_g = reg.n_gauges();
+        let n_h = reg.n_histos();
+        let counter_names =
+            (0..n_c).map(|i| String::from(reg.counter_name(i).unwrap_or(""))).collect();
+        let gauge_names = (0..n_g).map(|i| String::from(reg.gauge_name(i).unwrap_or(""))).collect();
+        let histo_names = (0..n_h).map(|i| String::from(reg.histo_name(i).unwrap_or(""))).collect();
+        let histo_bounds: Vec<Vec<f64>> = (0..n_h).map(|i| reg.histo_bounds_at(i).to_vec()).collect();
+        let histo_zeros: Vec<Vec<u64>> =
+            histo_bounds.iter().map(|b| vec![0u64; b.len() + 1]).collect();
+        let frame = Frame {
+            tick: 0,
+            counters: vec![0; n_c],
+            gauges: vec![0.0; n_g],
+            histos: histo_zeros.clone(),
+            histo_sums: vec![0.0; n_h],
+        };
+        FlightRecorder {
+            counter_names,
+            gauge_names,
+            histo_names,
+            histo_bounds,
+            prev_counters: vec![0; n_c],
+            prev_histos: histo_zeros,
+            prev_histo_sums: vec![0.0; n_h],
+            frames: vec![frame; capacity],
+            head: 0,
+            len: 0,
+            frames_dropped: 0,
+            marks: Vec::with_capacity(MARK_CAP),
+            marks_dropped: 0,
+        }
+    }
+
+    // The sampling loop: pure index arithmetic over buffers sized at
+    // attach — a soak samples thousands of frames on the serve path and
+    // none of them may allocate.
+    // lint: region(no_alloc)
+    /// Record one delta frame at logical time `tick`, evicting the
+    /// oldest frame (and counting the drop) when the ring is full.
+    pub fn sample(&mut self, tick: u64, reg: &Registry) {
+        let cap = self.frames.len();
+        let slot = if self.len < cap {
+            self.len += 1;
+            (self.head + self.len - 1) % cap
+        } else {
+            let oldest = self.head;
+            self.head = (self.head + 1) % cap;
+            self.frames_dropped += 1;
+            oldest
+        };
+        let frame = &mut self.frames[slot];
+        frame.tick = tick;
+        for i in 0..self.prev_counters.len() {
+            let cur = reg.counter_at(i);
+            frame.counters[i] = cur.wrapping_sub(self.prev_counters[i]);
+            self.prev_counters[i] = cur;
+        }
+        for i in 0..frame.gauges.len() {
+            frame.gauges[i] = reg.gauge_at(i);
+        }
+        for i in 0..self.prev_histos.len() {
+            for b in 0..self.prev_histos[i].len() {
+                let cur = reg.histo_bucket_at(i, b);
+                frame.histos[i][b] = cur.wrapping_sub(self.prev_histos[i][b]);
+                self.prev_histos[i][b] = cur;
+            }
+            let sum = reg.histo_sum_at(i);
+            frame.histo_sums[i] = sum - self.prev_histo_sums[i];
+            self.prev_histo_sums[i] = sum;
+        }
+    }
+    // lint: end_region
+
+    /// Pin a labeled logical tick into the timeline (reporting path —
+    /// bounded by [`MARK_CAP`], overflow is counted, never grows).
+    pub fn mark(&mut self, tick: u64, label: &str) {
+        if self.marks.len() < MARK_CAP {
+            self.marks.push((tick, String::from(label)));
+        } else {
+            self.marks_dropped += 1;
+        }
+    }
+
+    /// Live frames currently in the ring.
+    pub fn frames_len(&self) -> usize {
+        self.len
+    }
+
+    /// Ring capacity in frames.
+    pub fn capacity(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Frames evicted so far.
+    pub fn frames_dropped(&self) -> u64 {
+        self.frames_dropped
+    }
+
+    /// Index of a counter by name in the attach-time set.
+    pub fn counter_index(&self, name: &str) -> Option<usize> {
+        self.counter_names.iter().position(|c| c == name)
+    }
+
+    /// Index of a gauge by name in the attach-time set.
+    pub fn gauge_index(&self, name: &str) -> Option<usize> {
+        self.gauge_names.iter().position(|g| g == name)
+    }
+
+    /// Index of a histogram by name in the attach-time set.
+    pub fn histo_index(&self, name: &str) -> Option<usize> {
+        self.histo_names.iter().position(|h| h == name)
+    }
+
+    fn frame(&self, i: usize) -> Option<&Frame> {
+        if i < self.len {
+            self.frames.get((self.head + i) % self.frames.len())
+        } else {
+            None
+        }
+    }
+
+    /// Logical tick of the `i`-th live frame, oldest first.
+    pub fn frame_tick(&self, i: usize) -> u64 {
+        self.frame(i).map_or(0, |f| f.tick)
+    }
+
+    /// Counter delta recorded by frame `i` for counter index `c`.
+    pub fn counter_delta(&self, i: usize, c: usize) -> u64 {
+        self.frame(i).and_then(|f| f.counters.get(c)).copied().unwrap_or(0)
+    }
+
+    /// Gauge value recorded by frame `i` for gauge index `g`.
+    pub fn gauge_at(&self, i: usize, g: usize) -> f64 {
+        self.frame(i).and_then(|f| f.gauges.get(g)).copied().unwrap_or(0.0)
+    }
+
+    /// Total sample-count delta (all buckets + overflow) recorded by
+    /// frame `i` for histogram index `h`.
+    pub fn histo_count_delta(&self, i: usize, h: usize) -> u64 {
+        self.frame(i)
+            .and_then(|f| f.histos.get(h))
+            .map_or(0, |b| b.iter().sum())
+    }
+
+    /// Sum-of-samples delta recorded by frame `i` for histogram `h`.
+    pub fn histo_sum_delta(&self, i: usize, h: usize) -> f64 {
+        self.frame(i).and_then(|f| f.histo_sums.get(h)).copied().unwrap_or(0.0)
+    }
+
+    fn marks_json(&self) -> Value {
+        Value::Arr(
+            self.marks
+                .iter()
+                .map(|(t, l)| obj(vec![("label", s(l)), ("tick", n(*t as f64))]))
+                .collect(),
+        )
+    }
+
+    fn names_json(names: &[String]) -> Value {
+        arr(names.iter().map(|x| s(x)).collect())
+    }
+
+    /// The full `otaro.flight.v1` timeline: metric name tables, marks,
+    /// drop accounting, and every live frame oldest-first (counters
+    /// `c`, gauges `g`, histogram bucket deltas `h`, sum deltas `hs`).
+    pub fn timeline(&self) -> Value {
+        let mut frames = Vec::with_capacity(self.len);
+        for i in 0..self.len {
+            let Some(f) = self.frame(i) else { continue };
+            frames.push(obj(vec![
+                ("c", arr(f.counters.iter().map(|&v| n(v as f64)).collect())),
+                ("g", arr(f.gauges.iter().map(|&v| n(v)).collect())),
+                (
+                    "h",
+                    Value::Arr(
+                        f.histos
+                            .iter()
+                            .map(|b| arr(b.iter().map(|&v| n(v as f64)).collect()))
+                            .collect(),
+                    ),
+                ),
+                ("hs", arr(f.histo_sums.iter().map(|&v| n(v)).collect())),
+                ("tick", n(f.tick as f64)),
+            ]));
+        }
+        let histograms = Value::Arr(
+            self.histo_names
+                .iter()
+                .zip(&self.histo_bounds)
+                .map(|(name, bounds)| {
+                    obj(vec![
+                        ("bounds", arr(bounds.iter().map(|&b| n(b)).collect())),
+                        ("name", s(name)),
+                    ])
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("counters", Self::names_json(&self.counter_names)),
+            ("frames", Value::Arr(frames)),
+            ("frames_dropped", n(self.frames_dropped as f64)),
+            ("gauges", Self::names_json(&self.gauge_names)),
+            ("histograms", histograms),
+            ("marks", self.marks_json()),
+            ("marks_dropped", n(self.marks_dropped as f64)),
+            ("schema", s("otaro.flight.v1")),
+        ])
+    }
+
+    /// The deterministic subset of [`timeline`](Self::timeline):
+    /// counters, gauges, and marks only.  Histogram planes record wall
+    /// time (stage and queue latencies), so they are excluded — this is
+    /// the byte-identical-across-seeded-runs artifact.
+    pub fn det_timeline(&self) -> Value {
+        let mut frames = Vec::with_capacity(self.len);
+        for i in 0..self.len {
+            let Some(f) = self.frame(i) else { continue };
+            frames.push(obj(vec![
+                ("c", arr(f.counters.iter().map(|&v| n(v as f64)).collect())),
+                ("g", arr(f.gauges.iter().map(|&v| n(v)).collect())),
+                ("tick", n(f.tick as f64)),
+            ]));
+        }
+        obj(vec![
+            ("counters", Self::names_json(&self.counter_names)),
+            ("frames", Value::Arr(frames)),
+            ("frames_dropped", n(self.frames_dropped as f64)),
+            ("gauges", Self::names_json(&self.gauge_names)),
+            ("marks", self.marks_json()),
+            ("schema", s("otaro.flight.v1")),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::MetricSink;
+
+    fn small_registry() -> (Registry, crate::obs::Counter, crate::obs::Gauge, crate::obs::Histo) {
+        let mut r = Registry::new();
+        let c = r.counter("t.count");
+        let g = r.gauge("t.level");
+        let h = r.histogram("t.lat_ms", &[1.0, 10.0]);
+        (r, c, g, h)
+    }
+
+    #[test]
+    fn frames_carry_deltas_not_cumulatives() {
+        let (mut r, c, g, h) = small_registry();
+        let mut fr = FlightRecorder::attach(&r, 8);
+        r.add(c, 3);
+        r.set(g, 5.0);
+        r.observe(h, 0.5);
+        fr.sample(0, &r);
+        r.add(c, 4);
+        r.set(g, 2.0);
+        r.observe(h, 100.0); // overflow bucket
+        fr.sample(1, &r);
+        let ci = fr.counter_index("t.count").unwrap();
+        let gi = fr.gauge_index("t.level").unwrap();
+        let hi = fr.histo_index("t.lat_ms").unwrap();
+        assert_eq!(fr.frames_len(), 2);
+        assert_eq!((fr.counter_delta(0, ci), fr.counter_delta(1, ci)), (3, 4));
+        assert_eq!((fr.gauge_at(0, gi), fr.gauge_at(1, gi)), (5.0, 2.0));
+        assert_eq!((fr.histo_count_delta(0, hi), fr.histo_count_delta(1, hi)), (1, 1));
+        assert_eq!(fr.histo_sum_delta(0, hi), 0.5);
+        // frame-delta sum equals the final counter value
+        let total: u64 = (0..fr.frames_len()).map(|i| fr.counter_delta(i, ci)).sum();
+        assert_eq!(total, r.counter_value(c));
+    }
+
+    #[test]
+    fn ring_overflow_evicts_oldest_and_counts_drops() {
+        let (mut r, c, _g, _h) = small_registry();
+        let mut fr = FlightRecorder::attach(&r, 3);
+        for tick in 0..5 {
+            r.inc(c);
+            fr.sample(tick, &r);
+        }
+        assert_eq!(fr.frames_len(), 3);
+        assert_eq!(fr.frames_dropped(), 2);
+        // the survivors are the three newest frames, oldest first
+        let ticks: Vec<u64> = (0..3).map(|i| fr.frame_tick(i)).collect();
+        assert_eq!(ticks, vec![2, 3, 4]);
+        let v = fr.timeline();
+        assert_eq!(v.get("frames_dropped").and_then(|x| x.as_f64()), Some(2.0));
+    }
+
+    #[test]
+    fn metrics_registered_after_attach_are_invisible() {
+        let (mut r, c, _g, _h) = small_registry();
+        let mut fr = FlightRecorder::attach(&r, 4);
+        let late = r.counter("t.late");
+        r.inc(c);
+        r.add(late, 9);
+        fr.sample(0, &r);
+        assert_eq!(fr.counter_index("t.late"), None);
+        let v = fr.timeline();
+        let names = v.get("counters").and_then(|x| x.as_arr()).unwrap();
+        assert_eq!(names.len(), 1, "attach-time set is frozen: {v}");
+    }
+
+    #[test]
+    fn timelines_serialize_deterministically_and_round_trip() {
+        let build = || {
+            let (mut r, c, g, h) = small_registry();
+            let mut fr = FlightRecorder::attach(&r, 4);
+            for tick in 0..6u64 {
+                r.add(c, tick);
+                r.set(g, tick as f64);
+                r.observe(h, 0.5);
+                fr.sample(tick, &r);
+            }
+            fr.mark(3, "flip: test");
+            (fr.timeline().to_string(), fr.det_timeline().to_string())
+        };
+        let (full_a, det_a) = build();
+        let (full_b, det_b) = build();
+        assert_eq!(full_a, full_b);
+        assert_eq!(det_a, det_b);
+        let v = crate::json::parse(&full_a).unwrap();
+        assert_eq!(v.get("schema").and_then(|x| x.as_str()), Some("otaro.flight.v1"));
+        // det drops the histogram planes but keeps marks
+        let d = crate::json::parse(&det_a).unwrap();
+        assert!(d.get("histograms").is_none());
+        assert!(!det_a.contains("\"h\""));
+        let marks = d.get("marks").and_then(|x| x.as_arr()).unwrap();
+        assert_eq!(marks[0].get("label").and_then(|x| x.as_str()), Some("flip: test"));
+    }
+
+    #[test]
+    fn marks_are_bounded() {
+        let (r, ..) = small_registry();
+        let mut fr = FlightRecorder::attach(&r, 2);
+        for i in 0..(MARK_CAP as u64 + 5) {
+            fr.mark(i, "m");
+        }
+        assert_eq!(fr.timeline().get("marks").and_then(|v| v.as_arr()).unwrap().len(), MARK_CAP);
+        assert_eq!(fr.timeline().get("marks_dropped").and_then(|v| v.as_f64()), Some(5.0));
+    }
+}

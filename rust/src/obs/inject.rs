@@ -28,6 +28,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::json::Value;
+use crate::obs::profile::StageSample;
 use crate::sefp::Precision;
 use crate::serve::{LadderView, LogitsBackend};
 
@@ -98,6 +100,69 @@ impl LatencyPlan {
             }],
             max_retries: 2,
         }
+    }
+
+    /// Parse a plan from a config file, so scenarios can declare their
+    /// own fault schedules instead of hardcoding them:
+    ///
+    /// ```json
+    /// {"max_retries": 2,
+    ///  "rules": [{"precision": 4, "from_step": 0, "delay_ms": 40, "fault_every": 5}]}
+    /// ```
+    ///
+    /// Defaults per rule: `precision` omitted matches every precision,
+    /// `from_step` 0, `to_step` open-ended, `delay_ms`/`fault_every` 0
+    /// — but a rule that injects nothing (both zero) is rejected, as
+    /// are inverted step ranges.  `max_retries` defaults to 0 (every
+    /// injected fault surfaces).  An empty object is the transparent
+    /// plan.
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        fn u64_field(rule: &Value, key: &str, default: u64, i: usize) -> anyhow::Result<u64> {
+            match rule.get(key) {
+                None | Some(Value::Null) => Ok(default),
+                Some(x) => x.as_usize().map(|u| u as u64).ok_or_else(|| {
+                    anyhow::anyhow!("injection rule {i}: {key} must be a non-negative integer")
+                }),
+            }
+        }
+        let mut plan = LatencyPlan::none();
+        if let Some(x) = v.get("max_retries") {
+            plan.max_retries = x
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("max_retries must be a non-negative integer"))?;
+        }
+        let Some(rules) = v.get("rules") else { return Ok(plan) };
+        let rules =
+            rules.as_arr().ok_or_else(|| anyhow::anyhow!("injection rules must be an array"))?;
+        for (i, r) in rules.iter().enumerate() {
+            let precision = match r.get("precision") {
+                None | Some(Value::Null) => None,
+                Some(x) => {
+                    let m = x.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("injection rule {i}: precision must be a mantissa width")
+                    })?;
+                    anyhow::ensure!(
+                        (1..=16).contains(&m),
+                        "injection rule {i}: precision width {m} out of range"
+                    );
+                    Some(Precision::of(m as u8))
+                }
+            };
+            let from_step = u64_field(r, "from_step", 0, i)?;
+            let to_step = u64_field(r, "to_step", u64::MAX, i)?;
+            let delay_ms = u64_field(r, "delay_ms", 0, i)?;
+            let fault_every = u64_field(r, "fault_every", 0, i)?;
+            anyhow::ensure!(
+                from_step < to_step,
+                "injection rule {i}: from_step {from_step} must be below to_step {to_step}"
+            );
+            anyhow::ensure!(
+                delay_ms > 0 || fault_every > 0,
+                "injection rule {i}: rule injects nothing (set delay_ms and/or fault_every)"
+            );
+            plan.rules.push(LatencyRule { precision, from_step, to_step, delay_ms, fault_every });
+        }
+        Ok(plan)
     }
 }
 
@@ -203,6 +268,14 @@ impl<B: LogitsBackend> LogitsBackend for InjectedBackend<B> {
     fn take_injected(&mut self) -> Vec<InjectEvent> {
         std::mem::take(&mut self.pending)
     }
+
+    fn set_profiling(&mut self, on: bool) {
+        self.inner.set_profiling(on);
+    }
+
+    fn take_profile(&mut self) -> Vec<StageSample> {
+        self.inner.take_profile()
+    }
 }
 
 #[cfg(test)]
@@ -277,6 +350,35 @@ mod tests {
         let (bsz, seq) = surfacing.batch_shape();
         let err = surfacing.logits_step(&vec![1; bsz * seq]);
         assert!(err.is_err(), "max_retries = 0 surfaces the injected fault");
+    }
+
+    #[test]
+    fn plans_parse_from_json_with_defaults() {
+        let v = crate::json::parse(
+            r#"{"max_retries": 1, "rules": [
+                {"precision": 4, "delay_ms": 40, "fault_every": 5},
+                {"from_step": 2, "to_step": 6, "delay_ms": 3}
+            ]}"#,
+        )
+        .unwrap();
+        let plan = LatencyPlan::from_json(&v).unwrap();
+        assert_eq!(plan.max_retries, 1);
+        assert_eq!(plan.rules.len(), 2);
+        assert_eq!(plan.rules[0].precision, Some(Precision::of(4)));
+        assert_eq!((plan.rules[0].from_step, plan.rules[0].to_step), (0, u64::MAX));
+        assert_eq!((plan.rules[0].delay_ms, plan.rules[0].fault_every), (40, 5));
+        assert_eq!(plan.rules[1].precision, None);
+        assert_eq!((plan.rules[1].from_step, plan.rules[1].to_step), (2, 6));
+        // an empty object is the transparent plan
+        let empty = LatencyPlan::from_json(&crate::json::parse("{}").unwrap()).unwrap();
+        assert!(empty.rules.is_empty() && empty.max_retries == 0);
+        // dead rules and inverted step ranges are config errors
+        let dead = crate::json::parse(r#"{"rules": [{"precision": 4}]}"#).unwrap();
+        assert!(LatencyPlan::from_json(&dead).is_err());
+        let inverted =
+            crate::json::parse(r#"{"rules": [{"from_step": 6, "to_step": 2, "delay_ms": 1}]}"#)
+                .unwrap();
+        assert!(LatencyPlan::from_json(&inverted).is_err());
     }
 
     #[test]

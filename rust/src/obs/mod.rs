@@ -39,19 +39,33 @@
 //!   can force p95 violations and every controller demotion is
 //!   explained by a traced violation.
 //! * [`dashboard`] — deterministic JSON dashboard definitions generated
-//!   from a registry snapshot.
+//!   from a registry snapshot, plus timeline panels generated from a
+//!   flight-recorder timeline.
+//! * [`flight`] — the flight recorder ([`FlightRecorder`]): a
+//!   fixed-capacity ring of periodic delta frames sampled from the
+//!   registry on a logical-tick cadence, serializing to byte-identical
+//!   `otaro.flight.v1` timelines — the time-series layer drift
+//!   invariants and soak runs read from.
+//! * [`profile`] — scoped stage timers ([`StageRecorder`], [`Stage`]):
+//!   prefill / decode-step / matmul / ladder-switch / probe costs
+//!   recorded per rung behind a zero-cost-when-disabled handle and
+//!   drained into registry histograms.
 //!
 //! The serve stack's concrete handle set lives in
 //! [`serve::ServeMetrics`](crate::serve::ServeMetrics); the trace-driven
 //! load harness that reads these snapshots lives in [`crate::workload`].
 
 pub mod dashboard;
+pub mod flight;
 pub mod inject;
+pub mod profile;
 pub mod registry;
 pub mod trace;
 
-pub use dashboard::dashboard;
+pub use dashboard::{dashboard, timeline_dashboard};
+pub use flight::FlightRecorder;
 pub use inject::{InjectEvent, InjectedBackend, LatencyPlan, LatencyRule};
+pub use profile::{Stage, StageRecorder, StageSample};
 pub use registry::{
     Counter, Gauge, Histo, MetricSink, NullSink, Registry, AGREEMENT_BUCKETS, LATENCY_MS_BUCKETS,
     RATIO_BUCKETS,

@@ -1,0 +1,202 @@
+//! Hot-path profiling hooks: scoped stage timers behind a
+//! zero-cost-when-disabled recorder.
+//!
+//! The serve loop has five stages worth timing per rung — prefill,
+//! decode step, matmul, ladder switch, quality probe — but the code
+//! that *knows* the stage boundaries (`infer::DecoderSim`, the
+//! backends) cannot hold handles into the server's [`Registry`]
+//! (that would invert the layering and require a shared sink).  So the
+//! same drain pattern injection uses: stages record into a local
+//! [`StageRecorder`] as plain [`StageSample`]s, and the server drains
+//! them via [`LogitsBackend::take_profile`] into its pre-registered
+//! per-rung `profile.rung.<rung>.<stage>_ms` histograms — which the
+//! flight recorder then samples for free.
+//!
+//! Cost discipline: a disabled recorder takes no timestamps and the
+//! record call is a single branch; an enabled recorder pushes into a
+//! buffer pre-reserved at construction (`record` sits in a `no_alloc`
+//! lint region), counting — not growing — past capacity.
+//!
+//! [`Registry`]: crate::obs::Registry
+//! [`LogitsBackend::take_profile`]: crate::serve::LogitsBackend::take_profile
+
+use crate::sefp::Precision;
+
+/// A serve-loop stage with a per-rung cost histogram.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// per-row context replay before a fresh row can decode
+    Prefill,
+    /// one whole batched `logits_step` (includes injected delays)
+    DecodeStep,
+    /// kernel time of one batched layer-stack step (projections,
+    /// attention, head) — `DecodeStep` minus dispatch and injection
+    Matmul,
+    /// `view_at` + `load_view` when a batch runs at a new precision
+    LadderSwitch,
+    /// one shadow quality probe (served rung + master replay)
+    Probe,
+}
+
+impl Stage {
+    /// Every stage, in histogram registration order.
+    pub const ALL: [Stage; 5] =
+        [Stage::Prefill, Stage::DecodeStep, Stage::Matmul, Stage::LadderSwitch, Stage::Probe];
+
+    /// Metric-name suffix (`profile.rung.<rung>.<name()>`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Prefill => "prefill_ms",
+            Stage::DecodeStep => "decode_step_ms",
+            Stage::Matmul => "matmul_ms",
+            Stage::LadderSwitch => "ladder_switch_ms",
+            Stage::Probe => "probe_ms",
+        }
+    }
+
+    /// Index into [`Stage::ALL`]-ordered arrays.
+    pub fn index(&self) -> usize {
+        match self {
+            Stage::Prefill => 0,
+            Stage::DecodeStep => 1,
+            Stage::Matmul => 2,
+            Stage::LadderSwitch => 3,
+            Stage::Probe => 4,
+        }
+    }
+}
+
+/// One timed stage occurrence, stamped with the rung it ran at.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageSample {
+    pub stage: Stage,
+    pub precision: Precision,
+    pub ms: f64,
+}
+
+/// A bounded sample buffer stages record into and the server drains.
+///
+/// Disabled (the default) it is a no-op shell: [`enabled`] returns
+/// `false`, callers skip their `Instant` reads entirely, and `record`
+/// is one early-returning branch.
+///
+/// [`enabled`]: StageRecorder::enabled
+#[derive(Debug, Clone, Default)]
+pub struct StageRecorder {
+    on: bool,
+    samples: Vec<StageSample>,
+    cap: usize,
+    /// samples discarded because the buffer was full between drains
+    dropped: u64,
+}
+
+impl StageRecorder {
+    /// Samples buffered between drains when enabled.
+    pub const DEFAULT_CAP: usize = 1024;
+
+    /// The no-op shell: records nothing, owns no buffer.
+    pub fn disabled() -> Self {
+        StageRecorder::default()
+    }
+
+    /// A live recorder buffering up to `cap` samples between drains.
+    pub fn with_capacity(cap: usize) -> Self {
+        StageRecorder { on: true, samples: Vec::with_capacity(cap), cap, dropped: 0 }
+    }
+
+    /// Whether stages should bother reading clocks at all.
+    pub fn enabled(&self) -> bool {
+        self.on
+    }
+
+    /// Turn recording on (allocating the buffer on first enable) or
+    /// off (keeping the buffer for a later re-enable).
+    pub fn set_enabled(&mut self, on: bool) {
+        self.on = on;
+        if on && self.cap == 0 {
+            self.cap = Self::DEFAULT_CAP;
+            self.samples.reserve(self.cap);
+        }
+    }
+
+    /// Samples discarded because the buffer was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    // One branch when disabled; an indexed push into pre-reserved
+    // storage when enabled — this sits inside the decode hot loop.
+    // lint: region(no_alloc)
+    /// Record one stage occurrence (no-op when disabled; counted, not
+    /// grown, past capacity).
+    pub fn record(&mut self, stage: Stage, precision: Precision, ms: f64) {
+        if !self.on {
+            return;
+        }
+        if self.samples.len() < self.cap {
+            self.samples.push(StageSample { stage, precision, ms });
+        } else {
+            self.dropped += 1;
+        }
+    }
+    // lint: end_region
+
+    /// Take every buffered sample, leaving a fresh pre-reserved buffer
+    /// behind (reporting path — this is the one place that allocates).
+    pub fn drain(&mut self) -> Vec<StageSample> {
+        if self.samples.is_empty() {
+            return Vec::new();
+        }
+        std::mem::replace(&mut self.samples, Vec::with_capacity(self.cap))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let mut r = StageRecorder::disabled();
+        assert!(!r.enabled());
+        r.record(Stage::Matmul, Precision::of(4), 1.0);
+        assert!(r.drain().is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn records_until_cap_then_counts_drops() {
+        let mut r = StageRecorder::with_capacity(2);
+        for i in 0..5 {
+            r.record(Stage::DecodeStep, Precision::of(8), i as f64);
+        }
+        let taken = r.drain();
+        assert_eq!(taken.len(), 2);
+        assert_eq!(taken[0], StageSample { stage: Stage::DecodeStep, precision: Precision::of(8), ms: 0.0 });
+        assert_eq!(r.dropped(), 3);
+        // the drain hands back capacity: recording resumes
+        r.record(Stage::Probe, Precision::of(4), 9.0);
+        assert_eq!(r.drain().len(), 1);
+    }
+
+    #[test]
+    fn enable_after_default_allocates_a_buffer() {
+        let mut r = StageRecorder::disabled();
+        r.set_enabled(true);
+        for _ in 0..3 {
+            r.record(Stage::Prefill, Precision::of(6), 0.5);
+        }
+        assert_eq!(r.drain().len(), 3);
+        r.set_enabled(false);
+        r.record(Stage::Prefill, Precision::of(6), 0.5);
+        assert!(r.drain().is_empty());
+    }
+
+    #[test]
+    fn stage_names_and_indices_line_up() {
+        for (i, st) in Stage::ALL.iter().enumerate() {
+            assert_eq!(st.index(), i);
+            assert!(st.name().ends_with("_ms"));
+        }
+    }
+}

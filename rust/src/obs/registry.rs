@@ -184,6 +184,72 @@ impl Registry {
         self.histos.get(h.0 as usize).map_or_else(Summary::new, |slot| slot.summary.clone())
     }
 
+    /// Number of registered counters (flight-recorder attach path).
+    pub fn n_counters(&self) -> usize {
+        self.counters.len()
+    }
+
+    /// Number of registered gauges.
+    pub fn n_gauges(&self) -> usize {
+        self.gauges.len()
+    }
+
+    /// Number of registered histograms.
+    pub fn n_histos(&self) -> usize {
+        self.histos.len()
+    }
+
+    /// Name of the `i`-th counter, in registration order.
+    pub fn counter_name(&self, i: usize) -> Option<&str> {
+        self.counters.get(i).map(|c| c.name.as_str())
+    }
+
+    /// Name of the `i`-th gauge, in registration order.
+    pub fn gauge_name(&self, i: usize) -> Option<&str> {
+        self.gauges.get(i).map(|g| g.name.as_str())
+    }
+
+    /// Name of the `i`-th histogram, in registration order.
+    pub fn histo_name(&self, i: usize) -> Option<&str> {
+        self.histos.get(i).map(|h| h.name.as_str())
+    }
+
+    // Indexed reads for the flight-recorder sampling loop: scalar
+    // returns and borrowed slices only, so a sampler iterating a
+    // registration-frozen index range never allocates.
+
+    /// Value of the `i`-th counter (0 out of range).
+    pub fn counter_at(&self, i: usize) -> u64 {
+        self.counters.get(i).map_or(0, |c| c.value)
+    }
+
+    /// Value of the `i`-th gauge (0.0 out of range).
+    pub fn gauge_at(&self, i: usize) -> f64 {
+        self.gauges.get(i).map_or(0.0, |g| g.value)
+    }
+
+    /// Bucket bounds of the `i`-th histogram (empty out of range).
+    pub fn histo_bounds_at(&self, i: usize) -> &[f64] {
+        self.histos.get(i).map_or(&[], |h| h.bounds.as_slice())
+    }
+
+    /// Count in bucket `b` of the `i`-th histogram; `b == bounds.len()`
+    /// addresses the overflow bucket (0 out of range).
+    pub fn histo_bucket_at(&self, i: usize, b: usize) -> u64 {
+        self.histos.get(i).map_or(0, |h| {
+            if b == h.bounds.len() {
+                h.overflow
+            } else {
+                h.counts.get(b).copied().unwrap_or(0)
+            }
+        })
+    }
+
+    /// Running sum of finite samples of the `i`-th histogram.
+    pub fn histo_sum_at(&self, i: usize) -> f64 {
+        self.histos.get(i).map_or(0.0, |h| h.sum)
+    }
+
     /// Serialize every registered metric, deterministically: the JSON
     /// object sorts keys (`json::Value::Obj` is a `BTreeMap`), so two
     /// registries in identical states snapshot to identical bytes.
@@ -384,6 +450,35 @@ mod tests {
         // and the snapshot round-trips through the in-repo parser
         let v = crate::json::parse(&a).unwrap();
         assert_eq!(v.get("schema").and_then(|x| x.as_str()), Some("otaro.metrics.v1"));
+    }
+
+    #[test]
+    fn indexed_reads_mirror_handle_reads() {
+        let mut r = Registry::new();
+        let c = r.counter("c0");
+        let g = r.gauge("g0");
+        let h = r.histogram("h0", &[1.0, 2.0]);
+        r.add(c, 7);
+        r.set(g, 2.5);
+        r.observe(h, 0.5);
+        r.observe(h, 1.5);
+        r.observe(h, 9.0);
+        assert_eq!((r.n_counters(), r.n_gauges(), r.n_histos()), (1, 1, 1));
+        assert_eq!(r.counter_name(0), Some("c0"));
+        assert_eq!(r.gauge_name(0), Some("g0"));
+        assert_eq!(r.histo_name(0), Some("h0"));
+        assert_eq!(r.counter_at(0), r.counter_value(c));
+        assert_eq!(r.gauge_at(0), r.gauge_value(g));
+        assert_eq!(r.histo_bounds_at(0), &[1.0, 2.0]);
+        // bucket index bounds.len() addresses the overflow bucket
+        let buckets = [r.histo_bucket_at(0, 0), r.histo_bucket_at(0, 1), r.histo_bucket_at(0, 2)];
+        assert_eq!(buckets, [1, 1, 1]);
+        assert_eq!(r.histo_sum_at(0), 11.0);
+        // out of range: zeros and empties, never a panic
+        assert_eq!(r.counter_at(9), 0);
+        assert_eq!(r.gauge_name(9), None);
+        assert!(r.histo_bounds_at(9).is_empty());
+        assert_eq!(r.histo_bucket_at(0, 9), 0);
     }
 
     #[test]

@@ -49,6 +49,19 @@ pub trait LogitsBackend {
     fn take_injected(&mut self) -> Vec<crate::obs::inject::InjectEvent> {
         Vec::new()
     }
+    /// Enable/disable stage profiling ([`obs::profile`]).  Backends
+    /// without internal stages inherit this no-op default; wrappers
+    /// forward to the wrapped backend.
+    ///
+    /// [`obs::profile`]: crate::obs::profile
+    fn set_profiling(&mut self, _on: bool) {}
+    /// Drain stage samples buffered since the last call (empty unless
+    /// profiling is enabled and the backend times internal stages).
+    /// The server drains after each `logits_step` / probe and records
+    /// the samples into its per-rung `profile.*` histograms.
+    fn take_profile(&mut self) -> Vec<crate::obs::profile::StageSample> {
+        Vec::new()
+    }
 }
 
 /// Owned handle over the PJRT [`Engine`] — the production backend.
@@ -313,6 +326,9 @@ pub struct DecoderBackend {
     /// sim rebuilds (actual precision switches; cache-keyed like
     /// `EngineHandle`, so repeat loads at one width do not count)
     pub loads: u64,
+    /// stage profiling requested — re-applied to the sim's recorder on
+    /// every rebuild (`load_view` replaces the sim wholesale)
+    profiling: bool,
 }
 
 impl DecoderBackend {
@@ -394,6 +410,7 @@ impl DecoderBackend {
             win_len: vec![0; bsz],
             calls: 0,
             loads: 0,
+            profiling: false,
         })
     }
 
@@ -481,10 +498,10 @@ impl LogitsBackend for DecoderBackend {
         // tied embedding head: logits[t] = x · embed(t); token
         // embeddings come back out of this same QuantLinear
         let head = view_linear(view, self.embed_idx, d, v)?;
-        self.sim = Some(
-            DecoderSim::from_quant(self.cfg, layers, head, self.bsz)?
-                .with_threads(self.threads),
-        );
+        let mut sim =
+            DecoderSim::from_quant(self.cfg, layers, head, self.bsz)?.with_threads(self.threads);
+        sim.profile.set_enabled(self.profiling);
+        self.sim = Some(sim);
         // a different view invalidates every row's cache contents
         for c in &mut self.row_ctx {
             c.clear();
@@ -565,6 +582,17 @@ impl LogitsBackend for DecoderBackend {
             g.push(("sim_prefill_steps", sim.prefill_steps as f64));
         }
         g
+    }
+
+    fn set_profiling(&mut self, on: bool) {
+        self.profiling = on;
+        if let Some(sim) = &mut self.sim {
+            sim.profile.set_enabled(on);
+        }
+    }
+
+    fn take_profile(&mut self) -> Vec<crate::obs::profile::StageSample> {
+        self.sim.as_mut().map(|s| s.profile.drain()).unwrap_or_default()
     }
 }
 
@@ -720,6 +748,33 @@ mod tests {
             b.logits_step(&tokens).unwrap()
         };
         assert_eq!(run(1), run(4));
+    }
+
+    #[test]
+    fn decoder_backend_profiles_stages_when_enabled() {
+        use crate::obs::profile::Stage;
+        let mut ladder = decoder_ladder();
+        let mut b = DecoderBackend::from_ladder(&ladder, 1, 8, 1).unwrap();
+        b.set_profiling(true);
+        b.load_view(&ladder.view_at(Precision::of(4)).unwrap()).unwrap();
+        let _ = b.logits_step(&win(&[5, 9, 1], 8)).unwrap();
+        let samples = b.take_profile();
+        // a fresh 3-token window replays 2 prompt tokens (Prefill) and
+        // runs one batched decode step (Matmul, accumulated)
+        assert_eq!(samples.iter().filter(|s| s.stage == Stage::Prefill).count(), 2);
+        assert_eq!(samples.iter().filter(|s| s.stage == Stage::Matmul).count(), 1);
+        assert!(samples.iter().all(|s| s.precision == Precision::of(4) && s.ms >= 0.0));
+        // drained: a second take is empty
+        assert!(b.take_profile().is_empty());
+        // profiling survives a view switch (the sim is rebuilt)
+        b.load_view(&ladder.view_at(Precision::of(3)).unwrap()).unwrap();
+        let _ = b.logits_step(&win(&[5, 9, 1], 8)).unwrap();
+        assert!(!b.take_profile().is_empty());
+        // disabled by default: no samples, no timing
+        let mut c = DecoderBackend::from_ladder(&ladder, 1, 8, 1).unwrap();
+        c.load_view(&ladder.view_at(Precision::of(4)).unwrap()).unwrap();
+        let _ = c.logits_step(&win(&[5, 9, 1], 8)).unwrap();
+        assert!(c.take_profile().is_empty());
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! registration on the request path.
 
 use crate::metrics::Summary;
+use crate::obs::profile::Stage;
 use crate::obs::{
     Counter, Gauge, Histo, MetricSink, Registry, AGREEMENT_BUCKETS, LATENCY_MS_BUCKETS,
     RATIO_BUCKETS,
@@ -36,6 +37,9 @@ struct RungMetrics {
     /// `decode_step` trace events must sum to exactly this)
     tokens: Counter,
     step_ms: Histo,
+    /// per-stage cost histograms (`profile.rung.<rung>.<stage>_ms`),
+    /// indexed by [`Stage::index`] in [`Stage::ALL`] order
+    stage_ms: [Histo; 5],
 }
 
 /// The serving plane's registered metric handles plus the registry they
@@ -115,6 +119,12 @@ impl ServeMetrics {
                 tokens: reg.counter(&format!("serve.rung.e5m{}.tokens", p.m())),
                 step_ms: reg
                     .histogram(&format!("serve.rung.e5m{}.step_ms", p.m()), LATENCY_MS_BUCKETS),
+                stage_ms: Stage::ALL.map(|st| {
+                    reg.histogram(
+                        &format!("profile.rung.e5m{}.{}", p.m(), st.name()),
+                        LATENCY_MS_BUCKETS,
+                    )
+                }),
             })
             .collect();
         ServeMetrics {
@@ -214,6 +224,15 @@ impl ServeMetrics {
     pub fn record_probe(&mut self, agreement: f64) {
         self.reg.inc(self.c_probes);
         self.reg.observe(self.h_probe_agreement, agreement);
+    }
+
+    /// One drained profiling sample: `stage` cost at rung `p`.  Off-
+    /// ladder precisions degrade to a no-op (same contract as the other
+    /// per-rung records).
+    pub fn record_stage(&mut self, p: Precision, stage: Stage, ms: f64) {
+        if let Some(r) = self.rung(p) {
+            self.reg.observe(r.stage_ms[stage.index()], ms);
+        }
     }
 
     /// Mirror the ladder's switch statistics into the gauge set.
@@ -377,6 +396,23 @@ mod tests {
         let snap = m.snapshot().to_string();
         assert!(snap.contains("\"serve.rung.e5m4.tokens\":5"), "{snap}");
         assert!(snap.contains("\"serve.rung.e5m3.tokens\":0"), "{snap}");
+    }
+
+    #[test]
+    fn stage_records_land_in_the_right_rung_histogram() {
+        let mut m = ServeMetrics::for_ladder(&ladder());
+        m.record_stage(Precision::of(4), Stage::Matmul, 1.5);
+        m.record_stage(Precision::of(4), Stage::Matmul, 2.5);
+        m.record_stage(Precision::of(8), Stage::Probe, 0.5);
+        // off-ladder precision degrades to a no-op, not a panic
+        m.record_stage(Precision::of(6), Stage::Prefill, 9.0);
+        let snap = m.snapshot().to_string();
+        assert!(snap.contains("\"profile.rung.e5m4.matmul_ms\":{"), "{snap}");
+        let r4 = m.rung(Precision::of(4)).unwrap();
+        assert_eq!(m.reg.histo_summary(r4.stage_ms[Stage::Matmul.index()]).n, 2);
+        assert_eq!(m.reg.histo_summary(r4.stage_ms[Stage::Prefill.index()]).n, 0);
+        let r8 = m.rung(Precision::of(8)).unwrap();
+        assert_eq!(m.reg.histo_summary(r8.stage_ms[Stage::Probe.index()]).n, 1);
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::data::tokenizer::{EOS, PAD};
 use crate::data::Rng;
 use crate::infer::sampling;
 use crate::metrics::Summary;
+use crate::obs::profile::Stage;
 use crate::obs::trace::{permille, EventKind, NullTrace, ShedReason, TraceSink, Tracer};
 use crate::policy::{shadow_probe, Observation, PolicyMove, ProbeTask};
 use crate::sefp::Precision;
@@ -151,6 +152,10 @@ pub struct Server<B: LogitsBackend = EngineHandle> {
     pending_probes: Vec<ProbeTask>,
     /// per-request span sink ([`NullTrace`] unless [`Server::with_tracer`])
     trace: Box<dyn TraceSink>,
+    /// when set, stage timers record into the per-rung
+    /// `profile.rung.<rung>.<stage>_ms` histograms (off by default —
+    /// disabled, no clocks are read and no backend samples drained)
+    profiling: bool,
     rng: Rng,
 }
 
@@ -171,6 +176,7 @@ impl<B: LogitsBackend> Server<B> {
             first_work: None,
             pending_probes: Vec::new(),
             trace: Box::new(NullTrace),
+            profiling: false,
             rng: Rng::new(0x5EED),
         }
     }
@@ -185,6 +191,16 @@ impl<B: LogitsBackend> Server<B> {
     /// the inert [`NullTrace`]).
     pub fn with_tracer(mut self, tracer: Tracer) -> Self {
         self.trace = Box::new(tracer);
+        self
+    }
+
+    /// Enable hot-path stage profiling: the server times its own stages
+    /// (decode step, ladder switch, quality probe) and drains the
+    /// backend's ([`Stage::Prefill`] / [`Stage::Matmul`]) into the
+    /// pre-registered `profile.rung.<rung>.<stage>_ms` histograms.
+    pub fn with_profiling(mut self, on: bool) -> Self {
+        self.profiling = on;
+        self.backend.set_profiling(on);
         self
     }
 
@@ -291,9 +307,13 @@ impl<B: LogitsBackend> Server<B> {
         anyhow::ensure!(batch.len() <= bsz, "batch exceeds engine rows");
         // single-master precision switch — the OTARo deployment property
         // in action: no reload, no f32 zoo; a (cached) integer truncation
+        let t_switch = if self.profiling { Some(Instant::now()) } else { None };
         let view = self.ladder.view_at(p)?;
         self.backend.load_view(&view)?;
         drop(view);
+        if let Some(t0) = t_switch {
+            self.metrics.record_stage(p, Stage::LadderSwitch, t0.elapsed().as_secs_f64() * 1e3);
+        }
         self.sync_ladder_stats();
         self.metrics.record_dispatch(batch.len() as f64 / bsz as f64, self.batcher.len());
 
@@ -331,6 +351,14 @@ impl<B: LogitsBackend> Server<B> {
                     delay_ms: ev.delay_ms,
                     fault: ev.fault,
                 });
+            }
+            if self.profiling {
+                self.metrics.record_stage(p, Stage::DecodeStep, step_ms);
+                // backend-side samples (prefill / matmul) come out
+                // stamped with the rung the sim actually ran at
+                for s in self.backend.take_profile() {
+                    self.metrics.record_stage(s.precision, s.stage, s.ms);
+                }
             }
             let mut step_tokens = 0u64;
 
@@ -411,7 +439,17 @@ impl<B: LogitsBackend> Server<B> {
             return Ok(());
         }
         for task in std::mem::take(&mut self.pending_probes) {
+            let t_probe = if self.profiling { Some(Instant::now()) } else { None };
             let result = shadow_probe(&mut self.backend, &mut self.ladder, &task)?;
+            if let Some(t0) = t_probe {
+                self.metrics
+                    .record_stage(task.precision, Stage::Probe, t0.elapsed().as_secs_f64() * 1e3);
+                // the probe's replay steps (served rung + master) land
+                // in the backend buffer too — attribute them now
+                for s in self.backend.take_profile() {
+                    self.metrics.record_stage(s.precision, s.stage, s.ms);
+                }
+            }
             // probe re-scoring steps can be injected too
             for ev in self.backend.take_injected() {
                 self.trace.global(EventKind::Injected {

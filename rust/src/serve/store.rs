@@ -260,6 +260,15 @@ impl PrecisionLadder {
         self
     }
 
+    /// Re-cap the residency budget on a LIVE ladder (the soak harness's
+    /// mid-run "memory pressure" flip).  Shrinking below current
+    /// residency evicts LRU-first immediately — the cap is enforced at
+    /// the moment it changes, not lazily at the next switch.
+    pub fn set_budget(&mut self, budget_bytes: usize) {
+        self.budget_bytes = budget_bytes;
+        self.evict_to_budget(self.master.precision);
+    }
+
     /// Top-of-ladder precision the master is stored at.
     pub fn top(&self) -> Precision {
         self.master.precision
@@ -518,6 +527,26 @@ mod tests {
         assert!(ladder.cached_precisions().is_empty());
         assert_eq!(ladder.stats.misses, 3, "nothing retained, every switch derives");
         assert_eq!(ladder.stats.evictions, 3);
+    }
+
+    #[test]
+    fn shrinking_a_live_budget_evicts_immediately() {
+        // the soak flip: a generous budget holds the whole derived set,
+        // then a live set_budget shrink must evict LRU-first right away
+        let mut ladder = PrecisionLadder::from_params(&params()).with_budget(usize::MAX);
+        let _ = ladder.view_at(Precision::of(5)).unwrap();
+        let _ = ladder.view_at(Precision::of(4)).unwrap();
+        let _ = ladder.view_at(Precision::of(3)).unwrap();
+        assert_eq!(ladder.cached_precisions().len(), 3);
+        let one_view = ladder.view_at(Precision::of(3)).unwrap().sefp_bytes();
+        ladder.set_budget(one_view);
+        assert!(ladder.resident_bytes() <= one_view);
+        assert!(ladder.stats.evictions >= 2, "shrink must evict, not defer");
+        // the most recently used view survives
+        assert_eq!(ladder.cached_precisions(), vec![Precision::of(3)]);
+        // growing back is lazy — nothing re-derives until asked
+        ladder.set_budget(usize::MAX);
+        assert_eq!(ladder.cached_precisions(), vec![Precision::of(3)]);
     }
 
     #[test]

@@ -26,10 +26,17 @@
 //!   probe-agreement floors.
 //! * [`traced`]  — the same stack with request-lifecycle tracing ON and
 //!   a deterministic latency-injection plan
-//!   ([`LatencyPlan`](crate::obs::inject::LatencyPlan)) over
-//!   [`SimBackend`](crate::serve::SimBackend): byte-identical
+//!   ([`LatencyPlan`](crate::obs::inject::LatencyPlan)) over the real
+//!   [`DecoderBackend`](crate::serve::DecoderBackend): byte-identical
 //!   `otaro.trace.v1` snapshots, per-request waterfalls, and
 //!   span-vs-registry cross-checks.  CLI: `otaro trace`.
+//! * [`soak`]    — the long-horizon variant: a scenario's traffic shape
+//!   stretched ~10x with mid-trace config flips (ladder budget re-cap,
+//!   SLO tighten, policy toggle) and a
+//!   [`FlightRecorder`](crate::obs::FlightRecorder) timeline that the
+//!   drift invariants — bounded queues, residency stabilization, every
+//!   flip visible as a frame-delta inflection, post-demote agreement
+//!   recovery — are asserted over.  CLI: `otaro soak`.
 //!
 //! Every run emits one record per scenario into
 //! `BENCH_serve_scenarios.json` (the shared `otaro.bench.v1` envelope
@@ -42,11 +49,13 @@
 
 pub mod replay;
 pub mod scenario;
+pub mod soak;
 pub mod trace;
 pub mod traced;
 
 pub use replay::{run_scenario, ReplayReport};
 pub use scenario::{catalog, Kind, Scenario, SloChecks};
+pub use soak::{run_soak, soak_catalog, soak_cli, Flip, FlipKind, SoakConfig, SoakReport};
 pub use trace::{generate, TraceEvent};
 pub use traced::{default_plan, run_traced, trace_cli, TracedReport};
 

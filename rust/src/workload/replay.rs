@@ -59,7 +59,7 @@ pub struct ReplayReport {
 /// matmuls + KV attention, small enough that the full catalog replays in
 /// seconds.  Seed and shape are part of the determinism contract — the
 /// same ladder bytes on every run.
-fn replay_sim_config() -> SimConfig {
+pub(crate) fn replay_sim_config() -> SimConfig {
     SimConfig { d_model: 64, d_ff: 128, n_layers: 2, vocab: 256, context: 16 }
 }
 

@@ -1,0 +1,631 @@
+//! The long-horizon soak harness behind `otaro soak`: a scenario's
+//! traffic shape replayed for ~10x its catalog length through the real
+//! serve stack, with mid-trace **config flips**, a declarative
+//! injection plan, and a [`FlightRecorder`] timeline that the drift
+//! invariants are asserted over.
+//!
+//! Where [`replay`](super::replay) proves exact accounting over one
+//! short trace and [`traced`](super::traced) proves span causality,
+//! the soak answers the question neither can: does the stack *stay*
+//! healthy — no creeping queue depth, no ladder-cache churn, policy
+//! recovery after perturbation — when the run is long and the
+//! configuration changes underneath it?  Each flip is applied at a
+//! declared tick, pinned into the timeline as a mark, and must be
+//! *visible* as a frame-delta inflection near that mark:
+//!
+//! * [`FlipKind::LadderBudget`] re-caps the live ladder cache
+//!   ([`PrecisionLadder::set_budget`]) — residency must drop or
+//!   evictions rise;
+//! * [`FlipKind::SloTighten`] rebuilds the router with a tighter
+//!   latency SLO — the policy decision gauges must move;
+//! * [`FlipKind::PolicyToggle`] flips adaptive routing on/off —
+//!   rebuilding the router resets its decision counters, which is
+//!   itself the visible inflection.
+//!
+//! The run emits one `otaro.bench.v1` record (default
+//! `BENCH_soak.json`) whose `det` section embeds the
+//! [`det_timeline`](FlightRecorder::det_timeline) — byte-identical
+//! across runs of the same config, so the CI bench-diff gate compares
+//! soak drift exactly — and whose `wall` section carries the full
+//! timeline with the histogram planes (stage p95s, queue latencies).
+//!
+//! [`FlightRecorder`]: crate::obs::FlightRecorder
+//! [`PrecisionLadder::set_budget`]: crate::serve::PrecisionLadder::set_budget
+
+use std::path::PathBuf;
+
+use crate::benchutil::{quick_mode, write_bench_file};
+use crate::config::{PolicyConfig, ServeConfig};
+use crate::json::{self, Value};
+use crate::obs::inject::{InjectedBackend, LatencyPlan};
+use crate::obs::FlightRecorder;
+use crate::serve::{
+    demo_decoder_params, DecoderBackend, DynamicBatcher, PrecisionLadder, Router, SchedPolicy,
+    Server,
+};
+
+use super::replay::replay_sim_config;
+use super::scenario::{catalog, Scenario};
+use super::trace::generate;
+use super::traced::default_plan;
+
+/// One mid-trace configuration change.
+#[derive(Debug, Clone)]
+pub enum FlipKind {
+    /// Re-cap the ladder cache's residency budget (bytes) on the live
+    /// server — 0 = cache nothing, the memory-pressure extreme.
+    LadderBudget { bytes: usize },
+    /// Tighten (or relax) the latency SLO and rebuild the router.
+    SloTighten { slo_p95_ms: f64 },
+    /// Toggle adaptive routing and rebuild the router.
+    PolicyToggle,
+}
+
+impl FlipKind {
+    /// Mark label recorded into the timeline when the flip applies.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FlipKind::LadderBudget { .. } => "flip: ladder_budget",
+            FlipKind::SloTighten { .. } => "flip: slo_tighten",
+            FlipKind::PolicyToggle => "flip: policy_toggle",
+        }
+    }
+}
+
+/// A [`FlipKind`] scheduled at a logical tick.
+#[derive(Debug, Clone)]
+pub struct Flip {
+    pub at_tick: u64,
+    pub kind: FlipKind,
+}
+
+/// One soak run's full specification.  The traffic *shape* comes from a
+/// named catalog scenario; the soak stretches its tick count, layers
+/// flips and an injection plan on top, and samples the flight recorder
+/// every `frame_every` ticks.
+#[derive(Debug, Clone)]
+pub struct SoakConfig {
+    pub name: String,
+    /// catalog scenario supplying the arrival shape and serve knobs
+    pub scenario: String,
+    /// soak length in ticks (the built-ins run ~10x the catalog length)
+    pub ticks: usize,
+    /// seeds the trace generator and the server's sampling rng
+    pub seed: u64,
+    /// flight-recorder sampling cadence, in ticks
+    pub frame_every: usize,
+    /// flight-recorder ring capacity; the built-ins size it so no frame
+    /// is evicted, which is what makes delta-sum accounting exact
+    pub frame_cap: usize,
+    /// config flips, applied at the start of their tick
+    pub flips: Vec<Flip>,
+    pub plan: LatencyPlan,
+}
+
+impl SoakConfig {
+    /// Parse a soak config from a JSON file body:
+    ///
+    /// ```json
+    /// {"name": "my-soak", "scenario": "burst-storm",
+    ///  "ticks": 200, "seed": 9001, "frame_every": 8, "frame_cap": 64,
+    ///  "flips": [{"at_tick": 80, "kind": "slo_tighten", "slo_p95_ms": 15},
+    ///            {"at_tick": 120, "kind": "ladder_budget", "bytes": 0},
+    ///            {"at_tick": 160, "kind": "policy_toggle"}],
+    ///  "plan": {"max_retries": 2,
+    ///           "rules": [{"precision": 4, "delay_ms": 40, "fault_every": 5}]}}
+    /// ```
+    ///
+    /// `ticks` is required; everything else defaults (`scenario`
+    /// "burst-storm", cadence 8, cap 64, no flips, and the traced
+    /// driver's default injection plan — pass `"plan": {}` for none).
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let ticks = v
+            .get("ticks")
+            .and_then(|x| x.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("soak config needs a positive integer ticks"))?;
+        let field_usize = |key: &str, default: usize| -> anyhow::Result<usize> {
+            match v.get(key) {
+                None | Some(Value::Null) => Ok(default),
+                Some(x) => x
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("{key} must be a non-negative integer")),
+            }
+        };
+        let mut flips = Vec::new();
+        if let Some(list) = v.get("flips") {
+            let list =
+                list.as_arr().ok_or_else(|| anyhow::anyhow!("flips must be an array"))?;
+            for (i, f) in list.iter().enumerate() {
+                let at_tick = f
+                    .get("at_tick")
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| anyhow::anyhow!("flip {i}: at_tick is required"))?
+                    as u64;
+                let kind = match f.get("kind").and_then(|x| x.as_str()) {
+                    Some("ladder_budget") => FlipKind::LadderBudget {
+                        bytes: f
+                            .get("bytes")
+                            .and_then(|x| x.as_usize())
+                            .ok_or_else(|| anyhow::anyhow!("flip {i}: ladder_budget needs bytes"))?,
+                    },
+                    Some("slo_tighten") => FlipKind::SloTighten {
+                        slo_p95_ms: f.get("slo_p95_ms").and_then(|x| x.as_f64()).ok_or_else(
+                            || anyhow::anyhow!("flip {i}: slo_tighten needs slo_p95_ms"),
+                        )?,
+                    },
+                    Some("policy_toggle") => FlipKind::PolicyToggle,
+                    other => anyhow::bail!("flip {i}: unknown kind {other:?}"),
+                };
+                flips.push(Flip { at_tick, kind });
+            }
+        }
+        let plan = match v.get("plan") {
+            None | Some(Value::Null) => default_plan(),
+            Some(p) => LatencyPlan::from_json(p)?,
+        };
+        let cfg = SoakConfig {
+            name: v.get("name").and_then(|x| x.as_str()).unwrap_or("custom-soak").to_string(),
+            scenario: v
+                .get("scenario")
+                .and_then(|x| x.as_str())
+                .unwrap_or("burst-storm")
+                .to_string(),
+            ticks,
+            seed: v.get("seed").and_then(|x| x.as_usize()).unwrap_or(9001) as u64,
+            frame_every: field_usize("frame_every", 8)?,
+            frame_cap: field_usize("frame_cap", 64)?,
+            flips,
+            plan,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.ticks >= 2, "soak {} needs at least 2 ticks", self.name);
+        anyhow::ensure!(self.frame_every >= 1, "soak {}: frame_every must be >= 1", self.name);
+        anyhow::ensure!(self.frame_cap >= 1, "soak {}: frame_cap must be >= 1", self.name);
+        for f in &self.flips {
+            anyhow::ensure!(
+                (f.at_tick as usize) < self.ticks,
+                "soak {}: flip at tick {} beyond the {}-tick run",
+                self.name,
+                f.at_tick,
+                self.ticks
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The built-in soak catalog.  One entry today: the storm shape soaked
+/// for 10x its catalog length with all three flip kinds mid-run.
+/// Under `OTARO_BENCH_QUICK` it collapses (like the scenario catalog)
+/// so CI smoke runs finish in seconds; every invariant still executes.
+pub fn soak_catalog() -> Vec<SoakConfig> {
+    let quick = quick_mode();
+    let t = |full: usize, q: usize| if quick { q } else { full };
+    vec![SoakConfig {
+        name: "soak-storm-flips".to_string(),
+        scenario: "burst-storm".to_string(),
+        ticks: t(200, 24),
+        seed: 9001,
+        frame_every: t(8, 3),
+        frame_cap: 64,
+        flips: vec![
+            Flip {
+                at_tick: t(80, 9) as u64,
+                kind: FlipKind::SloTighten { slo_p95_ms: 15.0 },
+            },
+            Flip { at_tick: t(120, 15) as u64, kind: FlipKind::LadderBudget { bytes: 0 } },
+            Flip { at_tick: t(160, 20) as u64, kind: FlipKind::PolicyToggle },
+        ],
+        plan: default_plan(),
+    }]
+}
+
+/// One soak run's outcome.
+#[derive(Debug)]
+pub struct SoakReport {
+    pub name: String,
+    pub served: u64,
+    pub shed: u64,
+    pub invalid: u64,
+    /// peak of the policy.demotions gauge across the timeline (the live
+    /// router resets on flips, so the peak is the honest count)
+    pub demotions: u64,
+    pub frames: usize,
+    pub checks: Vec<&'static str>,
+    /// byte-identical across runs of the same config
+    pub det_timeline: Value,
+    pub record: Value,
+}
+
+/// The serve config a soak runs under: the traced driver's idiom —
+/// anti-starvation yield effectively off (real injected sleeps must not
+/// reorder scheduling wall-dependently) and adaptive routing with
+/// windows short enough to act within the run.
+fn soak_serve_config(sc: &Scenario) -> ServeConfig {
+    ServeConfig {
+        max_batch: sc.max_batch,
+        queue_cap: sc.queue_cap,
+        max_wait_ms: 600_000,
+        policy: PolicyConfig {
+            adaptive: true,
+            window: 64,
+            min_samples: 8,
+            cooldown: 8,
+            ..PolicyConfig::default()
+        },
+        ..ServeConfig::default()
+    }
+}
+
+fn resolve_base(name: &str) -> anyhow::Result<Scenario> {
+    let all = catalog();
+    all.iter().find(|s| s.name == name).cloned().ok_or_else(|| {
+        let known: Vec<&str> = all.iter().map(|s| s.name).collect();
+        anyhow::anyhow!("unknown scenario {name:?}; known: {}", known.join(", "))
+    })
+}
+
+/// Run one soak end to end: replay the stretched trace with flips and
+/// injection, sample the flight recorder on cadence, and assert every
+/// drift invariant over the timeline itself.
+pub fn run_soak(cfg: &SoakConfig) -> anyhow::Result<SoakReport> {
+    cfg.validate()?;
+    let base = resolve_base(&cfg.scenario)?;
+    let sc = Scenario { ticks: cfg.ticks, seed: cfg.seed, ..base };
+    let mut serve_cfg = soak_serve_config(&sc);
+
+    // the replay driver's model behind the injection wrapper, with
+    // stage profiling on so the timeline carries per-rung stage costs
+    let sim = replay_sim_config();
+    let params = demo_decoder_params(&sim, 5);
+    let ladder =
+        PrecisionLadder::from_params(&params).with_budget(serve_cfg.ladder_budget_bytes);
+    let backend = InjectedBackend::new(
+        DecoderBackend::from_ladder(&ladder, serve_cfg.max_batch, sim.context, serve_cfg.decode_threads)?,
+        cfg.plan.clone(),
+    );
+    let batcher = DynamicBatcher::new(serve_cfg.max_batch, serve_cfg.queue_cap)
+        .with_policy(SchedPolicy::from_config(&serve_cfg));
+    let router = Router::from_config(serve_cfg.clone());
+    let mut server = Server::new(backend, ladder, router, batcher)
+        .with_seed(cfg.seed)
+        .with_profiling(true);
+
+    // freeze the metric set BEFORE attach: a snapshot lazily registers
+    // the backend gauges, so the flight index covers them from frame 0
+    let _ = server.metrics_snapshot();
+    let mut flight = FlightRecorder::attach(server.metrics().registry(), cfg.frame_cap);
+
+    let trace = generate(&sc);
+    let total: u64 = trace.iter().map(|t| t.len() as u64).sum();
+    let mut next_flip = 0usize;
+    let mut flips = cfg.flips.clone();
+    flips.sort_by_key(|f| f.at_tick);
+
+    for (tick, events) in trace.iter().enumerate() {
+        while next_flip < flips.len() && flips[next_flip].at_tick as usize <= tick {
+            let flip = &flips[next_flip];
+            flight.mark(flip.at_tick, flip.kind.label());
+            match flip.kind {
+                FlipKind::LadderBudget { bytes } => server.ladder.set_budget(bytes),
+                FlipKind::SloTighten { slo_p95_ms } => {
+                    serve_cfg.policy.slo_p95_ms = slo_p95_ms;
+                    server.router = Router::from_config(serve_cfg.clone());
+                }
+                FlipKind::PolicyToggle => {
+                    serve_cfg.policy.adaptive = !serve_cfg.policy.adaptive;
+                    server.router = Router::from_config(serve_cfg.clone());
+                }
+            }
+            next_flip += 1;
+        }
+        for ev in events {
+            let ok = server.submit(ev.req.clone());
+            anyhow::ensure!(
+                !(ok && ev.expect_invalid),
+                "soak {}: malformed request {} was admitted",
+                cfg.name,
+                ev.req.id
+            );
+        }
+        server.process_all()?;
+        if (tick + 1) % cfg.frame_every == 0 || tick + 1 == cfg.ticks {
+            // snapshot on the reporting cadence so the ladder/policy/
+            // backend gauges are fresh when the frame samples them
+            let _ = server.metrics_snapshot();
+            flight.sample(tick as u64, server.metrics().registry());
+        }
+    }
+
+    let stats = server.stats();
+    let mut checks: Vec<&'static str> = Vec::new();
+    macro_rules! check {
+        ($name:literal, $cond:expr) => {
+            anyhow::ensure!(
+                $cond,
+                "soak {}: drift invariant {} violated ({})",
+                cfg.name,
+                $name,
+                stringify!($cond)
+            );
+            checks.push($name);
+        };
+    }
+
+    let frames = flight.frames_len();
+    check!("timeline-has-frames", frames >= 2);
+    check!("ring-held-the-run", flight.frames_dropped() == 0);
+    check!("conservation", stats.served + stats.rejected + stats.invalid == total);
+
+    // --- no unbounded queue growth -------------------------------------
+    let g_depth = flight.gauge_index("serve.queue_depth").unwrap_or(usize::MAX);
+    let g_peak = flight.gauge_index("serve.queue_depth_peak").unwrap_or(usize::MAX);
+    check!("queue-gauges-in-timeline", g_depth != usize::MAX && g_peak != usize::MAX);
+    let cap = sc.queue_cap as f64;
+    check!(
+        "queue-bounded-every-frame",
+        (0..frames).all(|i| flight.gauge_at(i, g_depth) <= cap && flight.gauge_at(i, g_peak) <= cap)
+    );
+
+    // --- ladder-cache residency stabilizes -----------------------------
+    let g_resident = flight.gauge_index("ladder.resident_bytes").unwrap_or(usize::MAX);
+    check!("residency-gauge-in-timeline", g_resident != usize::MAX);
+    let k = frames.min(3);
+    let tail_resident = flight.gauge_at(frames - 1, g_resident);
+    check!(
+        "residency-stabilizes",
+        (frames - k..frames).all(|i| flight.gauge_at(i, g_resident) == tail_resident)
+    );
+
+    // --- every flip visible as a frame-delta inflection ----------------
+    let g_evict = flight.gauge_index("ladder.switch_evictions").unwrap_or(usize::MAX);
+    let g_promo = flight.gauge_index("policy.promotions").unwrap_or(usize::MAX);
+    let g_demo = flight.gauge_index("policy.demotions").unwrap_or(usize::MAX);
+    let g_clamp = flight.gauge_index("policy.forced_clamps").unwrap_or(usize::MAX);
+    for flip in &flips {
+        let watched: &[usize] = match flip.kind {
+            FlipKind::LadderBudget { .. } => &[g_resident, g_evict],
+            FlipKind::SloTighten { .. } | FlipKind::PolicyToggle => &[g_promo, g_demo, g_clamp],
+        };
+        // baseline = the last frame strictly before the flip tick
+        // (gauges start at zero when the flip precedes every frame)
+        let baseline = (0..frames).rev().find(|&i| flight.frame_tick(i) < flip.at_tick);
+        let horizon = flip.at_tick + 3 * cfg.frame_every as u64;
+        let window = (0..frames).filter(|&i| {
+            let t = flight.frame_tick(i);
+            t >= flip.at_tick && t <= horizon
+        });
+        let mut inflected = false;
+        for i in window {
+            for &g in watched {
+                let before = baseline.map_or(0.0, |b| flight.gauge_at(b, g));
+                if flight.gauge_at(i, g) != before {
+                    inflected = true;
+                }
+            }
+        }
+        anyhow::ensure!(
+            inflected,
+            "soak {}: {} at tick {} left no frame-delta inflection within {} ticks",
+            cfg.name,
+            flip.kind.label(),
+            flip.at_tick,
+            3 * cfg.frame_every
+        );
+    }
+    if !flips.is_empty() {
+        checks.push("flips-inflect-the-timeline");
+    }
+
+    // --- post-demote agreement recovery --------------------------------
+    // after the LAST frame where the demotions gauge rose, any frame
+    // that scores probes must clear the scenario's agreement floor
+    let h_agree = flight.histo_index("policy.probe_agreement").unwrap_or(usize::MAX);
+    check!("agreement-histo-in-timeline", h_agree != usize::MAX);
+    let last_demote = (1..frames)
+        .rev()
+        .find(|&i| flight.gauge_at(i, g_demo) > flight.gauge_at(i - 1, g_demo));
+    let mut recovered = true;
+    if let Some(d) = last_demote {
+        for i in d + 1..frames {
+            let probes = flight.histo_count_delta(i, h_agree);
+            if probes > 0 {
+                let mean = flight.histo_sum_delta(i, h_agree) / probes as f64;
+                recovered = mean >= sc.slo.probe_agreement_floor;
+            }
+        }
+    }
+    check!("post-demote-agreement-recovers", recovered);
+
+    // --- frame-delta sums equal the final counters ---------------------
+    // (exact because the ring held every frame and the recorder attached
+    // before any traffic)
+    let reg = server.metrics().registry();
+    let mut deltas_match = true;
+    for c in 0..reg.n_counters() {
+        let summed: u64 = (0..frames).map(|i| flight.counter_delta(i, c)).sum();
+        if summed != reg.counter_at(c) {
+            deltas_match = false;
+        }
+    }
+    check!("frame-deltas-sum-to-final", deltas_match);
+
+    let demotions_peak = (0..frames)
+        .map(|i| flight.gauge_at(i, g_demo) as u64)
+        .max()
+        .unwrap_or(0);
+
+    let det = json::obj(vec![
+        ("frames", json::n(frames as f64)),
+        ("invalid", json::n(stats.invalid as f64)),
+        ("served", json::n(stats.served as f64)),
+        ("shed", json::n(stats.rejected as f64)),
+        ("ticks", json::n(cfg.ticks as f64)),
+        ("timeline", flight.det_timeline()),
+        ("tokens", json::n(stats.tokens_generated as f64)),
+    ]);
+    let wall = json::obj(vec![
+        ("throughput_rps", json::n(stats.throughput_rps())),
+        ("throughput_tps", json::n(stats.throughput_tps())),
+        ("timeline", flight.timeline()),
+        ("wall_secs", json::n(stats.wall_secs)),
+    ]);
+    let record = json::obj(vec![
+        ("name", json::s(cfg.name.clone())),
+        ("scenario", json::s(cfg.scenario.clone())),
+        ("seed", json::n(cfg.seed as f64)),
+        ("det", det),
+        ("wall", wall),
+        ("checks", Value::Arr(checks.iter().map(|c| json::s(*c)).collect())),
+    ]);
+
+    Ok(SoakReport {
+        name: cfg.name.clone(),
+        served: stats.served,
+        shed: stats.rejected,
+        invalid: stats.invalid,
+        demotions: demotions_peak,
+        frames,
+        checks,
+        det_timeline: flight.det_timeline(),
+        record,
+    })
+}
+
+/// `otaro soak` entry point: run one built-in soak (default the first
+/// catalog entry) or a `--config FILE` custom soak, assert every drift
+/// invariant, and write the bench record (default `BENCH_soak.json`).
+pub fn soak_cli(
+    scenario: Option<String>,
+    config: Option<PathBuf>,
+    out: Option<PathBuf>,
+) -> anyhow::Result<()> {
+    let cfg = match config {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+            let v = crate::json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+            SoakConfig::from_json(&v)?
+        }
+        None => {
+            let all = soak_catalog();
+            match &scenario {
+                Some(name) => {
+                    let found = all
+                        .iter()
+                        .find(|c| c.name == name.as_str() || c.scenario == name.as_str())
+                        .cloned();
+                    found.ok_or_else(|| {
+                        let known: Vec<String> =
+                            all.iter().map(|c| c.name.clone()).collect();
+                        anyhow::anyhow!("unknown soak {name:?}; known: {}", known.join(", "))
+                    })?
+                }
+                None => all
+                    .into_iter()
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("empty soak catalog"))?,
+            }
+        }
+    };
+    println!(
+        "soak {:<24} {} ticks of {} ({} flips, frame every {})",
+        cfg.name,
+        cfg.ticks,
+        cfg.scenario,
+        cfg.flips.len(),
+        cfg.frame_every
+    );
+    let rep = run_soak(&cfg)?;
+    println!(
+        "  served {} / shed {} / invalid {} — {} frames, demotions peak {}, {} invariants held",
+        rep.served,
+        rep.shed,
+        rep.invalid,
+        rep.frames,
+        rep.demotions,
+        rep.checks.len()
+    );
+    let path = out.unwrap_or_else(|| PathBuf::from("BENCH_soak.json"));
+    write_bench_file(&path, "soak", Value::Arr(vec![rep.record]))?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_soaks_stretch_their_base_scenarios() {
+        for cfg in soak_catalog() {
+            cfg.validate().unwrap();
+            let base = resolve_base(&cfg.scenario).unwrap();
+            assert!(
+                cfg.ticks >= 3 * base.ticks,
+                "{}: a soak must run well past its base trace",
+                cfg.name
+            );
+            // the ring must hold every sampled frame (delta-sum exactness)
+            let expected_frames = cfg.ticks.div_ceil(cfg.frame_every);
+            assert!(cfg.frame_cap >= expected_frames, "{}: ring would evict", cfg.name);
+            assert!(!cfg.flips.is_empty(), "{}: built-ins exercise flips", cfg.name);
+        }
+    }
+
+    #[test]
+    fn config_parses_from_json_with_defaults_and_rejects_bad_flips() {
+        let v = crate::json::parse(
+            r#"{"ticks": 40, "flips": [{"at_tick": 10, "kind": "policy_toggle"}]}"#,
+        )
+        .unwrap();
+        let cfg = SoakConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.name, "custom-soak");
+        assert_eq!(cfg.scenario, "burst-storm");
+        assert_eq!((cfg.ticks, cfg.frame_every, cfg.frame_cap), (40, 8, 64));
+        assert_eq!(cfg.flips.len(), 1);
+        assert!(!cfg.plan.rules.is_empty(), "absent plan defaults to the traced plan");
+
+        let empty_plan =
+            crate::json::parse(r#"{"ticks": 4, "plan": {}}"#).unwrap();
+        assert!(SoakConfig::from_json(&empty_plan).unwrap().plan.rules.is_empty());
+
+        let late_flip = crate::json::parse(
+            r#"{"ticks": 4, "flips": [{"at_tick": 9, "kind": "policy_toggle"}]}"#,
+        )
+        .unwrap();
+        assert!(SoakConfig::from_json(&late_flip).is_err(), "flip beyond the run");
+
+        let bad_kind = crate::json::parse(
+            r#"{"ticks": 4, "flips": [{"at_tick": 1, "kind": "warp_core"}]}"#,
+        )
+        .unwrap();
+        assert!(SoakConfig::from_json(&bad_kind).is_err());
+
+        let no_bytes = crate::json::parse(
+            r#"{"ticks": 4, "flips": [{"at_tick": 1, "kind": "ladder_budget"}]}"#,
+        )
+        .unwrap();
+        assert!(SoakConfig::from_json(&no_bytes).is_err());
+    }
+
+    #[test]
+    fn unknown_scenario_is_an_error() {
+        let cfg = SoakConfig {
+            name: "x".into(),
+            scenario: "no-such-shape".into(),
+            ticks: 4,
+            seed: 1,
+            frame_every: 2,
+            frame_cap: 8,
+            flips: Vec::new(),
+            plan: LatencyPlan::none(),
+        };
+        assert!(run_soak(&cfg).is_err());
+    }
+}

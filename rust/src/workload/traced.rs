@@ -4,13 +4,16 @@
 //!
 //! Differences from [`replay`](super::replay):
 //!
-//! * The backend is [`SimBackend`] wrapped in an [`InjectedBackend`] —
-//!   pure logical decode (microseconds) plus *synthetic*, plan-declared
-//!   latency.  Injected steps sleep 40 ms against a 25 ms SLO while
-//!   un-injected steps finish in well under a millisecond, so every
-//!   latency sample classifies the same way on every run and the
-//!   resulting `otaro.trace.v1` snapshot is **byte-identical** across
-//!   runs of the same (scenario, seed, plan).
+//! * The backend is the replay driver's [`DecoderBackend`] — real SEFP
+//!   logits off the same tiny decoder ladder — wrapped in an
+//!   [`InjectedBackend`] adding *synthetic*, plan-declared latency.
+//!   Injected steps sleep 40 ms against a 25 ms SLO while un-injected
+//!   steps finish in a few milliseconds, so every latency sample
+//!   classifies the same way on every run and the resulting
+//!   `otaro.trace.v1` snapshot is **byte-identical** across runs of the
+//!   same (scenario, seed, plan): logits are a pure function of the
+//!   ladder bytes and the token window, and sampling draws from the
+//!   seeded server RNG.
 //! * Routing is always adaptive: the point of the exercise is watching
 //!   the controller demote the injected rung, with the trace carrying
 //!   the whole causal chain — `injected` events, over-SLO completions,
@@ -34,12 +37,13 @@ use crate::config::{PolicyConfig, ServeConfig};
 use crate::json::{self, Value};
 use crate::obs::inject::{InjectedBackend, LatencyPlan, LatencyRule};
 use crate::obs::Tracer;
-use crate::runtime::ParamStore;
 use crate::sefp::Precision;
 use crate::serve::{
-    DynamicBatcher, PrecisionLadder, Router, SchedPolicy, Server, SimBackend,
+    demo_decoder_params, DecoderBackend, DynamicBatcher, PrecisionLadder, Router, SchedPolicy,
+    Server,
 };
 
+use super::replay::replay_sim_config;
 use super::scenario::{catalog, Kind, Scenario};
 use super::trace::generate;
 
@@ -94,19 +98,6 @@ fn traced_config(sc: &Scenario) -> ServeConfig {
         },
         ..ServeConfig::default()
     }
-}
-
-/// The tiny ladder the sim decodes against (SimBackend scores logits
-/// from (tokens, precision), not from weights — the ladder only feeds
-/// the view-switch machinery).
-fn sim_ladder() -> PrecisionLadder {
-    let params = ParamStore {
-        tensors: vec![vec![0.25; 64]],
-        names: vec!["w".into()],
-        shapes: vec![vec![8, 8]],
-        quantized: vec![true],
-    };
-    PrecisionLadder::from_params(&params)
 }
 
 /// One request's span chain, flattened for waterfall math.  All times
@@ -262,12 +253,19 @@ pub fn run_traced(sc: &Scenario, plan: LatencyPlan) -> anyhow::Result<TracedRepo
     let cfg = traced_config(sc);
     let injected_rungs: Vec<u8> =
         plan.rules.iter().filter_map(|r| r.precision.map(|p| p.m())).collect();
-    let backend =
-        InjectedBackend::new(SimBackend::new(cfg.max_batch, 16, 256).with_quality_model(1e-4), plan);
+    // the replay driver's model, behind the injection wrapper: span
+    // invariants now hold over real SEFP logits, not a scoring stub
+    let sim = replay_sim_config();
+    let params = demo_decoder_params(&sim, 5);
+    let ladder = PrecisionLadder::from_params(&params).with_budget(cfg.ladder_budget_bytes);
+    let backend = InjectedBackend::new(
+        DecoderBackend::from_ladder(&ladder, cfg.max_batch, sim.context, cfg.decode_threads)?,
+        plan,
+    );
     let batcher = DynamicBatcher::new(cfg.max_batch, cfg.queue_cap)
         .with_policy(SchedPolicy::from_config(&cfg));
     let router = Router::from_config(cfg.clone());
-    let mut server = Server::new(backend, sim_ladder(), router, batcher)
+    let mut server = Server::new(backend, ladder, router, batcher)
         .with_seed(sc.seed)
         .with_tracer(Tracer::new(1024, 32));
 

@@ -170,6 +170,58 @@ fn tracing_and_trend_gate_modules_inherit_the_path_rules() {
 }
 
 #[test]
+fn flight_profile_and_soak_modules_inherit_the_path_rules() {
+    // the flight recorder samples on the serving loop, the stage
+    // profiler records inside it, and the soak driver replays real
+    // traffic: panics and hash collections are banned in all three
+    for module in ["obs/flight.rs", "obs/profile.rs", "workload/soak.rs"] {
+        assert_eq!(rules_hit(module, "x.unwrap();\n"), ["request-path-no-panic"], "{module}");
+        assert_eq!(rules_hit(module, "x.expect(\"frame\");\n"), ["request-path-no-panic"], "{module}");
+        assert_eq!(
+            rules_hit(module, "use std::collections::HashMap;\n"),
+            ["decision-path-determinism"],
+            "{module}"
+        );
+    }
+    // the non-panicking combinators and BTree collections stay legal,
+    // and in-module tests stay exempt
+    assert!(rules_hit("obs/flight.rs", "let g = names.get(i).copied().unwrap_or(0);\n").is_empty());
+    assert!(rules_hit("workload/soak.rs", "use std::collections::BTreeMap;\n").is_empty());
+    let in_test = "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+    assert!(rules_hit("obs/profile.rs", in_test).is_empty());
+}
+
+#[test]
+fn flight_sampler_record_path_fits_a_no_alloc_region() {
+    // the shape of FlightRecorder::sample / StageRecorder::record:
+    // ring-index arithmetic, wrapping deltas against the previous
+    // cumulative snapshot, writes into pre-sized buffers
+    let sample = "\
+// lint: region(no_alloc)
+let slot = self.head % self.capacity;
+frame.tick = tick;
+frame.counters[i] = cur.wrapping_sub(self.prev_counters[i]);
+self.prev_counters[i] = cur;
+self.samples.push(s);
+// lint: end_region
+";
+    assert!(rules_hit("obs/flight.rs", sample).is_empty());
+    // ...but snapshot-style allocation inside the sampler would fire
+    let alloc = "\
+// lint: region(no_alloc)
+let copy = self.prev_counters.to_vec();
+// lint: end_region
+";
+    assert_eq!(rules_hit("obs/flight.rs", alloc), ["hot-loop-no-alloc"]);
+    let fmt = "\
+// lint: region(no_alloc)
+let label = format!(\"rung {}\", p);
+// lint: end_region
+";
+    assert_eq!(rules_hit("obs/profile.rs", fmt), ["hot-loop-no-alloc"]);
+}
+
+#[test]
 fn tracer_record_path_fits_a_no_alloc_region() {
     // the shape of Tracer's record path: ring-index arithmetic, a linear
     // scan, and pushes into pre-reserved buffers — all legal in-region

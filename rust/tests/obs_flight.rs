@@ -1,0 +1,138 @@
+//! Integration gates for the flight recorder and the soak harness that
+//! drives it: ring-overflow drop accounting and delta-sum exactness at
+//! the registry level, then the full-stack properties — byte-identical
+//! deterministic timelines across seeded soak runs, and every mid-trace
+//! config flip leaving a visible frame-delta inflection.
+
+use otaro::obs::{FlightRecorder, MetricSink, Registry};
+use otaro::workload::{default_plan, run_soak, Flip, FlipKind, SoakConfig};
+
+#[test]
+fn ring_overflow_evicts_oldest_and_accounts_drops() {
+    let mut reg = Registry::new();
+    let c = reg.counter("t.count");
+    let mut fr = FlightRecorder::attach(&reg, 2);
+    for tick in 0..5u64 {
+        reg.add(c, 1);
+        fr.sample(tick, &reg);
+    }
+    // capacity 2 ring after 5 samples: the 3 oldest frames are gone,
+    // the survivors are the newest two, oldest-first
+    assert_eq!(fr.frames_len(), 2);
+    assert_eq!(fr.frames_dropped(), 3);
+    assert_eq!((fr.frame_tick(0), fr.frame_tick(1)), (3, 4));
+    let timeline = fr.timeline();
+    assert_eq!(
+        timeline.get("frames_dropped").and_then(|v| v.as_f64()),
+        Some(3.0),
+        "drop accounting must survive serialization"
+    );
+    // with frames lost, delta sums can no longer reconstruct the final
+    // counter — which is exactly why the soak sizes its ring to hold
+    // every frame
+    let summed: u64 = (0..fr.frames_len()).map(|i| fr.counter_delta(i, 0)).sum();
+    assert_eq!(summed, 2);
+    assert_eq!(reg.counter_at(0), 5);
+}
+
+#[test]
+fn frame_delta_sums_reconstruct_final_counters() {
+    let mut reg = Registry::new();
+    let a = reg.counter("t.alpha");
+    let b = reg.counter("t.beta");
+    let mut fr = FlightRecorder::attach(&reg, 8);
+    for (tick, &(da, db)) in [(3u64, 7u64), (0, 11), (5, 0), (2, 9)].iter().enumerate() {
+        reg.add(a, da);
+        reg.add(b, db);
+        fr.sample(tick as u64, &reg);
+    }
+    for c in 0..reg.n_counters() {
+        let summed: u64 = (0..fr.frames_len()).map(|i| fr.counter_delta(i, c)).sum();
+        assert_eq!(summed, reg.counter_at(c), "counter {c}");
+    }
+}
+
+#[test]
+fn det_timeline_drops_the_wall_side_histogram_planes() {
+    let mut reg = Registry::new();
+    let c = reg.counter("t.count");
+    let h = reg.histogram("t.lat_ms", &[1.0, 10.0]);
+    let mut fr = FlightRecorder::attach(&reg, 4);
+    reg.add(c, 1);
+    reg.observe(h, 0.5);
+    fr.sample(0, &reg);
+    let full = fr.timeline();
+    let det = fr.det_timeline();
+    assert!(full.get("histograms").is_some());
+    assert!(det.get("histograms").is_none(), "histograms record wall time");
+    let frame = det.get("frames").and_then(|v| v.as_arr()).unwrap()[0].clone();
+    assert!(frame.get("h").is_none() && frame.get("hs").is_none());
+    assert!(frame.get("c").is_some() && frame.get("g").is_some());
+}
+
+/// A small soak over the storm shape with all three flip kinds: flips
+/// spaced so at least two burst ticks land between router-resetting
+/// flips (demotion pressure from the injection plan keeps the policy
+/// gauges moving, which is what makes each reset visible).
+fn flip_cfg() -> SoakConfig {
+    SoakConfig {
+        name: "itest-soak".to_string(),
+        scenario: "burst-storm".to_string(),
+        ticks: 20,
+        seed: 4242,
+        frame_every: 4,
+        frame_cap: 16,
+        flips: vec![
+            Flip { at_tick: 5, kind: FlipKind::SloTighten { slo_p95_ms: 15.0 } },
+            Flip { at_tick: 9, kind: FlipKind::LadderBudget { bytes: 0 } },
+            Flip { at_tick: 16, kind: FlipKind::PolicyToggle },
+        ],
+        plan: default_plan(),
+    }
+}
+
+#[test]
+fn seeded_soak_runs_are_byte_identical_and_flips_inflect() {
+    let cfg = flip_cfg();
+    let rep1 = run_soak(&cfg).unwrap();
+    let rep2 = run_soak(&cfg).unwrap();
+
+    // the deterministic timeline — counters, gauges, marks — is the
+    // cross-run drift artifact: byte equality IS the gate
+    assert_eq!(rep1.det_timeline.to_string(), rep2.det_timeline.to_string());
+    assert_eq!(
+        rep1.record.get("det").map(|d| d.to_string()),
+        rep2.record.get("det").map(|d| d.to_string()),
+        "the emitted bench record's det section must match too"
+    );
+
+    // every drift invariant ran (run_soak errors out otherwise)
+    for want in [
+        "queue-bounded-every-frame",
+        "residency-stabilizes",
+        "flips-inflect-the-timeline",
+        "post-demote-agreement-recovers",
+        "frame-deltas-sum-to-final",
+    ] {
+        assert!(rep1.checks.contains(&want), "missing invariant {want}: {:?}", rep1.checks);
+    }
+
+    // each flip is pinned into the timeline as a mark, in tick order
+    let marks = rep1.det_timeline.get("marks").and_then(|v| v.as_arr()).unwrap();
+    let labels: Vec<&str> =
+        marks.iter().filter_map(|m| m.get("label").and_then(|l| l.as_str())).collect();
+    assert_eq!(labels, ["flip: slo_tighten", "flip: ladder_budget", "flip: policy_toggle"]);
+
+    // the storm overran the queue and the injection plan forced the
+    // policy's hand — the run exercised what it claims to soak
+    assert!(rep1.served > 0 && rep1.shed > 0, "served {} shed {}", rep1.served, rep1.shed);
+    assert!(rep1.demotions >= 1, "injected SLO violations must demote");
+    assert!(rep1.frames >= 4, "{} frames", rep1.frames);
+}
+
+#[test]
+fn soak_rejects_flips_scheduled_beyond_the_run() {
+    let mut cfg = flip_cfg();
+    cfg.flips[0].at_tick = 99;
+    assert!(run_soak(&cfg).is_err());
+}

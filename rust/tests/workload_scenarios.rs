@@ -5,7 +5,9 @@
 //! one record per scenario.
 
 use otaro::json;
-use otaro::workload::{catalog, generate, run_cli, run_scenario, Kind};
+use otaro::workload::{
+    catalog, generate, run_cli, run_scenario, run_soak, soak_catalog, Kind, SoakConfig,
+};
 
 #[test]
 fn every_scenario_upholds_its_invariants() {
@@ -16,7 +18,7 @@ fn every_scenario_upholds_its_invariants() {
         // run_scenario bails on any violated invariant, so reaching here
         // means all of them held; pin the count so silently dropping a
         // check is itself a failure
-        assert_eq!(rep.checks.len(), 12, "{}: {:?}", sc.name, rep.checks);
+        assert_eq!(rep.checks.len(), 13, "{}: {:?}", sc.name, rep.checks);
         assert!(rep.served >= sc.slo.min_served, "{}", sc.name);
         match sc.kind {
             Kind::BurstStorm => assert!(rep.shed > 0, "storm must shed"),
@@ -76,6 +78,53 @@ fn traces_are_pure_functions_of_the_scenario() {
                 .collect::<Vec<_>>()
         };
         assert_eq!(flat(&a), flat(&b), "{}", sc.name);
+    }
+}
+
+#[test]
+fn quick_soak_from_a_json_config_holds_its_drift_invariants() {
+    // a config-file soak, exactly as `otaro soak --config FILE` would
+    // parse it: a short storm with an explicit injection plan and a
+    // mid-trace SLO flip plus policy toggle
+    let v = json::parse(
+        r#"{
+            "name": "smoke-soak",
+            "scenario": "burst-storm",
+            "ticks": 20, "seed": 7, "frame_every": 4, "frame_cap": 8,
+            "flips": [
+                {"at_tick": 6,  "kind": "slo_tighten", "slo_p95_ms": 15},
+                {"at_tick": 10, "kind": "ladder_budget", "bytes": 0}
+            ],
+            "plan": {"max_retries": 2,
+                     "rules": [{"precision": 4, "delay_ms": 40, "fault_every": 5}]}
+        }"#,
+    )
+    .unwrap();
+    let cfg = SoakConfig::from_json(&v).unwrap();
+    assert_eq!(cfg.plan.rules.len(), 1, "the config file's plan, not the default");
+
+    let rep = run_soak(&cfg).unwrap_or_else(|e| panic!("smoke-soak: {e:#}"));
+    // run_soak bails on any violated drift invariant; both flips must
+    // additionally have left their inflection in the timeline
+    assert!(rep.checks.contains(&"flips-inflect-the-timeline"), "{:?}", rep.checks);
+    assert!(rep.checks.contains(&"frame-deltas-sum-to-final"), "{:?}", rep.checks);
+    assert!(rep.served > 0 && rep.shed > 0, "the storm must shed");
+    assert_eq!(
+        rep.det_timeline.to_string(),
+        run_soak(&cfg).unwrap().det_timeline.to_string(),
+        "seeded soak timelines are byte-identical"
+    );
+}
+
+#[test]
+fn soak_catalog_entries_are_runnable_shapes() {
+    // full catalog soaks are CI's job (quick mode); here just pin that
+    // every entry names a real scenario and stretches it
+    for cfg in soak_catalog() {
+        let base = catalog().into_iter().find(|s| s.name == cfg.scenario);
+        let base = base.unwrap_or_else(|| panic!("{}: unknown base {}", cfg.name, cfg.scenario));
+        assert!(cfg.ticks >= 3 * base.ticks, "{}: not a soak", cfg.name);
+        assert!(!cfg.flips.is_empty(), "{}", cfg.name);
     }
 }
 
