@@ -266,7 +266,10 @@ fn parse_string(b: &[u8], pos: &mut usize) -> anyhow::Result<String> {
                 // consume one UTF-8 scalar
                 let rest = std::str::from_utf8(&b[*pos..])
                     .map_err(|_| anyhow::anyhow!("invalid utf8 in string"))?;
-                let c = rest.chars().next().unwrap();
+                let c = rest
+                    .chars()
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
                 out.push(c);
                 *pos += c.len_utf8();
             }

@@ -1,0 +1,375 @@
+//! Crate-wide graph analyses — the reachability-based counterparts of
+//! the per-file token rules in [`super::rules`].
+//!
+//! The token rules guard *direct* violations: an `unwrap()` typed into
+//! `serve/`, a `format!` typed into a `no_alloc` region.  The analyses
+//! here close the cross-module gap by walking the call graph built in
+//! [`super::graph`]:
+//!
+//! * `transitive-request-path-no-panic` — every non-test fn in a
+//!   request-path module ([`PATH_DIRS`]) is an entry point; any panic
+//!   token (`unwrap`/`expect` calls, `panic!`-family macros) in a fn
+//!   reachable from one — in *any* module — is a violation, reported
+//!   with the full entry → … → offender chain.
+//! * `transitive-hot-loop-no-alloc` — a call inside a
+//!   `// lint: region(no_alloc)` span may not reach a fn containing an
+//!   allocating idiom through any chain.  "Allocating" means a crate fn
+//!   the direct rule would flag; std methods (e.g. `Vec::push` on a
+//!   pre-sized scratch buffer) contribute no graph node and are the
+//!   direct rule's business.
+//! * `determinism-taint` — a fn mentioning `HashMap`/`HashSet` (in a
+//!   module the direct determinism rule does not already cover) may not
+//!   reach a fn that emits a frozen `otaro.<name>.v<N>` snapshot
+//!   literal: iteration order must never feed a byte-frozen artifact.
+//! * `schema-registry` — every `otaro.<name>.v<N>` literal in non-test
+//!   code must resolve against [`crate::obs::SCHEMAS`]; an undeclared
+//!   name is an unregistered snapshot format and a declared-name /
+//!   different-version site is a silent version bump.  Under full-crate
+//!   coverage the table is also checked for staleness (each declared
+//!   emitting module must still contain its literal).
+//!
+//! All four honor inline `allow(rule, reason = …)` directives at the
+//! violation line and the shrink-only baseline, like every token rule.
+//! The report-only dead-item pass (surfaced by `otaro lint --dead`)
+//! also lives here: pub fns whose name is never mentioned outside fn
+//! definitions — candidates for deletion, listed but never failed on.
+
+use std::collections::BTreeMap;
+
+use crate::obs::SchemaDef;
+
+use super::graph::Graph;
+use super::parse::FileFacts;
+use super::source::SourceFile;
+use super::Violation;
+
+/// Transitive panic reachability (graph form of `request-path-no-panic`).
+pub const TRANSITIVE_PANIC: &str = "transitive-request-path-no-panic";
+/// Transitive allocation reachability from `no_alloc` regions.
+pub const TRANSITIVE_ALLOC: &str = "transitive-hot-loop-no-alloc";
+/// Hash-iteration taint flowing into frozen snapshot emitters.
+pub const DETERMINISM_TAINT: &str = "determinism-taint";
+/// `otaro.<name>.v<N>` literals must resolve against `obs::SCHEMAS`.
+pub const SCHEMA_REGISTRY: &str = "schema-registry";
+
+/// One registered analysis (the graph-level analogue of
+/// [`super::rules::RuleDef`]).
+pub struct AnalysisDef {
+    pub name: &'static str,
+    /// one-line contract statement
+    pub summary: &'static str,
+}
+
+/// The analysis registry, in documentation order.
+pub const ANALYSES: &[AnalysisDef] = &[
+    AnalysisDef {
+        name: TRANSITIVE_PANIC,
+        summary: "no panic token anywhere in the crate is reachable from a \
+                  request-path entry point through the call graph",
+    },
+    AnalysisDef {
+        name: TRANSITIVE_ALLOC,
+        summary: "calls inside no_alloc regions reach no allocating crate fn \
+                  through any call chain",
+    },
+    AnalysisDef {
+        name: DETERMINISM_TAINT,
+        summary: "HashMap/HashSet usage never flows into a fn emitting a \
+                  frozen otaro.*.vN snapshot",
+    },
+    AnalysisDef {
+        name: SCHEMA_REGISTRY,
+        summary: "every otaro.<name>.v<N> literal resolves against \
+                  obs::SCHEMAS; versions never bump silently",
+    },
+];
+
+/// Names of all registered analyses (for directive validation).
+pub fn analysis_names() -> Vec<&'static str> {
+    ANALYSES.iter().map(|a| a.name).collect()
+}
+
+/// Request-path module prefixes — shared with the direct
+/// `request-path-no-panic` / `decision-path-determinism` rules.
+pub const PATH_DIRS: &[&str] = &["serve/", "policy/", "obs/", "workload/", "benchutil/diff"];
+
+/// True when `module` is a request-path module.
+pub fn in_path(module: &str) -> bool {
+    PATH_DIRS.iter().any(|d| module.starts_with(d))
+}
+
+/// Everything one analysis pass produces beyond violations.
+#[derive(Debug, Default)]
+pub struct Outcome {
+    pub violations: Vec<Violation>,
+    /// non-test fns reachable from request-path entry points
+    pub reachable_fns: usize,
+    /// `expr[idx]` sites inside those reachable fns (informational:
+    /// each is an assert-class bounds contract on the request path)
+    pub reachable_index_sites: usize,
+    /// non-test `otaro.*.vN` literal sites checked against the registry
+    pub schema_sites: usize,
+    /// report-only dead-item candidates, `module:line: label` sorted
+    pub dead: Vec<String>,
+}
+
+/// Run all graph analyses over the parsed crate.  `files` and `facts`
+/// are parallel (one entry per source file); `schemas` is the declared
+/// registry; `coverage` enables the staleness direction of the schema
+/// check and must only be set when `facts` spans the whole crate.
+pub fn run(
+    files: &[SourceFile],
+    facts: &[FileFacts],
+    schemas: &[SchemaDef],
+    coverage: bool,
+) -> Outcome {
+    debug_assert_eq!(files.len(), facts.len());
+    let mut out = Outcome::default();
+    let graph = Graph::build(facts);
+    let file_of: BTreeMap<&str, usize> =
+        files.iter().enumerate().map(|(i, f)| (f.module.as_str(), i)).collect();
+    let allowed = |rule: &str, module: &str, line: usize| -> bool {
+        file_of
+            .get(module)
+            .is_some_and(|&i| line >= 1 && files[i].allowed(rule, line - 1))
+    };
+    let mut base = Vec::with_capacity(facts.len());
+    let mut acc = 0usize;
+    for ff in facts {
+        base.push(acc);
+        acc += ff.fns.len();
+    }
+
+    // ── transitive-request-path-no-panic ────────────────────────────
+    let entries: Vec<usize> = (0..graph.fns.len())
+        .filter(|&k| !graph.fns[k].is_test && in_path(&graph.fns[k].module))
+        .collect();
+    let reach = graph.reach(&entries);
+    for k in 0..graph.fns.len() {
+        if reach.dist[k].is_none() {
+            continue;
+        }
+        let f = graph.fns[k];
+        out.reachable_fns += 1;
+        out.reachable_index_sites += f.index_sites;
+        if in_path(&f.module) {
+            // the direct token rule owns panic sites inside path modules
+            continue;
+        }
+        for (line, tok) in &f.panics {
+            if allowed(TRANSITIVE_PANIC, &f.module, *line) {
+                continue;
+            }
+            let chain = graph.chain_labels(&reach.parent, k);
+            out.violations.push(Violation {
+                rule: TRANSITIVE_PANIC,
+                module: f.module.clone(),
+                line: *line,
+                message: format!(
+                    "`{tok}` is reachable from the request path — propagate an \
+                     error instead; chain: {}",
+                    chain.join(" -> ")
+                ),
+                chain,
+            });
+        }
+    }
+
+    // ── transitive-hot-loop-no-alloc ────────────────────────────────
+    for (fi, file) in files.iter().enumerate() {
+        for region in file.regions.iter().filter(|r| r.kind == "no_alloc") {
+            for (kl, f) in facts[fi].fns.iter().enumerate() {
+                if f.is_test {
+                    continue;
+                }
+                let k = base[fi] + kl;
+                for (ci, call) in f.calls.iter().enumerate() {
+                    let li = call.line.saturating_sub(1);
+                    if li < region.start || li > region.end {
+                        continue;
+                    }
+                    if allowed(TRANSITIVE_ALLOC, &file.module, call.line) {
+                        continue;
+                    }
+                    let mut hit: Option<Vec<usize>> = None;
+                    for &t in &graph.call_targets[k][ci] {
+                        if let Some(p) =
+                            graph.find_path(t, |u| !graph.fns[u].allocs.is_empty())
+                        {
+                            hit = Some(p);
+                            break;
+                        }
+                    }
+                    let Some(path) = hit else { continue };
+                    let Some(&sink) = path.last() else { continue };
+                    let Some((aline, atok)) = graph.fns[sink].allocs.first() else { continue };
+                    let mut chain = vec![f.label()];
+                    chain.extend(path.iter().map(|&u| graph.fns[u].label()));
+                    out.violations.push(Violation {
+                        rule: TRANSITIVE_ALLOC,
+                        module: file.module.clone(),
+                        line: call.line,
+                        message: format!(
+                            "`{}()` inside a no_alloc region reaches `{atok}` \
+                             ({}:{aline}); chain: {}",
+                            call.name,
+                            graph.fns[sink].module,
+                            chain.join(" -> ")
+                        ),
+                        chain,
+                    });
+                }
+            }
+        }
+    }
+
+    // ── determinism-taint ───────────────────────────────────────────
+    // emitters: innermost non-test fn enclosing each schema literal
+    let mut emitters: BTreeMap<usize, String> = BTreeMap::new();
+    for (fi, ff) in facts.iter().enumerate() {
+        for site in &ff.schemas {
+            let mut best: Option<(usize, usize)> = None; // (span, local idx)
+            for (kl, f) in ff.fns.iter().enumerate() {
+                if f.is_test || site.line < f.line || site.line > f.end_line {
+                    continue;
+                }
+                let span = f.end_line - f.line;
+                if best.is_none_or(|(s, _)| span < s) {
+                    best = Some((span, kl));
+                }
+            }
+            if let Some((_, kl)) = best {
+                emitters.entry(base[fi] + kl).or_insert_with(|| site.text.clone());
+            }
+        }
+    }
+    for k in 0..graph.fns.len() {
+        let f = graph.fns[k];
+        if f.is_test || in_path(&f.module) || f.hash_lines.is_empty() {
+            // path modules: the direct determinism rule bans the types
+            continue;
+        }
+        let Some(&hline) = f.hash_lines.first() else { continue };
+        if allowed(DETERMINISM_TAINT, &f.module, hline) {
+            continue;
+        }
+        let Some(path) = graph.find_path(k, |u| emitters.contains_key(&u)) else { continue };
+        let Some(&sink) = path.last() else { continue };
+        let schema = emitters.get(&sink).cloned().unwrap_or_default();
+        let chain: Vec<String> = path.iter().map(|&u| graph.fns[u].label()).collect();
+        out.violations.push(Violation {
+            rule: DETERMINISM_TAINT,
+            module: f.module.clone(),
+            line: hline,
+            message: format!(
+                "`HashMap`/`HashSet` iteration here can taint the frozen \
+                 snapshot `{schema}` emitted by {} — use BTreeMap/BTreeSet; \
+                 chain: {}",
+                graph.fns[sink].label(),
+                chain.join(" -> ")
+            ),
+            chain,
+        });
+    }
+
+    // ── schema-registry ─────────────────────────────────────────────
+    for ff in facts {
+        for site in &ff.schemas {
+            out.schema_sites += 1;
+            if allowed(SCHEMA_REGISTRY, &ff.module, site.line) {
+                continue;
+            }
+            if schemas.iter().any(|d| d.name == site.name && d.version == site.version) {
+                continue;
+            }
+            let declared =
+                schemas.iter().filter(|d| d.name == site.name).map(|d| d.version).max();
+            let message = match declared {
+                Some(v) => format!(
+                    "`{}` silently bumps frozen schema `{}` past declared v{v} — \
+                     schema versions change by adding a row to obs::SCHEMAS, \
+                     never silently",
+                    site.text, site.name
+                ),
+                None => format!(
+                    "`{}` is not declared in obs::SCHEMAS — register every \
+                     frozen snapshot schema (name, version, emitting module)",
+                    site.text
+                ),
+            };
+            out.violations.push(Violation {
+                rule: SCHEMA_REGISTRY,
+                module: ff.module.clone(),
+                line: site.line,
+                message,
+                chain: Vec::new(),
+            });
+        }
+    }
+    if coverage {
+        for d in schemas {
+            let stale = match file_of.get(d.module) {
+                None => Some(format!(
+                    "obs::SCHEMAS declares `{}` emitted by `{}`, but that module \
+                     is not in the linted tree — fix or delete the row",
+                    d.literal(),
+                    d.module
+                )),
+                Some(&fi) => {
+                    let present = facts[fi]
+                        .schemas
+                        .iter()
+                        .any(|s| s.name == d.name && s.version == d.version);
+                    (!present).then(|| {
+                        format!(
+                            "obs::SCHEMAS declares `{}` emitted by `{}`, but the \
+                             module never emits the literal — stale row; update \
+                             or delete it",
+                            d.literal(),
+                            d.module
+                        )
+                    })
+                }
+            };
+            if let Some(message) = stale {
+                out.violations.push(Violation {
+                    rule: SCHEMA_REGISTRY,
+                    module: d.module.to_string(),
+                    line: 1,
+                    message,
+                    chain: Vec::new(),
+                });
+            }
+        }
+    }
+
+    // ── report-only dead-item pass ──────────────────────────────────
+    let mut name_count: BTreeMap<&str, usize> = BTreeMap::new();
+    for ff in facts {
+        for (name, c) in &ff.mentions {
+            *name_count.entry(name.as_str()).or_insert(0) += c;
+        }
+    }
+    let mut decl_count: BTreeMap<&str, usize> = BTreeMap::new();
+    for f in &graph.fns {
+        *decl_count.entry(f.name.as_str()).or_insert(0) += 1;
+    }
+    let mut dead: Vec<(&str, usize, String)> = Vec::new();
+    for f in &graph.fns {
+        if f.is_test || !f.is_pub || f.trait_name.is_some() || f.name == "main" {
+            continue;
+        }
+        // every definition site mentions the name once; any further
+        // mention (call, re-export, reference) keeps the fn alive
+        let uses = name_count.get(f.name.as_str()).copied().unwrap_or(0);
+        let decls = decl_count.get(f.name.as_str()).copied().unwrap_or(0);
+        if uses <= decls {
+            dead.push((f.module.as_str(), f.line, f.label()));
+        }
+    }
+    dead.sort();
+    out.dead =
+        dead.into_iter().map(|(m, line, label)| format!("{m}:{line}: {label}")).collect();
+
+    out
+}

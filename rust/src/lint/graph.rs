@@ -1,0 +1,383 @@
+//! Crate-wide call graph over [`super::parse::FileFacts`].
+//!
+//! Nodes are the non-test `fn` definitions of every file handed to
+//! [`Graph::build`]; edges come from resolving each call site with a
+//! deliberately *conservative* scope discipline:
+//!
+//! * `Type::name(..)` — exact `(owner, name)` match anywhere in the
+//!   crate (`Self` resolves to the surrounding impl owner first);
+//! * `alias::name(..)` (lowercase qualifier) — free fns in modules
+//!   whose file-stem or parent-directory alias matches the qualifier;
+//! * `recv.name(..)` — methods with that name, kept only when the
+//!   calling file could plausibly see them: same module, or the owner
+//!   type / trait name is mentioned somewhere in the calling file; a
+//!   globally unique method name resolves unconditionally;
+//! * bare `name(..)` — same-file definitions first, then free fns whose
+//!   module alias is mentioned in the calling file, then a globally
+//!   unique free fn.
+//!
+//! Anything else — std/external calls, macro-expanded items, truly
+//! ambiguous names — produces **no edge**.  The analyses built on top
+//! are therefore "what the graph proves reachable" checks: a missing
+//! edge can hide a chain (the per-file token rules still guard the
+//! direct cases) but a reported chain is real, which keeps violations
+//! actionable and the baseline shrink-only.
+//!
+//! Everything is ordered (`BTreeMap`/`BTreeSet`, index-ordered BFS
+//! queues) so reports and the `--json` output are byte-stable.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use super::parse::{Call, FileFacts, FnDef};
+
+/// Aliases under which a module can be referenced from another file:
+/// its file stem (except `mod`/`lib`/`main`) and its parent directory
+/// name — e.g. `serve/store.rs` → `store`, `serve`; `obs/mod.rs` →
+/// `obs`.
+pub fn module_aliases(module: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let stem = module.rsplit('/').next().unwrap_or(module);
+    let stem = stem.strip_suffix(".rs").unwrap_or(stem);
+    if !matches!(stem, "mod" | "lib" | "main") {
+        out.push(stem);
+    }
+    if let Some(pos) = module.rfind('/') {
+        let parent = &module[..pos];
+        let pname = parent.rsplit('/').next().unwrap_or(parent);
+        if !pname.is_empty() && !out.contains(&pname) {
+            out.push(pname);
+        }
+    }
+    out
+}
+
+/// Multi-source BFS result: hop distance and BFS-tree parent per node.
+pub struct Reach {
+    pub dist: Vec<Option<u32>>,
+    pub parent: Vec<Option<usize>>,
+}
+
+/// The resolved call graph.
+pub struct Graph<'a> {
+    /// all fns of all files, in file order then definition order
+    pub fns: Vec<&'a FnDef>,
+    /// resolved target node ids per call: `call_targets[k][ci]`
+    /// parallels `fns[k].calls[ci]` (empty for test fns)
+    pub call_targets: Vec<Vec<Vec<usize>>>,
+    /// adjacency: union of a fn's resolved non-test targets
+    pub edges: Vec<BTreeSet<usize>>,
+}
+
+struct Maps<'a> {
+    /// `(owner, name)` → methods
+    owner_name: BTreeMap<(&'a str, &'a str), Vec<usize>>,
+    /// free fns by name
+    free_by_name: BTreeMap<&'a str, Vec<usize>>,
+    /// methods by name
+    method_by_name: BTreeMap<&'a str, Vec<usize>>,
+    /// `(module, name)` → all fns defined in that file
+    same_file: BTreeMap<(&'a str, &'a str), Vec<usize>>,
+    /// alias → modules it can refer to
+    mod_alias: BTreeMap<&'a str, BTreeSet<&'a str>>,
+    /// module → identifier mentions in that file
+    mentions: BTreeMap<&'a str, &'a BTreeMap<String, usize>>,
+}
+
+impl<'a> Maps<'a> {
+    fn build(facts: &'a [FileFacts], fns: &[&'a FnDef]) -> Maps<'a> {
+        let mut m = Maps {
+            owner_name: BTreeMap::new(),
+            free_by_name: BTreeMap::new(),
+            method_by_name: BTreeMap::new(),
+            same_file: BTreeMap::new(),
+            mod_alias: BTreeMap::new(),
+            mentions: BTreeMap::new(),
+        };
+        for (k, f) in fns.iter().enumerate() {
+            m.same_file.entry((f.module.as_str(), f.name.as_str())).or_default().push(k);
+            match &f.owner {
+                Some(o) => {
+                    m.owner_name.entry((o.as_str(), f.name.as_str())).or_default().push(k);
+                    m.method_by_name.entry(f.name.as_str()).or_default().push(k);
+                }
+                None => m.free_by_name.entry(f.name.as_str()).or_default().push(k),
+            }
+        }
+        for ff in facts {
+            for a in module_aliases(&ff.module) {
+                m.mod_alias.entry(a).or_default().insert(ff.module.as_str());
+            }
+            m.mentions.insert(ff.module.as_str(), &ff.mentions);
+        }
+        m
+    }
+
+    fn resolve(&self, fns: &[&FnDef], caller: usize, call: &Call) -> Vec<usize> {
+        let f = fns[caller];
+        let name = call.name.as_str();
+        let mut qual = call.qual.as_deref();
+        if qual == Some("Self") {
+            qual = f.owner.as_deref();
+        }
+        if let Some(q) = qual {
+            if q.starts_with(|c: char| c.is_uppercase()) {
+                return self.owner_name.get(&(q, name)).cloned().unwrap_or_default();
+            }
+            let Some(mods) = self.mod_alias.get(q) else { return Vec::new() };
+            return self
+                .free_by_name
+                .get(name)
+                .map(|c| {
+                    c.iter().copied().filter(|&k| mods.contains(fns[k].module.as_str())).collect()
+                })
+                .unwrap_or_default();
+        }
+        let ment = self.mentions.get(f.module.as_str());
+        let mentioned = |s: &str| ment.is_some_and(|m| m.contains_key(s));
+        if call.is_method {
+            let Some(cands) = self.method_by_name.get(name) else { return Vec::new() };
+            let vis: Vec<usize> = cands
+                .iter()
+                .copied()
+                .filter(|&k| {
+                    let c = fns[k];
+                    c.module == f.module
+                        || c.owner.as_deref().is_some_and(&mentioned)
+                        || c.trait_name.as_deref().is_some_and(&mentioned)
+                })
+                .collect();
+            if !vis.is_empty() {
+                return vis;
+            }
+            if cands.len() == 1 {
+                return cands.clone();
+            }
+            return Vec::new();
+        }
+        if let Some(local) = self.same_file.get(&(f.module.as_str(), name)) {
+            return local.clone();
+        }
+        let Some(cands) = self.free_by_name.get(name) else { return Vec::new() };
+        let vis: Vec<usize> = cands
+            .iter()
+            .copied()
+            .filter(|&k| module_aliases(&fns[k].module).iter().any(|a| mentioned(a)))
+            .collect();
+        if !vis.is_empty() {
+            vis
+        } else if cands.len() == 1 {
+            cands.clone()
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+impl<'a> Graph<'a> {
+    /// Build the graph over every file's facts.  Test fns neither
+    /// resolve their calls nor receive edges — the analyses reason
+    /// about shipped code only.
+    pub fn build(facts: &'a [FileFacts]) -> Graph<'a> {
+        let mut fns: Vec<&'a FnDef> = Vec::new();
+        for ff in facts {
+            fns.extend(ff.fns.iter());
+        }
+        let maps = Maps::build(facts, &fns);
+        let mut call_targets: Vec<Vec<Vec<usize>>> = Vec::with_capacity(fns.len());
+        let mut edges: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); fns.len()];
+        for (k, f) in fns.iter().enumerate() {
+            if f.is_test {
+                call_targets.push(vec![Vec::new(); f.calls.len()]);
+                continue;
+            }
+            let mut per_call = Vec::with_capacity(f.calls.len());
+            for call in &f.calls {
+                let mut targets = maps.resolve(&fns, k, call);
+                targets.retain(|&t| !fns[t].is_test);
+                for &t in &targets {
+                    edges[k].insert(t);
+                }
+                per_call.push(targets);
+            }
+            call_targets.push(per_call);
+        }
+        Graph { fns, call_targets, edges }
+    }
+
+    /// Multi-source BFS from `entries` (processed in the given order,
+    /// so shortest chains are reported and ties break by entry order).
+    pub fn reach(&self, entries: &[usize]) -> Reach {
+        let n = self.fns.len();
+        let mut dist: Vec<Option<u32>> = vec![None; n];
+        let mut parent: Vec<Option<usize>> = vec![None; n];
+        let mut q = VecDeque::new();
+        for &e in entries {
+            if dist[e].is_none() {
+                dist[e] = Some(0);
+                q.push_back(e);
+            }
+        }
+        while let Some(u) = q.pop_front() {
+            let du = dist[u].unwrap_or(0);
+            for &v in &self.edges[u] {
+                if dist[v].is_none() {
+                    dist[v] = Some(du + 1);
+                    parent[v] = Some(u);
+                    q.push_back(v);
+                }
+            }
+        }
+        Reach { dist, parent }
+    }
+
+    /// Shortest path from `start` to the first node satisfying `stop`
+    /// (including `start` itself), as node ids in call order.
+    pub fn find_path<F: Fn(usize) -> bool>(&self, start: usize, stop: F) -> Option<Vec<usize>> {
+        if stop(start) {
+            return Some(vec![start]);
+        }
+        let n = self.fns.len();
+        let mut parent: Vec<Option<usize>> = vec![None; n];
+        let mut seen = vec![false; n];
+        seen[start] = true;
+        let mut q = VecDeque::from([start]);
+        while let Some(u) = q.pop_front() {
+            for &v in &self.edges[u] {
+                if seen[v] {
+                    continue;
+                }
+                seen[v] = true;
+                parent[v] = Some(u);
+                if stop(v) {
+                    return Some(walk_back(&parent, v));
+                }
+                q.push_back(v);
+            }
+        }
+        None
+    }
+
+    /// Labels of the BFS-tree chain entry → … → `end`.
+    pub fn chain_labels(&self, parent: &[Option<usize>], end: usize) -> Vec<String> {
+        walk_back(parent, end).into_iter().map(|k| self.fns[k].label()).collect()
+    }
+}
+
+fn walk_back(parent: &[Option<usize>], end: usize) -> Vec<usize> {
+    let mut path = vec![end];
+    let mut cur = end;
+    while let Some(p) = parent[cur] {
+        path.push(p);
+        cur = p;
+    }
+    path.reverse();
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::super::source::SourceFile;
+    use super::*;
+
+    fn facts_of(sources: &[(&str, &str)]) -> Vec<FileFacts> {
+        let names = super::super::rules::rule_names();
+        sources
+            .iter()
+            .map(|(m, s)| {
+                let f = SourceFile::parse(m, s, &names).expect("fixture parses");
+                parse::extract(&f)
+            })
+            .collect()
+    }
+
+    fn label_of(g: &Graph<'_>, k: usize) -> String {
+        g.fns[k].label()
+    }
+
+    #[test]
+    fn bare_call_resolves_same_file_first() {
+        let facts = facts_of(&[("a/x.rs", "fn f() { g(); }\nfn g() {}\n")]);
+        let g = Graph::build(&facts);
+        assert_eq!(g.edges[0], BTreeSet::from([1]));
+    }
+
+    #[test]
+    fn cross_file_call_needs_a_module_mention() {
+        let src_caller = "use crate::util;\nfn f() { helper(); }\n";
+        let src_blind = "fn f2() { helper(); }\nfn helper_local() {}\nfn helper2() {}\n";
+        let facts = facts_of(&[
+            ("serve/x.rs", src_caller),
+            ("other/y.rs", src_blind),
+            ("util/mod.rs", "pub fn helper() {}\npub fn helper_unused() {}\n"),
+            ("noise/z.rs", "pub fn helper() {}\n"),
+        ]);
+        let g = Graph::build(&facts);
+        // caller mentions `util` → resolves to util's helper only
+        let f_id = g.fns.iter().position(|f| f.label() == "serve/x.rs::f").expect("f");
+        let util_helper =
+            g.fns.iter().position(|f| f.label() == "util/mod.rs::helper").expect("helper");
+        assert_eq!(g.edges[f_id], BTreeSet::from([util_helper]));
+        // a file with no mention and two global candidates gets no edge
+        let f2 = g.fns.iter().position(|f| f.label() == "other/y.rs::f2").expect("f2");
+        assert!(g.edges[f2].is_empty(), "{:?}", g.edges[f2]);
+    }
+
+    #[test]
+    fn qualified_and_method_calls_resolve() {
+        let facts = facts_of(&[
+            (
+                "serve/x.rs",
+                "use crate::store::Store;\nfn f(s: &Store) { s.get(); store::free(); }\n",
+            ),
+            (
+                "store/mod.rs",
+                "pub struct Store;\nimpl Store { pub fn get(&self) {} }\npub fn free() {}\n",
+            ),
+            ("elsewhere/w.rs", "struct Other;\nimpl Other { fn get(&self) {} }\n"),
+        ]);
+        let g = Graph::build(&facts);
+        let f = g.fns.iter().position(|f| f.label() == "serve/x.rs::f").expect("f");
+        let labels: Vec<String> = g.edges[f].iter().map(|&k| label_of(&g, k)).collect();
+        // `s.get()` sees Store::get (Store is mentioned) but not
+        // Other::get; `store::free()` resolves by module alias
+        assert_eq!(labels, ["store/mod.rs::Store::get", "store/mod.rs::free"]);
+    }
+
+    #[test]
+    fn test_fns_are_outside_the_graph() {
+        let facts = facts_of(&[(
+            "a/x.rs",
+            "fn live() { used(); }\nfn used() {}\n#[test]\nfn t() { live(); }\n",
+        )]);
+        let g = Graph::build(&facts);
+        let t = g.fns.iter().position(|f| f.name == "t").expect("t");
+        assert!(g.fns[t].is_test);
+        assert!(g.edges[t].is_empty());
+    }
+
+    #[test]
+    fn reach_and_find_path_produce_chains() {
+        let facts = facts_of(&[
+            ("serve/x.rs", "use crate::mid;\npub fn entry() { mid::step(); }\n"),
+            ("mid/mod.rs", "use crate::leaf;\npub fn step() { leaf::boom(); }\n"),
+            ("leaf/mod.rs", "pub fn boom(x: Option<u8>) { x.unwrap(); }\n"),
+        ]);
+        let g = Graph::build(&facts);
+        let entry = g.fns.iter().position(|f| f.name == "entry").expect("entry");
+        let boom = g.fns.iter().position(|f| f.name == "boom").expect("boom");
+        let r = g.reach(&[entry]);
+        assert_eq!(r.dist[boom], Some(2));
+        let chain = g.chain_labels(&r.parent, boom);
+        assert_eq!(chain, ["serve/x.rs::entry", "mid/mod.rs::step", "leaf/mod.rs::boom"]);
+        let path = g.find_path(entry, |k| !g.fns[k].panics.is_empty()).expect("path");
+        assert_eq!(path.last(), Some(&boom));
+    }
+
+    #[test]
+    fn module_aliases_cover_stem_and_parent() {
+        assert_eq!(module_aliases("serve/store.rs"), ["store", "serve"]);
+        assert_eq!(module_aliases("obs/mod.rs"), ["obs"]);
+        assert_eq!(module_aliases("main.rs"), Vec::<&str>::new());
+    }
+}

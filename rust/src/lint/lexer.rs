@@ -15,13 +15,19 @@
 //! tokens so rules match *exact* identifiers: `unwrap` does not match
 //! `unwrap_or_else`, `m` does not match `m_bits`.
 
-/// One source line split into its code and comment channels.
+/// One source line split into its code, comment, and string channels.
 #[derive(Debug, Clone, Default)]
 pub struct Line {
     /// Code text with string/char-literal contents blanked (quotes kept).
     pub code: String,
     /// Comment text, including the `//` / `/*` markers.
     pub comment: String,
+    /// String-literal contents (the text blanked out of `code`), with a
+    /// space between adjacent literals so they can never concatenate
+    /// into a false match.  The schema-registry analysis reads this
+    /// channel: an `otaro.*.v1` literal in a string is an emission,
+    /// while the same text in a comment or doc is prose.
+    pub strings: String,
 }
 
 /// A code-channel token: an identifier-like word (identifiers, keywords,
@@ -177,18 +183,22 @@ pub fn classify(text: &str) -> Vec<Line> {
                     i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
                 } else if c == '"' {
                     cur.code.push('"');
+                    cur.strings.push(' ');
                     state = State::Code;
                     i += 1;
                 } else {
+                    cur.strings.push(c);
                     i += 1;
                 }
             }
             State::RawStr(hashes) => {
                 if c == '"' && (1..=hashes).all(|k| chars.get(i + k) == Some(&'#')) {
                     cur.code.push('"');
+                    cur.strings.push(' ');
                     state = State::Code;
                     i += hashes + 1;
                 } else {
+                    cur.strings.push(c);
                     i += 1;
                 }
             }
@@ -204,7 +214,7 @@ pub fn classify(text: &str) -> Vec<Line> {
             }
         }
     }
-    if !cur.code.is_empty() || !cur.comment.is_empty() {
+    if !cur.code.is_empty() || !cur.comment.is_empty() || !cur.strings.is_empty() {
         lines.push(cur);
     }
     lines
@@ -273,6 +283,19 @@ mod tests {
         let lines = classify("let s = \"one \\\ntwo\";\nafter();\n");
         assert_eq!(lines.len(), 3);
         assert_eq!(lines[2].code, "after();");
+    }
+
+    #[test]
+    fn string_contents_land_in_the_strings_channel() {
+        let lines = classify("let s = \"otaro.metrics.v1\"; // otaro.fake.v9\n");
+        assert!(lines[0].strings.contains("otaro.metrics.v1"));
+        assert!(!lines[0].strings.contains("otaro.fake.v9"));
+        // adjacent literals never concatenate into a false match
+        let lines = classify("f(\"otaro.me\", \"trics.v1\");\n");
+        assert!(!lines[0].strings.contains("otaro.metrics.v1"));
+        // raw strings are captured too
+        let lines = classify("let r = r#\"otaro.flight.v1\"#;\n");
+        assert!(lines[0].strings.contains("otaro.flight.v1"));
     }
 
     #[test]

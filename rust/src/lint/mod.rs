@@ -5,16 +5,27 @@
 //! do only checked arithmetic on untrusted fields (PR 4); the decode
 //! hot loops are allocation-free, the `ColOut` raw-pointer writes carry
 //! a safety argument, and scheduling never depends on hash iteration
-//! order (PR 5).  This module enforces all of them mechanically: a
-//! comment/string/char-literal-aware lexer ([`lexer`]) feeds a
-//! file model with `#[cfg(test)]` spans, hot-loop region markers, and
-//! inline suppressions ([`source`]); six rules ([`rules`]) walk the
-//! token stream; a checked-in baseline ([`baseline`]) carries
-//! documented legacy debt without letting it grow.
+//! order (PR 5).  v1 of this module enforced those contracts
+//! *textually*, per file; v2 makes the request-path contracts
+//! **reachability-based**: a comment/string/char-literal-aware lexer
+//! ([`lexer`]) feeds a file model with `#[cfg(test)]` spans, hot-loop
+//! region markers, and inline suppressions ([`source`]); six token
+//! rules ([`rules`]) walk each file; an item-level parser ([`parse`])
+//! extracts every fn definition and call site; a conservatively
+//! resolved call graph ([`graph`]) connects them crate-wide; and four
+//! graph analyses ([`analyses`]) chase panics, allocations, and
+//! hash-iteration taint across module boundaries and resolve every
+//! frozen `otaro.<name>.v<N>` schema literal against
+//! [`obs::SCHEMAS`](crate::obs::SCHEMAS).  A checked-in baseline
+//! ([`baseline`]) carries documented legacy debt without letting it
+//! grow.
 //!
 //! The pass runs three ways, all through [`run`]:
 //!
-//! * `otaro lint` — the CLI subcommand ([`run_cli`]);
+//! * `otaro lint` — the CLI subcommand ([`run_cli`]), with `--json`
+//!   emitting a deterministic `otaro.lint.v1` report (wrapped in the
+//!   shared bench envelope so `bench-diff` can compare runs) and
+//!   `--dead` listing report-only unreferenced pub fns;
 //! * `rust/tests/lint_source.rs` — a tier-1 test, so `cargo test`
 //!   fails on any non-baselined violation;
 //! * a CI step, so the gate is machine-enforced on every push.
@@ -26,15 +37,22 @@
 //! `region(no_alloc)` / `end_region` directives in the same style.
 //! Malformed directives — a missing reason, an unknown rule, an
 //! unclosed region — are hard errors, not warnings: a typo must never
-//! silently disable a rule.
+//! silently disable a rule.  Graph-analysis violations carry the full
+//! call chain (entry → … → offending fn) in the message, so a report
+//! is actionable without re-deriving the reachability by hand.
 
+pub mod analyses;
 pub mod baseline;
+pub mod graph;
 pub mod lexer;
+pub mod parse;
 pub mod rules;
 pub mod source;
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+use crate::{benchutil, json, obs};
 
 use baseline::Baseline;
 use source::SourceFile;
@@ -48,6 +66,9 @@ pub struct Violation {
     /// 1-based line number
     pub line: usize,
     pub message: String,
+    /// for graph analyses: fn labels entry → … → offending fn (also
+    /// embedded in `message`); empty for per-file token rules
+    pub chain: Vec<String>,
 }
 
 impl std::fmt::Display for Violation {
@@ -74,6 +95,19 @@ pub struct Report {
     pub baselined: usize,
     pub files: usize,
     pub lines: usize,
+    /// fn definitions the item parser extracted
+    pub fns: usize,
+    /// non-test fns reachable from request-path entry points
+    pub reachable_fns: usize,
+    /// `expr[idx]` sites inside those reachable fns (informational)
+    pub reachable_index_sites: usize,
+    /// non-test `otaro.*.vN` literal sites resolved against the registry
+    pub schema_sites: usize,
+    /// report-only dead-item candidates (`--dead`)
+    pub dead: Vec<String>,
+    /// inline allow inventory, sorted `(module, rule, reason)` — every
+    /// suppression in the crate, reviewable from the `--json` report
+    pub allows: Vec<(String, String, String)>,
     pub elapsed_ms: f64,
 }
 
@@ -101,50 +135,203 @@ impl Report {
             ));
         }
         out.push_str(&format!(
-            "otaro lint: {} file(s), {} lines, {} rule(s) in {:.0} ms — {} \
-             violation(s), {} suppressed, {} baselined",
+            "otaro lint: {} file(s), {} lines, {} rule(s) + {} analyses in \
+             {:.0} ms — {} violation(s), {} suppressed, {} baselined\n",
             self.files,
             self.lines,
             rules::RULES.len(),
+            analyses::ANALYSES.len(),
             self.elapsed_ms,
             self.violations.len(),
             self.suppressed,
             self.baselined,
         ));
+        out.push_str(&format!(
+            "graph: {} fn(s), {} reachable from the request path, {} reachable \
+             index site(s), {} schema literal site(s)",
+            self.fns, self.reachable_fns, self.reachable_index_sites, self.schema_sites,
+        ));
         out
     }
-}
 
-/// Lint a single in-memory source file.  Returns the violations that
-/// survive inline suppression (the fixture-test entry point; [`run`]
-/// uses the same path per file).  Errors on malformed directives.
-pub fn check_source(module: &str, text: &str) -> anyhow::Result<Vec<Violation>> {
-    let (kept, _suppressed) = check_source_counted(module, text)?;
-    Ok(kept)
-}
-
-fn check_source_counted(
-    module: &str,
-    text: &str,
-) -> anyhow::Result<(Vec<Violation>, usize)> {
-    let names = rules::rule_names();
-    let file = SourceFile::parse(module, text, &names)?;
-    let mut raw = Vec::new();
-    for rule in rules::RULES {
-        (rule.check)(&file, &mut raw);
+    /// Human-readable dead-item listing (`--dead`; report-only).
+    pub fn render_dead(&self) -> String {
+        if self.dead.is_empty() {
+            return "dead: no unreferenced pub fns".to_string();
+        }
+        let mut out = format!(
+            "dead: {} pub fn(s) never referenced outside their definitions \
+             (report-only):\n",
+            self.dead.len()
+        );
+        for d in &self.dead {
+            out.push_str(&format!("  {d}\n"));
+        }
+        out.pop();
+        out
     }
-    // rules::push already drops allowed lines; count suppressions by
-    // re-running the allow filter over what the rules *would* have
-    // reported is not observable from here, so count honored allows
-    // instead: each allow that points at a line some rule checks is a
-    // suppression the reviewer signed off on.
-    let suppressed = file.allows.len();
-    raw.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
-    Ok((raw, suppressed))
+
+    /// The deterministic `otaro.lint.v1` report object.  Contains no
+    /// timing — byte-identical across runs on identical sources, so
+    /// `bench-diff` flags any drift in violations, allows, schemas, or
+    /// dead items between CI runs.
+    pub fn to_json(&self) -> json::Value {
+        let violations = self
+            .violations
+            .iter()
+            .map(|v| {
+                json::obj(vec![
+                    ("rule", json::s(v.rule)),
+                    ("module", json::s(v.module.as_str())),
+                    ("line", json::n(v.line as f64)),
+                    ("message", json::s(v.message.as_str())),
+                    (
+                        "chain",
+                        json::Value::Arr(v.chain.iter().map(|c| json::s(c.as_str())).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        let pairs = |entries: &[(String, String)]| {
+            json::Value::Arr(
+                entries.iter().map(|(rule, module)| json::s(format!("{rule} {module}"))).collect(),
+            )
+        };
+        let allows = self
+            .allows
+            .iter()
+            .map(|(module, rule, reason)| {
+                json::obj(vec![
+                    ("module", json::s(module.as_str())),
+                    ("rule", json::s(rule.as_str())),
+                    ("reason", json::s(reason.as_str())),
+                ])
+            })
+            .collect();
+        let schemas = obs::SCHEMAS
+            .iter()
+            .map(|d| {
+                json::obj(vec![
+                    ("name", json::s(d.name)),
+                    ("version", json::n(d.version as f64)),
+                    ("module", json::s(d.module)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("schema", json::s("otaro.lint.v1")),
+            ("files", json::n(self.files as f64)),
+            ("lines", json::n(self.lines as f64)),
+            ("rules", json::n(rules::RULES.len() as f64)),
+            ("analyses", json::n(analyses::ANALYSES.len() as f64)),
+            ("fns", json::n(self.fns as f64)),
+            ("reachable_fns", json::n(self.reachable_fns as f64)),
+            ("reachable_index_sites", json::n(self.reachable_index_sites as f64)),
+            ("schema_sites", json::n(self.schema_sites as f64)),
+            ("violations", json::Value::Arr(violations)),
+            ("stale_baseline", pairs(&self.stale_baseline)),
+            ("unused_baseline", pairs(&self.unused_baseline)),
+            ("suppressed", json::n(self.suppressed as f64)),
+            ("baselined", json::n(self.baselined as f64)),
+            ("allows", json::Value::Arr(allows)),
+            ("schemas", json::Value::Arr(schemas)),
+            ("dead", json::Value::Arr(self.dead.iter().map(|d| json::s(d.as_str())).collect())),
+        ])
+    }
+
+    /// Write the report as a `BENCH_*.json`-style artifact: one record
+    /// named `lint` whose `det` section is [`Report::to_json`] and whose
+    /// `wall` section carries the elapsed seconds, wrapped in the shared
+    /// `otaro.bench.v1` envelope so `bench-diff` compares lint reports
+    /// exactly like bench results.
+    pub fn write_json(&self, path: &Path) -> anyhow::Result<()> {
+        let record = json::obj(vec![
+            ("name", json::s("lint")),
+            ("det", self.to_json()),
+            ("wall", json::obj(vec![("wall_secs", json::n(self.elapsed_ms / 1e3))])),
+        ]);
+        benchutil::write_bench_file(path, "lint", json::Value::Arr(vec![record]))
+    }
 }
 
-/// Walk `src_root` (every `*.rs`, deterministic order), run all rules,
-/// and apply the baseline at `baseline_path` (if any).
+/// Lint a single in-memory source file: token rules plus the graph
+/// analyses over the one-file "crate" (the fixture-test entry point;
+/// [`run`] uses the same machinery over all files at once).  Errors on
+/// malformed directives.
+pub fn check_source(module: &str, text: &str) -> anyhow::Result<Vec<Violation>> {
+    check_crate(&[(module, text)])
+}
+
+/// Lint a set of in-memory source files as one crate: per-file token
+/// rules plus the cross-module graph analyses, resolving schema
+/// literals against the real [`obs::SCHEMAS`].  Schema-table staleness
+/// is not checked here (the file set need not span the whole crate).
+pub fn check_crate(sources: &[(&str, &str)]) -> anyhow::Result<Vec<Violation>> {
+    check_crate_with_schemas(sources, obs::SCHEMAS, false)
+}
+
+/// [`check_crate`] with an explicit schema table; `coverage` also
+/// verifies each declared emitting module still emits its literal
+/// (only meaningful when `sources` spans every module the table names).
+pub fn check_crate_with_schemas(
+    sources: &[(&str, &str)],
+    schemas: &[obs::SchemaDef],
+    coverage: bool,
+) -> anyhow::Result<Vec<Violation>> {
+    let names = rules::rule_names();
+    let files = sources
+        .iter()
+        .map(|(m, t)| SourceFile::parse(m, t, &names))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let (violations, _) = run_parsed(&files, schemas, coverage);
+    Ok(violations)
+}
+
+/// Per-pass statistics beyond the violation list.
+struct PassStats {
+    suppressed: usize,
+    fns: usize,
+    reachable_fns: usize,
+    reachable_index_sites: usize,
+    schema_sites: usize,
+    dead: Vec<String>,
+}
+
+/// The single lint pipeline every entry point funnels through: token
+/// rules per file, then the graph analyses over all files together.
+fn run_parsed(
+    files: &[SourceFile],
+    schemas: &[obs::SchemaDef],
+    coverage: bool,
+) -> (Vec<Violation>, PassStats) {
+    let facts: Vec<parse::FileFacts> = files.iter().map(parse::extract).collect();
+    let mut raw = Vec::new();
+    for f in files {
+        for rule in rules::RULES {
+            (rule.check)(f, &mut raw);
+        }
+    }
+    let outcome = analyses::run(files, &facts, schemas, coverage);
+    let stats = PassStats {
+        // rules::push and the analyses drop allowed lines before they
+        // are observable here; count honored allows instead — each one
+        // is a suppression a reviewer signed off on
+        suppressed: files.iter().map(|f| f.allows.len()).sum(),
+        fns: facts.iter().map(|ff| ff.fns.len()).sum(),
+        reachable_fns: outcome.reachable_fns,
+        reachable_index_sites: outcome.reachable_index_sites,
+        schema_sites: outcome.schema_sites,
+        dead: outcome.dead,
+    };
+    raw.extend(outcome.violations);
+    raw.sort_by(|a, b| {
+        (a.module.as_str(), a.line, a.rule).cmp(&(b.module.as_str(), b.line, b.rule))
+    });
+    (raw, stats)
+}
+
+/// Walk `src_root` (every `*.rs`, deterministic order), run all rules
+/// and analyses, and apply the baseline at `baseline_path` (if any).
 pub fn run(src_root: &Path, baseline_path: Option<&Path>) -> anyhow::Result<Report> {
     let start = Instant::now();
     let names = rules::rule_names();
@@ -162,22 +349,41 @@ pub fn run(src_root: &Path, baseline_path: Option<&Path>) -> anyhow::Result<Repo
     files.sort();
 
     let mut report = Report { files: files.len(), ..Report::default() };
-    let mut matched = std::collections::BTreeSet::new();
-    let mut modules = std::collections::BTreeSet::new();
+    let mut sources = Vec::new();
     for (module, path) in &files {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
         report.lines += text.lines().count();
-        modules.insert(module.clone());
-        let (violations, suppressed) = check_source_counted(module, &text)?;
-        report.suppressed += suppressed;
-        for v in violations {
-            if base.covers(v.rule, &v.module) {
-                matched.insert((v.rule.to_string(), v.module.clone()));
-                report.baselined += 1;
-            } else {
-                report.violations.push(v);
-            }
+        sources.push((module.clone(), text));
+    }
+    let parsed = sources
+        .iter()
+        .map(|(m, t)| SourceFile::parse(m, t, &names))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let (violations, stats) = run_parsed(&parsed, obs::SCHEMAS, true);
+    report.suppressed = stats.suppressed;
+    report.fns = stats.fns;
+    report.reachable_fns = stats.reachable_fns;
+    report.reachable_index_sites = stats.reachable_index_sites;
+    report.schema_sites = stats.schema_sites;
+    report.dead = stats.dead;
+    for f in &parsed {
+        for a in &f.allows {
+            report.allows.push((f.module.clone(), a.rule.clone(), a.reason.clone()));
+        }
+    }
+    report.allows.sort();
+    report.allows.dedup();
+
+    let mut matched = std::collections::BTreeSet::new();
+    let modules: std::collections::BTreeSet<String> =
+        parsed.iter().map(|f| f.module.clone()).collect();
+    for v in violations {
+        if base.covers(v.rule, &v.module) {
+            matched.insert((v.rule.to_string(), v.module.clone()));
+            report.baselined += 1;
+        } else {
+            report.violations.push(v);
         }
     }
     for (rule, module) in &base.entries {
@@ -219,8 +425,16 @@ fn collect_rs(
 /// `otaro lint`: run the pass over the crate sources and print the
 /// report; non-clean exits with an error.  Defaults match the repo
 /// layout (`rust/src`, baseline at `rust/lint.baseline`); `--src` /
-/// `--baseline` override for out-of-tree runs.
-pub fn run_cli(src: Option<PathBuf>, baseline: Option<PathBuf>) -> anyhow::Result<()> {
+/// `--baseline` override for out-of-tree runs.  `--json FILE` writes
+/// the `otaro.lint.v1` report (written even when the pass fails, so CI
+/// can diff a failing run); `--dead` prints the report-only
+/// unreferenced-pub-fn listing.
+pub fn run_cli(
+    src: Option<PathBuf>,
+    baseline: Option<PathBuf>,
+    json_out: Option<PathBuf>,
+    dead: bool,
+) -> anyhow::Result<()> {
     let src = match src {
         Some(s) => s,
         None => {
@@ -240,6 +454,13 @@ pub fn run_cli(src: Option<PathBuf>, baseline: Option<PathBuf>) -> anyhow::Resul
     });
     let report = run(&src, baseline.as_deref())?;
     println!("{}", report.render());
+    if dead {
+        println!("{}", report.render_dead());
+    }
+    if let Some(path) = &json_out {
+        report.write_json(path)?;
+        println!("lint json: wrote {}", path.display());
+    }
     anyhow::ensure!(
         report.is_clean(),
         "lint failed: {} violation(s), {} stale baseline entr(ies)",
@@ -274,7 +495,33 @@ mod tests {
             module: "infer/mod.rs".into(),
             line: 7,
             message: "msg".into(),
+            chain: Vec::new(),
         };
         assert_eq!(v.to_string(), "infer/mod.rs:7: [raw-mantissa] msg");
+    }
+
+    #[test]
+    fn lint_report_json_is_deterministic_and_registered() {
+        let report = Report {
+            violations: vec![Violation {
+                rule: "schema-registry",
+                module: "a/b.rs".into(),
+                line: 3,
+                message: "msg".into(),
+                chain: vec!["a/b.rs::f".into()],
+            }],
+            allows: vec![("a/b.rs".into(), "raw-mantissa".into(), "why".into())],
+            dead: vec!["a/b.rs:1: a/b.rs::unused".into()],
+            elapsed_ms: 12.5,
+            ..Report::default()
+        };
+        let a = report.to_json().to_string();
+        let b = report.to_json().to_string();
+        assert_eq!(a, b);
+        // the report's own schema is declared in obs::SCHEMAS
+        assert!(a.contains("\"otaro.lint.v1\""));
+        assert!(obs::SCHEMAS.iter().any(|d| d.name == "lint" && d.version == 1));
+        // timing stays out of the det section
+        assert!(!a.contains("12.5"));
     }
 }

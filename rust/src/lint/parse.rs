@@ -1,0 +1,584 @@
+//! Item-level parser: from classified lines to functions and call sites.
+//!
+//! [`extract`] walks a parsed [`SourceFile`]'s code-channel tokens once
+//! and produces [`FileFacts`]: every `fn` definition (module path, impl
+//! owner, implemented trait, `#[test]`/`#[cfg(test)]` marking, `pub`
+//! visibility, body span) together with the call sites, panic tokens,
+//! allocating idioms, hash-collection mentions, and indexing sites
+//! inside each body, plus the file's identifier-mention counts and its
+//! `otaro.<name>.v<N>` schema literals (read from the string channel,
+//! so prose in comments never counts as an emission).
+//!
+//! This is deliberately *not* a Rust grammar: it is a brace/paren-depth
+//! item scanner over the comment/string-aware token stream, precise
+//! enough to build a call graph for the reachability analyses in
+//! [`super::analyses`] while staying a few hundred lines and well
+//! inside the tier-1 2 s lint budget.  Constructs it does not model
+//! (macro-generated items, trait default bodies resolved through
+//! generics) simply contribute no nodes or edges — the analyses are
+//! conservative in what they *prove*, and the per-file token rules
+//! still see every line.
+
+use std::collections::BTreeMap;
+
+use super::lexer::{self, Tok};
+use super::source::SourceFile;
+
+/// Panic-family calls (`name(`) — the same token set as the direct
+/// `request-path-no-panic` rule, shared here so the transitive analysis
+/// can never drift from it.
+pub const PANIC_CALLS: &[&str] = &["unwrap", "expect"];
+/// Panic-family macros (`name!`).
+pub const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+/// Allocating method idents (`name(`) — mirrors `hot-loop-no-alloc`.
+pub const ALLOC_IDENTS: &[&str] = &["clone", "collect", "to_vec", "to_owned", "to_string"];
+/// Allocating macros (`name!`).
+pub const ALLOC_MACROS: &[&str] = &["format", "vec"];
+/// Allocating constructor paths (`Name::`).
+pub const ALLOC_PATHS: &[&str] = &["Vec", "Box", "String", "BTreeMap", "HashMap", "VecDeque"];
+
+const KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "return", "fn", "loop", "let", "as", "in", "move", "ref",
+    "mut", "else", "unsafe", "impl", "pub", "use", "mod", "struct", "enum", "trait", "type",
+    "const", "static", "where", "break", "continue", "crate", "self", "Self", "super", "dyn",
+    "box", "true", "false", "async", "await",
+];
+
+fn is_keyword(s: &str) -> bool {
+    KEYWORDS.contains(&s)
+}
+
+/// Identifier-like token that can name an item (not a numeric literal).
+fn starts_ident(s: &str) -> bool {
+    s.starts_with(|c: char| c.is_alphabetic() || c == '_')
+}
+
+/// One call site inside a function body.
+#[derive(Debug, Clone)]
+pub struct Call {
+    /// path qualifier directly before `::name(`, e.g. `Type` in
+    /// `Type::name(..)` or `helpers` in `helpers::name(..)`; `Self` is
+    /// kept verbatim and resolved against the impl owner later
+    pub qual: Option<String>,
+    pub name: String,
+    /// 1-based line of the call
+    pub line: usize,
+    /// `.name(..)` receiver-method syntax (only when unqualified)
+    pub is_method: bool,
+}
+
+/// One `fn` definition with everything the graph analyses need.
+#[derive(Debug, Clone)]
+pub struct FnDef {
+    /// module path relative to the source root (e.g. `serve/server.rs`)
+    pub module: String,
+    /// impl owner type for methods (`impl Server { fn f }` → `Server`)
+    pub owner: Option<String>,
+    /// implemented trait for `impl Trait for Type` methods
+    pub trait_name: Option<String>,
+    pub name: String,
+    /// 1-based line of the fn name
+    pub line: usize,
+    /// 1-based last line of the body (decl line for unfinished spans)
+    pub end_line: usize,
+    /// inside a `#[cfg(test)]` span or directly under a test attribute
+    pub is_test: bool,
+    pub is_pub: bool,
+    pub calls: Vec<Call>,
+    /// panic-family tokens in the body: (line, token)
+    pub panics: Vec<(usize, String)>,
+    /// allocating idioms in the body: (line, token)
+    pub allocs: Vec<(usize, String)>,
+    /// lines mentioning `HashMap`/`HashSet` in the body
+    pub hash_lines: Vec<usize>,
+    /// `expr[idx]`-style indexing sites in the body (assert-class bounds
+    /// contract — counted for the report, not flagged as violations)
+    pub index_sites: usize,
+}
+
+impl FnDef {
+    /// Display label: `module::Owner::name` (owner omitted for free fns).
+    pub fn label(&self) -> String {
+        match &self.owner {
+            Some(o) => format!("{}::{}::{}", self.module, o, self.name),
+            None => format!("{}::{}", self.module, self.name),
+        }
+    }
+}
+
+/// One `otaro.<name>.v<N>` literal found in the string channel of a
+/// non-test line.
+#[derive(Debug, Clone)]
+pub struct SchemaSite {
+    /// 1-based line
+    pub line: usize,
+    pub name: String,
+    pub version: u32,
+    /// the full literal text, e.g. `otaro.metrics.v1`
+    pub text: String,
+}
+
+/// Everything [`extract`] learns about one file.
+#[derive(Debug)]
+pub struct FileFacts {
+    pub module: String,
+    pub fns: Vec<FnDef>,
+    /// code-channel identifier occurrence counts (all lines, tests
+    /// included) — the visibility proxy for call resolution and the
+    /// reference count for the dead-item pass
+    pub mentions: BTreeMap<String, usize>,
+    /// non-test schema literals anywhere in the file (consts included)
+    pub schemas: Vec<SchemaSite>,
+}
+
+struct ImplCtx {
+    owner: Option<String>,
+    trait_name: Option<String>,
+    open_depth: i64,
+}
+
+/// Extract item-level facts from a parsed source file.
+pub fn extract(file: &SourceFile) -> FileFacts {
+    let mut toks: Vec<(Tok<'_>, usize)> = Vec::new();
+    let mut mentions: BTreeMap<String, usize> = BTreeMap::new();
+    for (i, line) in file.lines.iter().enumerate() {
+        for t in lexer::tokens(&line.code) {
+            if let Tok::Ident(s) = t {
+                if starts_ident(s) {
+                    *mentions.entry(s.to_string()).or_insert(0) += 1;
+                }
+            }
+            toks.push((t, i));
+        }
+    }
+
+    let mut fns: Vec<FnDef> = Vec::new();
+    let mut impl_stack: Vec<ImplCtx> = Vec::new();
+    let mut fn_stack: Vec<(usize, i64)> = Vec::new();
+    let mut depth: i64 = 0;
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        let (t, ln) = toks[i];
+        match t {
+            Tok::Punct('{') => {
+                depth += 1;
+                i += 1;
+                continue;
+            }
+            Tok::Punct('}') => {
+                depth -= 1;
+                if impl_stack.last().is_some_and(|c| depth < c.open_depth) {
+                    impl_stack.pop();
+                }
+                if let Some(&(fi, od)) = fn_stack.last() {
+                    if depth < od {
+                        fns[fi].end_line = ln + 1;
+                        fn_stack.pop();
+                    }
+                }
+                i += 1;
+                continue;
+            }
+            Tok::Ident("impl") => {
+                let mut seg: Vec<Tok<'_>> = Vec::new();
+                let mut j = i + 1;
+                while j < n && !matches!(toks[j].0, Tok::Punct('{') | Tok::Punct(';')) {
+                    seg.push(toks[j].0);
+                    j += 1;
+                }
+                let (owner, trait_name) = impl_header(&seg);
+                if j < n && matches!(toks[j].0, Tok::Punct('{')) {
+                    impl_stack.push(ImplCtx { owner, trait_name, open_depth: depth + 1 });
+                    depth += 1;
+                }
+                i = j + 1;
+                continue;
+            }
+            Tok::Ident("fn") => {
+                if let Some(&(Tok::Ident(name), name_ln)) = toks.get(i + 1) {
+                    if starts_ident(name) {
+                        if let Some(rest) = start_fn(file, &toks, i, name, name_ln, &impl_stack) {
+                            fns.push(rest);
+                            fn_stack.push((fns.len() - 1, depth + 1));
+                            depth += 1;
+                            // jump past the signature to the body `{`
+                            i = body_open(&toks, i + 2).map_or(n, |b| b + 1);
+                            continue;
+                        }
+                        // bodyless signature (trait method): skip it
+                        i = sig_end(&toks, i + 2);
+                        continue;
+                    }
+                }
+            }
+            _ => {}
+        }
+        if let Some(&(fi, _)) = fn_stack.last() {
+            record_body_token(&mut fns[fi], &toks, i);
+        }
+        i += 1;
+    }
+    let last_line = file.lines.len();
+    for (fi, _) in fn_stack {
+        fns[fi].end_line = last_line.max(fns[fi].line);
+    }
+
+    let mut schemas = Vec::new();
+    for (i, line) in file.lines.iter().enumerate() {
+        if file.is_test.get(i).copied().unwrap_or(false) {
+            continue;
+        }
+        for (name, version) in scan_schemas(&line.strings) {
+            let text = format!("otaro.{name}.v{version}");
+            schemas.push(SchemaSite { line: i + 1, name, version, text });
+        }
+    }
+
+    FileFacts { module: file.module.clone(), fns, mentions, schemas }
+}
+
+/// Owner type and trait name from the tokens between `impl` and `{`.
+fn impl_header(seg: &[Tok<'_>]) -> (Option<String>, Option<String>) {
+    let name_of = |t: &Tok<'_>| match t {
+        Tok::Ident(s) if starts_ident(s) && !is_keyword(s) => Some(s.to_string()),
+        _ => None,
+    };
+    if let Some(fp) = seg.iter().position(|t| matches!(t, Tok::Ident("for"))) {
+        // `impl Trait for Type`: the trait path's last segment sits
+        // directly before `for`, the owner is the first type ident after
+        let trait_name = seg[..fp].iter().rev().find_map(name_of);
+        let owner = seg[fp + 1..].iter().find_map(name_of);
+        return (owner, trait_name);
+    }
+    // inherent impl: first type ident after an optional generic group
+    let mut start = 0;
+    if matches!(seg.first(), Some(Tok::Punct('<'))) {
+        let mut gd = 0i64;
+        for (k, t) in seg.iter().enumerate() {
+            match t {
+                Tok::Punct('<') => gd += 1,
+                Tok::Punct('>') => gd -= 1,
+                _ => {}
+            }
+            if gd == 0 {
+                start = k + 1;
+                break;
+            }
+        }
+    }
+    (seg[start.min(seg.len())..].iter().find_map(name_of), None)
+}
+
+/// Build the [`FnDef`] for a definition that has a body; `None` for
+/// bodyless trait-method signatures.
+fn start_fn(
+    file: &SourceFile,
+    toks: &[(Tok<'_>, usize)],
+    i: usize,
+    name: &str,
+    name_ln: usize,
+    impl_stack: &[ImplCtx],
+) -> Option<FnDef> {
+    body_open(toks, i + 2)?;
+    let is_pub = toks[i.saturating_sub(6)..i]
+        .iter()
+        .any(|(t, _)| matches!(t, Tok::Ident("pub")));
+    let (owner, trait_name) = match impl_stack.last() {
+        Some(c) => (c.owner.clone(), c.trait_name.clone()),
+        None => (None, None),
+    };
+    Some(FnDef {
+        module: file.module.clone(),
+        owner,
+        trait_name,
+        name: name.to_string(),
+        line: name_ln + 1,
+        end_line: name_ln + 1,
+        is_test: fn_is_test(file, name_ln),
+        is_pub,
+        calls: Vec::new(),
+        panics: Vec::new(),
+        allocs: Vec::new(),
+        hash_lines: Vec::new(),
+        index_sites: 0,
+    })
+}
+
+/// Token index of the body `{` of the signature starting at `from`, or
+/// `None` when a `;` ends it first (paren depth guards closure params).
+fn body_open(toks: &[(Tok<'_>, usize)], from: usize) -> Option<usize> {
+    let mut pdepth = 0i64;
+    for (j, (t, _)) in toks.iter().enumerate().skip(from) {
+        match t {
+            Tok::Punct('(') => pdepth += 1,
+            Tok::Punct(')') => pdepth -= 1,
+            Tok::Punct(';') if pdepth == 0 => return None,
+            Tok::Punct('{') if pdepth == 0 => return Some(j),
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Token index just past a bodyless signature's terminating `;`.
+fn sig_end(toks: &[(Tok<'_>, usize)], from: usize) -> usize {
+    let mut pdepth = 0i64;
+    for (j, (t, _)) in toks.iter().enumerate().skip(from) {
+        match t {
+            Tok::Punct('(') => pdepth += 1,
+            Tok::Punct(')') => pdepth -= 1,
+            Tok::Punct(';') | Tok::Punct('{') if pdepth == 0 => return j + 1,
+            _ => {}
+        }
+    }
+    toks.len()
+}
+
+/// Test marking for the fn named at line `name_ln`: inside a
+/// `#[cfg(test)]` mod span, or directly under a `#[test]` /
+/// `#[cfg(test)]` attribute (looking up through attributes and comments).
+fn fn_is_test(file: &SourceFile, name_ln: usize) -> bool {
+    if file.is_test.get(name_ln).copied().unwrap_or(false) {
+        return true;
+    }
+    let mut k = name_ln;
+    while k > 0 {
+        k -= 1;
+        let code = file.lines[k].code.trim();
+        if code.is_empty() {
+            if file.lines[k].comment.trim().is_empty() {
+                return false;
+            }
+            continue; // comment line: keep walking up
+        }
+        if code.starts_with("#[") || code.starts_with("#!") {
+            if code.contains("#[test]") || code.contains("#[cfg(test)]") {
+                return true;
+            }
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+/// Record one body token into the innermost open fn.
+fn record_body_token(f: &mut FnDef, toks: &[(Tok<'_>, usize)], i: usize) {
+    let (t, ln) = toks[i];
+    let prev = i.checked_sub(1).map(|p| toks[p].0);
+    let next = toks.get(i + 1).map(|&(t, _)| t);
+    match t {
+        Tok::Ident(name) if starts_ident(name) && !is_keyword(name) => {
+            match next {
+                Some(Tok::Punct('(')) => {
+                    if PANIC_CALLS.contains(&name) {
+                        f.panics.push((ln + 1, name.to_string()));
+                    }
+                    if ALLOC_IDENTS.contains(&name) {
+                        f.allocs.push((ln + 1, name.to_string()));
+                    }
+                    let qual = match (prev, i.checked_sub(2), i.checked_sub(3)) {
+                        (Some(Tok::Punct(':')), Some(p2), Some(p3))
+                            if matches!(toks[p2].0, Tok::Punct(':')) =>
+                        {
+                            match toks[p3].0 {
+                                Tok::Ident(q) if starts_ident(q) => Some(q.to_string()),
+                                _ => None,
+                            }
+                        }
+                        _ => None,
+                    };
+                    let is_method = qual.is_none() && matches!(prev, Some(Tok::Punct('.')));
+                    f.calls.push(Call { qual, name: name.to_string(), line: ln + 1, is_method });
+                }
+                Some(Tok::Punct('!')) => {
+                    if PANIC_MACROS.contains(&name) {
+                        f.panics.push((ln + 1, format!("{name}!")));
+                    }
+                    if ALLOC_MACROS.contains(&name) {
+                        f.allocs.push((ln + 1, format!("{name}!")));
+                    }
+                }
+                Some(Tok::Punct(':')) if ALLOC_PATHS.contains(&name) => {
+                    f.allocs.push((ln + 1, format!("{name}::")));
+                }
+                _ => {}
+            }
+            if name == "HashMap" || name == "HashSet" {
+                f.hash_lines.push(ln + 1);
+            }
+        }
+        Tok::Punct('[') => {
+            // `expr[idx]` (an ident, `)`, or `]` directly before `[`);
+            // attribute and slice-type brackets don't match this shape
+            if matches!(prev, Some(Tok::Ident(_)) | Some(Tok::Punct(')')) | Some(Tok::Punct(']')))
+            {
+                f.index_sites += 1;
+            }
+        }
+        _ => {}
+    }
+}
+
+/// All `otaro.<name>.v<N>` literals in one line's string channel.
+fn scan_schemas(text: &str) -> Vec<(String, u32)> {
+    let b = text.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while let Some(off) = text[i..].find("otaro.") {
+        let start = i + off;
+        let name_start = start + 6;
+        let mut j = name_start;
+        while j < b.len() && (b[j].is_ascii_lowercase() || b[j] == b'_') {
+            j += 1;
+        }
+        if j > name_start && text[j..].starts_with(".v") {
+            let vstart = j + 2;
+            let mut k = vstart;
+            while k < b.len() && b[k].is_ascii_digit() {
+                k += 1;
+            }
+            if k > vstart {
+                if let Ok(version) = text[vstart..k].parse::<u32>() {
+                    out.push((text[name_start..j].to_string(), version));
+                    i = k;
+                    continue;
+                }
+            }
+        }
+        i = name_start;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn facts(module: &str, src: &str) -> FileFacts {
+        let names = super::super::rules::rule_names();
+        let file = SourceFile::parse(module, src, &names).expect("fixture parses");
+        extract(&file)
+    }
+
+    #[test]
+    fn free_fns_methods_and_trait_impls() {
+        let src = "\
+pub fn top() {}
+struct S;
+impl S {
+    fn m(&self) { helper(); }
+}
+impl std::fmt::Display for S {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result { write!(f, \"s\") }
+}
+fn helper() {}
+";
+        let ff = facts("x/y.rs", src);
+        let names: Vec<&str> = ff.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, ["top", "m", "fmt", "helper"]);
+        assert!(ff.fns[0].is_pub && ff.fns[0].owner.is_none());
+        assert_eq!(ff.fns[1].owner.as_deref(), Some("S"));
+        assert_eq!(ff.fns[2].trait_name.as_deref(), Some("Display"));
+        assert_eq!(ff.fns[2].owner.as_deref(), Some("S"));
+        assert_eq!(ff.fns[1].calls.len(), 1);
+        assert_eq!(ff.fns[1].calls[0].name, "helper");
+        assert!(!ff.fns[1].calls[0].is_method);
+        assert_eq!(ff.fns[0].label(), "x/y.rs::top");
+        assert_eq!(ff.fns[1].label(), "x/y.rs::S::m");
+    }
+
+    #[test]
+    fn call_qualifiers_and_method_syntax() {
+        let src = "\
+fn f(x: Opt, s: &S) {
+    x.go();
+    S::go(s);
+    Self::own();
+    util::free();
+    plain();
+}
+";
+        let ff = facts("x/y.rs", src);
+        let calls = &ff.fns[0].calls;
+        assert_eq!(calls.len(), 5);
+        assert!(calls[0].is_method && calls[0].qual.is_none());
+        assert_eq!(calls[1].qual.as_deref(), Some("S"));
+        assert_eq!(calls[2].qual.as_deref(), Some("Self"));
+        assert_eq!(calls[3].qual.as_deref(), Some("util"));
+        assert!(calls[4].qual.is_none() && !calls[4].is_method);
+    }
+
+    #[test]
+    fn panic_alloc_hash_and_index_sites() {
+        let src = "\
+fn f(x: Option<u8>, v: &[u8], m: &Q) -> u8 {
+    let a = x.unwrap();
+    let b = v.to_vec();
+    let c = format!(\"{a}\");
+    let d = Vec::with_capacity(4);
+    let e: HashMap<u8, u8> = HashMap::new();
+    panic!(\"{b:?} {c} {d:?} {e:?}\");
+    v[0]
+}
+";
+        let ff = facts("x/y.rs", src);
+        let f = &ff.fns[0];
+        assert_eq!(f.panics, [(2, "unwrap".to_string()), (7, "panic!".to_string())]);
+        assert_eq!(f.allocs.len(), 3, "{:?}", f.allocs);
+        assert_eq!(f.hash_lines, [6, 6]);
+        assert_eq!(f.index_sites, 1);
+        assert!(f.end_line >= 8);
+    }
+
+    #[test]
+    fn test_markers_are_detected() {
+        let src = "\
+fn live() {}
+#[test]
+fn attr_test() {}
+#[cfg(test)]
+mod tests {
+    fn in_mod() {}
+}
+";
+        let ff = facts("x/y.rs", src);
+        let by: std::collections::BTreeMap<&str, bool> =
+            ff.fns.iter().map(|f| (f.name.as_str(), f.is_test)).collect();
+        assert!(!by["live"]);
+        assert!(by["attr_test"]);
+        assert!(by["in_mod"]);
+    }
+
+    #[test]
+    fn schema_literals_come_from_strings_not_comments() {
+        let src = "\
+// otaro.prose.v1 in a comment is not an emission
+const HDR: &str = \"otaro.metrics.v1\";
+#[cfg(test)]
+mod tests {
+    fn t() { let s = \"otaro.testonly.v9\"; }
+}
+";
+        let ff = facts("x/y.rs", src);
+        let texts: Vec<&str> = ff.schemas.iter().map(|s| s.text.as_str()).collect();
+        assert_eq!(texts, ["otaro.metrics.v1"]);
+        assert_eq!(ff.schemas[0].name, "metrics");
+        assert_eq!(ff.schemas[0].version, 1);
+        assert_eq!(ff.schemas[0].line, 2);
+    }
+
+    #[test]
+    fn bodyless_trait_signatures_define_no_fn() {
+        let src = "\
+trait T {
+    fn sig(&self) -> u8;
+    fn with_default(&self) -> u8 { 1 }
+}
+";
+        let ff = facts("x/y.rs", src);
+        let names: Vec<&str> = ff.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, ["with_default"]);
+    }
+}

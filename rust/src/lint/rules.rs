@@ -58,9 +58,12 @@ pub const RULES: &[RuleDef] = &[
     },
 ];
 
-/// Names of all registered rules (for directive validation).
+/// Names of all registered rules *and* graph analyses — the combined
+/// set `allow` directives and baseline entries validate against.
 pub fn rule_names() -> Vec<&'static str> {
-    RULES.iter().map(|r| r.name).collect()
+    let mut names: Vec<&'static str> = RULES.iter().map(|r| r.name).collect();
+    names.extend(super::analyses::analysis_names());
+    names
 }
 
 fn in_dirs(module: &str, dirs: &[&str]) -> bool {
@@ -75,7 +78,13 @@ fn push(
     message: String,
 ) {
     if !f.allowed(rule, i) {
-        out.push(Violation { rule, module: f.module.clone(), line: i + 1, message });
+        out.push(Violation {
+            rule,
+            module: f.module.clone(),
+            line: i + 1,
+            message,
+            chain: Vec::new(),
+        });
     }
 }
 
@@ -205,7 +214,7 @@ fn hot_loop_no_alloc(f: &SourceFile, out: &mut Vec<Violation>) {
 /// banned (they guard memory safety in the kernels and are part of the
 /// contract).
 fn request_path_no_panic(f: &SourceFile, out: &mut Vec<Violation>) {
-    if !in_dirs(&f.module, &["serve/", "policy/", "obs/", "workload/", "benchutil/diff"]) {
+    if !in_dirs(&f.module, super::analyses::PATH_DIRS) {
         return;
     }
     const CALLS: &[&str] = &["unwrap", "expect"];
@@ -246,7 +255,7 @@ fn request_path_no_panic(f: &SourceFile, out: &mut Vec<Violation>) {
 /// (byte-identical `det` sections run to run) and `benchutil/diff`
 /// (the trend gate compares those det sections) inherit the ban.
 fn decision_path_determinism(f: &SourceFile, out: &mut Vec<Violation>) {
-    if !in_dirs(&f.module, &["serve/", "policy/", "obs/", "workload/", "benchutil/diff"]) {
+    if !in_dirs(&f.module, super::analyses::PATH_DIRS) {
         return;
     }
     for (i, line) in f.lines.iter().enumerate() {

@@ -38,6 +38,9 @@ pub struct Allow {
     pub target: usize,
     /// line the directive itself sits on (0-based), for diagnostics
     pub at: usize,
+    /// the mandatory reason text — surfaced in the `--json` allow
+    /// inventory so every suppression stays reviewable
+    pub reason: String,
 }
 
 /// Region kinds the engine understands.
@@ -194,7 +197,12 @@ fn parse_directives(
                 );
                 t
             };
-            allows.push(Allow { rule: rule.to_string(), target, at: i });
+            allows.push(Allow {
+                rule: rule.to_string(),
+                target,
+                at: i,
+                reason: text.trim().to_string(),
+            });
         } else if let Some(rest) = directive.strip_prefix("region(") {
             let kind = rest.split(')').next().unwrap_or("").trim();
             anyhow::ensure!(

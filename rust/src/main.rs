@@ -29,9 +29,13 @@ COMMANDS:
              (f32 checkpoint -> packed .sefp single-master container)
   inspect    FILE.sefp
              (header / tensor index / per-rung footprint report)
-  lint       [--src DIR] [--baseline FILE]
-             (invariant lint pass over the crate sources; defaults to
-             rust/src and rust/lint.baseline)
+  lint       [--src DIR] [--baseline FILE] [--json FILE] [--dead]
+             (invariant lint pass: per-file token rules plus crate-wide
+             call-graph analyses — transitive panic/alloc reachability,
+             determinism taint, otaro.*.vN schema registry; defaults to
+             rust/src and rust/lint.baseline. --json writes the
+             deterministic otaro.lint.v1 report, --dead lists
+             unreferenced pub fns report-only)
   loadgen    [--scenario NAME] [--out FILE]
              (trace-driven load harness: replay the named scenario — or
              the whole catalog — through the real serving stack,
@@ -189,8 +193,10 @@ fn main() -> anyhow::Result<()> {
         "lint" => {
             let src = args.opt("--src").map(PathBuf::from);
             let baseline = args.opt("--baseline").map(PathBuf::from);
+            let json_out = args.opt("--json").map(PathBuf::from);
+            let dead = args.flag("--dead");
             args.finish();
-            otaro::lint::run_cli(src, baseline)
+            otaro::lint::run_cli(src, baseline, json_out, dead)
         }
         "loadgen" => {
             let scenario = args.opt("--scenario");

@@ -54,6 +54,13 @@
 //! The serve stack's concrete handle set lives in
 //! [`serve::ServeMetrics`](crate::serve::ServeMetrics); the trace-driven
 //! load harness that reads these snapshots lives in [`crate::workload`].
+//!
+//! This module also owns the **frozen-schema registry**: [`SCHEMAS`]
+//! declares every `otaro.<name>.v<N>` snapshot schema the crate may
+//! emit.  The `schema-registry` lint resolves each such string literal
+//! in the crate against this table — emitting an undeclared schema, or
+//! silently bumping a version without declaring the new one here, is a
+//! lint error.  Versions only ever move by adding a new row.
 
 pub mod dashboard;
 pub mod flight;
@@ -71,3 +78,36 @@ pub use registry::{
     RATIO_BUCKETS,
 };
 pub use trace::{permille, EventKind, EventRec, NullTrace, ShedReason, TraceSink, Tracer};
+
+/// One declared frozen snapshot schema: the only sanctioned source of
+/// `otaro.<name>.v<N>` literals in non-test code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchemaDef {
+    /// schema name between `otaro.` and `.v<N>`, e.g. `metrics`
+    pub name: &'static str,
+    /// declared (frozen) version
+    pub version: u32,
+    /// canonical emitting module, as a source path relative to
+    /// `rust/src` — the lint checks the module still emits the literal
+    pub module: &'static str,
+}
+
+impl SchemaDef {
+    /// The full literal this row declares, e.g. `otaro.metrics.v1`.
+    pub fn literal(&self) -> String {
+        format!("otaro.{}.v{}", self.name, self.version)
+    }
+}
+
+/// Every frozen snapshot schema the crate emits.  Append-only: bumping
+/// a version means adding a row (and consciously deciding what happens
+/// to consumers of the old one), never editing an existing row.
+pub static SCHEMAS: &[SchemaDef] = &[
+    SchemaDef { name: "metrics", version: 1, module: "obs/registry.rs" },
+    SchemaDef { name: "trace", version: 1, module: "obs/trace.rs" },
+    SchemaDef { name: "flight", version: 1, module: "obs/flight.rs" },
+    SchemaDef { name: "dashboard", version: 1, module: "obs/dashboard.rs" },
+    SchemaDef { name: "timeline_dashboard", version: 1, module: "obs/dashboard.rs" },
+    SchemaDef { name: "bench", version: 1, module: "benchutil/mod.rs" },
+    SchemaDef { name: "lint", version: 1, module: "lint/mod.rs" },
+];

@@ -119,17 +119,16 @@ impl Precision {
     pub fn snap_to_ladder(ladder: &[Precision], p: Precision) -> Precision {
         assert!(!ladder.is_empty(), "ladder must be non-empty");
         let top = ladder[0];
-        let bottom = *ladder.last().expect("non-empty");
+        let bottom = ladder[ladder.len() - 1];
         if p > top {
             top
         } else if p < bottom {
             bottom
         } else {
-            *ladder
-                .iter()
-                .rev()
-                .find(|&&w| w >= p)
-                .expect("top rung bounds p")
+            // `top >= p` here, so the scan always finds a rung; the
+            // fallback is unreachable but keeps this panic-free (the
+            // controller calls this on the live request path)
+            ladder.iter().rev().copied().find(|&w| w >= p).unwrap_or(top)
         }
     }
 }

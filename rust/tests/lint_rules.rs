@@ -2,11 +2,14 @@
 //! positive fixture (the violation fires) and negative fixtures (the
 //! house idiom, an out-of-scope module, test code, strings/comments),
 //! all driven through [`otaro::lint::check_source`] — the same per-file
-//! path `otaro lint` and the tier-1 source gate use.
+//! path `otaro lint` and the tier-1 source gate use.  The graph
+//! analyses get multi-file fixtures through [`otaro::lint::check_crate`]
+//! — each one a cross-module case the per-file token rules provably
+//! miss — plus call-chain-in-message assertions.
 
 use otaro::lint::baseline::Baseline;
-use otaro::lint::check_source;
 use otaro::lint::rules::rule_names;
+use otaro::lint::{check_crate, check_crate_with_schemas, check_source};
 
 /// Names of the rules that fire on `src` when linted as `module`.
 fn rules_hit(module: &str, src: &str) -> Vec<&'static str> {
@@ -327,4 +330,172 @@ fn baseline_waives_per_file_and_rejects_junk() {
     assert!(Baseline::parse("no-such-rule serve/x.rs\n", &names).is_err());
     assert!(Baseline::parse("one-field-only\n", &names).is_err());
     assert!(Baseline::parse("too many fields here\n", &names).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// crate-wide graph analyses
+// ---------------------------------------------------------------------------
+
+#[test]
+fn transitive_panic_is_caught_across_modules_with_the_chain() {
+    let handler = "use crate::util;\npub fn handle(q: &Q) -> usize { util::read_len(q) }\n";
+    let helper = "pub fn read_len(q: &Q) -> usize { q.len.unwrap() }\n";
+    // the per-file token rule provably misses this: each file alone is clean
+    assert!(rules_hit("serve/x.rs", handler).is_empty());
+    assert!(rules_hit("util/mod.rs", helper).is_empty());
+    // the crate-wide pass walks handle -> read_len and flags the panic site
+    let v = check_crate(&[("serve/x.rs", handler), ("util/mod.rs", helper)]).unwrap();
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].rule, "transitive-request-path-no-panic");
+    assert_eq!(v[0].module, "util/mod.rs");
+    assert_eq!(v[0].line, 1);
+    assert_eq!(v[0].chain, ["serve/x.rs::handle", "util/mod.rs::read_len"]);
+    // the full call chain is in the message, entry point to offender
+    assert!(
+        v[0].message.contains("serve/x.rs::handle -> util/mod.rs::read_len"),
+        "{}",
+        v[0].message
+    );
+    // a panic-free helper on the same path is clean
+    let ok = "pub fn read_len(q: &Q) -> usize { q.len.unwrap_or(0) }\n";
+    assert!(check_crate(&[("serve/x.rs", handler), ("util/mod.rs", ok)]).unwrap().is_empty());
+    // helpers only reachable from test fns are outside the graph
+    let test_only = "#[cfg(test)]\nmod tests {\n    fn t() { util::read_len(&q); }\n}\n";
+    assert!(check_crate(&[("serve/x.rs", test_only), ("util/mod.rs", helper)])
+        .unwrap()
+        .is_empty());
+}
+
+#[test]
+fn transitive_alloc_is_caught_when_a_region_calls_out() {
+    let caller = "\
+use crate::helpers;
+fn hot(buf: &[f32]) {
+    // lint: region(no_alloc)
+    helpers::expand(buf);
+    // lint: end_region
+}
+";
+    let alloc_helper = "pub fn expand(buf: &[f32]) -> Vec<f32> { buf.to_vec() }\n";
+    // the token rule only sees the call line, which allocates nothing
+    assert!(rules_hit("infer/x.rs", caller).is_empty());
+    let v = check_crate(&[("infer/x.rs", caller), ("infer/helpers.rs", alloc_helper)]).unwrap();
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].rule, "transitive-hot-loop-no-alloc");
+    // the violation lands on the call site inside the region
+    assert_eq!(v[0].module, "infer/x.rs");
+    assert_eq!(v[0].line, 4);
+    assert_eq!(v[0].chain, ["infer/x.rs::hot", "infer/helpers.rs::expand"]);
+    assert!(
+        v[0].message.contains("infer/x.rs::hot -> infer/helpers.rs::expand"),
+        "{}",
+        v[0].message
+    );
+    assert!(v[0].message.contains("to_vec"), "{}", v[0].message);
+    // an in-place helper keeps the region clean
+    let ok_helper = "pub fn expand(buf: &mut [f32]) { for b in buf { *b += 1.0; } }\n";
+    assert!(check_crate(&[("infer/x.rs", caller), ("infer/helpers.rs", ok_helper)])
+        .unwrap()
+        .is_empty());
+}
+
+#[test]
+fn determinism_taint_flows_from_hashmap_into_a_frozen_emitter() {
+    let agg = "\
+use crate::snap;
+pub fn summarize(vals: &[u64]) {
+    let mut seen: HashMap<u64, u64> = HashMap::new();
+    for v in vals { seen.insert(*v, 1); }
+    snap::emit(&seen);
+}
+";
+    let emitter = "pub fn emit(seen: &M) { write(\"otaro.metrics.v1\", seen); }\n";
+    // data/ is outside the direct determinism rule's scope
+    assert!(rules_hit("data/agg.rs", agg).is_empty());
+    let v = check_crate(&[("data/agg.rs", agg), ("obs/snap.rs", emitter)]).unwrap();
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].rule, "determinism-taint");
+    // flagged at the HashMap construction, not the emitter
+    assert_eq!(v[0].module, "data/agg.rs");
+    assert_eq!(v[0].line, 3);
+    assert_eq!(v[0].chain, ["data/agg.rs::summarize", "obs/snap.rs::emit"]);
+    assert!(v[0].message.contains("otaro.metrics.v1"), "{}", v[0].message);
+    assert!(
+        v[0].message.contains("data/agg.rs::summarize -> obs/snap.rs::emit"),
+        "{}",
+        v[0].message
+    );
+    // same shape with a BTreeMap is the house idiom and stays clean
+    let ordered = agg.replace("HashMap", "BTreeMap");
+    assert!(check_crate(&[("data/agg.rs", ordered.as_str()), ("obs/snap.rs", emitter)])
+        .unwrap()
+        .is_empty());
+    // a HashMap that never reaches an emitter is not tainted
+    let sink = "pub fn emit(seen: &M) { write(seen); }\n";
+    assert!(check_crate(&[("data/agg.rs", agg), ("obs/snap.rs", sink)]).unwrap().is_empty());
+}
+
+#[test]
+fn schema_registry_rejects_undeclared_names_and_silent_bumps() {
+    // a literal whose name is not in obs::SCHEMAS
+    let v = check_source("runtime/x.rs", "let s = \"otaro.bogus.v1\";\n").unwrap();
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].rule, "schema-registry");
+    assert!(v[0].message.contains("obs::SCHEMAS"), "{}", v[0].message);
+    // a version past the declared one is a silent bump, called out as such
+    let v = check_source("obs/registry.rs", "let s = \"otaro.metrics.v2\";\n").unwrap();
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].rule, "schema-registry");
+    assert!(v[0].message.contains("silently bumps"), "{}", v[0].message);
+    // the declared (name, version) pair is clean
+    assert!(check_source("obs/registry.rs", "let s = \"otaro.metrics.v1\";\n")
+        .unwrap()
+        .is_empty());
+    // comments and test fixtures are prose, not emissions
+    assert!(check_source("runtime/x.rs", "// otaro.bogus.v9\n").unwrap().is_empty());
+    let in_test = "#[cfg(test)]\nmod tests {\n    fn t() { let s = \"otaro.bogus.v9\"; }\n}\n";
+    assert!(check_source("runtime/x.rs", in_test).unwrap().is_empty());
+}
+
+#[test]
+fn schema_registry_coverage_flags_stale_declarations() {
+    use otaro::obs::SchemaDef;
+    const TABLE: &[SchemaDef] = &[SchemaDef { name: "ghost", version: 1, module: "obs/x.rs" }];
+    // declared but never emitted anywhere -> stale row under full coverage
+    let quiet = [("obs/x.rs", "fn quiet() {}\n")];
+    let v = check_crate_with_schemas(&quiet, TABLE, true).unwrap();
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].rule, "schema-registry");
+    // per-file / fixture runs skip the staleness direction
+    assert!(check_crate_with_schemas(&quiet, TABLE, false).unwrap().is_empty());
+    // emitting the declared literal satisfies coverage
+    let ok = [("obs/x.rs", "pub fn emit() { let s = \"otaro.ghost.v1\"; }\n")];
+    assert!(check_crate_with_schemas(&ok, TABLE, true).unwrap().is_empty());
+}
+
+#[test]
+fn allow_directives_cover_the_graph_analyses_too() {
+    let handler = "use crate::util;\npub fn handle(q: &Q) -> usize { util::read_len(q) }\n";
+    let helper = "\
+pub fn read_len(q: &Q) -> usize {
+    // lint: allow(transitive-request-path-no-panic, reason = \"len validated at admission\")
+    q.len.unwrap()
+}
+";
+    let v = check_crate(&[("serve/x.rs", handler), ("util/mod.rs", helper)]).unwrap();
+    assert!(v.is_empty(), "{v:?}");
+}
+
+#[test]
+fn dead_pass_lists_unreferenced_pub_fns() {
+    use otaro::lint::source::SourceFile;
+    use otaro::lint::{analyses, parse};
+    let names = rule_names();
+    let src = "pub fn used() {}\npub fn orphan() {}\nfn caller() { used(); }\n";
+    let files = vec![SourceFile::parse("a/x.rs", src, &names).unwrap()];
+    let facts: Vec<_> = files.iter().map(parse::extract).collect();
+    let out = analyses::run(&files, &facts, otaro::obs::SCHEMAS, false);
+    // `used` has a call site, `caller` is private, `main` would be exempt —
+    // only the exported-but-unreferenced fn is reported
+    assert_eq!(out.dead, ["a/x.rs:2: a/x.rs::orphan"]);
 }
